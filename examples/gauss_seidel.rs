@@ -1,0 +1,88 @@
+//! End-to-end driver: solve the heat equation on a real (small) workload
+//! through ALL THREE LAYERS — Pallas kernel (L1) lowered by JAX (L2) to
+//! HLO, executed via PJRT from the Rust coordinator (L3) with TAMPI
+//! non-blocking communication tasks on the simulated cluster.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example gauss_seidel
+//!
+//! Prints per-phase progress, verifies the PJRT result against the native
+//! Rust kernel, and reports the paper-style metrics. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use tampi_repro::apps::gauss_seidel::{run, GsParams, GsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::sim::ms;
+
+fn main() {
+    let (rows, cols, block, iters) = (512, 512, 128, 40);
+    let (nodes, cores) = (2, 2);
+
+    if !tampi_repro::runtime::artifacts_dir()
+        .join(format!("gs_block_{block}.hlo.txt"))
+        .exists()
+    {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!(
+        "heat equation {rows}x{cols}, block {block}, {iters} iterations, \
+         {nodes} nodes x {cores} cores, version interop-nonblk"
+    );
+
+    // 1) PJRT path: Pallas->HLO kernel executed from compute tasks.
+    let mut p = GsParams::new(rows, cols, block, iters, nodes, cores, GsVersion::InteropNonBlk);
+    p.compute = Compute::Pjrt;
+    p.deadline = Some(ms(600_000));
+    let wall = Instant::now();
+    let pjrt = run(&p).expect("pjrt run");
+    let pjrt_wall = wall.elapsed();
+    println!(
+        "PJRT   : vtime {:>8.3} ms | {:.3e} cells/s | checksum {:.6} | wall {:.1}s",
+        pjrt.vtime_ns as f64 / 1e6,
+        pjrt.cells_per_sec(&p),
+        pjrt.checksum,
+        pjrt_wall.as_secs_f64()
+    );
+
+    // 2) Native path: same run with the Rust kernel.
+    let mut pn = p.clone();
+    pn.compute = Compute::Native;
+    let wall = Instant::now();
+    let native = run(&pn).expect("native run");
+    println!(
+        "native : vtime {:>8.3} ms | {:.3e} cells/s | checksum {:.6} | wall {:.1}s",
+        native.vtime_ns as f64 / 1e6,
+        native.cells_per_sec(&pn),
+        native.checksum,
+        wall.elapsed().as_secs_f64()
+    );
+
+    // 3) Cross-check: the Pallas kernel solves the row recurrence with an
+    // associative scan, so agreement is to f32 rounding, not bitwise.
+    let rel = (pjrt.checksum - native.checksum).abs() / native.checksum.abs().max(1e-9);
+    println!("cross-check: relative checksum error {rel:.3e}");
+    assert!(rel < 1e-4, "PJRT and native kernels diverged");
+
+    // 4) Paper-style comparison on the same workload (model compute).
+    println!("\nversion comparison (cost-model compute, same workload):");
+    for v in GsVersion::all() {
+        let mut pv = p.clone();
+        pv.version = v;
+        pv.compute = Compute::Model;
+        match run(&pv) {
+            Ok(out) => println!(
+                "  {:<16} vtime {:>9.3} ms | pauses {:>5} | workers {:>3}",
+                v.name(),
+                out.vtime_ns as f64 / 1e6,
+                out.stats.pauses,
+                out.stats.workers
+            ),
+            Err(e) => println!("  {:<16} FAILED: {e}", v.name()),
+        }
+    }
+    println!("\nOK: all three layers compose (Pallas -> HLO -> PJRT -> tasks -> TAMPI -> rmpi)");
+}

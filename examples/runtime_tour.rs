@@ -1,0 +1,84 @@
+//! Tour of the paper's three runtime APIs (Section 4), used directly:
+//! pause/resume, external events, and polling services — without MPI.
+//!
+//! Run with: `cargo run --release --example runtime_tour`
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::nanos::{self, Mode, Runtime, RuntimeConfig};
+use tampi_repro::sim::{ms, Clock};
+
+fn main() {
+    let (clock, clock_handle) = Clock::start();
+    clock.set_panic_on_deadlock(false);
+    let hold = clock.hold();
+    let rt = Runtime::new(clock.clone(), RuntimeConfig::new(2));
+    clock.register_thread(); // this thread joins the simulation
+    drop(hold);
+    rt.attach();
+
+    // --- 1. Pause/resume (Section 4.1) ------------------------------
+    println!("1) pause/resume: a task blocks, another unblocks it");
+    let parked: Arc<Mutex<Option<nanos::BlockingContext>>> = Arc::new(Mutex::new(None));
+    let p2 = parked.clone();
+    rt.task().label("sleeper").spawn(move || {
+        let ctx = nanos::get_current_blocking_context();
+        *p2.lock().unwrap() = Some(ctx.clone());
+        println!("   sleeper: pausing at t={} ns", nanos::current_clock().now());
+        nanos::block_current_task(&ctx);
+        println!("   sleeper: resumed at t={} ns", nanos::current_clock().now());
+    });
+    let p3 = parked.clone();
+    rt.task().label("waker").spawn(move || {
+        nanos::work(ms(2)); // simulate useful work on the same cores
+        let ctx = p3.lock().unwrap().take().expect("sleeper parked first");
+        println!("   waker: unblocking the sleeper");
+        nanos::unblock_task(&ctx);
+    });
+    rt.taskwait();
+
+    // --- 2. External events (Section 4.3) ----------------------------
+    println!("2) external events: dependencies release after the event");
+    let obj = rt.dep("buffer");
+    rt.task().label("producer").dep(&obj, Mode::Out).spawn(|| {
+        let ec = nanos::get_current_event_counter();
+        nanos::increase_current_task_event_counter(&ec, 1);
+        let clock = nanos::current_clock();
+        let ec2 = ec.clone();
+        // Some external agent fulfils the event 5 ms later:
+        clock.call_at(clock.now() + ms(5), move || {
+            nanos::decrease_task_event_counter(&ec2, 1);
+        });
+        println!("   producer: body done at t={} ns (event pending)", clock.now());
+    });
+    rt.task().label("consumer").dep(&obj, Mode::In).spawn(|| {
+        println!(
+            "   consumer: running at t={} ns (after the event)",
+            nanos::current_clock().now()
+        );
+    });
+    rt.taskwait();
+
+    // --- 3. Polling services (Section 4.2) ---------------------------
+    println!("3) polling services: periodic progress callbacks");
+    let calls = Arc::new(AtomicU32::new(0));
+    let c2 = calls.clone();
+    rt.register_polling_service(
+        "demo",
+        Box::new(move || {
+            let n = c2.fetch_add(1, Ordering::Relaxed) + 1;
+            n >= 5 // done after five invocations -> auto-unregister
+        }),
+    );
+    rt.task().spawn(|| nanos::work(ms(2)));
+    rt.taskwait();
+    println!("   service ran {} times, then unregistered itself", calls.load(Ordering::Relaxed));
+
+    rt.detach();
+    clock.deregister_thread();
+    rt.shutdown();
+    clock.stop();
+    clock_handle.join().unwrap();
+    println!("tour complete at virtual t={} ns", clock.now());
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> artifacts/*.hlo.txt for Rust.
+
+The interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering uses return_tuple=True, so every artifact's output is a tuple and
+the Rust side unwraps with `to_tuple()`.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+Emits:
+  gs_block_{B}.hlo.txt        B in GS_SIZES
+  ifs_step_f{nf}_n{N}.hlo.txt (nf, N) in IFS_SIZES
+  model.hlo.txt               alias of the default GS block (Makefile compat)
+  manifest.txt                one line per artifact: name shape-signature
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Paper block sizes are 256/512/1024; the simulated cluster scales the
+# whole experiment down 4x, so benches use 64/128/256 (512 kept for the
+# e2e example and perf runs).
+GS_SIZES = (32, 64, 128, 256, 512)
+IFS_SIZES = ((8, 64), (8, 128), (16, 256))
+DEFAULT_GS = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gs(b):
+    spec = jax.ShapeDtypeStruct((b, b), jnp.float32)
+    vec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    return jax.jit(model.gs_step).lower(spec, vec, vec, vec, vec)
+
+
+def lower_ifs(nf, n):
+    fields = jax.ShapeDtypeStruct((nf, n), jnp.float32)
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return jax.jit(model.ifs_step).lower(fields, mat, mat, vec)
+
+
+def write_ifs_consts(n, out_dir):
+    """Binary side file: ft | finvt | damp as little-endian f32."""
+    import numpy as np
+
+    ft, finvt, damp = model.ifs_consts(n)
+    path = os.path.join(out_dir, f"ifs_consts_n{n}.bin")
+    with open(path, "wb") as f:
+        f.write(np.asarray(ft, "<f4").tobytes())
+        f.write(np.asarray(finvt, "<f4").tobytes())
+        f.write(np.asarray(damp, "<f4").tobytes())
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: model.hlo.txt path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # legacy single-file invocation from old Makefile
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for b in GS_SIZES:
+        name = f"gs_block_{b}"
+        text = to_hlo_text(lower_gs(b))
+        assert "constant({...})" not in text, f"{name}: elided constants"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} f32[{b},{b}] x4 f32[{b}] -> (f32[{b},{b}], f32[])")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for nf, n in IFS_SIZES:
+        name = f"ifs_step_f{nf}_n{n}"
+        text = to_hlo_text(lower_ifs(nf, n))
+        assert "constant({...})" not in text, (
+            f"{name}: large constants were elided; pass them as arguments"
+        )
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        cpath = write_ifs_consts(n, out_dir)
+        manifest.append(
+            f"{name} f32[{nf},{n}] + consts({os.path.basename(cpath)}) -> (f32[{nf},{n}], f32[])"
+        )
+        print(f"wrote {path} ({len(text)} chars) + {cpath}")
+
+    shutil.copyfile(
+        os.path.join(out_dir, f"gs_block_{DEFAULT_GS}.hlo.txt"),
+        os.path.join(out_dir, "model.hlo.txt"),
+    )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/model.hlo.txt and manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

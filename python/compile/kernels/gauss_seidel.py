@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: in-block Gauss-Seidel sweep for the 2-D heat equation.
+
+The paper's compute hot-spot (Section 7.1) is the per-block Gauss-Seidel
+update
+
+    u_new[i,j] = 0.25 * (u_new[i-1,j] + u_old[i+1,j]
+                         + u_new[i,j-1] + u_old[i,j+1])
+
+which is sequential in both spatial dimensions.  The TPU-shaped insight is
+that, once the previous *row* of new values is known, the within-row
+dependence is a first-order linear recurrence
+
+    y[j] = a * y[j-1] + b[j],      a = 0.25,
+    b[j] = 0.25 * (u_new[i-1,j] + u_old[i+1,j] + u_old[i,j+1])
+
+which is solved in O(log B) depth with an associative scan over affine-map
+composition.  The outer row loop is a `lax.fori_loop` carrying the previous
+new row, so nothing is unrolled and the lowered HLO stays small for any
+block size.
+
+Hardware adaptation (DESIGN.md section 3): the whole block plus its four
+halo vectors live in one VMEM-resident BlockSpec (a 512x512 f32 block is
+1 MiB, far below the ~16 MiB VMEM budget); the scan is VPU work expressed
+as vector ops, not a scalar loop.  `interpret=True` is mandatory: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+A = 0.25  # Jacobi/Gauss-Seidel stencil weight for the 4-point Laplacian.
+
+
+def _affine_compose(l, r):
+    """Compose affine maps (a, b): x -> a*x + b, applied left-then-right."""
+    a1, b1 = l
+    a2, b2 = r
+    return a1 * a2, b1 * a2 + b2
+
+
+def _row_solve(prev_new, base_row, left_i):
+    """Solve y[j] = A*y[j-1] + (base_row[j] + A*prev_new[j]), y[-1]=left_i."""
+    b = base_row + A * prev_new
+    # Fold the initial condition into b[0]:  y[0] = A*left + b[0].
+    b = b.at[0].add(A * left_i)
+    a = jnp.full_like(b, A)
+    _, y = lax.associative_scan(_affine_compose, (a, b))
+    return y
+
+
+def gs_kernel(u_ref, top_ref, bottom_ref, left_ref, right_ref, o_ref):
+    """Pallas kernel body: one full Gauss-Seidel sweep over a (B, B) block.
+
+    Inputs:
+      u_ref      (B, B)  block values from the previous iteration
+      top_ref    (B,)    NEW values of the row above the block (iteration t)
+      bottom_ref (B,)    OLD values of the row below the block (iteration t-1)
+      left_ref   (B,)    NEW values of the column left of the block
+      right_ref  (B,)    OLD values of the column right of the block
+    Output:
+      o_ref      (B, B)  updated block (iteration t)
+    """
+    u = u_ref[...]
+    top = top_ref[...]
+    bottom = bottom_ref[...]
+    left = left_ref[...]
+    right = right_ref[...]
+    nrows = u.shape[0]
+
+    # Old-value contributions, row-aligned:
+    #   below[i, j] = u_old[i+1, j]   (last row -> bottom halo)
+    #   rightn[i, j] = u_old[i, j+1]  (last col -> right halo)
+    below = jnp.concatenate([u[1:, :], bottom[None, :]], axis=0)
+    rightn = jnp.concatenate([u[:, 1:], right[:, None]], axis=1)
+    base = A * (below + rightn)
+
+    def body(i, carry):
+        prev_new, out = carry
+        base_row = lax.dynamic_slice_in_dim(base, i, 1, axis=0)[0]
+        left_i = lax.dynamic_slice_in_dim(left, i, 1, axis=0)[0]
+        y = _row_solve(prev_new, base_row, left_i)
+        out = lax.dynamic_update_slice_in_dim(out, y[None, :], i, axis=0)
+        return y, out
+
+    _, out = lax.fori_loop(0, nrows, body, (top, jnp.zeros_like(u)))
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def gs_block(u, top, bottom, left, right, *, block_size=None):
+    """Run one Gauss-Seidel sweep over a block via the Pallas kernel."""
+    b = u.shape[0] if block_size is None else block_size
+    assert u.shape == (b, b), (u.shape, b)
+    return pl.pallas_call(
+        gs_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, b), u.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls.
+    )(u, top, bottom, left, right)

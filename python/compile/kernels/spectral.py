@@ -1,0 +1,83 @@
+"""L1 Pallas kernels for the IFSKer mock-up (Section 7.2).
+
+IFS represents fields by coefficients of a basis function and alternates
+grid-point physics with spectral transforms.  We implement:
+
+  * `physics_kernel`  - element-wise grid-point physics (a logistic
+    reaction step), pure VPU work.
+  * `matmul_kernel`   - a tiled matrix-multiply used to apply the real DFT
+    synthesis/analysis matrices.  This is the MXU-shaped formulation of a
+    spectral transform: on real TPU hardware each (bm, bk) x (bk, bn) tile
+    maps onto the 128x128 systolic array; here the same BlockSpec schedule
+    runs under interpret=True.
+
+The DFT matrices are baked into the lowered HLO as constants by
+`model.ifs_step`, so the Rust side only feeds field data.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def physics_kernel(u_ref, o_ref, *, dt):
+    """Grid-point physics: logistic reaction u += dt * u * (1 - u)."""
+    u = u_ref[...]
+    o_ref[...] = u + dt * u * (1.0 - u)
+
+
+@functools.partial(jax.jit, static_argnames=("dt",))
+def physics(u, *, dt=0.05):
+    return pl.pallas_call(
+        functools.partial(physics_kernel, dt=dt),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(u)
+
+
+def matmul_kernel(a_ref, b_ref, o_ref):
+    """Tiled matmul with accumulation over the K grid dimension.
+
+    Grid is (M/bm, N/bn, K/bk); the output tile is revisited for every k
+    step, so it is zeroed on the first and accumulated afterwards.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tile(n, cap):
+    """Largest divisor of n that is <= cap (tile sizes must divide evenly)."""
+    t = min(n, cap)
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm=128, bn=128, bk=128):
+    """C = A @ B via the tiled Pallas kernel (shapes need not be multiples
+    of 128; tiles shrink to the largest divisor)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,65 @@
+"""L2: JAX compute graphs the Rust coordinator executes, calling L1 kernels.
+
+Two graphs are lowered AOT (see aot.py):
+
+  * `gs_step`  - one Gauss-Seidel sweep over a (B, B) block given its four
+    halo vectors; returns the new block plus the squared-change reduction
+    used by the solver's convergence monitor.  XLA fuses the reduction into
+    the kernel epilogue.
+  * `ifs_step` - one IFSKer timestep over a (nf, n) chunk of fields:
+    grid-point physics (Pallas), spectral analysis, high-mode damping,
+    synthesis (Pallas tiled matmuls).  The DFT matrices are baked in as
+    constants so the Rust side only supplies field data.
+
+Python is build-time only: these functions are never called on the request
+path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import gauss_seidel, spectral
+from compile.kernels import ref
+
+
+def gs_step(u, top, bottom, left, right):
+    """One in-block Gauss-Seidel sweep. Returns (new_block, sum((new-u)^2))."""
+    new = gauss_seidel.gs_block(u, top, bottom, left, right)
+    delta = jnp.sum(jnp.square(new - u))
+    return new, delta
+
+
+def ifs_step(fields, ft, finvt, damp, *, dt=0.05):
+    """One IFS timestep: physics -> analysis -> damping -> synthesis.
+
+    The transform matrices are runtime arguments, NOT baked constants:
+    `as_hlo_text()` elides large constants (`constant({...})`) and the
+    xla_extension 0.5.1 text parser reads the elision as zeros. aot.py
+    exports the matrices as binary side files the Rust runtime feeds in.
+    """
+    g = spectral.physics(fields, dt=dt)
+    spec = spectral.matmul(g, ft)
+    spec = spec * damp[None, :]
+    out = spectral.matmul(spec, finvt)
+    norm = jnp.sum(jnp.square(out))
+    return out, norm
+
+
+def ifs_consts(n, cutoff=0.5):
+    """The (ft, finvt, damp) arrays `ifs_step` expects for width n."""
+    f, finv = ref.dft_matrices(n)
+    damp = ref.spectral_damping(n, cutoff)
+    ft = np.ascontiguousarray(f.T)
+    finvt = np.ascontiguousarray(finv.T)
+    return ft, finvt, damp
+
+
+def make_ifs_step(n, dt=0.05, cutoff=0.5):
+    """Python-side convenience: `ifs_step` with bound transform matrices."""
+    ft, finvt, damp = (jnp.asarray(x) for x in ifs_consts(n, cutoff))
+
+    def step(fields):
+        return ifs_step(fields, ft, finvt, damp, dt=dt)
+
+    return step

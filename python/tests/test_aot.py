@@ -1,0 +1,51 @@
+"""AOT path: lowering produces parseable HLO text with the right signature."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("b", [8, 32])
+def test_gs_lowering_is_hlo_text(b):
+    text = aot.to_hlo_text(aot.lower_gs(b))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 5 entry params: block + 4 halos (count inside the ENTRY block only)
+    entry = text[text.rindex("ENTRY"):]
+    assert len(re.findall(r"parameter\(", entry)) == 5
+    assert f"f32[{b},{b}]" in text
+
+
+def test_gs_lowering_returns_tuple():
+    text = aot.to_hlo_text(aot.lower_gs(8))
+    # return_tuple=True -> root is a tuple of (block, delta)
+    assert re.search(r"\(f32\[8,8\]\{?[0-9,]*\}?, f32\[\]\)", text)
+
+
+def test_ifs_lowering_is_hlo_text():
+    text = aot.to_hlo_text(aot.lower_ifs(4, 32))
+    assert text.startswith("HloModule")
+    assert "f32[4,32]" in text
+    # fields + ft + finvt + damp: 4 entry parameters (matrices must be
+    # arguments — as_hlo_text elides large constants!)
+    entry = text[text.rindex("ENTRY"):]
+    assert len(re.findall(r"parameter\(", entry)) == 4
+
+
+def test_no_elided_constants_anywhere():
+    for b in (8, 32):
+        assert "constant({...})" not in aot.to_hlo_text(aot.lower_gs(b))
+    assert "constant({...})" not in aot.to_hlo_text(aot.lower_ifs(4, 32))
+
+
+def test_gs_lowering_uses_loop_not_unroll():
+    """The row loop must lower to a while loop, not B unrolled bodies."""
+    small = aot.to_hlo_text(aot.lower_gs(8))
+    big = aot.to_hlo_text(aot.lower_gs(64))
+    assert "while" in small
+    # HLO size must grow sublinearly with block size (no unrolling).
+    assert len(big) < 2 * len(small)

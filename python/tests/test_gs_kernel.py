@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas Gauss-Seidel kernel vs the scalar-loop oracle.
+
+Includes a hypothesis sweep over block shapes/values/dtypes, per the
+repro requirements (kernel vs ref.py assert_allclose).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gauss_seidel as gs
+from compile.kernels import ref
+from compile import model
+
+
+def _rand_case(rng, b, dtype=np.float32, scale=1.0):
+    u = (rng.standard_normal((b, b)) * scale).astype(dtype)
+    halos = [(rng.standard_normal(b) * scale).astype(dtype) for _ in range(4)]
+    return u, halos
+
+
+def _run_kernel(u, halos):
+    args = [jnp.asarray(u)] + [jnp.asarray(h) for h in halos]
+    return np.asarray(gs.gs_block(*args))
+
+
+@pytest.mark.parametrize("b", [2, 3, 8, 16, 33, 64])
+def test_gs_matches_reference(b):
+    rng = np.random.default_rng(b)
+    u, halos = _rand_case(rng, b)
+    got = _run_kernel(u, halos)
+    want = ref.gs_reference(u, *halos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gs_zero_input_zero_output():
+    b = 8
+    z = np.zeros((b, b), np.float32)
+    zh = [np.zeros(b, np.float32)] * 4
+    got = _run_kernel(z, zh)
+    np.testing.assert_array_equal(got, np.zeros((b, b), np.float32))
+
+
+def test_gs_constant_field_fixed_point():
+    """A constant field with matching halos is a fixed point of the sweep."""
+    b = 16
+    c = 3.25
+    u = np.full((b, b), c, np.float32)
+    halos = [np.full(b, c, np.float32)] * 4
+    got = _run_kernel(u, halos)
+    np.testing.assert_allclose(got, u, rtol=1e-5)
+
+
+def test_gs_uses_new_top_left_and_old_bottom_right():
+    """Directional check: top/left halos act as iteration-t values."""
+    b = 4
+    u = np.zeros((b, b), np.float32)
+    top = np.ones(b, np.float32)
+    zeros = np.zeros(b, np.float32)
+    got = _run_kernel(u, [top, zeros, zeros, zeros])
+    want = ref.gs_reference(u, top, zeros, zeros, zeros)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # first row sees the top halo directly
+    assert got[0, 0] == pytest.approx(0.25, rel=1e-5)
+
+
+def test_gs_sweep_reduces_residual():
+    """Repeated sweeps with fixed boundary converge (heat equation)."""
+    b = 16
+    rng = np.random.default_rng(7)
+    u = rng.random((b, b)).astype(np.float32)
+    halos = [np.zeros(b, np.float32)] * 4
+    prev = np.abs(u).sum()
+    cur = u
+    for _ in range(100):
+        cur = _run_kernel(cur, halos)
+    assert np.abs(cur).sum() < 5e-2 * prev
+
+
+def test_gs_step_delta():
+    """L2 gs_step returns the squared-change reduction."""
+    b = 8
+    rng = np.random.default_rng(3)
+    u, halos = _rand_case(rng, b)
+    new, delta = jax.jit(model.gs_step)(
+        jnp.asarray(u), *[jnp.asarray(h) for h in halos]
+    )
+    want = ref.gs_reference(u, *halos)
+    np.testing.assert_allclose(np.asarray(new), want, rtol=1e-4, atol=1e-5)
+    assert float(delta) == pytest.approx(
+        float(np.sum((np.asarray(new) - u) ** 2)), rel=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_gs_hypothesis_sweep(b, seed, scale):
+    rng = np.random.default_rng(seed)
+    u, halos = _rand_case(rng, b, scale=scale)
+    got = _run_kernel(u, halos)
+    want = ref.gs_reference(u, *halos)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5 * scale)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gs_row_recurrence_property(seed):
+    """Row solver satisfies y[j] = A*y[j-1] + b[j] pointwise."""
+    rng = np.random.default_rng(seed)
+    n = 32
+    prev_new = rng.standard_normal(n).astype(np.float32)
+    base = rng.standard_normal(n).astype(np.float32)
+    left = np.float32(rng.standard_normal())
+    y = np.asarray(
+        jax.jit(gs._row_solve)(
+            jnp.asarray(prev_new), jnp.asarray(base), jnp.asarray(left)
+        )
+    )
+    b = base + gs.A * prev_new
+    yprev = left
+    for j in range(n):
+        want = gs.A * yprev + b[j]
+        assert y[j] == pytest.approx(want, rel=1e-3, abs=1e-5)
+        yprev = y[j]

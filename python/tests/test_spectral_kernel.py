@@ -1,0 +1,98 @@
+"""L1 correctness: tiled matmul + physics kernels and the IFS step graph."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import spectral, ref
+from compile import model
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (4, 8, 4), (48, 96, 32), (128, 128, 128), (130, 70, 10)]
+)
+def test_matmul_matches_numpy(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(spectral.matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(spectral.matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (128, 128, 128), (32, 8, 64)])
+def test_matmul_tile_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    got = np.asarray(spectral.matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk))
+    want = np.asarray(spectral.matmul(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_physics_matches_reference():
+    rng = np.random.default_rng(2)
+    u = rng.random((16, 32)).astype(np.float32)
+    got = np.asarray(spectral.physics(jnp.asarray(u), dt=0.05))
+    np.testing.assert_allclose(got, ref.physics_reference(u), rtol=1e-5)
+
+
+def test_dft_pair_inverts():
+    f, finv = ref.dft_matrices(64)
+    eye = finv.astype(np.float64) @ f.astype(np.float64)
+    np.testing.assert_allclose(eye, np.eye(64), atol=1e-3)
+
+
+def test_damping_profile():
+    d = ref.spectral_damping(64)
+    assert d[0] == 1.0
+    assert d[-1] < 0.2
+    assert np.all(np.diff(d) <= 1e-7)
+
+
+@pytest.mark.parametrize("nf,n", [(4, 32), (8, 64)])
+def test_ifs_step_matches_reference(nf, n):
+    rng = np.random.default_rng(nf + n)
+    fields = rng.random((nf, n)).astype(np.float32)
+    step = jax.jit(model.make_ifs_step(n))
+    got, norm = step(jnp.asarray(fields))
+    want = ref.ifs_reference(fields)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-4)
+    assert float(norm) == pytest.approx(float(np.sum(np.asarray(got) ** 2)), rel=1e-4)
+
+
+def test_ifs_step_damps_high_modes():
+    """A pure high-frequency field loses energy; smooth field is preserved."""
+    n = 64
+    step = jax.jit(model.make_ifs_step(n, dt=0.0))
+    hi = np.cos(np.pi * np.arange(n)).astype(np.float32)[None, :]  # Nyquist
+    lo = np.cos(2 * np.pi * np.arange(n) / n).astype(np.float32)[None, :]
+    oh, _ = step(jnp.asarray(hi))
+    ol, _ = step(jnp.asarray(lo))
+    assert np.sum(np.asarray(oh) ** 2) < 0.1 * np.sum(hi**2)  # e^-4 ~ 0.018
+    assert np.sum(np.asarray(ol) ** 2) > 0.95 * np.sum(lo**2)
+
+
+def test_dft_orthonormal():
+    f, finv = ref.dft_matrices(32)
+    np.testing.assert_allclose(f @ finv, np.eye(32), atol=1e-5)
+    np.testing.assert_allclose(finv, f.T, atol=0)

@@ -1,0 +1,12 @@
+//! cargo bench target regenerating paper Figure 8 (dependency graphs).
+
+use tampi_repro::bench;
+
+fn main() {
+    let t = std::time::Instant::now();
+    for (name, dot, edges) in bench::fig08() {
+        let p = bench::write_output(&format!("fig08_{name}.dot"), &dot);
+        println!("fig08 {name}: {edges} dependency edges -> {}", p.display());
+    }
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

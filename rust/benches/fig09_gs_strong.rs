@@ -1,0 +1,14 @@
+//! cargo bench target regenerating paper Figure 9.
+//! Scale via TAMPI_BENCH_SCALE={quick,default,full} (default: default).
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let rows = bench::fig09(scale);
+    let table = bench::format_table(&rows);
+    println!("=== Figure 9 ({scale:?}) ===\n{table}");
+    bench::write_output("fig09.txt", &table);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,17 @@
+//! cargo bench target regenerating paper Figure 10 (execution traces).
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    for (name, gantt, csv, busy) in bench::fig10(scale) {
+        bench::write_output(&format!("fig10_{name}.csv"), &csv);
+        bench::write_output(&format!("fig10_{name}.gantt.txt"), &gantt);
+        println!("--- {name} ---\n{gantt}");
+        for (rank, f) in busy {
+            println!("  rank {rank}: busy {:.1}%", f * 100.0);
+        }
+    }
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! cargo bench target regenerating paper Figure 13.
+//! Scale via TAMPI_BENCH_SCALE={quick,default,full} (default: default).
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let rows = bench::fig13(scale);
+    let table = bench::format_table(&rows);
+    println!("=== Figure 13 ({scale:?}) ===\n{table}");
+    bench::write_output("fig13.txt", &table);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

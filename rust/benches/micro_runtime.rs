@@ -1,0 +1,189 @@
+//! Micro-benchmarks of the runtime substrate (real wall-clock, not
+//! virtual time): the costs behind Section 6.2's blocking-vs-events
+//! comparison, plus rmpi message-path overheads.
+//!
+//! Hand-rolled harness (the offline registry has no criterion); each
+//! benchmark reports ns/op over enough iterations to stabilize.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use tampi_repro::nanos::{self, Mode, Runtime, RuntimeConfig};
+use tampi_repro::rmpi::{ClusterConfig, Universe};
+use tampi_repro::sim::Clock;
+
+fn bench(name: &str, ops: u64, f: impl FnOnce()) {
+    let t = Instant::now();
+    f();
+    let total = t.elapsed();
+    println!(
+        "{name:<44} {:>10.0} ns/op ({ops} ops, {:.2} s)",
+        total.as_nanos() as f64 / ops as f64,
+        total.as_secs_f64()
+    );
+}
+
+/// Spawn a runtime on a scratch clock, run `f` on an attached thread.
+fn with_rt(cores: usize, f: impl FnOnce(&Runtime) + Send + 'static) {
+    let (clock, h) = Clock::start();
+    clock.set_panic_on_deadlock(false);
+    let hold = clock.hold();
+    let rt = Runtime::new(clock.clone(), RuntimeConfig::new(cores));
+    clock.register_thread();
+    drop(hold);
+    let rt2 = rt.clone();
+    let c2 = clock.clone();
+    std::thread::spawn(move || {
+        rt2.attach();
+        f(&rt2);
+        rt2.taskwait();
+        rt2.detach();
+        c2.deregister_thread();
+    })
+    .join()
+    .unwrap();
+    rt.shutdown();
+    clock.stop();
+    h.join().unwrap();
+}
+
+fn main() {
+    println!("--- nanos task runtime ---");
+    let n = 200_000u64;
+    bench("task spawn+run (no deps, 2 cores)", n, || {
+        with_rt(2, move |rt| {
+            let c = Arc::new(AtomicU64::new(0));
+            for _ in 0..n {
+                let c = c.clone();
+                rt.task().spawn(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            rt.taskwait();
+            assert_eq!(c.load(Ordering::Relaxed), n);
+        });
+    });
+
+    let n = 100_000u64;
+    bench("task chain via inout dep (serialized)", n, || {
+        with_rt(2, move |rt| {
+            let obj = rt.dep("chain");
+            for _ in 0..n {
+                rt.task().dep(&obj, Mode::InOut).spawn(|| {});
+            }
+        });
+    });
+
+    let n = 50_000u64;
+    bench("pause+resume round trip (ctx handoff)", n, || {
+        with_rt(2, move |rt| {
+            // Ping-pong: task A blocks; a polling-free unblocker task
+            // wakes it; measures the full block/unblock/grant cycle.
+            let slot: Arc<std::sync::Mutex<Option<nanos::BlockingContext>>> =
+                Arc::new(std::sync::Mutex::new(None));
+            for _ in 0..n {
+                let s1 = slot.clone();
+                rt.task().spawn(move || {
+                    let ctx = nanos::get_current_blocking_context();
+                    *s1.lock().unwrap() = Some(ctx.clone());
+                    nanos::block_current_task(&ctx);
+                });
+                let s2 = slot.clone();
+                rt.task().spawn(move || loop {
+                    if let Some(ctx) = s2.lock().unwrap().take() {
+                        nanos::unblock_task(&ctx);
+                        break;
+                    }
+                    std::hint::spin_loop();
+                });
+                rt.taskwait();
+            }
+        });
+    });
+
+    let n = 200_000u64;
+    bench("external event bind+fulfil", n, || {
+        with_rt(2, move |rt| {
+            for _ in 0..n {
+                rt.task().spawn(|| {
+                    let ec = nanos::get_current_event_counter();
+                    nanos::increase_current_task_event_counter(&ec, 1);
+                    nanos::decrease_task_event_counter(&ec, 1);
+                });
+            }
+        });
+    });
+
+    println!("--- rmpi message path ---");
+    let n = 50_000u64;
+    bench("p2p eager send->recv (same node)", n, || {
+        Universe::run(ClusterConfig::new(1, 2, 0), move |ctx| {
+            let mut buf = [0u64; 4];
+            if ctx.rank == 0 {
+                for i in 0..n {
+                    ctx.comm.send(&[i, i, i, i], 1, 0);
+                }
+            } else {
+                for _ in 0..n {
+                    ctx.comm.recv(&mut buf, 0, 0);
+                }
+            }
+        })
+        .unwrap();
+    });
+
+    let n = 20_000u64;
+    bench("barrier (4 ranks)", n, || {
+        Universe::run(ClusterConfig::new(4, 1, 0), move |ctx| {
+            for _ in 0..n {
+                ctx.comm.barrier();
+            }
+        })
+        .unwrap();
+    });
+
+    println!("--- TAMPI modes (Section 6.2 cost comparison) ---");
+    // Keep in-flight pauses below the substitute-worker cap: the paper's
+    // blocking mode grows one thread per paused task ("threads and stacks
+    // proportional to in-flight operations") and wedges past the cap.
+    let n = 4_000u64;
+    let run_mode = move |nonblk: bool| {
+        Universe::run(ClusterConfig::new(1, 2, 1), move |ctx| {
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = tampi_repro::tampi::init(
+                &ctx.comm,
+                rt,
+                tampi_repro::rmpi::ThreadLevel::TaskMultiple,
+            );
+            if ctx.rank == 0 {
+                for i in 0..n {
+                    let tm = tm.clone();
+                    rt.task().spawn(move || {
+                        let mut b = [0u32];
+                        if nonblk {
+                            let r = tm.comm().irecv(&mut b, 1, i as i32);
+                            tm.iwait(&r);
+                        } else {
+                            tm.recv(&mut b, 1, i as i32);
+                        }
+                    });
+                }
+                rt.taskwait();
+            } else {
+                for i in 0..n {
+                    ctx.comm.send(&[7u32], 0, i as i32);
+                }
+            }
+        })
+        .unwrap()
+    };
+    bench("TAMPI blocking-mode recv task", n, || {
+        let s = run_mode(false);
+        println!("    (pauses={} workers={})", s.pauses, s.workers);
+    });
+    bench("TAMPI non-blocking-mode recv task", n, || {
+        let s = run_mode(true);
+        println!("    (pauses={} workers={})", s.pauses, s.workers);
+    });
+}

@@ -1,0 +1,798 @@
+//! Gauss-Seidel heat-equation solver — the paper's main benchmark
+//! (Section 7.1), in six versions:
+//!
+//! | version           | parallelism            | MPI style                  |
+//! |-------------------|------------------------|----------------------------|
+//! | `PureMpi`         | 1 rank/core, seq.      | blocking send/recv         |
+//! | `NBuffer`         | 1 rank/core, seq.      | isend/irecv + wait / block |
+//! | `ForkJoin`        | tasks, per-iter sync   | blocking, funneled         |
+//! | `Sentinel`        | tasks, full dep graph  | blocking inside tasks, serialized by a sentinel dep |
+//! | `InteropBlk`      | tasks, full dep graph  | blocking inside tasks via TAMPI (MPI_TASK_MULTIPLE) |
+//! | `InteropNonBlk`   | tasks, full dep graph  | isend/irecv + TAMPI_Iwait(all) |
+//!
+//! The 2-D domain (`rows x cols` interior, top boundary held at 1.0) is
+//! split into `block x block` blocks; MPI ranks own horizontal bands of
+//! block rows. Within a block the update is the classic in-place sweep
+//!
+//! ```text
+//! u[i][j] = 0.25 * (u[i-1][j] + u[i+1][j] + u[i][j-1] + u[i][j+1])
+//! ```
+//!
+//! which uses NEW values above/left and OLD values below/right — the exact
+//! recurrence the Pallas kernel implements. All versions perform the same
+//! arithmetic in an equivalent order, so (with the native backend) their
+//! f32 grids are identical cell-for-cell; tests assert the checksums
+//! agree to reduction-order rounding.
+
+use std::sync::Arc;
+
+use crate::nanos::{self, DepObj, Mode};
+use crate::rmpi::universe::RunError;
+use crate::rmpi::{ClusterConfig, RankCtx, RunStats, ThreadLevel, Universe};
+use crate::rmpi::universe::Counters;
+use crate::sim::VNanos;
+use crate::tampi::{self, Tampi};
+use crate::trace::{GraphRecorder, Tracer};
+
+use super::store::BlockStore;
+use super::{gs_cost, Compute, DEFAULT_GS_CELL_NS};
+
+/// The six implementations of Section 7.1.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GsVersion {
+    PureMpi,
+    NBuffer,
+    ForkJoin,
+    Sentinel,
+    InteropBlk,
+    InteropNonBlk,
+}
+
+impl GsVersion {
+    pub fn all() -> [GsVersion; 6] {
+        [
+            GsVersion::PureMpi,
+            GsVersion::NBuffer,
+            GsVersion::ForkJoin,
+            GsVersion::Sentinel,
+            GsVersion::InteropBlk,
+            GsVersion::InteropNonBlk,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GsVersion::PureMpi => "pure-mpi",
+            GsVersion::NBuffer => "nbuffer-mpi",
+            GsVersion::ForkJoin => "fork-join",
+            GsVersion::Sentinel => "sentinel",
+            GsVersion::InteropBlk => "interop-blk",
+            GsVersion::InteropNonBlk => "interop-nonblk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GsVersion> {
+        GsVersion::all().into_iter().find(|v| v.name() == s)
+    }
+
+    /// Hybrid versions run 1 rank per node with a task runtime; pure
+    /// versions run 1 rank per core with no runtime.
+    pub fn is_hybrid(self) -> bool {
+        !matches!(self, GsVersion::PureMpi | GsVersion::NBuffer)
+    }
+}
+
+/// Experiment parameters (one run = one version on one cluster shape).
+#[derive(Clone)]
+pub struct GsParams {
+    pub rows: usize,
+    pub cols: usize,
+    /// Block size of the hybrid/N-Buffer decompositions.
+    pub block: usize,
+    pub iters: usize,
+    pub nodes: usize,
+    /// Cores per node: hybrid = OmpSs threads per rank; pure = ranks/node.
+    pub cores_per_node: usize,
+    pub version: GsVersion,
+    pub compute: Compute,
+    /// Cost-model coefficient (ns per cell update).
+    pub cell_ns: f64,
+    pub net: crate::rmpi::NetworkModel,
+    pub poll_interval: VNanos,
+    pub tracer: Option<Arc<Tracer>>,
+    pub graph: Option<Arc<GraphRecorder>>,
+    pub deadline: Option<VNanos>,
+}
+
+impl GsParams {
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        block: usize,
+        iters: usize,
+        nodes: usize,
+        cores_per_node: usize,
+        version: GsVersion,
+    ) -> GsParams {
+        GsParams {
+            rows,
+            cols,
+            block,
+            iters,
+            nodes,
+            cores_per_node,
+            version,
+            compute: Compute::Native,
+            cell_ns: DEFAULT_GS_CELL_NS,
+            net: crate::rmpi::NetworkModel::default(),
+            poll_interval: crate::sim::us(50),
+            tracer: None,
+            graph: None,
+            deadline: None,
+        }
+    }
+
+    fn ranks(&self) -> usize {
+        if self.version.is_hybrid() {
+            self.nodes
+        } else {
+            self.nodes * self.cores_per_node
+        }
+    }
+
+    fn validate(&self) {
+        let r = self.ranks();
+        if self.version.is_hybrid() {
+            assert_eq!(self.rows % self.block, 0, "rows % block != 0");
+            assert_eq!(self.cols % self.block, 0, "cols % block != 0");
+            let nbr = self.rows / self.block;
+            assert_eq!(nbr % r, 0, "block rows ({nbr}) not divisible by ranks ({r})");
+        } else {
+            assert_eq!(self.rows % r, 0, "rows not divisible by ranks");
+            if self.version == GsVersion::NBuffer {
+                assert_eq!(self.cols % self.block, 0, "cols % block != 0");
+            }
+        }
+        if self.compute == Compute::Pjrt {
+            assert!(
+                self.version.is_hybrid(),
+                "PJRT backend requires a block-decomposed (hybrid) version"
+            );
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct GsOutcome {
+    pub vtime_ns: u64,
+    pub stats: RunStats,
+    /// f64 sum of the final grid (0.0 under the Model backend).
+    pub checksum: f64,
+}
+
+impl GsOutcome {
+    /// Throughput in cell updates per virtual second.
+    pub fn cells_per_sec(&self, p: &GsParams) -> f64 {
+        (p.rows as f64 * p.cols as f64 * p.iters as f64) / (self.vtime_ns as f64 / 1e9)
+    }
+}
+
+/// Message tags: one pair per (iteration, column block).
+fn tag_down(t: usize, j: usize, nbc: usize) -> i32 {
+    (2 * (t * nbc + j)) as i32
+}
+fn tag_up(t: usize, j: usize, nbc: usize) -> i32 {
+    (2 * (t * nbc + j) + 1) as i32
+}
+
+/// In-place Gauss-Seidel sweep over a `rows x cols` tile with halo
+/// vectors. In-place update *is* the paper's recurrence: above/left reads
+/// see new values, below/right see old ones.
+pub fn sweep_native(
+    u: &mut [f32],
+    rows: usize,
+    cols: usize,
+    top: &[f32],
+    bottom: &[f32],
+    left: &[f32],
+    right: &[f32],
+) {
+    debug_assert_eq!(u.len(), rows * cols);
+    // §Perf opt-2: split the update into a vectorizable part and the
+    // sequential left-to-right recurrence (the same decomposition the
+    // Pallas kernel uses): base[j] = up_new + down_old + right_old,
+    // then u[i][j] = 0.25 * (base[j] + u[i][j-1]).
+    let mut base = vec![0f32; cols];
+    for i in 0..rows {
+        let off = i * cols;
+        {
+            let (head, tail) = u.split_at(off);
+            let up: &[f32] = if i > 0 { &head[off - cols..] } else { top };
+            let row = &tail[..cols];
+            let down: &[f32] = if i < rows - 1 { &tail[cols..2 * cols] } else { bottom };
+            for j in 0..cols - 1 {
+                base[j] = up[j] + down[j] + row[j + 1];
+            }
+            base[cols - 1] = up[cols - 1] + down[cols - 1] + right[i];
+        }
+        // Sequential recurrence along the row.
+        let row = &mut u[off..off + cols];
+        let mut prev = left[i];
+        for j in 0..cols {
+            let v = 0.25 * (base[j] + prev);
+            row[j] = v;
+            prev = v;
+        }
+    }
+}
+
+/// Run one Gauss-Seidel experiment on a simulated cluster.
+pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
+    p.validate();
+    let mut cc = if p.version.is_hybrid() {
+        ClusterConfig::new(p.nodes, 1, p.cores_per_node)
+    } else {
+        ClusterConfig::new(p.nodes, p.cores_per_node, 0)
+    };
+    cc.net = p.net;
+    cc.poll_interval = p.poll_interval;
+    cc.tracer = p.tracer.clone();
+    cc.graph = p.graph.clone();
+    cc.deadline = p.deadline;
+    let p2 = p.clone();
+    let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
+        GsVersion::PureMpi => pure_mpi(ctx, &p2, counters),
+        GsVersion::NBuffer => nbuffer(ctx, &p2, counters),
+        _ => hybrid(ctx, &p2, counters),
+    })?;
+    let checksum = stats
+        .counters
+        .get("checksum_bits")
+        .map(|&b| f64::from_bits(b))
+        .unwrap_or(0.0);
+    Ok(GsOutcome { vtime_ns: stats.vtime_ns, stats, checksum })
+}
+
+/// Reduce the local f64 sum and record it once.
+fn record_checksum(ctx: &RankCtx, counters: &Counters, local: f64) {
+    let mut v = [local];
+    ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+    if ctx.rank == 0 {
+        counters.add("checksum_bits", v[0].to_bits());
+    }
+}
+
+// --------------------------------------------------------------------
+// Pure MPI (Section 7.1): one block per rank, sequential compute,
+// synchronous boundary exchange. The strong inter-rank serialization of
+// Fig 8 (top) emerges from recv_top waiting for the upper rank's same-
+// iteration row.
+// --------------------------------------------------------------------
+fn pure_mpi(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
+    let r = ctx.rank;
+    let n = ctx.size;
+    let trace = |kind: crate::trace::EventKind, label: &str| {
+        if let Some(tr) = &p.tracer {
+            tr.emit(crate::trace::Record {
+                t: ctx.clock.now(),
+                rank: r as u32,
+                worker: 0,
+                kind,
+                label: label.to_string(),
+                task_id: 0,
+            });
+        }
+    };
+    let band = p.rows / n;
+    let cols = p.cols;
+    let model = p.compute == Compute::Model;
+    let mut u = vec![0f32; if model { 1 } else { band * cols }];
+    let mut top = vec![if r == 0 { 1.0f32 } else { 0.0 }; cols];
+    let mut bot = vec![0f32; cols];
+    let zeros_side = vec![0f32; band];
+    let row_buf = vec![0f32; cols];
+
+    // Everyone pre-sends its initial first row upward (bottom halo seed).
+    if r > 0 {
+        let first: Vec<f32> = if model { row_buf.clone() } else { u[0..cols].to_vec() };
+        ctx.comm.send(&first, r - 1, tag_up(0, 0, 1));
+    }
+    for t in 0..p.iters {
+        if r > 0 {
+            trace(crate::trace::EventKind::MpiStart, "recv_top");
+            ctx.comm.recv(&mut top, (r - 1) as i32, tag_down(t, 0, 1));
+            trace(crate::trace::EventKind::MpiEnd, "recv_top");
+        }
+        if r < n - 1 {
+            trace(crate::trace::EventKind::MpiStart, "recv_bot");
+            ctx.comm.recv(&mut bot, (r + 1) as i32, tag_up(t, 0, 1));
+            trace(crate::trace::EventKind::MpiEnd, "recv_bot");
+        }
+        trace(crate::trace::EventKind::TaskStart, "sweep");
+        if !model {
+            sweep_native(&mut u, band, cols, &top, &bot, &zeros_side, &zeros_side);
+        }
+        ctx.clock.work(gs_cost(band * cols, p.cell_ns));
+        trace(crate::trace::EventKind::TaskEnd, "sweep");
+        if r < n - 1 {
+            let last: Vec<f32> = if model {
+                row_buf.clone()
+            } else {
+                u[(band - 1) * cols..].to_vec()
+            };
+            ctx.comm.send(&last, r + 1, tag_down(t, 0, 1));
+        }
+        if r > 0 && t + 1 < p.iters {
+            let first: Vec<f32> = if model { row_buf.clone() } else { u[0..cols].to_vec() };
+            ctx.comm.send(&first, r - 1, tag_up(t + 1, 0, 1));
+        }
+    }
+    let local: f64 = if model { 0.0 } else { u.iter().map(|&x| x as f64).sum() };
+    record_checksum(ctx, counters, local);
+}
+
+// --------------------------------------------------------------------
+// N-Buffer MPI: the band is split into column blocks; boundary exchange
+// per block with asynchronous primitives, waits just before each block's
+// compute — partial comm/compute overlap, no tasks (Section 7.1).
+// --------------------------------------------------------------------
+fn nbuffer(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
+    let r = ctx.rank;
+    let n = ctx.size;
+    let trace = |kind: crate::trace::EventKind, label: &str| {
+        if let Some(tr) = &p.tracer {
+            tr.emit(crate::trace::Record {
+                t: ctx.clock.now(),
+                rank: r as u32,
+                worker: 0,
+                kind,
+                label: label.to_string(),
+                task_id: 0,
+            });
+        }
+    };
+    let band = p.rows / n;
+    let cols = p.cols;
+    let b = p.block;
+    let nbc = cols / b;
+    let model = p.compute == Compute::Model;
+    let mut u = vec![0f32; if model { 1 } else { band * cols }];
+    let mut tops: Vec<Vec<f32>> = (0..nbc)
+        .map(|_| vec![if r == 0 { 1.0f32 } else { 0.0 }; b])
+        .collect();
+    let mut bots: Vec<Vec<f32>> = (0..nbc).map(|_| vec![0f32; b]).collect();
+    let part_buf = vec![0f32; b];
+
+    let row_part = |u: &[f32], row: usize, j: usize, model: bool| -> Vec<f32> {
+        if model {
+            part_buf.clone()
+        } else {
+            u[row * cols + j * b..row * cols + (j + 1) * b].to_vec()
+        }
+    };
+
+    // Pre-send initial first-row parts upward; post the first receives.
+    if r > 0 {
+        for j in 0..nbc {
+            let part = row_part(&u, 0, j, model);
+            let _ = ctx.comm.isend(&part, r - 1, tag_up(0, j, nbc));
+        }
+    }
+    let mut req_top: Vec<Option<crate::rmpi::Request>> = vec![None; nbc];
+    let mut req_bot: Vec<Option<crate::rmpi::Request>> = vec![None; nbc];
+    for j in 0..nbc {
+        if r > 0 {
+            req_top[j] = Some(ctx.comm.irecv(&mut tops[j], (r - 1) as i32, tag_down(0, j, nbc)));
+        }
+        if r < n - 1 {
+            req_bot[j] = Some(ctx.comm.irecv(&mut bots[j], (r + 1) as i32, tag_up(0, j, nbc)));
+        }
+    }
+
+    for t in 0..p.iters {
+        for j in 0..nbc {
+            // Wait for this block's boundary data (MPI_Wait, Section 7.1).
+            if req_top[j].is_some() || req_bot[j].is_some() {
+                trace(crate::trace::EventKind::MpiStart, "wait");
+            }
+            let waited = req_top[j].is_some() || req_bot[j].is_some();
+            if let Some(req) = req_top[j].take() {
+                req.wait(&ctx.clock);
+            }
+            if let Some(req) = req_bot[j].take() {
+                req.wait(&ctx.clock);
+            }
+            if waited {
+                trace(crate::trace::EventKind::MpiEnd, "wait");
+            }
+            trace(crate::trace::EventKind::TaskStart, "block");
+            if !model {
+                // Column block j of the band, in place. Left halo: new
+                // values of block j-1 (already updated); right: old j+1.
+                let (mut left, mut right) = (vec![0f32; band], vec![0f32; band]);
+                if j > 0 {
+                    for i in 0..band {
+                        left[i] = u[i * cols + j * b - 1];
+                    }
+                }
+                if j < nbc - 1 {
+                    for i in 0..band {
+                        right[i] = u[i * cols + (j + 1) * b];
+                    }
+                }
+                // Extract, sweep, write back (keeps sweep_native generic).
+                let mut tile = vec![0f32; band * b];
+                for i in 0..band {
+                    tile[i * b..(i + 1) * b]
+                        .copy_from_slice(&u[i * cols + j * b..i * cols + (j + 1) * b]);
+                }
+                sweep_native(&mut tile, band, b, &tops[j], &bots[j], &left, &right);
+                for i in 0..band {
+                    u[i * cols + j * b..i * cols + (j + 1) * b]
+                        .copy_from_slice(&tile[i * b..(i + 1) * b]);
+                }
+            }
+            ctx.clock.work(gs_cost(band * b, p.cell_ns));
+            trace(crate::trace::EventKind::TaskEnd, "block");
+            // Exchange this block's boundaries as soon as possible.
+            if r < n - 1 {
+                let part = row_part(&u, band - 1, j, model);
+                let _ = ctx.comm.isend(&part, r + 1, tag_down(t, j, nbc));
+                if t + 1 < p.iters {
+                    req_bot[j] = Some(ctx.comm.irecv(
+                        &mut bots[j],
+                        (r + 1) as i32,
+                        tag_up(t + 1, j, nbc),
+                    ));
+                }
+            }
+            if r > 0 && t + 1 < p.iters {
+                let part = row_part(&u, 0, j, model);
+                let _ = ctx.comm.isend(&part, r - 1, tag_up(t + 1, j, nbc));
+                req_top[j] = Some(ctx.comm.irecv(
+                    &mut tops[j],
+                    (r - 1) as i32,
+                    tag_down(t + 1, j, nbc),
+                ));
+            }
+        }
+    }
+    let local: f64 = if model { 0.0 } else { u.iter().map(|&x| x as f64).sum() };
+    record_checksum(ctx, counters, local);
+}
+
+// --------------------------------------------------------------------
+// Hybrid versions: Fork-Join, Sentinel, Interop(blk), Interop(non-blk).
+// One rank per node, `cores_per_node` workers, B x B blocks.
+// --------------------------------------------------------------------
+struct HybridState {
+    b: usize,
+    nbc: usize,
+    lbr: usize,
+    rank: usize,
+    ranks: usize,
+    model: bool,
+    blocks: Arc<BlockStore>,
+    halo_top: Arc<BlockStore>,
+    halo_bot: Arc<BlockStore>,
+    kernel: Option<Arc<crate::runtime::GsKernel>>,
+    cost: VNanos,
+}
+
+impl HybridState {
+    fn blk(&self, bi: usize, bj: usize) -> usize {
+        bi * self.nbc + bj
+    }
+
+    /// Gather the four halo vectors of block (bi, bj).
+    /// SAFETY contract: caller's task holds deps on all read objects.
+    unsafe fn halos(&self, bi: usize, bj: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let b = self.b;
+        let top: Vec<f32> = if bi > 0 {
+            let nb = unsafe { self.blocks.get(self.blk(bi - 1, bj)) };
+            nb[(b - 1) * b..].to_vec()
+        } else if self.rank > 0 {
+            unsafe { self.halo_top.get(bj) }.clone()
+        } else {
+            vec![1.0; b] // global top boundary: heat source
+        };
+        let bottom: Vec<f32> = if bi < self.lbr - 1 {
+            let nb = unsafe { self.blocks.get(self.blk(bi + 1, bj)) };
+            nb[0..b].to_vec()
+        } else if self.rank < self.ranks - 1 {
+            unsafe { self.halo_bot.get(bj) }.clone()
+        } else {
+            vec![0.0; b]
+        };
+        let mut left = vec![0f32; b];
+        if bj > 0 {
+            let nb = unsafe { self.blocks.get(self.blk(bi, bj - 1)) };
+            for i in 0..b {
+                left[i] = nb[i * b + b - 1];
+            }
+        }
+        let mut right = vec![0f32; b];
+        if bj < self.nbc - 1 {
+            let nb = unsafe { self.blocks.get(self.blk(bi, bj + 1)) };
+            for i in 0..b {
+                right[i] = nb[i * b];
+            }
+        }
+        (top, bottom, left, right)
+    }
+
+    /// Compute body of one block task.
+    fn compute_block(&self, bi: usize, bj: usize) {
+        if !self.model {
+            // SAFETY: the dependency annotations of the calling task order
+            // this access (OmpSs memory model, see store.rs).
+            let (top, bottom, left, right) = unsafe { self.halos(bi, bj) };
+            let u = unsafe { self.blocks.get_mut(self.blk(bi, bj)) };
+            match &self.kernel {
+                Some(k) => {
+                    let (new, _delta) = k
+                        .sweep(u, &top, &bottom, &left, &right)
+                        .expect("PJRT sweep");
+                    u.copy_from_slice(&new);
+                }
+                None => sweep_native(u, self.b, self.b, &top, &bottom, &left, &right),
+            }
+        }
+        nanos::work(self.cost);
+    }
+
+    /// Copy of a block's first/last row for sending (model: zeros).
+    fn row_copy(&self, bi: usize, bj: usize, last: bool) -> Vec<f32> {
+        if self.model {
+            return vec![0f32; self.b];
+        }
+        let u = unsafe { self.blocks.get(self.blk(bi, bj)) };
+        if last {
+            u[(self.b - 1) * self.b..].to_vec()
+        } else {
+            u[0..self.b].to_vec()
+        }
+    }
+}
+
+fn hybrid(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
+    let rt = ctx.rt.as_ref().expect("hybrid versions need a task runtime");
+    let level = match p.version {
+        GsVersion::InteropBlk | GsVersion::InteropNonBlk => ThreadLevel::TaskMultiple,
+        _ => ThreadLevel::Multiple,
+    };
+    let tm = tampi::init(&ctx.comm, rt, level);
+
+    let r = ctx.rank;
+    let n = ctx.size;
+    let b = p.block;
+    let nbc = p.cols / b;
+    let nbr = p.rows / b;
+    let lbr = nbr / n;
+    let model = p.compute == Compute::Model;
+    let st = Arc::new(HybridState {
+        b,
+        nbc,
+        lbr,
+        rank: r,
+        ranks: n,
+        model,
+        blocks: BlockStore::zeros(lbr * nbc, if model { 1 } else { b * b }),
+        halo_top: BlockStore::zeros(nbc, b),
+        halo_bot: BlockStore::zeros(nbc, b),
+        kernel: if p.compute == Compute::Pjrt {
+            Some(Arc::new(crate::runtime::GsKernel::load(b).expect("gs kernel")))
+        } else {
+            None
+        },
+        cost: gs_cost(b * b, p.cell_ns),
+    });
+
+    let obj_blk: Vec<DepObj> = (0..lbr * nbc)
+        .map(|i| rt.dep(format!("r{r}b{i}")))
+        .collect();
+    let obj_ht: Vec<DepObj> = (0..nbc).map(|j| rt.dep(format!("r{r}ht{j}"))).collect();
+    let obj_hb: Vec<DepObj> = (0..nbc).map(|j| rt.dep(format!("r{r}hb{j}"))).collect();
+    let sentinel = rt.dep(format!("r{r}sentinel"));
+    let use_sentinel = p.version == GsVersion::Sentinel;
+
+    match p.version {
+        GsVersion::ForkJoin => {
+            // Sequential comm phases + parallel compute + taskwait per iter.
+            for t in 0..p.iters {
+                if r > 0 {
+                    for j in 0..nbc {
+                        let part = st.row_copy(0, j, false);
+                        ctx.comm.send(&part, r - 1, tag_up(t, j, nbc));
+                    }
+                }
+                if r < n - 1 {
+                    for j in 0..nbc {
+                        // SAFETY: main thread, between taskwaits.
+                        let buf = unsafe { st.halo_bot.get_mut(j) };
+                        ctx.comm.recv(buf, (r + 1) as i32, tag_up(t, j, nbc));
+                    }
+                }
+                if r > 0 {
+                    for j in 0..nbc {
+                        let buf = unsafe { st.halo_top.get_mut(j) };
+                        ctx.comm.recv(buf, (r - 1) as i32, tag_down(t, j, nbc));
+                    }
+                }
+                for bi in 0..lbr {
+                    for bj in 0..nbc {
+                        spawn_compute(rt, &st, &obj_blk, &obj_ht, &obj_hb, bi, bj, t, false);
+                    }
+                }
+                rt.taskwait();
+                if r < n - 1 {
+                    for j in 0..nbc {
+                        let part = st.row_copy(lbr - 1, j, true);
+                        ctx.comm.send(&part, r + 1, tag_down(t, j, nbc));
+                    }
+                }
+            }
+        }
+        _ => {
+            // Task versions: submit ALL iterations; dependencies (and, for
+            // Sentinel, the artificial serialization) order execution.
+            for t in 0..p.iters {
+                if r > 0 {
+                    for j in 0..nbc {
+                        spawn_send(
+                            rt, &tm, &st, &obj_blk, &sentinel, use_sentinel,
+                            /*bi*/ 0, j, /*last*/ false, r - 1, tag_up(t, j, nbc), p.version,
+                        );
+                    }
+                }
+                if r < n - 1 {
+                    for j in 0..nbc {
+                        spawn_recv(
+                            rt, &tm, &st, &obj_hb[j], &sentinel, use_sentinel,
+                            st.halo_bot.clone(), j, (r + 1) as i32, tag_up(t, j, nbc), p.version,
+                        );
+                    }
+                }
+                if r > 0 {
+                    for j in 0..nbc {
+                        spawn_recv(
+                            rt, &tm, &st, &obj_ht[j], &sentinel, use_sentinel,
+                            st.halo_top.clone(), j, (r - 1) as i32, tag_down(t, j, nbc), p.version,
+                        );
+                    }
+                }
+                for bi in 0..lbr {
+                    for bj in 0..nbc {
+                        spawn_compute(rt, &st, &obj_blk, &obj_ht, &obj_hb, bi, bj, t, true);
+                    }
+                }
+                if r < n - 1 {
+                    for j in 0..nbc {
+                        spawn_send(
+                            rt, &tm, &st, &obj_blk, &sentinel, use_sentinel,
+                            lbr - 1, j, /*last*/ true, r + 1, tag_down(t, j, nbc), p.version,
+                        );
+                    }
+                }
+            }
+            rt.taskwait();
+        }
+    }
+
+    let local = if model { 0.0 } else { st.blocks.checksum() };
+    record_checksum(ctx, counters, local);
+}
+
+/// Spawn one block-update task with the Fig 7 dependency pattern.
+#[allow(clippy::too_many_arguments)]
+fn spawn_compute(
+    rt: &crate::nanos::Runtime,
+    st: &Arc<HybridState>,
+    obj_blk: &[DepObj],
+    obj_ht: &[DepObj],
+    obj_hb: &[DepObj],
+    bi: usize,
+    bj: usize,
+    t: usize,
+    with_halo_deps: bool,
+) {
+    let mut tb = rt
+        .task()
+        .label(format!("gs[{t}]({bi},{bj})"))
+        .dep(&obj_blk[st.blk(bi, bj)], Mode::InOut);
+    if bi > 0 {
+        tb = tb.dep(&obj_blk[st.blk(bi - 1, bj)], Mode::In);
+    } else if with_halo_deps && st.rank > 0 {
+        tb = tb.dep(&obj_ht[bj], Mode::In);
+    }
+    if bi < st.lbr - 1 {
+        tb = tb.dep(&obj_blk[st.blk(bi + 1, bj)], Mode::In);
+    } else if with_halo_deps && st.rank < st.ranks - 1 {
+        tb = tb.dep(&obj_hb[bj], Mode::In);
+    }
+    if bj > 0 {
+        tb = tb.dep(&obj_blk[st.blk(bi, bj - 1)], Mode::In);
+    }
+    if bj < st.nbc - 1 {
+        tb = tb.dep(&obj_blk[st.blk(bi, bj + 1)], Mode::In);
+    }
+    let st = st.clone();
+    tb.spawn(move || st.compute_block(bi, bj));
+}
+
+/// Spawn a boundary-row send task.
+#[allow(clippy::too_many_arguments)]
+fn spawn_send(
+    rt: &crate::nanos::Runtime,
+    tm: &Tampi,
+    st: &Arc<HybridState>,
+    obj_blk: &[DepObj],
+    sentinel: &DepObj,
+    use_sentinel: bool,
+    bi: usize,
+    bj: usize,
+    last: bool,
+    dst: usize,
+    tag: i32,
+    version: GsVersion,
+) {
+    let mut tb = rt
+        .task()
+        .label(format!("send({bi},{bj})t{tag}"))
+        .dep(&obj_blk[st.blk(bi, bj)], Mode::In);
+    if use_sentinel {
+        tb = tb.dep(sentinel, Mode::InOut);
+    }
+    let st = st.clone();
+    let tm = tm.clone();
+    tb.spawn(move || {
+        let part = st.row_copy(bi, bj, last);
+        match version {
+            GsVersion::InteropNonBlk => {
+                let req = tm.comm().isend(&part, dst, tag);
+                tm.iwait(&req);
+            }
+            _ => tm.send(&part, dst, tag),
+        }
+    });
+}
+
+/// Spawn a halo receive task.
+#[allow(clippy::too_many_arguments)]
+fn spawn_recv(
+    rt: &crate::nanos::Runtime,
+    tm: &Tampi,
+    st: &Arc<HybridState>,
+    halo_obj: &DepObj,
+    sentinel: &DepObj,
+    use_sentinel: bool,
+    halo_store: Arc<BlockStore>,
+    j: usize,
+    src: i32,
+    tag: i32,
+    version: GsVersion,
+) {
+    let _ = st;
+    let mut tb = rt
+        .task()
+        .label(format!("recv(h{j})t{tag}"))
+        .dep(halo_obj, Mode::Out);
+    if use_sentinel {
+        tb = tb.dep(sentinel, Mode::InOut);
+    }
+    let tm = tm.clone();
+    tb.spawn(move || {
+        // SAFETY: out-dependency on the halo object orders this write.
+        let buf = unsafe { halo_store.get_mut(j) };
+        match version {
+            GsVersion::InteropNonBlk => {
+                let req = tm.comm().irecv(buf, src, tag);
+                tm.iwait(&req);
+            }
+            _ => {
+                tm.recv(buf, src, tag);
+            }
+        }
+    });
+}

@@ -1,0 +1,473 @@
+//! IFSKer — mock-up of the IFS spectral-transform weather model
+//! (Section 7.2).
+//!
+//! Time-step cycle: grid-point physics -> transposition (data
+//! redistribution between the grid-point and spectral layouts) ->
+//! spectral computation -> inverse transposition. One MPI rank per core;
+//! fields are distributed by grid slice in grid-point space and by
+//! portion in spectral space, so every phase transition is an
+//! all-to-all-style exchange of `ranks x fields` *small* messages — the
+//! many-small-messages regime where TAMPI's two modes differ most.
+//!
+//! Versions:
+//! * `PureMpi`      — sequential per rank; per-field ordered blocking
+//!   exchanges (the naive original-code structure).
+//! * `InteropBlk`   — tasks per (field, peer) with blocking MPI via
+//!   TAMPI's MPI_TASK_MULTIPLE.
+//! * `InteropNonBlk`— tasks per (field, peer) with isend/irecv +
+//!   TAMPI_Iwait.
+
+use std::sync::Arc;
+
+use crate::nanos::{self, DepObj, Mode};
+use crate::rmpi::universe::Counters;
+use crate::rmpi::universe::RunError;
+use crate::rmpi::{ClusterConfig, RankCtx, RunStats, ThreadLevel, Universe};
+use crate::sim::VNanos;
+use crate::tampi::{self, Tampi};
+use crate::trace::Tracer;
+
+use super::store::BlockStore;
+use super::Compute;
+
+/// The three implementations of Section 7.2.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum IfsVersion {
+    PureMpi,
+    InteropBlk,
+    InteropNonBlk,
+}
+
+impl IfsVersion {
+    pub fn all() -> [IfsVersion; 3] {
+        [IfsVersion::PureMpi, IfsVersion::InteropBlk, IfsVersion::InteropNonBlk]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IfsVersion::PureMpi => "pure-mpi",
+            IfsVersion::InteropBlk => "interop-blk",
+            IfsVersion::InteropNonBlk => "interop-nonblk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IfsVersion> {
+        IfsVersion::all().into_iter().find(|v| v.name() == s)
+    }
+}
+
+/// Per-cell virtual costs of the two compute phases (ns). Physics is
+/// cheap and element-wise; the spectral transform is matmul-shaped.
+pub const PHYSICS_NS_PER_CELL: f64 = 2.0;
+pub const SPECTRAL_NS_PER_CELL: f64 = 9.0;
+
+/// Experiment parameters.
+#[derive(Clone)]
+pub struct IfsParams {
+    /// Total grid points (split evenly across ranks).
+    pub gridpoints: usize,
+    /// Number of fields (one transposition message per field per peer).
+    pub fields: usize,
+    pub steps: usize,
+    pub nodes: usize,
+    /// Ranks per node (one rank per core, Section 7.2).
+    pub cores_per_node: usize,
+    pub version: IfsVersion,
+    pub compute: Compute,
+    pub net: crate::rmpi::NetworkModel,
+    pub poll_interval: VNanos,
+    pub tracer: Option<Arc<Tracer>>,
+    pub deadline: Option<VNanos>,
+}
+
+impl IfsParams {
+    pub fn new(
+        gridpoints: usize,
+        fields: usize,
+        steps: usize,
+        nodes: usize,
+        cores_per_node: usize,
+        version: IfsVersion,
+    ) -> IfsParams {
+        IfsParams {
+            gridpoints,
+            fields,
+            steps,
+            nodes,
+            cores_per_node,
+            version,
+            compute: Compute::Native,
+            net: crate::rmpi::NetworkModel::default(),
+            poll_interval: crate::sim::us(50),
+            tracer: None,
+            deadline: None,
+        }
+    }
+
+    fn ranks(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    fn validate(&self) {
+        let r = self.ranks();
+        assert_eq!(self.gridpoints % r, 0, "gridpoints not divisible by ranks");
+        let chunk = self.gridpoints / r;
+        assert_eq!(chunk % r, 0, "chunk ({chunk}) not divisible by ranks ({r})");
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IfsOutcome {
+    pub vtime_ns: u64,
+    pub stats: RunStats,
+    pub checksum: f64,
+}
+
+impl IfsOutcome {
+    /// Gridpoint-steps per virtual second.
+    pub fn throughput(&self, p: &IfsParams) -> f64 {
+        (p.gridpoints as f64 * p.steps as f64) / (self.vtime_ns as f64 / 1e9)
+    }
+}
+
+/// Native physics: logistic reaction (matches the Pallas kernel).
+fn physics_native(u: &mut [f32], dt: f32) {
+    for x in u.iter_mut() {
+        *x += dt * *x * (1.0 - *x);
+    }
+}
+
+/// Native "spectral" op on the transposed layout: per 64-wide segment,
+/// damp towards the segment mean (deterministic, order-independent).
+fn spectral_native(u: &mut [f32]) {
+    for seg in u.chunks_mut(64) {
+        let mean = seg.iter().sum::<f32>() / seg.len() as f32;
+        for x in seg.iter_mut() {
+            *x = 0.9 * *x + 0.1 * mean;
+        }
+    }
+}
+
+/// Tags: direction 0 = grid->spectral, 1 = spectral->grid.
+fn tag(step: usize, field: usize, dir: usize, fields: usize) -> i32 {
+    ((step * fields + field) * 2 + dir) as i32
+}
+
+/// Run one IFSKer experiment on a simulated cluster.
+pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
+    p.validate();
+    let cores = match p.version {
+        IfsVersion::PureMpi => 0,
+        _ => 1, // one core per rank; tasks provide in-flight MPI ops
+    };
+    let mut cc = ClusterConfig::new(p.nodes, p.cores_per_node, cores);
+    cc.net = p.net;
+    cc.poll_interval = p.poll_interval;
+    cc.tracer = p.tracer.clone();
+    cc.deadline = p.deadline;
+    let p2 = p.clone();
+    let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
+        IfsVersion::PureMpi => pure(ctx, &p2, counters),
+        _ => interop(ctx, &p2, counters),
+    })?;
+    let checksum = stats
+        .counters
+        .get("checksum_bits")
+        .map(|&b| f64::from_bits(b))
+        .unwrap_or(0.0);
+    Ok(IfsOutcome { vtime_ns: stats.vtime_ns, stats, checksum })
+}
+
+fn record_checksum(ctx: &RankCtx, counters: &Counters, local: f64) {
+    let mut v = [local];
+    ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+    if ctx.rank == 0 {
+        counters.add("checksum_bits", v[0].to_bits());
+    }
+}
+
+fn init_value(rank: usize, field: usize, i: usize) -> f32 {
+    // Deterministic, version-independent initial condition in (0, 1).
+    let x = (rank * 131 + field * 17 + i) as f32;
+    0.25 + 0.5 * ((x * 0.01).sin() * 0.5 + 0.5) * 0.9
+}
+
+// --------------------------------------------------------------------
+// Pure MPI: sequential; per-field ordered blocking exchange per phase
+// transition (the structure of the original non-tasked code).
+// --------------------------------------------------------------------
+fn pure(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
+    let r = ctx.rank;
+    let n = ctx.size;
+    let chunk = p.gridpoints / n;
+    let portion = chunk / n;
+    let model = p.compute == Compute::Model;
+    let alloc = if model { 1 } else { chunk };
+    let mut fields: Vec<Vec<f32>> = (0..p.fields)
+        .map(|f| {
+            (0..alloc)
+                .map(|i| if model { 0.0 } else { init_value(r, f, i) })
+                .collect()
+        })
+        .collect();
+    let mut spec = vec![0f32; if model { 1 } else { chunk }];
+    let dummy = vec![0f32; portion];
+
+    for step in 0..p.steps {
+        for f in 0..p.fields {
+            // 1. physics
+            if !model {
+                physics_native(&mut fields[f], 0.05);
+            }
+            ctx.clock
+                .work((chunk as f64 * PHYSICS_NS_PER_CELL) as u64);
+            // 2. transposition grid -> spectral: ordered blocking exchange
+            exchange_pure(ctx, &fields[f], &mut spec, portion, tag(step, f, 0, p.fields), model, &dummy);
+            // 3. spectral computation
+            if !model {
+                spectral_native(&mut spec);
+            }
+            ctx.clock
+                .work((chunk as f64 * SPECTRAL_NS_PER_CELL) as u64);
+            // 4. transposition back
+            let mut back = std::mem::take(&mut fields[f]);
+            exchange_pure(ctx, &spec, &mut back, portion, tag(step, f, 1, p.fields), model, &dummy);
+            fields[f] = back;
+        }
+    }
+    let local: f64 = if model {
+        0.0
+    } else {
+        fields.iter().flat_map(|v| v.iter()).map(|&x| x as f64).sum()
+    };
+    record_checksum(ctx, counters, local);
+}
+
+/// Ordered blocking all-to-all of `portion`-sized pieces (naive: one
+/// peer at a time, send/recv ordered by rank to avoid deadlock).
+fn exchange_pure(
+    ctx: &RankCtx,
+    src: &[f32],
+    dst: &mut [f32],
+    portion: usize,
+    tag: i32,
+    model: bool,
+    dummy: &[f32],
+) {
+    let r = ctx.rank;
+    let n = ctx.size;
+    if !model {
+        dst[r * portion..(r + 1) * portion].copy_from_slice(&src[r * portion..(r + 1) * portion]);
+    }
+    for p in 0..n {
+        if p == r {
+            continue;
+        }
+        if r < p {
+            let piece = if model { dummy } else { &src[p * portion..(p + 1) * portion] };
+            ctx.comm.send(piece, p, tag);
+            if model {
+                let mut scratch = vec![0f32; portion];
+                ctx.comm.recv(&mut scratch, p as i32, tag);
+            } else {
+                ctx.comm.recv(&mut dst[p * portion..(p + 1) * portion], p as i32, tag);
+            }
+        } else {
+            if model {
+                let mut scratch = vec![0f32; portion];
+                ctx.comm.recv(&mut scratch, p as i32, tag);
+            } else {
+                ctx.comm.recv(&mut dst[p * portion..(p + 1) * portion], p as i32, tag);
+            }
+            let piece = if model { dummy } else { &src[p * portion..(p + 1) * portion] };
+            ctx.comm.send(piece, p, tag);
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Interop versions: tasks per field phase and per (field, peer) message;
+// TAMPI makes the blocking variant safe and the non-blocking variant
+// zero-pause. All steps are submitted up front; dependencies pipeline
+// fields and steps against each other.
+// --------------------------------------------------------------------
+struct IfsState {
+    chunk: usize,
+    portion: usize,
+    own_rank: usize,
+    model: bool,
+    /// Grid-point layout: one block per field.
+    fields: Arc<BlockStore>,
+    /// Spectral layout: one block per field.
+    spec: Arc<BlockStore>,
+    nranks: usize,
+}
+
+fn interop(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
+    let rt = ctx.rt.as_ref().expect("interop needs a runtime");
+    let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+    let r = ctx.rank;
+    let n = ctx.size;
+    let chunk = p.gridpoints / n;
+    let portion = chunk / n;
+    let model = p.compute == Compute::Model;
+    let alloc = if model { 1 } else { chunk };
+    let st = Arc::new(IfsState {
+        chunk,
+        portion,
+        own_rank: r,
+        model,
+        fields: BlockStore::new(p.fields, alloc, |f, i| {
+            if model { 0.0 } else { init_value(r, f, i) }
+        }),
+        // Model mode still allocates the spectral block as the request
+        // target (chunk floats per field: tiny at any scale).
+        spec: BlockStore::zeros(p.fields, chunk),
+        nranks: n,
+    });
+    // One dependency object per field per layout (grid / spectral).
+    let obj_field: Vec<DepObj> = (0..p.fields).map(|f| rt.dep(format!("r{r}f{f}"))).collect();
+    let obj_spec: Vec<DepObj> = (0..p.fields).map(|f| rt.dep(format!("r{r}s{f}"))).collect();
+
+    let nonblk = p.version == IfsVersion::InteropNonBlk;
+    for step in 0..p.steps {
+        for f in 0..p.fields {
+            // physics task: inout(field f)
+            {
+                let st = st.clone();
+                let cost = (chunk as f64 * PHYSICS_NS_PER_CELL) as u64;
+                rt.task()
+                    .label(format!("phys[{step}]f{f}"))
+                    .dep(&obj_field[f], Mode::InOut)
+                    .spawn(move || {
+                        if !st.model {
+                            // SAFETY: inout dep on the field block.
+                            physics_native(unsafe { st.fields.get_mut(f) }, 0.05);
+                        }
+                        nanos::work(cost);
+                    });
+            }
+            // Forward transposition: ONE communication task per field
+            // issuing isends to every peer and irecvs from every peer,
+            // then TAMPI_Iwaitall / waitall — the Fig 5 pattern ("more
+            // in-flight MPI operations" per task, Section 7.2).
+            spawn_transpose(
+                rt, &tm, &st, &obj_field[f], &obj_spec[f], f,
+                tag(step, f, 0, p.fields), nonblk, Dir::GridToSpec,
+            );
+            // spectral task: inout(spec f)
+            {
+                let st2 = st.clone();
+                let cost = (chunk as f64 * SPECTRAL_NS_PER_CELL) as u64;
+                rt.task()
+                    .label(format!("spec[{step}]f{f}"))
+                    .dep(&obj_spec[f], Mode::InOut)
+                    .spawn(move || {
+                        if !st2.model {
+                            // SAFETY: inout dep on the spec block.
+                            spectral_native(unsafe { st2.spec.get_mut(f) });
+                        }
+                        nanos::work(cost);
+                    });
+            }
+            // Backward transposition.
+            spawn_transpose(
+                rt, &tm, &st, &obj_field[f], &obj_spec[f], f,
+                tag(step, f, 1, p.fields), nonblk, Dir::SpecToGrid,
+            );
+        }
+    }
+    rt.taskwait();
+    let local: f64 = if model { 0.0 } else { st.fields.checksum() };
+    record_checksum(ctx, counters, local);
+}
+
+#[derive(Clone, Copy)]
+enum Dir {
+    GridToSpec,
+    SpecToGrid,
+}
+
+/// One transposition task: isend my portion to every peer, irecv each
+/// peer's portion, copy the local one, then Iwaitall (non-blocking mode)
+/// or a task-aware waitall (blocking mode).
+#[allow(clippy::too_many_arguments)]
+fn spawn_transpose(
+    rt: &crate::nanos::Runtime,
+    tm: &Tampi,
+    st: &Arc<IfsState>,
+    obj_field: &DepObj,
+    obj_spec: &DepObj,
+    f: usize,
+    tag: i32,
+    nonblk: bool,
+    dir: Dir,
+) {
+    let (src_obj, dst_obj) = match dir {
+        Dir::GridToSpec => (obj_field, obj_spec),
+        Dir::SpecToGrid => (obj_spec, obj_field),
+    };
+    let st2 = st.clone();
+    let tm2 = tm.clone();
+    rt.task()
+        .label(format!("xpose f{f} t{tag}"))
+        .dep(src_obj, Mode::In)
+        .dep(dst_obj, Mode::Out)
+        .spawn(move || {
+            let n = st2.nranks;
+            let r = st2.own_rank;
+            let po = st2.portion;
+            let mut reqs = Vec::with_capacity(2 * (n - 1));
+            // Post all receives into disjoint destination portions.
+            // SAFETY: out-dep on the destination block; the buffer stays
+            // valid until the task's dependencies release (Iwaitall
+            // semantics, Fig 5) because successors are event-gated.
+            let dst: &mut [f32] = match dir {
+                Dir::GridToSpec => unsafe { st2.spec.get_mut(f) },
+                Dir::SpecToGrid => {
+                    if st2.model {
+                        // model: recv into spec as scratch (field is 1-elem)
+                        unsafe { st2.spec.get_mut(f) }
+                    } else {
+                        unsafe { st2.fields.get_mut(f) }
+                    }
+                }
+            };
+            for q in 0..n {
+                if q != r {
+                    reqs.push(tm2.comm().irecv(&mut dst[q * po..(q + 1) * po], q as i32, tag));
+                }
+            }
+            // Send my portions (eagerly copied by rmpi).
+            for q in 0..n {
+                if q == r {
+                    continue;
+                }
+                let piece: Vec<f32> = if st2.model {
+                    vec![0f32; po]
+                } else {
+                    // SAFETY: in-dep on the source block.
+                    let src: &Vec<f32> = match dir {
+                        Dir::GridToSpec => unsafe { st2.fields.get(f) },
+                        Dir::SpecToGrid => unsafe { st2.spec.get(f) },
+                    };
+                    src[q * po..(q + 1) * po].to_vec()
+                };
+                reqs.push(tm2.comm().isend(&piece, q, tag));
+            }
+            // Local portion.
+            if !st2.model {
+                let (src, dst): (&Vec<f32>, &mut Vec<f32>) = match dir {
+                    // SAFETY: deps cover both blocks of field f.
+                    Dir::GridToSpec => unsafe { (st2.fields.get(f), st2.spec.get_mut(f)) },
+                    Dir::SpecToGrid => unsafe { (st2.spec.get(f), st2.fields.get_mut(f)) },
+                };
+                dst[r * po..(r + 1) * po].copy_from_slice(&src[r * po..(r + 1) * po]);
+            }
+            if nonblk {
+                tm2.iwaitall(&reqs); // Fig 5: dependencies gate completion
+            } else {
+                tm2.waitall(&reqs); // blocking mode: single pause
+            }
+        });
+}

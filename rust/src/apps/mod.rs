@@ -1,0 +1,43 @@
+//! The paper's evaluation applications (Section 7).
+//!
+//! * [`gauss_seidel`] — iterative Gauss-Seidel heat-equation solver in the
+//!   paper's five versions plus the non-blocking-TAMPI variant:
+//!   `Pure MPI`, `N-Buffer MPI`, `Fork-Join`, `Sentinel`, `Interop(blk)`,
+//!   `Interop(non-blk)` (Section 7.1).
+//! * [`ifsker`] — the IFS weather-model communication mock-up in
+//!   `Pure MPI`, `Interop(blk)`, `Interop(non-blk)` (Section 7.2).
+//!
+//! Both apps run on the simulated cluster with a choice of compute
+//! backend: real numerics in native Rust, real numerics through the
+//! AOT-compiled Pallas kernels via PJRT, or a pure cost model for
+//! large-scale sweeps ([`Compute`]).
+
+pub mod gauss_seidel;
+pub mod ifsker;
+pub mod store;
+
+use crate::sim::VNanos;
+
+/// How task compute bodies are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compute {
+    /// Real f32 numerics in native Rust; virtual time charged by the cost
+    /// model (deterministic figures, verified results).
+    Native,
+    /// Real numerics through the PJRT-compiled Pallas kernel (the
+    /// three-layer hot path); virtual time charged by the cost model.
+    Pjrt,
+    /// No data is touched; only the cost model advances virtual time.
+    /// Used for cluster-scale parameter sweeps.
+    Model,
+}
+
+/// Calibrated per-cell cost of one Gauss-Seidel update (ns). Measured on
+/// the reproduction host with the native kernel (see EXPERIMENTS.md §Perf);
+/// override via `GsConfig::cell_ns`.
+pub const DEFAULT_GS_CELL_NS: f64 = 2.5;
+
+/// Cost model helper: ns for `cells` Gauss-Seidel cell updates.
+pub fn gs_cost(cells: usize, cell_ns: f64) -> VNanos {
+    (cells as f64 * cell_ns) as VNanos
+}

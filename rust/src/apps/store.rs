@@ -1,0 +1,80 @@
+//! Shared mutable storage whose exclusivity is guaranteed by the task
+//! dependency system — the OmpSs memory model.
+//!
+//! Tasks declare in/out/inout accesses over [`crate::nanos::DepObj`]s;
+//! the runtime orders conflicting accesses, so the raw aliasing here is
+//! sound *given correct dependency annotations* (exactly the contract an
+//! OmpSs program has with its runtime).
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+/// A set of equally-sized f32 buffers ("blocks") with runtime-checked-by-
+/// dependencies shared mutability.
+pub struct BlockStore {
+    blocks: Vec<UnsafeCell<Vec<f32>>>,
+}
+
+// SAFETY: concurrent access is serialized by the task dependency system.
+unsafe impl Sync for BlockStore {}
+unsafe impl Send for BlockStore {}
+
+impl BlockStore {
+    pub fn new(count: usize, len: usize, init: impl Fn(usize, usize) -> f32) -> Arc<Self> {
+        let blocks = (0..count)
+            .map(|b| UnsafeCell::new((0..len).map(|i| init(b, i)).collect()))
+            .collect();
+        Arc::new(BlockStore { blocks })
+    }
+
+    /// Zero-filled store.
+    pub fn zeros(count: usize, len: usize) -> Arc<Self> {
+        Self::new(count, len, |_, _| 0.0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Shared read access (caller must hold an `in` dependency).
+    ///
+    /// # Safety
+    /// The calling task must have declared a dependency that orders this
+    /// access against all writers.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, idx: usize) -> &mut Vec<f32> {
+        unsafe { &mut *self.blocks[idx].get() }
+    }
+
+    /// # Safety
+    /// See [`BlockStore::get_mut`].
+    pub unsafe fn get(&self, idx: usize) -> &Vec<f32> {
+        unsafe { &*self.blocks[idx].get() }
+    }
+
+    /// Sum of all elements in f64 (verification checksums). Only call
+    /// after all tasks completed.
+    pub fn checksum(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for b in 0..self.count() {
+            // SAFETY: quiescent (post-taskwait) access.
+            for &v in unsafe { self.get(b) }.iter() {
+                acc += v as f64;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_and_checksum() {
+        let s = BlockStore::new(3, 4, |b, i| (b * 4 + i) as f32);
+        assert_eq!(s.count(), 3);
+        // 0+1+..+11 = 66
+        assert_eq!(s.checksum(), 66.0);
+    }
+}

@@ -1,0 +1,417 @@
+//! Figure-regeneration harness: one entry point per paper figure.
+//!
+//! Every figure of Section 7 has a `figN` function that sweeps the same
+//! parameter grid the paper does (scaled to the simulated cluster; use
+//! [`Scale::Full`] for paper-scale runs) and returns rows with speed-up
+//! and parallel efficiency computed exactly as the paper defines them:
+//!
+//! * speed-up: against *Pure MPI on one node* (Figs 9, 11 top, 14);
+//!   against the same version's one-node run in Figs 12/13.
+//! * parallel efficiency: each version against its own one-node run.
+//!
+//! The binaries in `rust/benches/` print these tables; `repro figures`
+//! drives them from the CLI.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::apps::gauss_seidel::{self, GsParams, GsVersion};
+use crate::apps::ifsker::{self, IfsParams, IfsVersion};
+use crate::apps::Compute;
+use crate::sim::ms;
+use crate::trace::{GraphRecorder, Tracer};
+
+/// Sweep presets. The simulated cluster reproduces the paper's *shape*;
+/// `Full` runs the paper's actual sizes (64Kx64K, 48 cores/node, up to 64
+/// nodes) and takes correspondingly long.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scale {
+    /// Seconds-fast smoke scale (CI).
+    Quick,
+    /// Default: minutes; enough nodes/blocks to show every crossover.
+    Default,
+    /// Paper scale.
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("TAMPI_BENCH_SCALE").as_deref() {
+            Ok("quick") => Scale::Quick,
+            Ok("full") => Scale::Full,
+            _ => Scale::Default,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "quick" => Some(Scale::Quick),
+            "default" => Some(Scale::Default),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}
+
+/// One measurement row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub fig: &'static str,
+    pub version: String,
+    pub nodes: usize,
+    pub extra: String,
+    pub vtime_ms: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+}
+
+/// Render rows as the paper-style table.
+pub fn format_table(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<16} {:>6} {:>10} {:>12} {:>9} {:>11}\n",
+        "version", "nodes", "extra", "vtime_ms", "speedup", "efficiency"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:>6} {:>10} {:>12.2} {:>9.2} {:>11.3}\n",
+            r.version, r.nodes, r.extra, r.vtime_ms, r.speedup, r.efficiency
+        ));
+    }
+    s
+}
+
+/// Gauss-Seidel sweep configuration shared by Figs 9/11/12/13.
+#[derive(Clone)]
+pub struct GsSweep {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    pub iters: usize,
+    pub cores_per_node: usize,
+    pub node_counts: Vec<usize>,
+}
+
+impl GsSweep {
+    pub fn strong(scale: Scale) -> GsSweep {
+        match scale {
+            Scale::Quick => GsSweep {
+                rows: 1024,
+                cols: 1024,
+                block: 256,
+                iters: 12,
+                cores_per_node: 2,
+                node_counts: vec![1, 2, 4],
+            },
+            Scale::Default => GsSweep {
+                rows: 8192,
+                cols: 8192,
+                block: 512,
+                iters: 50,
+                cores_per_node: 4,
+                node_counts: vec![1, 2, 4, 8, 16],
+            },
+            Scale::Full => GsSweep {
+                rows: 65536,
+                cols: 65536,
+                block: 1024,
+                iters: 1000,
+                cores_per_node: 48,
+                node_counts: vec![1, 2, 4, 8, 16, 32, 64],
+            },
+        }
+    }
+
+    /// Weak scaling: rows grow with the node count (paper: 32Kx32K/node).
+    pub fn weak(scale: Scale) -> GsSweep {
+        let mut s = GsSweep::strong(scale);
+        match scale {
+            Scale::Quick => {
+                s.rows = 512;
+                s.cols = 1024;
+            }
+            Scale::Default => {
+                s.rows = 4096;
+                s.cols = 8192;
+            }
+            Scale::Full => {
+                s.rows = 32768;
+                s.cols = 32768;
+                s.iters = 1000;
+            }
+        }
+        s
+    }
+
+    fn params(&self, v: GsVersion, nodes: usize, weak: bool) -> GsParams {
+        let rows = if weak { self.rows * nodes } else { self.rows };
+        let mut p = GsParams::new(
+            rows,
+            self.cols,
+            self.block,
+            self.iters,
+            nodes,
+            self.cores_per_node,
+            v,
+        );
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(120_000_000)); // 120 virtual seconds
+        p
+    }
+}
+
+fn run_gs(p: &GsParams) -> f64 {
+    match gauss_seidel::run(p) {
+        Ok(out) => out.vtime_ns as f64 / 1e6,
+        Err(e) => {
+            eprintln!(
+                "WARN: {} nodes={} failed: {e} (recorded as NaN)",
+                p.version.name(),
+                p.nodes
+            );
+            f64::NAN
+        }
+    }
+}
+
+/// Generic GS sweep -> rows (speedup base: Pure MPI @ 1 node).
+fn gs_sweep_rows(
+    fig: &'static str,
+    sweep: &GsSweep,
+    versions: &[GsVersion],
+    weak: bool,
+    block_sizes: Option<&[usize]>,
+) -> Vec<Row> {
+    let mut rows = Vec::new();
+    // Baseline: Pure MPI on one node (always with the sweep's block).
+    let base = run_gs(&sweep.params(GsVersion::PureMpi, 1, weak));
+    let blocks: Vec<usize> = match block_sizes {
+        Some(bs) => bs.to_vec(),
+        None => vec![sweep.block],
+    };
+    for v in versions {
+        for &b in &blocks {
+            let mut own_base = f64::NAN;
+            for &n in &sweep.node_counts {
+                let mut s = sweep.clone();
+                s.block = b;
+                let p = s.params(*v, n, weak);
+                let t = run_gs(&p);
+                if n == sweep.node_counts[0] {
+                    own_base = t;
+                }
+                // Weak scaling does N x the work of the 1-node problem.
+                let work_factor = if weak { n as f64 } else { 1.0 };
+                rows.push(Row {
+                    fig,
+                    version: v.name().to_string(),
+                    nodes: n,
+                    extra: if block_sizes.is_some() {
+                        format!("{b}bs")
+                    } else {
+                        String::new()
+                    },
+                    vtime_ms: t,
+                    speedup: base / t * work_factor,
+                    efficiency: own_base / t * work_factor / (n as f64
+                        / sweep.node_counts[0] as f64),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 9: Gauss-Seidel strong scaling, five versions.
+pub fn fig09(scale: Scale) -> Vec<Row> {
+    let sweep = GsSweep::strong(scale);
+    gs_sweep_rows(
+        "fig09",
+        &sweep,
+        &[
+            GsVersion::PureMpi,
+            GsVersion::NBuffer,
+            GsVersion::ForkJoin,
+            GsVersion::Sentinel,
+            GsVersion::InteropBlk,
+        ],
+        false,
+        None,
+    )
+}
+
+/// Fig 11: Gauss-Seidel weak scaling, five versions.
+pub fn fig11(scale: Scale) -> Vec<Row> {
+    let sweep = GsSweep::weak(scale);
+    gs_sweep_rows(
+        "fig11",
+        &sweep,
+        &[
+            GsVersion::PureMpi,
+            GsVersion::NBuffer,
+            GsVersion::ForkJoin,
+            GsVersion::Sentinel,
+            GsVersion::InteropBlk,
+        ],
+        true,
+        None,
+    )
+}
+
+/// Block sizes for Figs 12/13 (paper: 256/512/1024, scaled 4x down).
+pub fn fig12_blocks(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![128, 256],
+        Scale::Default => vec![128, 256, 512],
+        Scale::Full => vec![256, 512, 1024],
+    }
+}
+
+/// Fig 12: Interop(blk) vs Interop(non-blk), strong scaling x block size.
+pub fn fig12(scale: Scale) -> Vec<Row> {
+    let sweep = GsSweep::strong(scale);
+    let blocks = fig12_blocks(scale);
+    gs_sweep_rows(
+        "fig12",
+        &sweep,
+        &[GsVersion::InteropBlk, GsVersion::InteropNonBlk],
+        false,
+        Some(&blocks),
+    )
+}
+
+/// Fig 13: Interop(blk) vs Interop(non-blk), weak scaling x block size.
+pub fn fig13(scale: Scale) -> Vec<Row> {
+    let sweep = GsSweep::weak(scale);
+    let blocks = fig12_blocks(scale);
+    gs_sweep_rows(
+        "fig13",
+        &sweep,
+        &[GsVersion::InteropBlk, GsVersion::InteropNonBlk],
+        true,
+        Some(&blocks),
+    )
+}
+
+/// Fig 14: IFSKer strong scaling (Pure, Interop blk, Interop non-blk).
+pub fn fig14(scale: Scale) -> Vec<Row> {
+    let (grid, fields, steps, cpn, node_counts) = match scale {
+        Scale::Quick => (8 * 1024, 4, 4, 2, vec![1, 2, 4]),
+        Scale::Default => (65536, 8, 10, 4, vec![1, 2, 4, 8, 16]),
+        Scale::Full => (653_184, 16, 200, 48, vec![1, 2, 4, 8, 16, 32]),
+    };
+    let mk = |v: IfsVersion, nodes: usize| -> IfsParams {
+        let mut p = IfsParams::new(grid, fields, steps, nodes, cpn, v);
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(120_000_000));
+        p
+    };
+    let run1 = |p: &IfsParams| match ifsker::run(p) {
+        Ok(o) => o.vtime_ns as f64 / 1e6,
+        Err(e) => {
+            eprintln!("WARN: ifsker {} nodes={} failed: {e}", p.version.name(), p.nodes);
+            f64::NAN
+        }
+    };
+    let base = run1(&mk(IfsVersion::PureMpi, 1));
+    let mut rows = Vec::new();
+    for v in IfsVersion::all() {
+        let mut own = f64::NAN;
+        for &n in &node_counts {
+            let t = run1(&mk(v, n));
+            if n == node_counts[0] {
+                own = t;
+            }
+            rows.push(Row {
+                fig: "fig14",
+                version: v.name().to_string(),
+                nodes: n,
+                extra: String::new(),
+                vtime_ms: t,
+                speedup: base / t,
+                efficiency: own / t / n as f64,
+            });
+        }
+    }
+    rows
+}
+
+/// Fig 8: dependency graphs (DOT) of the Fig 7 domain (3x12 blocks, 4
+/// ranks). Returns (version name, dot text, edge count).
+pub fn fig08() -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for v in [GsVersion::ForkJoin, GsVersion::Sentinel, GsVersion::InteropBlk] {
+        let g = Arc::new(GraphRecorder::new());
+        // Fig 7's domain: 12 block rows x 3 block cols over four ranks.
+        let mut p = GsParams::new(384, 96, 32, 3, 4, 2, v);
+        p.compute = Compute::Model;
+        p.graph = Some(g.clone());
+        p.deadline = Some(ms(600_000));
+        gauss_seidel::run(&p).expect("fig08 run");
+        out.push((v.name().to_string(), g.to_dot("sentinel"), g.edge_count()));
+    }
+    out
+}
+
+/// Fig 10: execution traces on four nodes. Returns (version, gantt text,
+/// csv, busy fractions).
+pub fn fig10(scale: Scale) -> Vec<(String, String, String, BTreeMap<u32, f64>)> {
+    let (rows, cols, block, iters, cpn) = match scale {
+        Scale::Quick => (512, 512, 128, 6, 2),
+        _ => (2048, 2048, 256, 10, 4),
+    };
+    let mut out = Vec::new();
+    for v in GsVersion::all() {
+        if v == GsVersion::InteropNonBlk {
+            continue; // Fig 10 shows the paper's five versions
+        }
+        let tracer = Arc::new(Tracer::new());
+        let mut p = GsParams::new(rows, cols, block, iters, 4, cpn, v);
+        p.compute = Compute::Model;
+        p.tracer = Some(tracer.clone());
+        p.deadline = Some(ms(60_000_000));
+        gauss_seidel::run(&p).expect("fig10 run");
+        let recs = tracer.snapshot();
+        let gantt = crate::trace::render_gantt(&recs, 100);
+        let busy = crate::trace::busy_fraction(&recs);
+        out.push((v.name().to_string(), gantt, tracer.to_csv(), busy));
+    }
+    out
+}
+
+/// Write figure outputs under `bench_out/`.
+pub fn write_output(name: &str, contents: &str) -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("bench_out");
+    std::fs::create_dir_all(&dir).expect("mkdir bench_out");
+    let path = dir.join(name);
+    std::fs::write(&path, contents).expect("write bench output");
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("quick"), Some(Scale::Quick));
+        assert_eq!(Scale::parse("full"), Some(Scale::Full));
+        assert_eq!(Scale::parse("bogus"), None);
+    }
+
+    #[test]
+    fn table_formats() {
+        let rows = vec![Row {
+            fig: "fig09",
+            version: "pure-mpi".into(),
+            nodes: 1,
+            extra: String::new(),
+            vtime_ms: 12.5,
+            speedup: 1.0,
+            efficiency: 1.0,
+        }];
+        let t = format_table(&rows);
+        assert!(t.contains("pure-mpi"));
+        assert!(t.contains("12.50"));
+    }
+}

@@ -1,0 +1,30 @@
+//! # TAMPI reproduction
+//!
+//! Production-quality reproduction of *"Integrating Blocking and
+//! Non-Blocking MPI Primitives with Task-Based Programming Models"*
+//! (K. Sala et al., Parallel Computing 2019) — the **Task-Aware MPI
+//! (TAMPI)** library — including every substrate the paper depends on:
+//!
+//! * [`sim`] — virtual-time execution engine (the "cluster"),
+//! * [`nanos`] — a Nanos6-like task runtime with the paper's pause/resume,
+//!   external-events and polling-services APIs (Section 4),
+//! * [`rmpi`] — an MPI-like message-passing library with communicators,
+//!   matching semantics, requests and collectives,
+//! * [`tampi`] — the paper's contribution: `MPI_TASK_MULTIPLE` blocking
+//!   mode and `TAMPI_Iwait`/`TAMPI_Iwaitall` non-blocking mode (Section 6),
+//! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
+//!   compute kernels from `artifacts/*.hlo.txt`,
+//! * [`apps`] — the paper's two benchmarks: Gauss-Seidel (five + one
+//!   versions, Section 7.1) and IFSKer (Section 7.2),
+//! * [`trace`] — execution traces (Fig 10) and dependency graphs (Fig 8),
+//! * [`bench`] — the figure-regeneration harness (Figs 9-14).
+
+pub mod apps;
+pub mod bench;
+pub mod nanos;
+pub mod rmpi;
+pub mod runtime;
+pub mod sim;
+pub mod tampi;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,289 @@
+//! `repro` — CLI launcher for the TAMPI reproduction.
+//!
+//! Subcommands:
+//!   gs        run one Gauss-Seidel experiment (Section 7.1)
+//!   ifsker    run one IFSKer experiment (Section 7.2)
+//!   figures   regenerate paper figures (8-14) into bench_out/
+//!   calibrate measure the compute cost model on this host
+//!
+//! Examples:
+//!   repro gs --version interop-nonblk --rows 4096 --cols 4096 \
+//!            --block 256 --iters 50 --nodes 4 --cores 4 --compute model
+//!   repro figures --fig 9 --scale quick
+//!   repro ifsker --version interop-blk --grid 65536 --nodes 2 --cores 4
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use tampi_repro::apps::gauss_seidel::{self, GsParams, GsVersion};
+use tampi_repro::apps::ifsker::{self, IfsParams, IfsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::bench::{self, Scale};
+use tampi_repro::sim::ms;
+use tampi_repro::trace::{GraphRecorder, Tracer};
+
+fn parse_args(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("unexpected argument: {}", args[i]);
+            std::process::exit(2);
+        }
+    }
+    m
+}
+
+fn get<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> T {
+    m.get(k)
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{k}: {v}")))
+        .unwrap_or(default)
+}
+
+fn compute_of(m: &HashMap<String, String>) -> Compute {
+    match m.get("compute").map(String::as_str).unwrap_or("native") {
+        "native" => Compute::Native,
+        "pjrt" => Compute::Pjrt,
+        "model" => Compute::Model,
+        other => {
+            eprintln!("unknown --compute {other} (native|pjrt|model)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gs(m: HashMap<String, String>) {
+    let version = m
+        .get("version")
+        .and_then(|v| GsVersion::parse(v))
+        .unwrap_or(GsVersion::InteropNonBlk);
+    let mut p = GsParams::new(
+        get(&m, "rows", 1024),
+        get(&m, "cols", 1024),
+        get(&m, "block", 256),
+        get(&m, "iters", 20),
+        get(&m, "nodes", 2),
+        get(&m, "cores", 2),
+        version,
+    );
+    p.compute = compute_of(&m);
+    p.cell_ns = get(&m, "cell-ns", p.cell_ns);
+    p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
+    let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
+    let graph = m.get("graph").map(|_| Arc::new(GraphRecorder::new()));
+    p.tracer = tracer.clone();
+    p.graph = graph.clone();
+
+    let wall = Instant::now();
+    match gauss_seidel::run(&p) {
+        Ok(out) => {
+            println!(
+                "gs {} nodes={} cores={} {}x{} block={} iters={} compute={:?}",
+                version.name(),
+                p.nodes,
+                p.cores_per_node,
+                p.rows,
+                p.cols,
+                p.block,
+                p.iters,
+                p.compute
+            );
+            println!(
+                "  vtime: {:.3} ms | {:.2e} cells/s | checksum {:.6}",
+                out.vtime_ns as f64 / 1e6,
+                out.cells_per_sec(&p),
+                out.checksum
+            );
+            println!(
+                "  tasks={} pauses={} workers={} | wall {:.2}s",
+                out.stats.tasks,
+                out.stats.pauses,
+                out.stats.workers,
+                wall.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+    if let (Some(t), Some(path)) = (&tracer, m.get("trace")) {
+        std::fs::write(path, t.to_csv()).expect("write trace");
+        println!("  trace -> {path}");
+        println!("{}", tampi_repro::trace::render_gantt(&t.snapshot(), 100));
+    }
+    if let (Some(g), Some(path)) = (&graph, m.get("graph")) {
+        std::fs::write(path, g.to_dot("sentinel")).expect("write dot");
+        println!("  graph -> {path} ({} edges)", g.edge_count());
+    }
+}
+
+fn cmd_ifsker(m: HashMap<String, String>) {
+    let version = m
+        .get("version")
+        .and_then(|v| IfsVersion::parse(v))
+        .unwrap_or(IfsVersion::InteropNonBlk);
+    let mut p = IfsParams::new(
+        get(&m, "grid", 16 * 1024),
+        get(&m, "fields", 8),
+        get(&m, "steps", 10),
+        get(&m, "nodes", 2),
+        get(&m, "cores", 4),
+        version,
+    );
+    p.compute = compute_of(&m);
+    p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
+    let wall = Instant::now();
+    match ifsker::run(&p) {
+        Ok(out) => {
+            println!(
+                "ifsker {} nodes={} ranks/node={} grid={} fields={} steps={} compute={:?}",
+                version.name(),
+                p.nodes,
+                p.cores_per_node,
+                p.gridpoints,
+                p.fields,
+                p.steps,
+                p.compute
+            );
+            println!(
+                "  vtime: {:.3} ms | {:.2e} gp-steps/s | checksum {:.6}",
+                out.vtime_ns as f64 / 1e6,
+                out.throughput(&p),
+                out.checksum
+            );
+            println!(
+                "  tasks={} pauses={} workers={} | wall {:.2}s",
+                out.stats.tasks,
+                out.stats.pauses,
+                out.stats.workers,
+                wall.elapsed().as_secs_f64()
+            );
+        }
+        Err(e) => {
+            eprintln!("FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_figures(m: HashMap<String, String>) {
+    let scale = m
+        .get("scale")
+        .and_then(|s| Scale::parse(s))
+        .unwrap_or_else(Scale::from_env);
+    let which = m.get("fig").map(String::as_str).unwrap_or("all");
+    let run_fig = |n: &str| {
+        let wall = Instant::now();
+        match n {
+            "8" => {
+                for (name, dot, edges) in bench::fig08() {
+                    let p = bench::write_output(&format!("fig08_{name}.dot"), &dot);
+                    println!("fig08 {name}: {edges} edges -> {}", p.display());
+                }
+            }
+            "10" => {
+                for (name, gantt, csv, busy) in bench::fig10(scale) {
+                    let p = bench::write_output(&format!("fig10_{name}.csv"), &csv);
+                    bench::write_output(&format!("fig10_{name}.gantt.txt"), &gantt);
+                    println!("fig10 {name} -> {}\n{gantt}", p.display());
+                    for (rank, f) in busy {
+                        println!("  rank {rank}: busy {:.1}%", f * 100.0);
+                    }
+                }
+            }
+            other => {
+                let rows = match other {
+                    "9" => bench::fig09(scale),
+                    "11" => bench::fig11(scale),
+                    "12" => bench::fig12(scale),
+                    "13" => bench::fig13(scale),
+                    "14" => bench::fig14(scale),
+                    _ => {
+                        eprintln!("unknown figure {other}");
+                        std::process::exit(2);
+                    }
+                };
+                let table = bench::format_table(&rows);
+                println!("=== Figure {other} ({scale:?}) ===\n{table}");
+                bench::write_output(&format!("fig{other:0>2}.txt"), &table);
+            }
+        }
+        println!("(fig {n} took {:.1}s wall)\n", wall.elapsed().as_secs_f64());
+    };
+    if which == "all" {
+        for f in ["8", "9", "10", "11", "12", "13", "14"] {
+            run_fig(f);
+        }
+    } else {
+        run_fig(which);
+    }
+}
+
+fn cmd_calibrate() {
+    use tampi_repro::apps::gauss_seidel::sweep_native;
+    println!("calibrating native Gauss-Seidel cell cost...");
+    for b in [128usize, 256, 512] {
+        let mut u = vec![0.5f32; b * b];
+        let h = vec![0f32; b];
+        let t = Instant::now();
+        let reps = (64 * 1024 * 1024 / (b * b)).max(4);
+        for _ in 0..reps {
+            sweep_native(&mut u, b, b, &h, &h, &h, &h);
+        }
+        let ns = t.elapsed().as_nanos() as f64 / (reps * b * b) as f64;
+        println!("  block {b}: {ns:.2} ns/cell (native)");
+    }
+    if tampi_repro::runtime::artifacts_dir()
+        .join("gs_block_256.hlo.txt")
+        .exists()
+    {
+        for b in [128usize, 256] {
+            let k = tampi_repro::runtime::GsKernel::load(b).expect("kernel");
+            let u = vec![0.5f32; b * b];
+            let h = vec![0f32; b];
+            let _ = k.sweep(&u, &h, &h, &h, &h).unwrap(); // warm-up
+            let t = Instant::now();
+            let reps = 16;
+            for _ in 0..reps {
+                let _ = k.sweep(&u, &h, &h, &h, &h).unwrap();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / (reps * b * b) as f64;
+            println!("  block {b}: {ns:.2} ns/cell (pjrt, incl. transfers)");
+        }
+    } else {
+        println!("  (artifacts not built; skipping PJRT calibration)");
+    }
+    println!(
+        "model default: {} ns/cell (override with GsParams::cell_ns)",
+        tampi_repro::apps::DEFAULT_GS_CELL_NS
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("usage: repro <gs|ifsker|figures|calibrate> [--key value ...]");
+        std::process::exit(2);
+    };
+    let m = parse_args(rest);
+    match cmd.as_str() {
+        "gs" => cmd_gs(m),
+        "ifsker" => cmd_ifsker(m),
+        "figures" => cmd_figures(m),
+        "calibrate" => cmd_calibrate(),
+        other => {
+            eprintln!("unknown command {other}");
+            std::process::exit(2);
+        }
+    }
+}

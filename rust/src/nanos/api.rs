@@ -1,0 +1,150 @@
+//! The paper's runtime APIs (Section 4), in their C shape.
+//!
+//! * Pause/resume: [`get_current_blocking_context`], [`block_current_task`],
+//!   [`unblock_task`] (Section 4.1).
+//! * External events: [`get_current_event_counter`],
+//!   [`increase_current_task_event_counter`],
+//!   [`decrease_task_event_counter`] (Section 4.3).
+//!
+//! Polling services (Section 4.2) live on [`super::Runtime`] because they
+//! are per-runtime, not per-task.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Clock, Token, VNanos};
+use crate::trace::EventKind;
+
+use super::task::{BlockCtx, BlockingContext, CtxState, EventCounter};
+use super::worker;
+
+/// Inform the runtime that the current task is about to enter a
+/// pause-resume cycle; returns the blocking context for one round trip.
+/// Requesting a new context invalidates the previous one (Section 4.1).
+///
+/// Panics if called outside a task.
+pub fn get_current_blocking_context() -> BlockingContext {
+    let (rt, task) = worker::current().expect("blocking context outside a task");
+    let ctx = Arc::new(BlockCtx {
+        st: Mutex::new(CtxState::Armed),
+        token: Token::new(),
+        rt: Arc::downgrade(&rt),
+        task_id: task.id,
+        task_label: task.label.clone(),
+    });
+    *task.blocking.lock().unwrap() = Some(ctx.clone());
+    BlockingContext(ctx)
+}
+
+/// Suspend the invoking task (Section 4.1). The virtual core is released
+/// to the scheduler — waking an idle worker or spawning a substitute — and
+/// the calling thread parks until [`unblock_task`] leads a worker to grant
+/// it a core again.
+///
+/// If the matching `unblock_task` already happened, returns immediately
+/// (the round trip is consumed without releasing the core).
+pub fn block_current_task(ctx: &BlockingContext) {
+    let ctx = &ctx.0;
+    let rt = ctx.rt.upgrade().expect("runtime gone");
+    {
+        let mut st = ctx.st.lock().unwrap();
+        match *st {
+            CtxState::UnblockedEarly => {
+                *st = CtxState::Granted; // consumed; keep the core
+                return;
+            }
+            CtxState::Armed => *st = CtxState::Waiting,
+            s => panic!("block_current_task on context in state {s:?}"),
+        }
+    }
+    rt.n_pauses.fetch_add(1, Ordering::Relaxed);
+    rt.trace(EventKind::TaskBlock, worker::worker_id(), &ctx.task_label, ctx.task_id);
+    // Context-switch costs are charged in ONE clock event after the core
+    // grant (pause side as debt): same total virtual time, but half the
+    // real thread parks per round trip (§Perf opt-1).
+    crate::sim::Clock::add_debt(rt.cfg.costs.pause_ns);
+    rt.sched.release_core_for_block(&rt);
+    rt.clock.passive_wait(&ctx.token);
+    rt.clock.work(rt.cfg.costs.resume_ns);
+    rt.trace(EventKind::TaskUnblock, worker::worker_id(), &ctx.task_label, ctx.task_id);
+}
+
+/// Mark the task associated with `ctx` resumable (Section 4.1). Callable
+/// from any thread (polling services, other tasks, clock callbacks).
+pub fn unblock_task(ctx: &BlockingContext) {
+    let ctx = &ctx.0;
+    let push = {
+        let mut st = ctx.st.lock().unwrap();
+        match *st {
+            CtxState::Armed => {
+                *st = CtxState::UnblockedEarly;
+                false
+            }
+            CtxState::Waiting => true,
+            s => panic!("unblock_task on context in state {s:?}"),
+        }
+    };
+    if push {
+        let rt = ctx.rt.upgrade().expect("runtime gone");
+        rt.sched.enqueue_resume(ctx.clone(), &rt);
+    }
+}
+
+/// Return the event counter of the invoking task (Section 4.3).
+///
+/// Panics if called outside a task.
+pub fn get_current_event_counter() -> EventCounter {
+    let (_, task) = worker::current().expect("event counter outside a task");
+    EventCounter(task)
+}
+
+/// Atomically bind `increment` external events to the calling task
+/// (Section 4.3). Only the task itself may increase its counter.
+pub fn increase_current_task_event_counter(counter: &EventCounter, increment: u32) {
+    let (rt, task) = worker::current().expect("increase outside a task");
+    assert_eq!(
+        task.id, counter.0.id,
+        "only the owning task may bind its external events"
+    );
+    crate::sim::Clock::add_debt(rt.cfg.costs.event_ns * increment as u64);
+    counter.0.inc_events(increment);
+}
+
+/// Fulfil `decrement` external events of the counter's task (Section 4.3).
+/// Callable from any thread. When the counter reaches zero and the task
+/// body has finished, the task's dependencies are released.
+pub fn decrease_task_event_counter(counter: &EventCounter, decrement: u32) {
+    counter.0.dec_events(decrement);
+}
+
+/// Advance the calling thread's virtual core by `cost` ns of "work".
+pub fn work(cost: VNanos) {
+    if let Some(rt) = worker::current_rt() {
+        rt.clock.work(cost);
+    } else {
+        panic!("nanos::work outside a sim thread");
+    }
+}
+
+/// The clock of the runtime the calling thread is attached to.
+pub fn current_clock() -> Arc<Clock> {
+    worker::current_rt().expect("no runtime attached").clock.clone()
+}
+
+/// Whether the calling thread is currently executing a task body.
+pub fn in_task() -> bool {
+    worker::current().is_some()
+}
+
+/// Handle to the runtime the calling thread belongs to, if any.
+pub fn current_runtime() -> Option<super::Runtime> {
+    worker::current_rt().map(|rt| super::Runtime { rt })
+}
+
+/// Emit a trace record attributed to the current task (no-op when not in
+/// a task or tracing is disabled).
+pub fn trace_current(kind: EventKind, what: &str) {
+    if let Some((rt, task)) = worker::current() {
+        rt.trace(kind, worker::worker_id(), what, task.id);
+    }
+}

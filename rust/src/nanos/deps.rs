@@ -1,0 +1,166 @@
+//! Object-granularity data dependencies (the OmpSs-2 model restricted to
+//! whole objects, which is what both benchmarks use).
+//!
+//! Every [`DepObj`] keeps a FIFO of *access groups*: a group is either a
+//! set of concurrent readers or a single writer (out/inout). An access is
+//! satisfied when its group reaches the head of the queue. When a task
+//! fully completes (body + external events), each of its accesses retires
+//! from its head group; an emptied head group unblocks the next group's
+//! members.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::task::TaskInner;
+
+static NEXT_OBJ_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Access mode of a task on a dependency object.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Mode {
+    /// Read (`in(...)`)
+    In,
+    /// Write (`out(...)`): ordered like a writer (no renaming).
+    Out,
+    /// Read-write (`inout(...)`)
+    InOut,
+}
+
+impl Mode {
+    pub fn is_write(self) -> bool {
+        !matches!(self, Mode::In)
+    }
+}
+
+/// A dependency object — the unit over which tasks declare accesses.
+/// Cheap to clone (shared handle).
+#[derive(Clone)]
+pub struct DepObj(pub(crate) Arc<DepObjInner>);
+
+impl DepObj {
+    pub fn new(label: impl Into<String>) -> Self {
+        DepObj(Arc::new(DepObjInner {
+            id: NEXT_OBJ_ID.fetch_add(1, Ordering::Relaxed),
+            label: label.into(),
+            q: Mutex::new(ObjQueue { groups: VecDeque::new() }),
+        }))
+    }
+
+    pub fn id(&self) -> u64 {
+        self.0.id
+    }
+
+    pub fn label(&self) -> &str {
+        &self.0.label
+    }
+}
+
+pub struct DepObjInner {
+    pub id: u64,
+    pub label: String,
+    q: Mutex<ObjQueue>,
+}
+
+struct ObjQueue {
+    groups: VecDeque<Group>,
+}
+
+struct Group {
+    writer: bool,
+    members: Vec<Arc<TaskInner>>,
+    /// Members that have not yet fully completed.
+    remaining: usize,
+}
+
+/// One registered access of a task (held by the task for release).
+pub struct Access {
+    pub obj: Arc<DepObjInner>,
+    pub mode: Mode,
+}
+
+impl DepObjInner {
+    /// Register `task`'s access. Returns `(satisfied, predecessors)`:
+    /// whether the access is immediately satisfied, and — for dependency-
+    /// graph recording — the ids/labels of the tasks it must wait for.
+    pub(crate) fn register(
+        &self,
+        task: &Arc<TaskInner>,
+        mode: Mode,
+        record_edges: bool,
+    ) -> (bool, Vec<(u64, String)>) {
+        let mut q = self.q.lock().unwrap();
+        let writer = mode.is_write();
+        let mut edges = Vec::new();
+        if q.groups.is_empty() {
+            q.groups.push_back(Group {
+                writer,
+                members: vec![task.clone()],
+                remaining: 1,
+            });
+            return (true, edges);
+        }
+        let can_join_back = !writer && !q.groups.back().unwrap().writer;
+        if can_join_back {
+            if record_edges && q.groups.len() >= 2 {
+                let prev = &q.groups[q.groups.len() - 2];
+                for m in &prev.members {
+                    edges.push((m.id, m.label.clone()));
+                }
+            }
+            let head = q.groups.len() == 1;
+            let back = q.groups.back_mut().unwrap();
+            back.members.push(task.clone());
+            back.remaining += 1;
+            (head, edges)
+        } else {
+            if record_edges {
+                let prev = q.groups.back().unwrap();
+                for m in &prev.members {
+                    edges.push((m.id, m.label.clone()));
+                }
+            }
+            q.groups.push_back(Group {
+                writer,
+                members: vec![task.clone()],
+                remaining: 1,
+            });
+            (false, edges)
+        }
+    }
+
+    /// Retire `task`'s access after full completion. If the head group
+    /// empties, satisfy every member of the next group.
+    pub(crate) fn release(&self, task: &Arc<TaskInner>) {
+        let next: Vec<Arc<TaskInner>> = {
+            let mut q = self.q.lock().unwrap();
+            let head = q
+                .groups
+                .front_mut()
+                .unwrap_or_else(|| panic!("release on empty queue (obj {})", self.id));
+            debug_assert!(
+                head.members.iter().any(|m| m.id == task.id),
+                "task {} releasing obj {} but not in head group",
+                task.id,
+                self.id
+            );
+            head.remaining -= 1;
+            if head.remaining > 0 {
+                return;
+            }
+            q.groups.pop_front();
+            match q.groups.front() {
+                Some(g) => g.members.clone(),
+                None => return,
+            }
+        };
+        for t in &next {
+            t.dec_pred();
+        }
+    }
+
+    /// Diagnostics: number of queued access groups.
+    pub fn queue_len(&self) -> usize {
+        self.q.lock().unwrap().groups.len()
+    }
+}

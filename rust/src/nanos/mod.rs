@@ -1,0 +1,41 @@
+//! `nanos` — a Nanos6-like task runtime with the paper's three APIs.
+//!
+//! This is the OmpSs-2/Nanos6 substrate the paper extends (Section 2.1 and
+//! Section 4), rebuilt in Rust:
+//!
+//! * **Tasks with data dependencies** — object-granularity in/out/inout
+//!   accesses; reader/writer access groups per dependency object give the
+//!   OmpSs ordering semantics ([`deps`]).
+//! * **Pause/resume API** (Section 4.1) — [`api::get_current_blocking_context`],
+//!   [`api::block_current_task`], [`api::unblock_task`].  Pausing a task
+//!   releases its *virtual core* to the scheduler (waking an idle worker or
+//!   spawning a substitute — Nanos6's thread-leasing scheme, which is what
+//!   makes the paper's blocking mode cost "threads and stacks proportional
+//!   to in-flight MPI operations").
+//! * **External events API** (Section 4.3) — [`api::get_current_event_counter`],
+//!   [`api::increase_current_task_event_counter`],
+//!   [`api::decrease_task_event_counter`].  A task's dependencies are
+//!   released only when its body finished *and* its event counter hit zero.
+//! * **Polling services API** (Section 4.2) — [`Runtime::register_polling_service`]
+//!   and a leader thread that serves callbacks every `poll_interval` of
+//!   virtual time plus opportunistic polling by idle workers (Section 4.5).
+//!
+//! All blocking points park through [`crate::sim::Clock`], so the runtime
+//! runs under virtual time (see `sim` module docs).
+
+pub mod api;
+pub mod deps;
+pub mod polling;
+pub mod runtime;
+pub mod scheduler;
+pub mod task;
+pub mod worker;
+
+pub use api::{
+    block_current_task, current_clock, decrease_task_event_counter,
+    get_current_blocking_context, get_current_event_counter,
+    increase_current_task_event_counter, unblock_task, work,
+};
+pub use deps::{DepObj, Mode};
+pub use runtime::{Runtime, RuntimeConfig, TaskBuilder};
+pub use task::{BlockingContext, EventCounter};

@@ -1,0 +1,180 @@
+//! Polling services (Section 4.2 / 4.5).
+//!
+//! Callbacks registered here are served (a) by a leader thread at every
+//! `poll_interval` of virtual time and (b) opportunistically by workers
+//! before their core goes idle.  Callbacks may not support concurrent
+//! execution (Section 4.5), so a run lock serializes service passes;
+//! workers use try-lock and skip if a pass is already running.
+//!
+//! **Hinted services**: a service registered with [`PollingRegistry::
+//! register_hinted`] promises to report its pending-work count through
+//! [`PollingRegistry::hint_add`]/[`hint_sub`]. When every service is
+//! hinted and no work is pending, the leader parks entirely instead of
+//! ticking — long quiescent phases then generate zero clock events
+//! (essential for cluster-scale virtual-time runs). TAMPI uses this: its
+//! hint is the in-flight ticket count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, TryLockError, Weak};
+
+use crate::sim::WaitQueue;
+
+use super::runtime::Rt;
+
+/// A polling callback: returns `true` when its purpose has been attained
+/// (it is then automatically unregistered, Section 4.2).
+pub type PollingService = Box<dyn FnMut() -> bool + Send>;
+
+struct Service {
+    name: String,
+    f: PollingService,
+    hinted: bool,
+}
+
+#[derive(Default)]
+pub struct PollingRegistry {
+    services: Mutex<Vec<Service>>,
+    /// Wakes the leader when it parked (empty registry / zero hints).
+    arrivals: WaitQueue,
+    /// Pending-work units reported by hinted services.
+    pending_hint: AtomicUsize,
+    /// Services that did not promise hints (leader must keep ticking).
+    unhinted: AtomicUsize,
+}
+
+impl PollingRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a callback under `name` (debug label).
+    pub fn register(&self, name: impl Into<String>, f: PollingService, rt: &Rt) {
+        self.register_inner(name.into(), f, false, rt);
+    }
+
+    /// Register a callback that reports pending work via hints.
+    pub fn register_hinted(&self, name: impl Into<String>, f: PollingService, rt: &Rt) {
+        self.register_inner(name.into(), f, true, rt);
+    }
+
+    fn register_inner(&self, name: String, f: PollingService, hinted: bool, rt: &Rt) {
+        let mut g = self.services.lock().unwrap();
+        if !hinted {
+            self.unhinted.fetch_add(1, Ordering::AcqRel);
+        }
+        g.push(Service { name, f, hinted });
+        drop(g);
+        // The leader may be parked waiting for reasons to poll.
+        self.arrivals.notify_all(&rt.clock);
+    }
+
+    /// Remove the callback registered under `name`. Returns once the
+    /// callback can no longer run (the registry lock serializes passes).
+    pub fn unregister(&self, name: &str) -> bool {
+        let mut g = self.services.lock().unwrap();
+        let before = g.len();
+        g.retain(|s| {
+            if s.name == name {
+                if !s.hinted {
+                    self.unhinted.fetch_sub(1, Ordering::AcqRel);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        g.len() != before
+    }
+
+    /// Report `n` new pending-work units (wakes a parked leader).
+    pub fn hint_add(&self, n: usize, rt: &Rt) {
+        if n == 0 {
+            return;
+        }
+        self.pending_hint.fetch_add(n, Ordering::AcqRel);
+        self.arrivals.notify_all(&rt.clock);
+    }
+
+    /// Report `n` retired pending-work units.
+    pub fn hint_sub(&self, n: usize) {
+        if n > 0 {
+            self.pending_hint.fetch_sub(n, Ordering::AcqRel);
+        }
+    }
+
+    /// True when the leader has nothing to tick for.
+    pub fn leader_idle(&self) -> bool {
+        (self.unhinted.load(Ordering::Acquire) == 0
+            && self.pending_hint.load(Ordering::Acquire) == 0)
+            || self.is_empty()
+    }
+
+    /// Run one pass over all services; drop the ones that report done.
+    /// Skips (returns false) if another pass is in progress.
+    pub fn poll_once(&self) -> bool {
+        let mut g = match self.services.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => return false,
+            Err(e) => panic!("polling registry poisoned: {e}"),
+        };
+        let mut i = 0;
+        while i < g.len() {
+            if (g[i].f)() {
+                if !g[i].hinted {
+                    self.unhinted.fetch_sub(1, Ordering::AcqRel);
+                }
+                g.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        true
+    }
+
+    /// Wake a parked leader (shutdown path).
+    pub(crate) fn wake_leader(&self, clock: &crate::sim::Clock) {
+        self.arrivals.notify_all(clock);
+    }
+
+    pub fn len(&self) -> usize {
+        self.services.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Leader thread: serves the registry every `poll_interval` of virtual
+/// time (Nanos6 uses 1 ms; ours is configurable because the simulated
+/// cluster is time-scaled). Parks entirely while there is nothing to
+/// poll for — no services, or only hinted services with zero pending
+/// work — so idle phases cost no clock events and an application with no
+/// progress mechanism still deadlocks detectably (Section 5).
+pub(crate) fn leader_main(rt_weak: Weak<Rt>) {
+    loop {
+        let Some(rt) = rt_weak.upgrade() else { return };
+        if rt.is_shutdown() {
+            rt.clock.deregister_thread();
+            return;
+        }
+        if rt.polling.leader_idle() {
+            // Park until something needs polling (or shutdown). The token
+            // is enqueued before the final idle check, so a concurrent
+            // hint_add cannot be lost.
+            let tok = rt.polling.arrivals.enqueue();
+            if !rt.polling.leader_idle() || rt.is_shutdown() {
+                continue; // stale token is woken later and ignored
+            }
+            let clock = rt.clock.clone();
+            drop(rt);
+            clock.passive_wait(&tok);
+            continue;
+        }
+        rt.polling.poll_once();
+        let interval = rt.cfg.poll_interval;
+        let clock = rt.clock.clone();
+        drop(rt);
+        clock.sleep(interval);
+    }
+}

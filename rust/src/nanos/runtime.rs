@@ -1,0 +1,384 @@
+//! Runtime facade: task creation, taskwait, lifecycle.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Clock, VNanos, WaitQueue};
+use crate::trace::{EventKind, GraphRecorder, Record, Tracer};
+
+use super::deps::{Access, DepObj, Mode};
+use super::polling::{PollingRegistry, PollingService};
+use super::scheduler::Scheduler;
+use super::task::{TaskBody, TaskInner};
+use super::worker;
+
+/// Globally-unique task ids (across all runtimes/ranks, for Fig 8 graphs).
+static NEXT_TASK_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Virtual-time costs of runtime operations. These model the *measured*
+/// overheads of a real task runtime (Nanos6-class numbers) and are what
+/// makes Section 6.2's blocking-vs-events comparison meaningful under
+/// virtual time: pausing a task really costs two context switches; a
+/// TAMPI ticket does not.
+///
+/// Defaults are zero (unit tests assert exact virtual times); apps and
+/// benches use [`RuntimeCosts::realistic`] via `ClusterConfig`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeCosts {
+    /// Creating + submitting a task (allocation, queueing).
+    pub task_spawn_ns: u64,
+    /// Registering one dependency access at submission.
+    pub per_access_ns: u64,
+    /// Scheduling + dispatch overhead per task execution.
+    pub task_exec_ns: u64,
+    /// Pausing a task: context switch out + core handoff.
+    pub pause_ns: u64,
+    /// Resuming a paused task: grant + context switch in.
+    pub resume_ns: u64,
+    /// Binding/fulfilling one external event (atomic + ticket bookkeeping).
+    pub event_ns: u64,
+}
+
+impl RuntimeCosts {
+    /// Nanos6-class overheads (order-of-magnitude of published
+    /// measurements on Xeon-class cores).
+    pub fn realistic() -> RuntimeCosts {
+        RuntimeCosts {
+            task_spawn_ns: 500,
+            per_access_ns: 150,
+            task_exec_ns: 300,
+            pause_ns: 1_500,
+            resume_ns: 1_500,
+            event_ns: 120,
+        }
+    }
+
+    /// No modeled overheads (exact-time unit tests).
+    pub fn zero() -> RuntimeCosts {
+        RuntimeCosts::default()
+    }
+}
+
+/// Configuration of one rank's runtime instance.
+#[derive(Clone)]
+pub struct RuntimeConfig {
+    /// Virtual cores (hardware threads) this rank owns.
+    pub cores: usize,
+    /// Leader-thread polling period in virtual ns (Section 4.5; Nanos6
+    /// uses 1 ms — configurable here because the experiment is time-scaled).
+    pub poll_interval: VNanos,
+    /// Label used in thread names and traces (e.g. "rank3").
+    pub label: String,
+    /// Rank id for tracing.
+    pub rank: u32,
+    /// Stack size of worker threads. Paused tasks keep a whole worker
+    /// stack alive — exactly the cost the paper's non-blocking mode avoids.
+    pub worker_stack: usize,
+    /// Hard cap on substitute workers (safety valve; the paper's blocking
+    /// mode grows threads proportionally to in-flight operations).
+    pub max_workers: usize,
+    pub tracer: Option<Arc<Tracer>>,
+    pub graph: Option<Arc<GraphRecorder>>,
+    /// Modeled runtime operation costs (virtual ns).
+    pub costs: RuntimeCosts,
+}
+
+impl RuntimeConfig {
+    pub fn new(cores: usize) -> Self {
+        RuntimeConfig {
+            cores,
+            poll_interval: crate::sim::us(50),
+            label: "rt".into(),
+            rank: 0,
+            worker_stack: 512 * 1024,
+            max_workers: cores + 16 * 1024,
+            tracer: None,
+            graph: None,
+            costs: RuntimeCosts::zero(),
+        }
+    }
+}
+
+/// Runtime internals (shared by workers, leader, API functions).
+pub struct Rt {
+    pub clock: Arc<Clock>,
+    pub cfg: RuntimeConfig,
+    pub(crate) sched: Scheduler,
+    pub(crate) polling: PollingRegistry,
+    pending: Mutex<usize>,
+    tw_q: WaitQueue,
+    shutdown: AtomicBool,
+    /// Statistics: tasks created / paused (for EXPERIMENTS.md).
+    pub(crate) n_tasks: AtomicU64,
+    pub(crate) n_pauses: AtomicU64,
+    /// Panics captured from task bodies (re-raised at taskwait).
+    task_panics: Mutex<Vec<String>>,
+}
+
+impl Rt {
+    pub(crate) fn trace(&self, kind: EventKind, worker: usize, label: &str, task_id: u64) {
+        if let Some(tr) = &self.cfg.tracer {
+            tr.emit(Record {
+                t: self.clock.now(),
+                rank: self.cfg.rank,
+                worker: worker as u32,
+                kind,
+                label: label.to_string(),
+                task_id,
+            });
+        }
+    }
+
+    pub(crate) fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn record_task_panic(&self, msg: String) {
+        self.task_panics.lock().unwrap().push(msg);
+    }
+
+    pub(crate) fn task_fully_completed(&self, _task: &Arc<TaskInner>) {
+        let mut g = self.pending.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            drop(g);
+            self.tw_q.notify_all(&self.clock);
+        }
+    }
+}
+
+/// Public handle to one rank's task runtime.
+#[derive(Clone)]
+pub struct Runtime {
+    pub(crate) rt: Arc<Rt>,
+}
+
+impl Runtime {
+    /// Create the runtime and start its `cores` workers plus the polling
+    /// leader thread. The calling thread must be clock-registered (or be
+    /// about to hand the runtime to sim threads).
+    pub fn new(clock: Arc<Clock>, cfg: RuntimeConfig) -> Runtime {
+        let rt = Arc::new(Rt {
+            clock,
+            sched: Scheduler::new(cfg.cores, cfg.max_workers),
+            polling: PollingRegistry::new(),
+            pending: Mutex::new(0),
+            tw_q: WaitQueue::new(),
+            shutdown: AtomicBool::new(false),
+            n_tasks: AtomicU64::new(0),
+            n_pauses: AtomicU64::new(0),
+            task_panics: Mutex::new(Vec::new()),
+            cfg,
+        });
+        for _ in 0..rt.cfg.cores {
+            let idx = rt.sched.register_initial_worker();
+            worker::spawn_worker(rt.clone(), idx);
+        }
+        // Polling leader.
+        rt.clock.register_thread();
+        let weak = Arc::downgrade(&rt);
+        std::thread::Builder::new()
+            .name(format!("{}-leader", rt.cfg.label))
+            .stack_size(128 * 1024)
+            .spawn(move || super::polling::leader_main(weak))
+            .expect("spawn leader");
+        Runtime { rt }
+    }
+
+    /// Begin building a task.
+    pub fn task(&self) -> TaskBuilder {
+        TaskBuilder {
+            rt: self.rt.clone(),
+            label: String::new(),
+            accesses: Vec::new(),
+        }
+    }
+
+    /// Create a named dependency object.
+    pub fn dep(&self, label: impl Into<String>) -> DepObj {
+        DepObj::new(label)
+    }
+
+    /// Block the calling (non-worker) thread until every submitted task has
+    /// fully completed — body finished *and* external events fulfilled.
+    pub fn taskwait(&self) {
+        // Settle any accumulated spawn-cost debt before waiting.
+        self.rt.clock.flush_debt();
+        loop {
+            let tok = {
+                let g = self.rt.pending.lock().unwrap();
+                if *g == 0 {
+                    break;
+                }
+                self.rt.tw_q.enqueue()
+            };
+            self.rt.clock.passive_wait(&tok);
+        }
+        // Surface task-body panics at the synchronization point.
+        let panics = std::mem::take(&mut *self.rt.task_panics.lock().unwrap());
+        if !panics.is_empty() {
+            panic!("task panic(s): {}", panics.join("; "));
+        }
+    }
+
+    /// Number of not-fully-completed tasks.
+    pub fn pending_tasks(&self) -> usize {
+        *self.rt.pending.lock().unwrap()
+    }
+
+    /// Register a polling service (Section 4.2).
+    pub fn register_polling_service(&self, name: impl Into<String>, f: PollingService) {
+        self.rt.polling.register(name, f, &self.rt);
+    }
+
+    /// Register a *hinted* polling service: it promises to report its
+    /// pending-work count through [`Runtime::polling_hint_add`]/`_sub`,
+    /// letting the leader thread park while nothing is in flight.
+    pub fn register_polling_service_hinted(&self, name: impl Into<String>, f: PollingService) {
+        self.rt.polling.register_hinted(name, f, &self.rt);
+    }
+
+    /// Report pending-work units for hinted polling services.
+    pub fn polling_hint_add(&self, n: usize) {
+        self.rt.polling.hint_add(n, &self.rt);
+    }
+
+    pub fn polling_hint_sub(&self, n: usize) {
+        self.rt.polling.hint_sub(n);
+    }
+
+    /// Modeled runtime costs.
+    pub fn costs(&self) -> &RuntimeCosts {
+        &self.rt.cfg.costs
+    }
+
+    /// Weak handle to the runtime internals (for registry closures that
+    /// must not keep the runtime alive).
+    pub fn downgrade(&self) -> std::sync::Weak<Rt> {
+        Arc::downgrade(&self.rt)
+    }
+
+    /// Unregister a polling service; returns whether it existed.
+    pub fn unregister_polling_service(&self, name: &str) -> bool {
+        self.rt.polling.unregister(name)
+    }
+
+    /// Attach the calling thread to this runtime (rank-main threads call
+    /// this once so API helpers and task submission work).
+    pub fn attach(&self) {
+        worker::attach_thread(self.rt.clone());
+    }
+
+    pub fn detach(&self) {
+        worker::detach_thread();
+    }
+
+    /// Graceful shutdown: workers and leader exit once the ready queue
+    /// drains. Call only after `taskwait`.
+    pub fn shutdown(&self) {
+        self.rt.shutdown.store(true, Ordering::Release);
+        self.rt.sched.begin_shutdown(&self.rt);
+        self.rt.polling.wake_leader(&self.rt.clock);
+    }
+
+    pub fn clock(&self) -> &Arc<Clock> {
+        &self.rt.clock
+    }
+
+    /// (tasks created, pauses performed, workers spawned).
+    pub fn stats(&self) -> (u64, u64, usize) {
+        (
+            self.rt.n_tasks.load(Ordering::Relaxed),
+            self.rt.n_pauses.load(Ordering::Relaxed),
+            self.rt.sched.workers_spawned(),
+        )
+    }
+}
+
+/// Builder for one task: label, dependencies, body.
+pub struct TaskBuilder {
+    rt: Arc<Rt>,
+    label: String,
+    accesses: Vec<(DepObj, Mode)>,
+}
+
+impl TaskBuilder {
+    pub fn label(mut self, l: impl Into<String>) -> Self {
+        self.label = l.into();
+        self
+    }
+
+    /// Declare a dependency access.
+    pub fn dep(mut self, obj: &DepObj, mode: Mode) -> Self {
+        self.accesses.push((obj.clone(), mode));
+        self
+    }
+
+    pub fn depends_in(self, obj: &DepObj) -> Self {
+        self.dep(obj, Mode::In)
+    }
+
+    pub fn depends_out(self, obj: &DepObj) -> Self {
+        self.dep(obj, Mode::Out)
+    }
+
+    pub fn depends_inout(self, obj: &DepObj) -> Self {
+        self.dep(obj, Mode::InOut)
+    }
+
+    /// Provide the body and submit the task. Returns its id.
+    pub fn spawn(self, body: impl FnOnce() + Send + 'static) -> u64 {
+        self.spawn_boxed(Box::new(body))
+    }
+
+    pub fn spawn_boxed(self, body: TaskBody) -> u64 {
+        let rt = self.rt;
+        let id = NEXT_TASK_ID.fetch_add(1, Ordering::Relaxed);
+        rt.n_tasks.fetch_add(1, Ordering::Relaxed);
+        // Task creation cost, charged (as debt) to the submitting thread.
+        let c = &rt.cfg.costs;
+        Clock::add_debt(c.task_spawn_ns + c.per_access_ns * self.accesses.len() as u64);
+        let task = Arc::new(TaskInner {
+            id,
+            label: if self.label.is_empty() {
+                format!("task{id}")
+            } else {
+                self.label
+            },
+            rt: Arc::downgrade(&rt),
+            body: Mutex::new(Some(body)),
+            events: std::sync::atomic::AtomicU32::new(1),
+            preds: std::sync::atomic::AtomicU32::new(1),
+            accesses: self
+                .accesses
+                .iter()
+                .map(|(o, m)| Access { obj: o.0.clone(), mode: *m })
+                .collect(),
+            blocking: Mutex::new(None),
+            completed: AtomicBool::new(false),
+        });
+        {
+            let mut g = rt.pending.lock().unwrap();
+            *g += 1;
+        }
+        let record = rt.cfg.graph.is_some();
+        if let Some(gr) = &rt.cfg.graph {
+            gr.add_node(id, &task.label, rt.cfg.rank);
+        }
+        for (obj, mode) in &self.accesses {
+            task.preds.fetch_add(1, Ordering::AcqRel);
+            let (satisfied, preds) = obj.0.register(&task, *mode, record);
+            if satisfied {
+                task.preds.fetch_sub(1, Ordering::AcqRel);
+            }
+            if let Some(gr) = &rt.cfg.graph {
+                for (pid, _plabel) in preds {
+                    gr.add_edge(pid, id, obj.label());
+                }
+            }
+        }
+        // Drop the registration sentinel; may enqueue the task.
+        task.dec_pred();
+        id
+    }
+}

@@ -1,0 +1,197 @@
+//! Ready queue + virtual-core licensing + idle-worker pool.
+//!
+//! A worker must hold a *core license* to execute task code.  Pausing a
+//! task (Section 4.1 / 4.4) releases the license so another worker can
+//! pick up ready work; resuming transfers a license back to the parked
+//! thread (Nanos6's thread-leasing scheme).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::WaitQueue;
+
+use super::task::{BlockCtx, CtxState, TaskInner};
+use super::runtime::Rt;
+
+/// Unit of schedulable work.
+pub(crate) enum Item {
+    /// A dependency-satisfied task ready for first execution.
+    New(Arc<TaskInner>),
+    /// A paused task whose `unblock_task` arrived; granting it a core
+    /// resumes its parked thread (Section 4.4).
+    Resume(Arc<BlockCtx>),
+}
+
+pub(crate) struct SchedState {
+    pub free_cores: usize,
+    pub ready: VecDeque<Item>,
+    /// Workers parked on `work_q`.
+    pub idle: usize,
+    pub workers_total: usize,
+    pub shutdown: bool,
+}
+
+pub(crate) struct Scheduler {
+    pub st: Mutex<SchedState>,
+    pub work_q: WaitQueue,
+    pub max_workers: usize,
+}
+
+impl Scheduler {
+    pub fn new(cores: usize, max_workers: usize) -> Self {
+        Scheduler {
+            st: Mutex::new(SchedState {
+                free_cores: cores,
+                ready: VecDeque::new(),
+                idle: 0,
+                workers_total: 0,
+                shutdown: false,
+            }),
+            work_q: WaitQueue::new(),
+            max_workers,
+        }
+    }
+
+    /// Enqueue a freshly-ready task.
+    pub fn enqueue_new(&self, task: Arc<TaskInner>, rt: &Arc<Rt>) {
+        self.enqueue(Item::New(task), rt);
+    }
+
+    /// Enqueue a resume grant for an unblocked task.
+    pub fn enqueue_resume(&self, ctx: Arc<BlockCtx>, rt: &Arc<Rt>) {
+        self.enqueue(Item::Resume(ctx), rt);
+    }
+
+    fn enqueue(&self, item: Item, rt: &Arc<Rt>) {
+        let mut g = self.st.lock().unwrap();
+        g.ready.push_back(item);
+        self.kick(&mut g, rt);
+    }
+
+    /// Ensure someone will serve the ready queue: wake an idle worker, or
+    /// spawn a substitute if a core is free but every worker is occupied
+    /// (all running tasks, parked in raw blocking calls, or paused).
+    fn kick(&self, g: &mut SchedState, rt: &Arc<Rt>) {
+        if g.free_cores == 0 || g.ready.is_empty() {
+            return;
+        }
+        if g.idle > 0 {
+            self.work_q.notify_one(&rt.clock);
+        } else if g.workers_total < self.max_workers {
+            g.workers_total += 1;
+            super::worker::spawn_worker(rt.clone(), g.workers_total - 1);
+        } else {
+            // At the substitute-worker cap with no idle worker: if every
+            // worker is parked inside a paused task, nothing can serve the
+            // ready queue — the runtime wedges (the thread-explosion limit
+            // of blocking mode the paper warns about). Warn loudly; the
+            // clock's deadlock detector reports the hang.
+            eprintln!(
+                "nanos[{}]: worker cap {} reached with ready work pending —                  blocking-mode thread explosion (see RuntimeConfig::max_workers)",
+                rt.cfg.label, self.max_workers
+            );
+        }
+    }
+
+    /// Worker main fetch: blocks (passively) until an item + core license
+    /// is available, polling services opportunistically before idling
+    /// (Section 4.5). Returns `None` on shutdown.
+    pub fn next(&self, rt: &Arc<Rt>) -> Option<Item> {
+        let mut g = self.st.lock().unwrap();
+        loop {
+            if g.shutdown && g.ready.is_empty() {
+                return None;
+            }
+            if g.free_cores > 0 {
+                if let Some(item) = g.ready.pop_front() {
+                    g.free_cores -= 1;
+                    return Some(item);
+                }
+            }
+            // Serve polling callbacks before letting the core go idle.
+            drop(g);
+            rt.polling.poll_once();
+            g = self.st.lock().unwrap();
+            if g.free_cores > 0 && !g.ready.is_empty() {
+                continue;
+            }
+            if g.shutdown && g.ready.is_empty() {
+                return None;
+            }
+            g.idle += 1;
+            let tok = self.work_q.enqueue();
+            drop(g);
+            rt.clock.passive_wait(&tok);
+            g = self.st.lock().unwrap();
+            g.idle -= 1;
+        }
+    }
+
+    /// Return a license after finishing a task body. Only notifies idle
+    /// workers (never spawns): the caller re-enters `next` immediately and
+    /// will serve remaining work itself.
+    pub fn release_core(&self, rt: &Arc<Rt>) {
+        let mut g = self.st.lock().unwrap();
+        g.free_cores += 1;
+        if !g.ready.is_empty() && g.idle > 0 {
+            self.work_q.notify_one(&rt.clock);
+        }
+    }
+
+    /// Release the license because the current task paused. Wakes/spawns a
+    /// substitute worker if there is ready work to pick up.
+    pub fn release_core_for_block(&self, rt: &Arc<Rt>) {
+        let mut g = self.st.lock().unwrap();
+        g.free_cores += 1;
+        self.kick(&mut g, rt);
+    }
+
+    /// Grant the calling worker's license to a paused task's thread.
+    /// The caller no longer holds a license afterwards.
+    pub fn grant_core(&self, ctx: &Arc<BlockCtx>, rt: &Arc<Rt>) {
+        {
+            let mut st = ctx.st.lock().unwrap();
+            debug_assert_eq!(*st, CtxState::Waiting, "grant on non-waiting ctx");
+            *st = CtxState::Granted;
+        }
+        rt.clock.wake(&ctx.token);
+    }
+
+    pub fn begin_shutdown(&self, rt: &Arc<Rt>) {
+        let mut g = self.st.lock().unwrap();
+        g.shutdown = true;
+        drop(g);
+        self.work_q.notify_all(&rt.clock);
+    }
+
+    /// Diagnostics: (free cores, ready length, idle, total workers).
+    pub fn stats(&self) -> (usize, usize, usize, usize) {
+        let g = self.st.lock().unwrap();
+        (g.free_cores, g.ready.len(), g.idle, g.workers_total)
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.st.lock().unwrap().shutdown
+    }
+
+    /// Total workers ever spawned (paper: thread cost of blocking mode).
+    pub fn workers_spawned(&self) -> usize {
+        self.st.lock().unwrap().workers_total
+    }
+
+    pub(crate) fn register_initial_worker(&self) -> usize {
+        let mut g = self.st.lock().unwrap();
+        g.workers_total += 1;
+        g.workers_total - 1
+    }
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (fc, rq, idle, tot) = self.stats();
+        write!(
+            f,
+            "Scheduler {{ free_cores: {fc}, ready: {rq}, idle: {idle}, workers: {tot} }}"
+        )
+    }
+}

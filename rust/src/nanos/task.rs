@@ -1,0 +1,108 @@
+//! Task objects: state, event counter, blocking contexts.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::sim::clock::Token;
+
+use super::deps::Access;
+use super::runtime::Rt;
+
+pub(crate) type TaskBody = Box<dyn FnOnce() + Send + 'static>;
+
+/// Internal task representation.
+pub struct TaskInner {
+    pub id: u64,
+    pub label: String,
+    pub(crate) rt: Weak<Rt>,
+    pub(crate) body: Mutex<Option<TaskBody>>,
+    /// Pending completion events. Initialized to 1 (the running body,
+    /// Section 4.6); external events add to it. Dependencies are released
+    /// when it reaches zero.
+    pub(crate) events: AtomicU32,
+    /// Unsatisfied predecessor accesses + 1 registration sentinel.
+    pub(crate) preds: AtomicU32,
+    pub(crate) accesses: Vec<Access>,
+    /// Current blocking context (one pause/resume round trip, Section 4.1).
+    pub(crate) blocking: Mutex<Option<Arc<BlockCtx>>>,
+    pub(crate) completed: AtomicBool,
+}
+
+impl TaskInner {
+    /// Satisfy one predecessor access; enqueue as ready when all are met.
+    pub(crate) fn dec_pred(self: &Arc<Self>) {
+        if self.preds.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Some(rt) = self.rt.upgrade() {
+                rt.sched.enqueue_new(self.clone(), &rt);
+            }
+        }
+    }
+
+    /// Body finished: drop one event; maybe fully complete.
+    pub(crate) fn body_finished(self: &Arc<Self>) {
+        self.dec_events(1);
+    }
+
+    pub(crate) fn inc_events(&self, n: u32) {
+        let prev = self.events.fetch_add(n, Ordering::AcqRel);
+        assert!(prev > 0, "task {} bound events after completion", self.id);
+    }
+
+    pub(crate) fn dec_events(self: &Arc<Self>, n: u32) {
+        let prev = self.events.fetch_sub(n, Ordering::AcqRel);
+        assert!(prev >= n, "task {} event counter underflow", self.id);
+        if prev == n {
+            self.fully_complete();
+        }
+    }
+
+    /// Body done and all external events fulfilled: release dependencies
+    /// (Section 4.6) and notify taskwait.
+    fn fully_complete(self: &Arc<Self>) {
+        self.completed.store(true, Ordering::Release);
+        if let Some(rt) = self.rt.upgrade() {
+            for acc in &self.accesses {
+                acc.obj.release(self);
+            }
+            rt.task_fully_completed(self);
+        }
+    }
+}
+
+/// State machine of one pause/resume round trip.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum CtxState {
+    /// Created; neither block nor unblock happened.
+    Armed,
+    /// `unblock_task` arrived before `block_current_task`.
+    UnblockedEarly,
+    /// The task is parked waiting for a core grant.
+    Waiting,
+    /// A worker transferred its core; the parked thread may resume.
+    Granted,
+}
+
+/// Runtime-internal blocking context (opaque to users, Section 4.1).
+pub struct BlockCtx {
+    pub(crate) st: Mutex<CtxState>,
+    pub(crate) token: Arc<Token>,
+    pub(crate) rt: Weak<Rt>,
+    pub(crate) task_id: u64,
+    pub(crate) task_label: String,
+}
+
+/// Opaque handle returned by `get_current_blocking_context` — the paper's
+/// `void*` blocking context.
+#[derive(Clone)]
+pub struct BlockingContext(pub(crate) Arc<BlockCtx>);
+
+/// Opaque handle returned by `get_current_event_counter` — the paper's
+/// `void*` event counter. Cloneable and sendable to the fulfilling thread.
+#[derive(Clone)]
+pub struct EventCounter(pub(crate) Arc<TaskInner>);
+
+impl std::fmt::Debug for EventCounter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EventCounter(task {})", self.0.id)
+    }
+}

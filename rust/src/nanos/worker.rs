@@ -1,0 +1,109 @@
+//! Worker threads: execute tasks, transfer cores on resume grants.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use super::runtime::Rt;
+use super::scheduler::Item;
+use super::task::TaskInner;
+use crate::trace::EventKind;
+
+thread_local! {
+    /// (runtime, current task) of the executing worker thread.
+    pub(crate) static CURRENT: RefCell<Option<(Arc<Rt>, Option<Arc<TaskInner>>)>> =
+        const { RefCell::new(None) };
+    /// Worker index within its runtime (for tracing).
+    pub(crate) static WORKER_ID: RefCell<usize> = const { RefCell::new(usize::MAX) };
+}
+
+/// Read the current (runtime, task) pair, if on a worker thread in a task.
+pub(crate) fn current() -> Option<(Arc<Rt>, Arc<TaskInner>)> {
+    CURRENT.with(|c| {
+        c.borrow()
+            .as_ref()
+            .and_then(|(rt, t)| t.as_ref().map(|t| (rt.clone(), t.clone())))
+    })
+}
+
+/// Read the current runtime (worker or attached rank-main thread).
+pub(crate) fn current_rt() -> Option<Arc<Rt>> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|(rt, _)| rt.clone()))
+}
+
+pub(crate) fn worker_id() -> usize {
+    WORKER_ID.with(|w| *w.borrow())
+}
+
+/// Attach a non-worker thread (a rank main) to a runtime so it can submit
+/// tasks, call taskwait, and use clock helpers.
+pub(crate) fn attach_thread(rt: Arc<Rt>) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((rt, None)));
+}
+
+pub(crate) fn detach_thread() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+/// Spawn one worker thread. Called with the scheduler lock held by the
+/// spawner (the total was already incremented).
+pub(crate) fn spawn_worker(rt: Arc<Rt>, index: usize) {
+    let stack = rt.cfg.worker_stack;
+    let name = format!("{}-w{}", rt.cfg.label, index);
+    rt.clock.register_thread();
+    let rt2 = rt.clone();
+    std::thread::Builder::new()
+        .name(name)
+        .stack_size(stack)
+        .spawn(move || worker_main(rt2, index))
+        .expect("spawn worker");
+}
+
+fn worker_main(rt: Arc<Rt>, index: usize) {
+    WORKER_ID.with(|w| *w.borrow_mut() = index);
+    CURRENT.with(|c| *c.borrow_mut() = Some((rt.clone(), None)));
+    loop {
+        let Some(item) = rt.sched.next(&rt) else { break };
+        match item {
+            Item::New(task) => {
+                run_task(&rt, &task);
+                rt.sched.release_core(&rt);
+            }
+            Item::Resume(ctx) => {
+                // Transfer our license to the parked thread and loop back
+                // (we are now license-less; `next` re-acquires).
+                rt.trace(EventKind::TaskResumeGrant, index, &ctx.task_label, ctx.task_id);
+                rt.sched.grant_core(&ctx, &rt);
+            }
+        }
+    }
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    rt.clock.deregister_thread();
+}
+
+fn run_task(rt: &Arc<Rt>, task: &Arc<TaskInner>) {
+    let body = task
+        .body
+        .lock()
+        .unwrap()
+        .take()
+        .expect("task scheduled twice");
+    CURRENT.with(|c| c.borrow_mut().as_mut().unwrap().1 = Some(task.clone()));
+    crate::sim::Clock::add_debt(rt.cfg.costs.task_exec_ns);
+    rt.trace(EventKind::TaskStart, worker_id(), &task.label, task.id);
+    // Contain task panics: record, then release dependencies anyway so the
+    // failure surfaces at taskwait instead of hanging the simulation.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "unknown panic".into());
+        rt.record_task_panic(format!("task '{}' (id {}): {}", task.label, task.id, msg));
+    }
+    rt.trace(EventKind::TaskEnd, worker_id(), &task.label, task.id);
+    // Settle this task's modeled overheads while still holding the core.
+    rt.clock.flush_debt();
+    CURRENT.with(|c| c.borrow_mut().as_mut().unwrap().1 = None);
+    task.body_finished();
+}

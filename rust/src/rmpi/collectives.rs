@@ -1,0 +1,239 @@
+//! Collectives over p2p on the dedicated collective context.
+//!
+//! Every collective is expressed through a *wait strategy* so the TAMPI
+//! layer can reuse the same algorithms with task-aware waiting (the paper
+//! intercepts collective operations too, Section 6.1): `WaitMode::Park`
+//! blocks the OS thread; `WaitMode::TaskAware` routes each internal wait
+//! through `tampi`-style pause/resume (installed by the tampi module).
+
+use super::comm::Comm;
+use super::p2p::Ctx;
+use super::request::Request;
+use super::Pod;
+
+/// How a collective waits for its internal requests.
+#[derive(Clone, Copy, Default)]
+pub enum WaitMode {
+    /// Block the calling OS thread (plain MPI behaviour).
+    #[default]
+    Park,
+    /// Pause the calling task instead (requires TAMPI blocking mode;
+    /// panics outside a task).
+    TaskAware,
+}
+
+impl Comm {
+    fn coll_wait(&self, mode: WaitMode, reqs: &[Request]) {
+        match mode {
+            WaitMode::Park => Request::wait_all(&self.uni.clock, reqs),
+            WaitMode::TaskAware => crate::tampi::task_aware_wait_all(self, reqs),
+        }
+    }
+
+    /// MPI_Barrier (dissemination algorithm, log2(size) rounds).
+    pub fn barrier(&self) {
+        self.barrier_with(WaitMode::Park)
+    }
+
+    pub fn barrier_with(&self, mode: WaitMode) {
+        let tag = self.next_coll_tag();
+        let n = self.size;
+        if n == 1 {
+            return;
+        }
+        let token = [1u8];
+        let mut round = 1usize;
+        while round < n {
+            let to = (self.rank + round) % n;
+            let from = (self.rank + n - round % n) % n;
+            let mut buf = [0u8];
+            let s = self.isend_ctx(&token, to, tag, false, Ctx::Coll);
+            let r = self.irecv_ctx(&mut buf, from as i32, tag, Ctx::Coll);
+            self.coll_wait(mode, &[s, r]);
+            round <<= 1;
+        }
+    }
+
+    /// MPI_Bcast (binomial tree rooted at `root`).
+    pub fn bcast<T: Pod>(&self, buf: &mut [T], root: usize) {
+        self.bcast_with(buf, root, WaitMode::Park)
+    }
+
+    pub fn bcast_with<T: Pod>(&self, buf: &mut [T], root: usize, mode: WaitMode) {
+        let tag = self.next_coll_tag();
+        let n = self.size;
+        if n == 1 {
+            return;
+        }
+        let vr = (self.rank + n - root) % n; // virtual rank, root -> 0
+        if vr != 0 {
+            let parent = ((vr - 1) / 2 + root) % n;
+            let r = self.irecv_ctx(buf, parent as i32, tag, Ctx::Coll);
+            self.coll_wait(mode, &[r]);
+        }
+        let mut reqs = Vec::new();
+        for child in [2 * vr + 1, 2 * vr + 2] {
+            if child < n {
+                let dst = (child + root) % n;
+                reqs.push(self.isend_ctx(&*buf, dst, tag, false, Ctx::Coll));
+            }
+        }
+        if !reqs.is_empty() {
+            self.coll_wait(mode, &reqs);
+        }
+    }
+
+    /// MPI_Reduce with a user combiner `op(acc, incoming)`.
+    pub fn reduce<T: Pod>(&self, buf: &mut [T], root: usize, op: impl Fn(&mut [T], &[T])) {
+        self.reduce_with(buf, root, op, WaitMode::Park)
+    }
+
+    pub fn reduce_with<T: Pod>(
+        &self,
+        buf: &mut [T],
+        root: usize,
+        op: impl Fn(&mut [T], &[T]),
+        mode: WaitMode,
+    ) {
+        let tag = self.next_coll_tag();
+        let n = self.size;
+        if n == 1 {
+            return;
+        }
+        let vr = (self.rank + n - root) % n;
+        // Receive from children (binomial: children are vr + 2^k while valid).
+        let mut k = 1usize;
+        while vr + k < n && (vr & k) == 0 {
+            let child = ((vr + k) + root) % n;
+            let mut tmp = vec![buf[0]; buf.len()];
+            let r = self.irecv_ctx(&mut tmp, child as i32, tag, Ctx::Coll);
+            self.coll_wait(mode, &[r]);
+            op(buf, &tmp);
+            k <<= 1;
+        }
+        if vr != 0 {
+            // Parent: clear the lowest set bit of vr.
+            let parent_vr = vr & (vr - 1);
+            let parent = (parent_vr + root) % n;
+            let s = self.isend_ctx(&*buf, parent, tag, false, Ctx::Coll);
+            self.coll_wait(mode, &[s]);
+        }
+    }
+
+    /// MPI_Allreduce = reduce to 0 + bcast from 0.
+    pub fn allreduce<T: Pod>(&self, buf: &mut [T], op: impl Fn(&mut [T], &[T])) {
+        self.allreduce_with(buf, op, WaitMode::Park)
+    }
+
+    pub fn allreduce_with<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Fn(&mut [T], &[T]),
+        mode: WaitMode,
+    ) {
+        self.reduce_with(buf, 0, op, mode);
+        self.bcast_with(buf, 0, mode);
+    }
+
+    /// MPI_Gather: fixed-size contribution per rank into root's buffer.
+    pub fn gather<T: Pod>(&self, send: &[T], recv: Option<&mut [T]>, root: usize) {
+        self.gather_with(send, recv, root, WaitMode::Park)
+    }
+
+    pub fn gather_with<T: Pod>(
+        &self,
+        send: &[T],
+        recv: Option<&mut [T]>,
+        root: usize,
+        mode: WaitMode,
+    ) {
+        let tag = self.next_coll_tag();
+        let n = self.size;
+        if self.rank == root {
+            let recv = recv.expect("root must pass a receive buffer");
+            assert_eq!(recv.len(), send.len() * n);
+            let chunk = send.len();
+            let mut reqs = Vec::new();
+            for r in 0..n {
+                if r == root {
+                    recv[r * chunk..(r + 1) * chunk].copy_from_slice(send);
+                } else {
+                    reqs.push(self.irecv_ctx(
+                        &mut recv[r * chunk..(r + 1) * chunk],
+                        r as i32,
+                        tag,
+                        Ctx::Coll,
+                    ));
+                }
+            }
+            self.coll_wait(mode, &reqs);
+        } else {
+            let s = self.isend_ctx(send, root, tag, false, Ctx::Coll);
+            self.coll_wait(mode, &[s]);
+        }
+    }
+
+    /// MPI_Alltoall: equal-size blocks to/from every rank.
+    pub fn alltoall<T: Pod>(&self, send: &[T], recv: &mut [T]) {
+        let n = self.size;
+        assert_eq!(send.len() % n, 0);
+        assert_eq!(recv.len(), send.len());
+        let chunk = send.len() / n;
+        let scounts: Vec<usize> = vec![chunk; n];
+        let sdispls: Vec<usize> = (0..n).map(|i| i * chunk).collect();
+        self.alltoallv(send, &scounts, &sdispls, recv, &scounts, &sdispls, WaitMode::Park);
+    }
+
+    /// MPI_Alltoallv: variable blocks; the transposition primitive IFSKer
+    /// uses between grid-point and spectral distributions (Section 7.2).
+    #[allow(clippy::too_many_arguments)]
+    pub fn alltoallv<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+        mode: WaitMode,
+    ) {
+        let tag = self.next_coll_tag();
+        let n = self.size;
+        assert!(scounts.len() == n && rcounts.len() == n);
+        let mut reqs = Vec::with_capacity(2 * n);
+        // Post all receives first (deterministic matching), then sends.
+        // Split recv into disjoint slices.
+        let mut rest: &mut [T] = recv;
+        let mut offset = 0usize;
+        let mut rslices: Vec<(usize, &mut [T])> = Vec::new(); // (rank, slice)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&r| rdispls[r]);
+        for &r in &order {
+            let skip = rdispls[r] - offset;
+            let (_, tail) = rest.split_at_mut(skip);
+            let (slice, tail) = tail.split_at_mut(rcounts[r]);
+            rest = tail;
+            offset = rdispls[r] + rcounts[r];
+            rslices.push((r, slice));
+        }
+        for (r, slice) in rslices.iter_mut() {
+            if *r == self.rank {
+                slice.copy_from_slice(&send[sdispls[*r]..sdispls[*r] + rcounts[*r]]);
+            } else {
+                reqs.push(self.irecv_ctx(slice, *r as i32, tag, Ctx::Coll));
+            }
+        }
+        for r in 0..n {
+            if r != self.rank {
+                reqs.push(self.isend_ctx(
+                    &send[sdispls[r]..sdispls[r] + scounts[r]],
+                    r,
+                    tag,
+                    false,
+                    Ctx::Coll,
+                ));
+            }
+        }
+        self.coll_wait(mode, &reqs);
+    }
+}

@@ -1,0 +1,129 @@
+//! Communicators: per-rank handles over shared matching state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::Clock;
+
+use super::match_engine::ContextQueues;
+use super::net::NetworkModel;
+
+/// Shared cluster state (one per [`super::Universe`]).
+pub(crate) struct UniState {
+    pub clock: Arc<Clock>,
+    pub net: NetworkModel,
+    /// rank -> node id.
+    pub node_of: Vec<usize>,
+    /// Match contexts; a communicator owns two (p2p + collectives).
+    pub contexts: Mutex<Vec<Arc<ContextQueues>>>,
+    /// (parent ctx, dup seq) -> allocated context pair.
+    pub dup_map: Mutex<std::collections::HashMap<(usize, u64), (usize, usize)>>,
+}
+
+impl UniState {
+    pub fn alloc_context_pair(&self, size: usize) -> (usize, usize) {
+        let mut g = self.contexts.lock().unwrap();
+        let base = g.len();
+        g.push(Arc::new(ContextQueues::new(size)));
+        g.push(Arc::new(ContextQueues::new(size)));
+        (base, base + 1)
+    }
+
+    /// Collective-safe duplication: the pair for (parent, seq) is
+    /// allocated once; every rank calling dup in the same order resolves
+    /// to the same contexts.
+    pub fn dup_context_pair(&self, parent: usize, seq: u64, size: usize) -> (usize, usize) {
+        let mut m = self.dup_map.lock().unwrap();
+        if let Some(&pair) = m.get(&(parent, seq)) {
+            return pair;
+        }
+        let pair = self.alloc_context_pair(size);
+        m.insert((parent, seq), pair);
+        pair
+    }
+
+    pub fn context(&self, id: usize) -> Arc<ContextQueues> {
+        self.contexts.lock().unwrap()[id].clone()
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+}
+
+/// A communicator handle bound to one rank (like an `MPI_Comm` plus the
+/// implicit rank of the caller). Cheap to clone; clones share matching
+/// state and the collective sequence counter.
+#[derive(Clone)]
+pub struct Comm {
+    pub(crate) uni: Arc<UniState>,
+    pub(crate) rank: usize,
+    pub(crate) size: usize,
+    pub(crate) ctx_p2p_id: usize,
+    pub(crate) ctx_p2p: Arc<ContextQueues>,
+    pub(crate) ctx_coll: Arc<ContextQueues>,
+    /// Collective call sequence of this rank (tags collective rounds;
+    /// MPI requires all ranks to call collectives in the same order).
+    pub(crate) coll_seq: Arc<AtomicU64>,
+    /// Dup call sequence of this rank on this communicator.
+    pub(crate) dup_seq: Arc<AtomicU64>,
+}
+
+impl Comm {
+    pub(crate) fn world(uni: Arc<UniState>, rank: usize, size: usize) -> Comm {
+        // World always owns contexts 0/1 (allocated by the universe).
+        let ctx_p2p = uni.context(0);
+        let ctx_coll = uni.context(1);
+        Comm {
+            uni,
+            rank,
+            size,
+            ctx_p2p_id: 0,
+            ctx_p2p,
+            ctx_coll,
+            coll_seq: Arc::new(AtomicU64::new(0)),
+            dup_seq: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Rank of the caller within this communicator.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Node housing `rank` (the interconnect class boundary).
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.uni.node_of[rank]
+    }
+
+    pub fn clock(&self) -> &Arc<Clock> {
+        &self.uni.clock
+    }
+
+    /// Duplicate the communicator: fresh matching contexts, same group.
+    /// Collective — every rank must call it in the same order.
+    /// (MPI_Comm_dup — isolates library traffic.)
+    pub fn dup(&self) -> Comm {
+        let seq = self.dup_seq.fetch_add(1, Ordering::Relaxed);
+        let (p, c) = self.uni.dup_context_pair(self.ctx_p2p_id, seq, self.size);
+        Comm {
+            uni: self.uni.clone(),
+            rank: self.rank,
+            size: self.size,
+            ctx_p2p_id: p,
+            ctx_p2p: self.uni.context(p),
+            ctx_coll: self.uni.context(c),
+            coll_seq: Arc::new(AtomicU64::new(0)),
+            dup_seq: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub(crate) fn next_coll_tag(&self) -> i32 {
+        (self.coll_seq.fetch_add(1, Ordering::Relaxed) % (i32::MAX as u64)) as i32
+    }
+}

@@ -1,0 +1,256 @@
+//! Message matching: posted-receive + unexpected-message queues with MPI
+//! ordering semantics (first match in posting/arrival order).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Clock, VNanos};
+
+use super::request::{ReqState, Status};
+
+/// Raw destination buffer of a posted receive. The receiver guarantees the
+/// buffer outlives the request (MPI contract).
+pub(crate) struct RecvBuf {
+    pub ptr: *mut u8,
+    pub len: usize,
+}
+// SAFETY: the buffer is only written while the receive request is pending,
+// during which the owning thread may not touch it (MPI contract).
+unsafe impl Send for RecvBuf {}
+
+pub(crate) struct PostedRecv {
+    pub src: Option<usize>,
+    pub tag: Option<i32>,
+    pub buf: RecvBuf,
+    pub req: Arc<ReqState>,
+}
+
+pub(crate) struct Envelope {
+    pub src: usize,
+    pub tag: i32,
+    /// Eagerly-copied payload.
+    pub data: Box<[u8]>,
+    /// Virtual time at which the payload is fully at the receiver.
+    pub arrive_at: VNanos,
+    /// Rendezvous/ssend: the sender's request completes at delivery.
+    pub sender_req: Option<Arc<ReqState>>,
+}
+
+#[derive(Default)]
+pub(crate) struct DstQueues {
+    pub posted: VecDeque<PostedRecv>,
+    pub unexpected: VecDeque<Envelope>,
+}
+
+/// Matching state of one communicator context: one queue pair per
+/// destination rank.
+pub(crate) struct ContextQueues {
+    pub dst: Vec<Mutex<DstQueues>>,
+}
+
+impl ContextQueues {
+    pub fn new(size: usize) -> Self {
+        ContextQueues {
+            dst: (0..size).map(|_| Mutex::new(DstQueues::default())).collect(),
+        }
+    }
+}
+
+fn matches(psrc: Option<usize>, ptag: Option<i32>, src: usize, tag: i32) -> bool {
+    psrc.map(|s| s == src).unwrap_or(true) && ptag.map(|t| t == tag).unwrap_or(true)
+}
+
+/// Deliver a matched (envelope, posted-recv) pair: copy now (invisible to
+/// the receiver until completion), complete both requests at `when`.
+pub(crate) fn deliver(
+    clock: &Arc<Clock>,
+    env: Envelope,
+    posted: PostedRecv,
+) {
+    assert!(
+        env.data.len() <= posted.buf.len,
+        "message truncation: {} bytes into {}-byte buffer (src {} tag {})",
+        env.data.len(),
+        posted.buf.len,
+        env.src,
+        env.tag
+    );
+    // SAFETY: RecvBuf contract (see above).
+    unsafe {
+        std::ptr::copy_nonoverlapping(env.data.as_ptr(), posted.buf.ptr, env.data.len());
+    }
+    let status = Status {
+        source: env.src as i32,
+        tag: env.tag,
+        bytes: env.data.len(),
+    };
+    let when = env.arrive_at;
+    let now = clock.now();
+    if when <= now {
+        posted.req.complete(clock, Some(status));
+        if let Some(s) = env.sender_req {
+            s.complete(clock, None);
+        }
+    } else {
+        let req = posted.req;
+        let sender = env.sender_req;
+        let clock2 = clock.clone();
+        clock.call_at(when, move || {
+            req.complete(&clock2, Some(status));
+            if let Some(s) = sender {
+                s.complete(&clock2, None);
+            }
+        });
+    }
+}
+
+/// Direct delivery (send fast path): the payload goes straight from the
+/// sender's buffer into the posted receive — no envelope allocation
+/// (§Perf opt-3). Completion semantics identical to [`deliver`].
+pub(crate) fn deliver_direct(
+    clock: &Arc<Clock>,
+    bytes: &[u8],
+    src: usize,
+    tag: i32,
+    arrive_at: VNanos,
+    sender_req: Option<Arc<ReqState>>,
+    posted: PostedRecv,
+) {
+    assert!(
+        bytes.len() <= posted.buf.len,
+        "message truncation: {} bytes into {}-byte buffer (src {src} tag {tag})",
+        bytes.len(),
+        posted.buf.len,
+    );
+    // SAFETY: RecvBuf contract (see above).
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), posted.buf.ptr, bytes.len());
+    }
+    let status = Status { source: src as i32, tag, bytes: bytes.len() };
+    let now = clock.now();
+    if arrive_at <= now {
+        posted.req.complete(clock, Some(status));
+        if let Some(s) = sender_req {
+            s.complete(clock, None);
+        }
+    } else {
+        let req = posted.req;
+        let clock2 = clock.clone();
+        clock.call_at(arrive_at, move || {
+            req.complete(&clock2, Some(status));
+            if let Some(s) = sender_req {
+                s.complete(&clock2, None);
+            }
+        });
+    }
+}
+
+impl DstQueues {
+    /// Send fast path: pop the first posted receive matching (src, tag),
+    /// if any.
+    pub fn match_posted(&mut self, src: usize, tag: i32) -> Option<PostedRecv> {
+        let pos = self
+            .posted
+            .iter()
+            .position(|p| matches(p.src, p.tag, src, tag))?;
+        self.posted.remove(pos)
+    }
+
+    /// An envelope arrives: match against posted receives (post order) or
+    /// queue as unexpected. Returns the matched posted receive, if any.
+    pub fn arrive(&mut self, env: Envelope) -> Option<(Envelope, PostedRecv)> {
+        if let Some(pos) = self
+            .posted
+            .iter()
+            .position(|p| matches(p.src, p.tag, env.src, env.tag))
+        {
+            let posted = self.posted.remove(pos).unwrap();
+            Some((env, posted))
+        } else {
+            self.unexpected.push_back(env);
+            None
+        }
+    }
+
+    /// A receive is posted: match against unexpected messages (arrival
+    /// order) or queue it.
+    pub fn post(&mut self, p: PostedRecv) -> Option<(Envelope, PostedRecv)> {
+        if let Some(pos) = self
+            .unexpected
+            .iter()
+            .position(|e| matches(p.src, p.tag, e.src, e.tag))
+        {
+            let env = self.unexpected.remove(pos).unwrap();
+            Some((env, p))
+        } else {
+            self.posted.push_back(p);
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(src: usize, tag: i32) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            data: vec![0u8; 4].into_boxed_slice(),
+            arrive_at: 0,
+            sender_req: None,
+        }
+    }
+
+    fn posted(src: Option<usize>, tag: Option<i32>, slot: &mut [u8]) -> PostedRecv {
+        PostedRecv {
+            src,
+            tag,
+            buf: RecvBuf { ptr: slot.as_mut_ptr(), len: slot.len() },
+            req: Arc::new(ReqState::default()),
+        }
+    }
+
+    #[test]
+    fn unexpected_then_post_matches_in_arrival_order() {
+        let mut q = DstQueues::default();
+        assert!(q.arrive(env(0, 7)).is_none());
+        assert!(q.arrive(env(0, 7)).is_none());
+        let mut b = [0u8; 8];
+        let m = q.post(posted(Some(0), Some(7), &mut b));
+        assert!(m.is_some());
+        assert_eq!(q.unexpected.len(), 1);
+    }
+
+    #[test]
+    fn wildcard_src_and_tag() {
+        let mut q = DstQueues::default();
+        q.arrive(env(3, 9));
+        let mut b = [0u8; 8];
+        assert!(q.post(posted(None, None, &mut b)).is_some());
+    }
+
+    #[test]
+    fn posted_matched_in_post_order() {
+        let mut q = DstQueues::default();
+        let mut b1 = [0u8; 8];
+        let mut b2 = [0u8; 8];
+        assert!(q.post(posted(None, Some(1), &mut b1)).is_none());
+        assert!(q.post(posted(Some(0), None, &mut b2)).is_none());
+        // tag 1 from rank 0 matches the *first* posted recv.
+        let m = q.arrive(env(0, 1)).unwrap();
+        assert_eq!(m.1.tag, Some(1));
+        assert_eq!(q.posted.len(), 1);
+    }
+
+    #[test]
+    fn no_match_on_wrong_tag() {
+        let mut q = DstQueues::default();
+        let mut b = [0u8; 8];
+        q.post(posted(Some(0), Some(5), &mut b));
+        assert!(q.arrive(env(0, 6)).is_none());
+        assert_eq!(q.posted.len(), 1);
+        assert_eq!(q.unexpected.len(), 1);
+    }
+}

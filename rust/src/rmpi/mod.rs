@@ -1,0 +1,77 @@
+//! `rmpi` — an MPI-like message-passing substrate.
+//!
+//! Implements the slice of MPI the paper exercises (Sections 2.2, 5, 6),
+//! with MPI's semantics where they matter for TAMPI:
+//!
+//! * **Matching**: per (communicator, destination) posted-receive and
+//!   unexpected-message queues, matched by `(source | ANY_SOURCE,
+//!   tag | ANY_TAG)` in posting order — the MPI §3.5 non-overtaking rule.
+//! * **Point-to-point**: `send`/`ssend`/`recv` (blocking; park the OS
+//!   thread — which is exactly what makes untamed blocking calls inside
+//!   tasks deadlock, Section 5) and `isend`/`issend`/`irecv` plus
+//!   `test`/`wait`/`waitall` over [`request::Request`]s.
+//! * **Collectives**: barrier, bcast, reduce, allreduce, gather, alltoall
+//!   and alltoallv, built over p2p on a separate match context.
+//! * **Threading levels**: `Single`..`Multiple` plus the paper's proposed
+//!   `TaskMultiple` (Section 6.3), which [`crate::tampi`] turns on.
+//! * **Interconnect model** ([`net`]): per-message delivery deadline
+//!   `latency(class) + bytes / bandwidth(class)`, class ∈ {intra-node,
+//!   inter-node}, applied in virtual time by clock callbacks.
+//!
+//! Ranks are threads of one process under one [`crate::sim::Clock`]; the
+//! cluster shape (nodes × ranks-per-node × cores) is configured in
+//! [`universe::ClusterConfig`].
+
+pub mod collectives;
+pub mod comm;
+pub mod match_engine;
+pub mod net;
+pub mod p2p;
+pub mod request;
+pub mod universe;
+
+pub use comm::Comm;
+pub use net::NetworkModel;
+pub use request::{Request, Status};
+pub use universe::{ClusterConfig, RankCtx, RunStats, Universe};
+
+/// Wildcard source.
+pub const ANY_SOURCE: i32 = -1;
+/// Wildcard tag.
+pub const ANY_TAG: i32 = -1;
+
+/// MPI threading levels, including the paper's proposal (Section 6.3).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum ThreadLevel {
+    Single,
+    Funneled,
+    Serialized,
+    Multiple,
+    /// Monotonically greater than `Multiple` (Section 6.3): blocking MPI
+    /// calls inside tasks become task-aware.
+    TaskMultiple,
+}
+
+/// Plain-old-data element types that can travel through messages.
+///
+/// # Safety
+/// Implementors must be bit-copyable with no padding or invalid values.
+pub unsafe trait Pod: Copy + Send + 'static {}
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+unsafe impl Pod for usize {}
+
+pub(crate) fn as_bytes<T: Pod>(s: &[T]) -> &[u8] {
+    // SAFETY: T is Pod (bit-copyable, no padding).
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+pub(crate) fn as_bytes_mut<T: Pod>(s: &mut [T]) -> &mut [u8] {
+    // SAFETY: T is Pod.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, std::mem::size_of_val(s)) }
+}

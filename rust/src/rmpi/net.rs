@@ -1,0 +1,104 @@
+//! Interconnect model: delivery deadlines in virtual time.
+//!
+//! MareNostrum 4's fabric is 100 Gbit/s Intel Omni-Path; intra-node
+//! communication goes through shared memory. The model assigns each
+//! message `latency(class) + bytes / bandwidth(class)`; rendezvous-size
+//! messages additionally tie the *sender's* completion to the match
+//! (synchronous behaviour above the eager threshold, like MPICH).
+
+use crate::sim::VNanos;
+
+/// Link classes and protocol thresholds of the simulated cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// One-way latency between ranks on the same node (shared memory).
+    pub intra_latency_ns: u64,
+    /// Shared-memory copy bandwidth, bytes/s.
+    pub intra_bw_bytes_per_s: u64,
+    /// One-way latency across nodes (Omni-Path class fabric).
+    pub inter_latency_ns: u64,
+    /// Network bandwidth, bytes/s.
+    pub inter_bw_bytes_per_s: u64,
+    /// Messages larger than this use the rendezvous protocol: the sender's
+    /// request completes only when the receive is matched and the transfer
+    /// done (plain `send` behaves like `ssend`).
+    pub eager_threshold: usize,
+    /// CPU time one MPI call burns on the calling core (library overhead,
+    /// matching, copies). Charged as virtual-time debt to the caller.
+    pub call_cpu_ns: u64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            intra_latency_ns: 400,                        // shared-memory hop
+            intra_bw_bytes_per_s: 8_000_000_000,          // 8 GB/s memcpy
+            inter_latency_ns: 1_500,                      // Omni-Path ~1.5 us
+            inter_bw_bytes_per_s: 12_500_000_000,         // 100 Gbit/s
+            eager_threshold: 64 * 1024,
+            call_cpu_ns: 400,                             // per-call library cost
+        }
+    }
+}
+
+impl NetworkModel {
+    /// A zero-cost network (unit tests of matching logic).
+    pub fn instant() -> Self {
+        NetworkModel {
+            intra_latency_ns: 0,
+            intra_bw_bytes_per_s: u64::MAX,
+            inter_latency_ns: 0,
+            inter_bw_bytes_per_s: u64::MAX,
+            eager_threshold: usize::MAX,
+            call_cpu_ns: 0,
+        }
+    }
+
+    /// Virtual transfer duration of a message of `bytes` over the class.
+    pub fn transfer_ns(&self, bytes: usize, same_node: bool) -> VNanos {
+        let (lat, bw) = if same_node {
+            (self.intra_latency_ns, self.intra_bw_bytes_per_s)
+        } else {
+            (self.inter_latency_ns, self.inter_bw_bytes_per_s)
+        };
+        if bw == u64::MAX {
+            return lat;
+        }
+        lat + (bytes as u128 * 1_000_000_000u128 / bw as u128) as u64
+    }
+
+    /// Whether a message of `bytes` is eager (sender completes at once).
+    pub fn is_eager(&self, bytes: usize) -> bool {
+        bytes <= self.eager_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales_with_size_and_class() {
+        let m = NetworkModel::default();
+        let small_intra = m.transfer_ns(8, true);
+        let small_inter = m.transfer_ns(8, false);
+        assert!(small_inter > small_intra);
+        let big_inter = m.transfer_ns(1 << 20, false);
+        assert!(big_inter > small_inter);
+        // 1 MiB at 12.5 GB/s ~ 84 us
+        assert!((80_000..100_000).contains(&big_inter));
+    }
+
+    #[test]
+    fn eager_threshold() {
+        let m = NetworkModel::default();
+        assert!(m.is_eager(1024));
+        assert!(!m.is_eager(1 << 20));
+    }
+
+    #[test]
+    fn instant_is_free() {
+        let m = NetworkModel::instant();
+        assert_eq!(m.transfer_ns(1 << 30, false), 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Point-to-point operations.
+//!
+//! Blocking variants park the calling OS thread (in virtual time) until
+//! the request completes — when called from inside a task *without* TAMPI
+//! this steals the hardware thread from the runtime, which is the failure
+//! mode of Section 5.
+
+use std::sync::Arc;
+
+use super::comm::Comm;
+use super::match_engine::{Envelope, PostedRecv, RecvBuf};
+use super::request::{ReqState, Request, Status};
+use super::{as_bytes, as_bytes_mut, Pod, ANY_SOURCE, ANY_TAG};
+
+/// Which p2p context a transfer uses.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Ctx {
+    P2p,
+    Coll,
+}
+
+impl Comm {
+    fn ctx(&self, c: Ctx) -> &super::match_engine::ContextQueues {
+        match c {
+            Ctx::P2p => &self.ctx_p2p,
+            Ctx::Coll => &self.ctx_coll,
+        }
+    }
+
+    pub(crate) fn isend_ctx<T: Pod>(
+        &self,
+        buf: &[T],
+        dst: usize,
+        tag: i32,
+        sync: bool,
+        ctx: Ctx,
+    ) -> Request {
+        assert!(dst < self.size, "send to rank {dst} of {}", self.size);
+        crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
+        let bytes = as_bytes(buf);
+        let same_node = self.uni.same_node(self.rank, dst);
+        let net = &self.uni.net;
+        let arrive_at = self.uni.clock.now() + net.transfer_ns(bytes.len(), same_node);
+        let rendezvous = sync || !net.is_eager(bytes.len());
+        let sender_req: Option<Arc<ReqState>> = if rendezvous {
+            Some(Arc::new(ReqState::default()))
+        } else {
+            None
+        };
+        let req = match &sender_req {
+            Some(s) => Request(s.clone()),
+            None => Request::done(),
+        };
+        let mut q = self.ctx(ctx).dst[dst].lock().unwrap();
+        if let Some(posted) = q.match_posted(self.rank, tag) {
+            // Fast path: copy straight into the posted receive buffer
+            // (no envelope allocation, §Perf opt-3).
+            drop(q);
+            super::match_engine::deliver_direct(
+                &self.uni.clock,
+                bytes,
+                self.rank,
+                tag,
+                arrive_at,
+                sender_req,
+                posted,
+            );
+            return req;
+        }
+        let env = Envelope {
+            src: self.rank,
+            tag,
+            data: bytes.to_vec().into_boxed_slice(),
+            arrive_at,
+            sender_req,
+        };
+        q.unexpected.push_back(env);
+        drop(q);
+        req
+    }
+
+    pub(crate) fn irecv_ctx<T: Pod>(
+        &self,
+        buf: &mut [T],
+        src: i32,
+        tag: i32,
+        ctx: Ctx,
+    ) -> Request {
+        crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
+        let req = Request::new();
+        let bytes = as_bytes_mut(buf);
+        let posted = PostedRecv {
+            src: if src == ANY_SOURCE {
+                None
+            } else {
+                assert!((src as usize) < self.size);
+                Some(src as usize)
+            },
+            tag: if tag == ANY_TAG { None } else { Some(tag) },
+            buf: RecvBuf { ptr: bytes.as_mut_ptr(), len: bytes.len() },
+            req: req.0.clone(),
+        };
+        let matched = {
+            let mut q = self.ctx(ctx).dst[self.rank].lock().unwrap();
+            q.post(posted)
+        };
+        if let Some((env, posted)) = matched {
+            super::match_engine::deliver(&self.uni.clock, env, posted);
+        }
+        req
+    }
+
+    /// Non-blocking standard send (MPI_Isend): eager messages complete
+    /// immediately; rendezvous-size messages complete at delivery.
+    pub fn isend<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) -> Request {
+        self.isend_ctx(buf, dst, tag, false, Ctx::P2p)
+    }
+
+    /// Non-blocking synchronous send (MPI_Issend): completes only once the
+    /// matching receive was posted and the transfer is done.
+    pub fn issend<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) -> Request {
+        self.isend_ctx(buf, dst, tag, true, Ctx::P2p)
+    }
+
+    /// Non-blocking receive (MPI_Irecv). The buffer must stay untouched
+    /// until the request completes.
+    pub fn irecv<T: Pod>(&self, buf: &mut [T], src: i32, tag: i32) -> Request {
+        self.irecv_ctx(buf, src, tag, Ctx::P2p)
+    }
+
+    /// Blocking standard send (MPI_Send).
+    pub fn send<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) {
+        self.isend(buf, dst, tag).wait(&self.uni.clock);
+    }
+
+    /// Blocking synchronous send (MPI_Ssend).
+    pub fn ssend<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) {
+        self.issend(buf, dst, tag).wait(&self.uni.clock);
+    }
+
+    /// Blocking receive (MPI_Recv).
+    pub fn recv<T: Pod>(&self, buf: &mut [T], src: i32, tag: i32) -> Status {
+        let r = self.irecv(buf, src, tag);
+        r.wait(&self.uni.clock);
+        r.status()
+    }
+
+    /// MPI_Wait.
+    pub fn wait(&self, req: &Request) {
+        req.wait(&self.uni.clock);
+    }
+
+    /// MPI_Waitall.
+    pub fn wait_all(&self, reqs: &[Request]) {
+        Request::wait_all(&self.uni.clock, reqs);
+    }
+}

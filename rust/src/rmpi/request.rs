@@ -1,0 +1,128 @@
+//! MPI request objects: completion state + passive waiting.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::sim::{Clock, WaitQueue};
+
+/// Completion status of a receive (source/tag/len of the matched message).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Status {
+    pub source: i32,
+    pub tag: i32,
+    pub bytes: usize,
+}
+
+#[derive(Default)]
+pub(crate) struct ReqState {
+    completed: AtomicBool,
+    waiters: WaitQueue,
+    status: std::sync::Mutex<Status>,
+}
+
+impl ReqState {
+    pub(crate) fn complete(&self, clock: &Clock, status: Option<Status>) {
+        if let Some(s) = status {
+            *self.status.lock().unwrap() = s;
+        }
+        self.completed.store(true, Ordering::Release);
+        self.waiters.notify_all(clock);
+    }
+}
+
+/// Handle to an in-flight operation. Clone freely; all clones observe the
+/// same completion.
+#[derive(Clone, Default)]
+pub struct Request(pub(crate) Arc<ReqState>);
+
+impl Request {
+    pub(crate) fn new() -> Self {
+        Request(Arc::new(ReqState::default()))
+    }
+
+    /// A request born completed (e.g. self-sends resolved inline).
+    pub(crate) fn done() -> Self {
+        let r = Request::new();
+        r.0.completed.store(true, Ordering::Release);
+        r
+    }
+
+    /// Non-blocking completion check (MPI_Test without side effects; our
+    /// requests are not invalidated by testing).
+    pub fn test(&self) -> bool {
+        self.0.completed.load(Ordering::Acquire)
+    }
+
+    /// Status of a completed receive.
+    pub fn status(&self) -> Status {
+        *self.0.status.lock().unwrap()
+    }
+
+    /// Blocking wait: parks the calling OS thread in virtual time.
+    /// This is the hardware-thread-stealing behaviour Section 5 warns
+    /// about when used inside tasks without TAMPI.
+    pub fn wait(&self, clock: &Clock) {
+        // Settle accumulated MPI-call CPU debt before blocking.
+        clock.flush_debt();
+        loop {
+            // Enqueue first, then re-check: completion after the check
+            // would otherwise drain the queue before we park.
+            if self.test() {
+                return;
+            }
+            let tok = self.0.waiters.enqueue();
+            if self.test() {
+                return;
+            }
+            clock.passive_wait(&tok);
+        }
+    }
+
+    /// Wait for all requests.
+    pub fn wait_all(clock: &Clock, reqs: &[Request]) {
+        for r in reqs {
+            r.wait(clock);
+        }
+    }
+
+    /// Index of some completed request, waiting if none is (MPI_Waitany).
+    pub fn wait_any(clock: &Clock, reqs: &[Request]) -> usize {
+        assert!(!reqs.is_empty());
+        loop {
+            if let Some(i) = reqs.iter().position(|r| r.test()) {
+                return i;
+            }
+            // One shared token enqueued on every incomplete request:
+            // whichever completes first wakes us (idempotent wakes).
+            let tok = crate::sim::Token::new();
+            for r in reqs {
+                if !r.test() {
+                    r.0.waiters.enqueue_token(tok.clone());
+                }
+            }
+            if let Some(i) = reqs.iter().position(|r| r.test()) {
+                return i;
+            }
+            clock.passive_wait(&tok);
+        }
+    }
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Request(completed={})", self.test())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_and_done() {
+        let r = Request::new();
+        assert!(!r.test());
+        let d = Request::done();
+        assert!(d.test());
+    }
+}

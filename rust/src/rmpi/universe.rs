@@ -1,0 +1,322 @@
+//! The simulated cluster: clock + ranks + runtimes + teardown.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::nanos::runtime::RuntimeCosts;
+use crate::nanos::{Runtime, RuntimeConfig};
+use crate::sim::{Clock, VNanos};
+use crate::trace::{GraphRecorder, Tracer};
+
+use super::comm::{Comm, UniState};
+use super::match_engine::ContextQueues;
+use super::net::NetworkModel;
+
+/// Shape and knobs of the simulated cluster.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    /// Worker threads (virtual cores) per rank's task runtime.
+    /// `0` means no task runtime (pure-MPI ranks).
+    pub cores_per_rank: usize,
+    pub net: NetworkModel,
+    /// Polling-leader period (virtual ns).
+    pub poll_interval: VNanos,
+    pub tracer: Option<Arc<Tracer>>,
+    pub graph: Option<Arc<GraphRecorder>>,
+    /// Virtual-time budget; exceeding it aborts the run (hang detector).
+    pub deadline: Option<VNanos>,
+    /// Stack size for rank main threads.
+    pub rank_stack: usize,
+    /// Stack size for runtime worker threads.
+    pub worker_stack: usize,
+    /// Modeled runtime-operation costs (default: realistic Nanos6-class).
+    pub costs: RuntimeCosts,
+}
+
+impl ClusterConfig {
+    pub fn new(nodes: usize, ranks_per_node: usize, cores_per_rank: usize) -> Self {
+        ClusterConfig {
+            nodes,
+            ranks_per_node,
+            cores_per_rank,
+            net: NetworkModel::default(),
+            poll_interval: crate::sim::us(50),
+            tracer: None,
+            graph: None,
+            deadline: None,
+            rank_stack: 1024 * 1024,
+            worker_stack: 512 * 1024,
+            costs: RuntimeCosts::realistic(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+}
+
+/// Everything a rank's main function gets.
+pub struct RankCtx {
+    pub rank: usize,
+    pub size: usize,
+    pub node: usize,
+    pub comm: Comm,
+    /// Task runtime (None when `cores_per_rank == 0`).
+    pub rt: Option<Runtime>,
+    pub clock: Arc<Clock>,
+}
+
+/// Outcome of a completed run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Virtual makespan: max over ranks of their finish time.
+    pub vtime_ns: u64,
+    /// Total tasks created across ranks.
+    pub tasks: u64,
+    /// Total task pauses (blocking-mode cost metric, Section 6.2).
+    pub pauses: u64,
+    /// Total worker threads ever spawned (cores + substitutes).
+    pub workers: usize,
+    /// Per-rank user-defined counters merged by key.
+    pub counters: HashMap<String, u64>,
+}
+
+/// Why a run did not complete.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunError {
+    /// Quiescence with no pending events before all ranks finished —
+    /// the Section 5 deadlock.
+    Deadlock { vtime_ns: u64 },
+    /// The virtual deadline elapsed (livelock / runaway).
+    DeadlineExceeded { deadline_ns: u64 },
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Deadlock { vtime_ns } => {
+                write!(f, "global deadlock at t={} ns (Section 5 scenario)", vtime_ns)
+            }
+            RunError::DeadlineExceeded { deadline_ns } => {
+                write!(f, "virtual deadline of {} ns exceeded", deadline_ns)
+            }
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// Handle used by rank code to bump named counters into [`RunStats`].
+#[derive(Clone, Default)]
+pub struct Counters(Arc<Mutex<HashMap<String, u64>>>);
+
+impl Counters {
+    pub fn add(&self, key: &str, v: u64) {
+        *self.0.lock().unwrap().entry(key.to_string()).or_insert(0) += v;
+    }
+}
+
+/// The simulated cluster. Build with [`Universe::run`].
+pub struct Universe;
+
+impl Universe {
+    /// Run `f` as the main function of every rank and tear the cluster
+    /// down. `f(ctx)` is executed on one thread per rank under virtual
+    /// time. Returns the run statistics, or an error if the cluster
+    /// deadlocked / overran its deadline (threads are leaked in that case
+    /// — acceptable for tests, mirrors a hung MPI job being killed).
+    pub fn run<F>(cfg: ClusterConfig, f: F) -> Result<RunStats, RunError>
+    where
+        F: Fn(&RankCtx) + Send + Sync + 'static,
+    {
+        Self::run_with_counters(cfg, move |ctx, _c| f(ctx))
+    }
+
+    /// Like [`Universe::run`], with a [`Counters`] sink for app metrics.
+    pub fn run_with_counters<F>(cfg: ClusterConfig, f: F) -> Result<RunStats, RunError>
+    where
+        F: Fn(&RankCtx, &Counters) + Send + Sync + 'static,
+    {
+        let size = cfg.size();
+        assert!(size > 0, "empty cluster");
+        let (clock, clock_handle) = Clock::start();
+        clock.set_panic_on_deadlock(false);
+        // Keep the clock pinned during setup: workers park before any rank
+        // thread registers, which must not read as quiescence/deadlock.
+        let setup_hold = clock.hold();
+
+        let node_of: Vec<usize> = (0..size).map(|r| r / cfg.ranks_per_node).collect();
+        let uni = Arc::new(UniState {
+            clock: clock.clone(),
+            net: cfg.net,
+            node_of,
+            contexts: Mutex::new(Vec::new()),
+            dup_map: Mutex::new(HashMap::new()),
+        });
+        {
+            // World communicator owns contexts 0 (p2p) and 1 (collectives).
+            let mut g = uni.contexts.lock().unwrap();
+            g.push(Arc::new(ContextQueues::new(size)));
+            g.push(Arc::new(ContextQueues::new(size)));
+        }
+
+        // Per-rank task runtimes.
+        let runtimes: Vec<Option<Runtime>> = (0..size)
+            .map(|r| {
+                if cfg.cores_per_rank == 0 {
+                    None
+                } else {
+                    let mut rc = RuntimeConfig::new(cfg.cores_per_rank);
+                    rc.poll_interval = cfg.poll_interval;
+                    rc.label = format!("r{r}");
+                    rc.rank = r as u32;
+                    rc.worker_stack = cfg.worker_stack;
+                    rc.costs = cfg.costs;
+                    rc.tracer = cfg.tracer.clone();
+                    rc.graph = cfg.graph.clone();
+                    Some(Runtime::new(clock.clone(), rc))
+                }
+            })
+            .collect();
+
+        let done = Arc::new(AtomicUsize::new(0));
+        let finish_vtime = Arc::new(AtomicU64::new(0));
+        let timed_out = Arc::new(AtomicBool::new(false));
+        let panics: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = Counters::default();
+        let f = Arc::new(f);
+
+        if let Some(dl) = cfg.deadline {
+            let t = timed_out.clone();
+            clock.call_at(dl, move || {
+                t.store(true, Ordering::Release);
+            });
+        }
+
+        let mut handles = Vec::with_capacity(size);
+        for rank in 0..size {
+            let ctx = RankCtx {
+                rank,
+                size,
+                node: uni.node_of[rank],
+                comm: Comm::world(uni.clone(), rank, size),
+                rt: runtimes[rank].clone(),
+                clock: clock.clone(),
+            };
+            let f = f.clone();
+            let done = done.clone();
+            let finish_vtime = finish_vtime.clone();
+            let clock2 = clock.clone();
+            let counters2 = counters.clone();
+            clock.register_thread(); // activity credit for the new thread
+            let panics2 = panics.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .stack_size(cfg.rank_stack)
+                .spawn(move || {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if let Some(rt) = &ctx.rt {
+                            rt.attach();
+                        }
+                        f(&ctx, &counters2);
+                        if let Some(rt) = &ctx.rt {
+                            // Quiesce this rank's tasks before declaring done.
+                            rt.taskwait();
+                            rt.detach();
+                        }
+                    }));
+                    match result {
+                        Ok(()) => {
+                            finish_vtime.fetch_max(clock2.now(), Ordering::AcqRel);
+                            done.fetch_add(1, Ordering::AcqRel);
+                            clock2.deregister_thread();
+                        }
+                        Err(e) => {
+                            let msg = e
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                                .unwrap_or_else(|| "unknown panic".into());
+                            panics2.lock().unwrap().push(format!("rank {rank}: {msg}"));
+                            // Do not deregister: the sim state is broken;
+                            // the orchestrator aborts the run below.
+                        }
+                    }
+                })
+                .expect("spawn rank thread");
+            handles.push(h);
+        }
+
+        drop(setup_hold);
+
+        // The orchestrating thread is *not* part of the simulation: poll
+        // for completion in real time.
+        let outcome = loop {
+            {
+                let p = panics.lock().unwrap();
+                if !p.is_empty() {
+                    // Propagate the first rank failure to the caller's
+                    // thread (leaking the rest of the cluster, as a
+                    // failed test/job would).
+                    panic!("rank panicked: {}", p.join(" | "));
+                }
+            }
+            let d = done.load(Ordering::Acquire);
+            if d == size {
+                break Ok(());
+            }
+            if timed_out.load(Ordering::Acquire) {
+                break Err(RunError::DeadlineExceeded {
+                    deadline_ns: cfg.deadline.unwrap(),
+                });
+            }
+            if clock.deadlocked() {
+                // Grace re-check: the last rank may have just finished.
+                if done.load(Ordering::Acquire) == size {
+                    break Ok(());
+                }
+                break Err(RunError::Deadlock { vtime_ns: clock.now() });
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        };
+
+        match outcome {
+            Ok(()) => {
+                for h in handles {
+                    h.join().expect("rank thread panicked");
+                }
+                let mut tasks = 0;
+                let mut pauses = 0;
+                let mut workers = 0;
+                for rt in runtimes.iter().flatten() {
+                    let (t, p, w) = rt.stats();
+                    tasks += t;
+                    pauses += p;
+                    workers += w;
+                }
+                for rt in runtimes.iter().flatten() {
+                    rt.shutdown();
+                }
+                clock.stop();
+                clock_handle.join().expect("clock thread panicked");
+                let counters = counters.0.lock().unwrap().clone();
+                Ok(RunStats {
+                    vtime_ns: finish_vtime.load(Ordering::Acquire),
+                    tasks,
+                    pauses,
+                    workers,
+                    counters,
+                })
+            }
+            Err(e) => {
+                // Leak the parked threads (the hung-job case); the clock
+                // thread is also left behind intentionally.
+                Err(e)
+            }
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! The virtual clock: quiescence-driven discrete-event time.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::VNanos;
+
+thread_local! {
+    /// Accrued virtual CPU cost not yet turned into a clock event.
+    static DEBT: std::cell::Cell<VNanos> = const { std::cell::Cell::new(0) };
+}
+
+/// One-shot wake token a thread parks on.
+///
+/// Lifecycle: created -> (optionally) parked on via [`Clock::passive_wait`]
+/// -> woken exactly once via [`Clock::wake`] or a timer event.
+pub struct Token {
+    state: Mutex<TokState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct TokState {
+    woken: bool,
+    /// True while the owning thread has decremented `active` and parked.
+    passive: bool,
+}
+
+impl Token {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Token { state: Mutex::new(TokState::default()), cv: Condvar::new() })
+    }
+}
+
+impl Default for Token {
+    fn default() -> Self {
+        Token { state: Mutex::new(TokState::default()), cv: Condvar::new() }
+    }
+}
+
+/// RAII guard from [`Clock::hold`]: releases its activity credit on drop.
+pub struct ClockHold {
+    clock: Arc<Clock>,
+}
+
+impl Drop for ClockHold {
+    fn drop(&mut self) {
+        self.clock.enter_passive();
+    }
+}
+
+enum Action {
+    Wake(Arc<Token>),
+    /// Runs on the clock thread at quiescence; must not block on sim
+    /// primitives.  Used for network delivery completions.
+    Call(Box<dyn FnOnce() + Send>),
+}
+
+struct EventEntry {
+    at: VNanos,
+    seq: u64,
+    action: Action,
+}
+
+impl PartialEq for EventEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for EventEntry {}
+impl PartialOrd for EventEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EventEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+struct ClockState {
+    events: BinaryHeap<Reverse<EventEntry>>,
+    seq: u64,
+    stopped: bool,
+}
+
+/// Virtual clock shared by every thread of a simulated cluster.
+pub struct Clock {
+    state: Mutex<ClockState>,
+    tick_cv: Condvar,
+    now: AtomicU64,
+    /// Threads currently running or runnable (see module docs).
+    active: AtomicUsize,
+    /// Threads registered with the clock (diagnostics only).
+    registered: AtomicUsize,
+    /// Set when quiescence is reached with no pending events.
+    deadlocked: AtomicBool,
+    panic_on_deadlock: AtomicBool,
+}
+
+impl Clock {
+    /// Create the clock and start its driver thread.
+    pub fn start() -> (Arc<Clock>, JoinHandle<()>) {
+        let clock = Arc::new(Clock {
+            state: Mutex::new(ClockState {
+                events: BinaryHeap::new(),
+                seq: 0,
+                stopped: false,
+            }),
+            tick_cv: Condvar::new(),
+            now: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            registered: AtomicUsize::new(0),
+            deadlocked: AtomicBool::new(false),
+            panic_on_deadlock: AtomicBool::new(true),
+        });
+        let c = clock.clone();
+        let handle = std::thread::Builder::new()
+            .name("sim-clock".into())
+            .spawn(move || c.run())
+            .expect("spawn clock thread");
+        (clock, handle)
+    }
+
+    /// Current virtual time in ns.
+    pub fn now(&self) -> VNanos {
+        self.now.load(Ordering::Acquire)
+    }
+
+    /// Whether a global deadlock was detected.
+    pub fn deadlocked(&self) -> bool {
+        self.deadlocked.load(Ordering::Acquire)
+    }
+
+    /// Configure deadlock behaviour: panic (default) or set a flag and halt.
+    pub fn set_panic_on_deadlock(&self, panic: bool) {
+        self.panic_on_deadlock.store(panic, Ordering::Release);
+    }
+
+    /// A thread joins the simulation (it is active from now on).
+    pub fn register_thread(&self) {
+        self.registered.fetch_add(1, Ordering::AcqRel);
+        self.active.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A thread leaves the simulation for good.
+    pub fn deregister_thread(&self) {
+        self.registered.fetch_sub(1, Ordering::AcqRel);
+        self.enter_passive();
+    }
+
+    /// Keep the clock from advancing (and from declaring deadlock) while
+    /// an orchestrating thread is still wiring the simulation up: workers
+    /// may already be parked before any registered thread exists, which
+    /// would otherwise look like quiescence.
+    pub fn hold(self: &Arc<Self>) -> ClockHold {
+        self.active.fetch_add(1, Ordering::AcqRel);
+        ClockHold { clock: self.clone() }
+    }
+
+    /// Stop the clock thread (call after all sim threads exited/parked).
+    pub fn stop(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.stopped = true;
+        self.tick_cv.notify_all();
+    }
+
+    fn enter_passive(&self) {
+        if self.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Possibly quiescent: nudge the clock thread. Lock + notify so
+            // the wake-up cannot be missed between its check and wait.
+            let _g = self.state.lock().unwrap();
+            self.tick_cv.notify_all();
+        }
+    }
+
+    /// Wake a token (activity transfer: the waker credits the wakee).
+    pub fn wake(&self, token: &Token) {
+        let mut st = token.state.lock().unwrap();
+        if st.woken {
+            return; // already woken (idempotent)
+        }
+        st.woken = true;
+        if st.passive {
+            self.active.fetch_add(1, Ordering::AcqRel);
+        }
+        token.cv.notify_one();
+    }
+
+    /// Park until the token is woken. The caller must be an active,
+    /// registered sim thread.
+    pub fn passive_wait(&self, token: &Token) {
+        let mut st = token.state.lock().unwrap();
+        if st.woken {
+            return; // fast path: never went passive, no accounting
+        }
+        st.passive = true;
+        drop(st);
+        self.enter_passive();
+        let mut st = token.state.lock().unwrap();
+        while !st.woken {
+            st = token.cv.wait(st).unwrap();
+        }
+        st.passive = false;
+        // The waker incremented `active` on our behalf.
+    }
+
+    /// Schedule `token` to be woken at absolute virtual time `at`.
+    pub fn schedule_wake(&self, at: VNanos, token: Arc<Token>) {
+        self.push_event(at, Action::Wake(token));
+    }
+
+    /// Schedule `f` to run on the clock thread at virtual time `at`.
+    /// `f` must not block on sim primitives (it may call [`Clock::wake`]).
+    pub fn call_at(&self, at: VNanos, f: impl FnOnce() + Send + 'static) {
+        self.push_event(at, Action::Call(Box::new(f)));
+    }
+
+    fn push_event(&self, at: VNanos, action: Action) {
+        let mut st = self.state.lock().unwrap();
+        let seq = st.seq;
+        st.seq += 1;
+        let at = at.max(self.now());
+        st.events.push(Reverse(EventEntry { at, seq, action }));
+        // A new event may unblock a quiescent clock.
+        self.tick_cv.notify_all();
+    }
+
+    /// Record `ns` of virtual CPU cost for the calling thread without
+    /// parking. The debt is folded into the next [`Clock::work`] /
+    /// [`Clock::flush_debt`] on this thread — this keeps high-frequency
+    /// costs (task spawns, scheduling) from generating one clock event
+    /// each.
+    pub fn add_debt(ns: VNanos) {
+        DEBT.with(|d| d.set(d.get() + ns));
+    }
+
+    /// Take and reset the calling thread's accumulated debt.
+    pub fn take_debt() -> VNanos {
+        DEBT.with(|d| d.replace(0))
+    }
+
+    /// Park for the thread's accumulated debt, if any.
+    pub fn flush_debt(&self) {
+        let d = Self::take_debt();
+        if d > 0 {
+            self.work_exact(d);
+        }
+    }
+
+    /// Advance virtual time by `d` plus any accumulated debt for the
+    /// calling thread ("do d ns of work on my virtual core"). The thread
+    /// parks; the clock advances once everyone else is passive too.
+    pub fn work(&self, d: VNanos) {
+        let d = d + Self::take_debt();
+        self.work_exact(d);
+    }
+
+    fn work_exact(&self, d: VNanos) {
+        if d == 0 {
+            return;
+        }
+        let token = Token::new();
+        self.schedule_wake(self.now() + d, token.clone());
+        self.passive_wait(&token);
+    }
+
+    /// Alias of [`Clock::work`] with sleep naming for timers.
+    pub fn sleep(&self, d: VNanos) {
+        self.work(d);
+    }
+
+    /// Clock driver loop.
+    fn run(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.stopped {
+                return;
+            }
+            if self.active.load(Ordering::Acquire) == 0 {
+                // Quiescent. Fire the earliest batch or report deadlock.
+                if let Some(Reverse(head)) = st.events.peek() {
+                    let t = head.at;
+                    self.now.store(t, Ordering::Release);
+                    let mut batch = Vec::new();
+                    while let Some(Reverse(e)) = st.events.peek() {
+                        if e.at > t {
+                            break;
+                        }
+                        batch.push(st.events.pop().unwrap().0);
+                    }
+                    drop(st);
+                    for e in batch {
+                        match e.action {
+                            Action::Wake(tok) => self.wake(&tok),
+                            Action::Call(f) => f(),
+                        }
+                    }
+                    st = self.state.lock().unwrap();
+                    continue;
+                } else if self.registered.load(Ordering::Acquire) > 0 {
+                    // Threads exist, none can run, nothing scheduled.
+                    self.deadlocked.store(true, Ordering::Release);
+                    if self.panic_on_deadlock.load(Ordering::Acquire) {
+                        panic!(
+                            "sim::Clock deadlock: {} registered threads are all \
+                             passive with no pending events (t={} ns). This is \
+                             the Section-5 scenario: blocking operations inside \
+                             tasks with no progress mechanism.",
+                            self.registered.load(Ordering::Acquire),
+                            self.now()
+                        );
+                    }
+                    // Halt quietly: leave threads parked, wait for stop().
+                    while !st.stopped {
+                        st = self.tick_cv.wait(st).unwrap();
+                    }
+                    return;
+                }
+            }
+            st = self.tick_cv.wait(st).unwrap();
+        }
+    }
+}

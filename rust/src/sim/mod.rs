@@ -1,0 +1,44 @@
+//! Virtual-time execution substrate.
+//!
+//! The reproduction host has a single physical core, so wall-clock speedup
+//! of a threaded runtime is meaningless.  Instead, the whole stack runs
+//! under *virtual time*: threads are real OS threads (the `nanos` runtime
+//! really parks workers, really hands cores over on task pause/resume),
+//! but every blocking point goes through [`Clock`], which only advances
+//! the virtual clock when **all registered threads are passive**
+//! (quiescence).  Virtual "work" ([`Clock::work`]) parks the thread until
+//! the clock has advanced past its duration, so 3 000+ virtual cores
+//! multiplex onto one physical core while producing the same timelines a
+//! real cluster would.
+//!
+//! Invariants:
+//! * `active` counts threads that are running or runnable.  It is
+//!   decremented by a thread just before it parks on a [`Token`] and
+//!   re-incremented *by the waker* on its behalf (activity transfer), so
+//!   the count can never spuriously reach zero while a wake-up is in
+//!   flight.
+//! * The clock thread advances time only at `active == 0`, firing the
+//!   earliest pending event batch.  `active == 0` is stable: no thread
+//!   can become active except through the clock thread or a waker (and
+//!   all wakers are themselves active threads).
+//! * Quiescence with no pending events is a global deadlock; the clock
+//!   reports it (this reproduces Section 5 of the paper faithfully).
+
+pub mod clock;
+pub mod sync;
+
+pub use clock::{Clock, Token};
+pub use sync::WaitQueue;
+
+/// Nanoseconds of virtual time.
+pub type VNanos = u64;
+
+/// Convenience: microseconds -> ns.
+pub const fn us(n: u64) -> VNanos {
+    n * 1_000
+}
+
+/// Convenience: milliseconds -> ns.
+pub const fn ms(n: u64) -> VNanos {
+    n * 1_000_000
+}

@@ -1,0 +1,78 @@
+//! FIFO wait queues built on clock tokens.
+//!
+//! Usage pattern (condvar-style, lost-wakeup-free when `enqueue` happens
+//! under the same lock the waker holds while calling `notify_*`):
+//!
+//! ```ignore
+//! let mut g = state.lock().unwrap();
+//! loop {
+//!     if pred(&g) { break; }
+//!     let tok = queue.enqueue();
+//!     drop(g);
+//!     clock.passive_wait(&tok);
+//!     g = state.lock().unwrap();
+//! }
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::clock::{Clock, Token};
+
+/// FIFO queue of parked sim threads.
+#[derive(Default)]
+pub struct WaitQueue {
+    q: Mutex<VecDeque<Arc<Token>>>,
+}
+
+impl WaitQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the calling thread as a waiter; park on the returned token
+    /// with [`Clock::passive_wait`].
+    pub fn enqueue(&self) -> Arc<Token> {
+        let tok = Token::new();
+        self.q.lock().unwrap().push_back(tok.clone());
+        tok
+    }
+
+    /// Enqueue an existing token (used to park one thread on several
+    /// queues at once, e.g. MPI_Waitany). Waking is idempotent, so the
+    /// same token may be notified by multiple queues.
+    pub fn enqueue_token(&self, tok: Arc<Token>) {
+        self.q.lock().unwrap().push_back(tok);
+    }
+
+    /// Wake the oldest waiter, if any.
+    pub fn notify_one(&self, clock: &Clock) -> bool {
+        let tok = self.q.lock().unwrap().pop_front();
+        match tok {
+            Some(t) => {
+                clock.wake(&t);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Wake every current waiter; returns how many were woken.
+    pub fn notify_all(&self, clock: &Clock) -> usize {
+        let drained: Vec<_> = self.q.lock().unwrap().drain(..).collect();
+        let n = drained.len();
+        for t in drained {
+            clock.wake(&t);
+        }
+        n
+    }
+
+    /// Number of parked waiters (diagnostics).
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,333 @@
+//! TAMPI — the Task-Aware MPI library (Section 6).
+//!
+//! Two interoperability mechanisms between `rmpi` and the `nanos` runtime:
+//!
+//! * **Blocking mode** (Section 6.1, enabled by requesting
+//!   [`crate::rmpi::ThreadLevel::TaskMultiple`]): blocking MPI calls made
+//!   inside a task are transparently transformed into their non-blocking
+//!   counterparts; if not immediately complete, a *ticket* (request +
+//!   blocking context) is filed and the task pauses, releasing its core.
+//!   A polling service tests pending tickets and unblocks tasks whose
+//!   operations completed.  This is the `MPI_Recv` flow of Fig 3.
+//! * **Non-blocking mode** (Section 6.2): [`Tampi::iwait`] /
+//!   [`Tampi::iwaitall`] bind in-flight requests to the calling task's
+//!   dependency release through the external-events API; the task finishes
+//!   without waiting, its stack is freed, and its successors run only when
+//!   the requests complete.  This is the `TAMPI_Iwait` flow of Fig 4.
+//!
+//! Both modes coexist (Section 6.2) and both rely on one polling service
+//! registered with the rank's runtime.
+//!
+//! In the real TAMPI these flows hide behind the PMPI interception layer;
+//! here [`Tampi`] is an explicit wrapper handle over a [`Comm`], which is
+//! the same integration surface without symbol interposition.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nanos::{
+    self, BlockingContext, EventCounter, Runtime,
+};
+use crate::rmpi::{Comm, Pod, Request, Status, ThreadLevel};
+use crate::trace::EventKind;
+
+/// A pending operation the polling service watches.
+enum Ticket {
+    /// Blocking mode: unblock the paused task when all requests complete.
+    Block { reqs: Vec<Request>, ctx: BlockingContext },
+    /// Non-blocking mode: fulfil one external event per completed request.
+    Event { req: Request, ec: EventCounter },
+}
+
+struct TampiState {
+    /// Runtime owning the polling service (weak: the registry's closure
+    /// holds this state, so a strong handle would cycle).
+    rt: std::sync::Weak<crate::nanos::runtime::Rt>,
+    tickets: Mutex<Vec<Ticket>>,
+    /// Metrics for the evaluation (Section 7): how many tickets took each
+    /// path, and how many operations completed immediately.
+    n_block_tickets: AtomicU64,
+    n_event_tickets: AtomicU64,
+    n_immediate: AtomicU64,
+}
+
+impl TampiState {
+    /// One polling pass (the paper's `Interop::poll`, Figs 3-4).
+    fn poll(&self) {
+        let mut retired = 0usize;
+        let mut g = self.tickets.lock().unwrap();
+        g.retain(|t| {
+            let done = match t {
+                Ticket::Block { reqs, ctx } => {
+                    if reqs.iter().all(|r| r.test()) {
+                        nanos::unblock_task(ctx);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                Ticket::Event { req, ec } => {
+                    if req.test() {
+                        nanos::decrease_task_event_counter(ec, 1);
+                        true
+                    } else {
+                        false
+                    }
+                }
+            };
+            if done {
+                retired += 1;
+            }
+            !done
+        });
+        drop(g);
+        if retired > 0 {
+            if let Some(rt) = self.rt.upgrade() {
+                rt.polling.hint_sub(retired);
+            }
+        }
+    }
+
+    /// File a ticket and bump the leader's pending-work hint.
+    fn push_ticket(&self, t: Ticket) {
+        self.tickets.lock().unwrap().push(t);
+        if let Some(rt) = self.rt.upgrade() {
+            rt.polling.hint_add(1, &rt);
+        }
+    }
+}
+
+/// The Task-Aware MPI handle of one rank.
+#[derive(Clone)]
+pub struct Tampi {
+    comm: Comm,
+    state: Arc<TampiState>,
+    enabled: bool,
+}
+
+/// Initialize TAMPI on this rank (the `MPI_Init_thread` moment, Fig 6).
+///
+/// Requesting [`ThreadLevel::TaskMultiple`] enables both interoperability
+/// mechanisms and registers the polling service with the rank's runtime;
+/// anything lower yields plain MPI behaviour (`enabled() == false`), which
+/// is what portable applications test for to decide whether to serialize
+/// communication tasks with a sentinel (Section 6.3).
+pub fn init(comm: &Comm, rt: &Runtime, requested: ThreadLevel) -> Tampi {
+    let enabled = requested == ThreadLevel::TaskMultiple;
+    let state = Arc::new(TampiState {
+        rt: rt.downgrade(),
+        tickets: Mutex::new(Vec::new()),
+        n_block_tickets: AtomicU64::new(0),
+        n_event_tickets: AtomicU64::new(0),
+        n_immediate: AtomicU64::new(0),
+    });
+    if enabled {
+        let st = state.clone();
+        // Hinted: the pending-ticket count drives the leader; with no
+        // tickets in flight the leader parks (zero polling events).
+        rt.register_polling_service_hinted("tampi", Box::new(move || {
+            st.poll();
+            false // permanent service
+        }));
+    }
+    Tampi { comm: comm.clone(), state, enabled }
+}
+
+impl Tampi {
+    /// The thread level actually granted.
+    pub fn level(&self) -> ThreadLevel {
+        if self.enabled {
+            ThreadLevel::TaskMultiple
+        } else {
+            ThreadLevel::Multiple
+        }
+    }
+
+    /// Whether task-aware interoperability is active (Fig 6's check).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    fn in_task(&self) -> bool {
+        nanos::api::in_task()
+    }
+
+    /// (immediate completions, blocking tickets, event tickets).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.state.n_immediate.load(Ordering::Relaxed),
+            self.state.n_block_tickets.load(Ordering::Relaxed),
+            self.state.n_event_tickets.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Pause the current task until all `reqs` complete (blocking-mode
+    /// core; the generic form of Fig 3 used by every intercepted call).
+    fn block_on(&self, reqs: Vec<Request>) {
+        let pending: Vec<Request> = reqs.into_iter().filter(|r| !r.test()).collect();
+        if pending.is_empty() {
+            self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.state.n_block_tickets.fetch_add(1, Ordering::Relaxed);
+        let ctx = nanos::get_current_blocking_context();
+        self.state
+            .push_ticket(Ticket::Block { reqs: pending, ctx: ctx.clone() });
+        nanos::block_current_task(&ctx);
+    }
+
+    // ----- blocking mode (Section 6.1): intercepted blocking primitives -----
+
+    /// Task-aware `MPI_Recv` (Fig 3): inside a task with TAMPI enabled the
+    /// call becomes irecv + test + ticket + pause; otherwise PMPI_Recv.
+    pub fn recv<T: Pod>(&self, buf: &mut [T], src: i32, tag: i32) -> Status {
+        if !self.enabled || !self.in_task() {
+            return self.comm.recv(buf, src, tag);
+        }
+        self.trace_mpi(true, "recv");
+        let r = self.comm.irecv(buf, src, tag);
+        if !r.test() {
+            self.block_on(vec![r.clone()]);
+        } else {
+            self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
+        }
+        self.trace_mpi(false, "recv");
+        r.status()
+    }
+
+    /// Task-aware `MPI_Send`.
+    pub fn send<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.send(buf, dst, tag);
+        }
+        self.trace_mpi(true, "send");
+        let r = self.comm.isend(buf, dst, tag);
+        self.block_on(vec![r]);
+        self.trace_mpi(false, "send");
+    }
+
+    /// Task-aware `MPI_Ssend`.
+    pub fn ssend<T: Pod>(&self, buf: &[T], dst: usize, tag: i32) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.ssend(buf, dst, tag);
+        }
+        self.trace_mpi(true, "ssend");
+        let r = self.comm.issend(buf, dst, tag);
+        self.block_on(vec![r]);
+        self.trace_mpi(false, "ssend");
+    }
+
+    /// Task-aware `MPI_Wait`.
+    pub fn wait(&self, req: &Request) {
+        if !self.enabled || !self.in_task() {
+            return req.wait(self.comm.clock());
+        }
+        self.block_on(vec![req.clone()]);
+    }
+
+    /// Task-aware `MPI_Waitall`.
+    pub fn waitall(&self, reqs: &[Request]) {
+        if !self.enabled || !self.in_task() {
+            return Request::wait_all(self.comm.clock(), reqs);
+        }
+        self.block_on(reqs.to_vec());
+    }
+
+    /// Task-aware `MPI_Barrier` (collectives are intercepted too).
+    pub fn barrier(&self) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.barrier();
+        }
+        self.comm.barrier_with(crate::rmpi::collectives::WaitMode::TaskAware);
+    }
+
+    /// Task-aware `MPI_Allreduce`.
+    pub fn allreduce<T: Pod>(&self, buf: &mut [T], op: impl Fn(&mut [T], &[T])) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.allreduce(buf, op);
+        }
+        self.comm
+            .allreduce_with(buf, op, crate::rmpi::collectives::WaitMode::TaskAware);
+    }
+
+    // ----- non-blocking mode (Section 6.2): TAMPI_Iwait / TAMPI_Iwaitall -----
+
+    /// `TAMPI_Iwait` (Fig 4): asynchronously bind `req` to the calling
+    /// task's dependency release. Returns immediately; the buffers tied to
+    /// `req` may only be consumed by successor tasks.
+    pub fn iwait(&self, req: &Request) {
+        if !self.enabled || !self.in_task() {
+            // Paper fallback: PMPI_Wait.
+            return req.wait(self.comm.clock());
+        }
+        if req.test() {
+            self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let ec = nanos::get_current_event_counter();
+        nanos::increase_current_task_event_counter(&ec, 1);
+        self.state.n_event_tickets.fetch_add(1, Ordering::Relaxed);
+        self.state.push_ticket(Ticket::Event { req: req.clone(), ec });
+    }
+
+    /// `TAMPI_Iwaitall` (Fig 5).
+    pub fn iwaitall(&self, reqs: &[Request]) {
+        if !self.enabled || !self.in_task() {
+            return Request::wait_all(self.comm.clock(), reqs);
+        }
+        let pending: Vec<&Request> = reqs.iter().filter(|r| !r.test()).collect();
+        if pending.is_empty() {
+            self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let ec = nanos::get_current_event_counter();
+        nanos::increase_current_task_event_counter(&ec, pending.len() as u32);
+        for r in pending {
+            self.state.n_event_tickets.fetch_add(1, Ordering::Relaxed);
+            self.state
+                .push_ticket(Ticket::Event { req: (*r).clone(), ec: ec.clone() });
+        }
+    }
+
+    fn trace_mpi(&self, start: bool, what: &str) {
+        nanos::api::trace_current(
+            if start { EventKind::MpiStart } else { EventKind::MpiEnd },
+            what,
+        );
+    }
+}
+
+/// Task-aware waitall used by collective algorithms running under
+/// [`crate::rmpi::collectives::WaitMode::TaskAware`]. Outside a task this
+/// degrades to a parking wait.
+pub fn task_aware_wait_all(comm: &Comm, reqs: &[Request]) {
+    if !nanos::api::in_task() {
+        return Request::wait_all(comm.clock(), reqs);
+    }
+    let pending: Vec<Request> = reqs.iter().filter(|r| !r.test()).cloned().collect();
+    if pending.is_empty() {
+        return;
+    }
+    // A transient ticket served by a self-registered one-shot polling
+    // service on the current runtime (works even without a Tampi handle).
+    let rt = nanos::api::current_runtime().expect("task without runtime");
+    let ctx = nanos::get_current_blocking_context();
+    let ctx2 = ctx.clone();
+    let reqs2 = pending.clone();
+    rt.register_polling_service(
+        "tampi-collective-wait",
+        Box::new(move || {
+            if reqs2.iter().all(|r| r.test()) {
+                nanos::unblock_task(&ctx2);
+                true // one-shot: unregister
+            } else {
+                false
+            }
+        }),
+    );
+    nanos::block_current_task(&ctx);
+}

@@ -1,0 +1,141 @@
+//! ASCII Gantt rendering of traces (Fig 10).
+//!
+//! Rows are (rank, worker) lanes; columns are virtual-time buckets. Each
+//! cell shows what the lane spent most of that bucket doing:
+//! `#` task compute, `M` inside MPI, `b` paused (blocked task), `.` idle.
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, Record};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum LaneState {
+    Idle,
+    Task,
+    Mpi,
+    Paused,
+}
+
+impl LaneState {
+    fn glyph(self) -> char {
+        match self {
+            LaneState::Idle => '.',
+            LaneState::Task => '#',
+            LaneState::Mpi => 'M',
+            LaneState::Paused => 'b',
+        }
+    }
+}
+
+/// Render records into an ASCII Gantt chart with `width` time buckets.
+/// Lanes are sorted by (rank, worker). Returns the chart text.
+pub fn render_gantt(records: &[Record], width: usize) -> String {
+    if records.is_empty() {
+        return String::from("(empty trace)\n");
+    }
+    let t0 = records.iter().map(|r| r.t).min().unwrap();
+    let t1 = records.iter().map(|r| r.t).max().unwrap().max(t0 + 1);
+    let span = (t1 - t0) as f64;
+
+    // Build per-lane interval lists by replaying events in time order.
+    let mut by_lane: BTreeMap<(u32, u32), Vec<&Record>> = BTreeMap::new();
+    for r in records {
+        by_lane.entry((r.rank, r.worker)).or_default().push(r);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "gantt: {} lanes, {:.3} ms virtual span, {} buckets\n",
+        by_lane.len(),
+        span / 1e6,
+        width
+    ));
+    for ((rank, worker), evs) in &by_lane {
+        // occupancy[bucket] = dominant state
+        let mut occupancy = vec![(0u64, LaneState::Idle); width];
+        let mut state = LaneState::Idle;
+        let mut since = t0;
+        let mut fill = |from: u64, to: u64, st: LaneState, occ: &mut Vec<(u64, LaneState)>| {
+            if to <= from || st == LaneState::Idle {
+                return;
+            }
+            let b0 = (((from - t0) as f64 / span) * width as f64) as usize;
+            let b1 = ((((to - t0) as f64 / span) * width as f64).ceil() as usize).min(width);
+            for b in b0..b1 {
+                let seg_from = from.max(t0 + ((b as f64 / width as f64) * span) as u64);
+                let seg_to = to.min(t0 + (((b + 1) as f64 / width as f64) * span) as u64);
+                let dur = seg_to.saturating_sub(seg_from);
+                if dur > occ[b].0 {
+                    occ[b] = (dur, st);
+                }
+            }
+        };
+        for r in evs.iter() {
+            let new_state = match r.kind {
+                EventKind::TaskStart | EventKind::TaskUnblock | EventKind::MpiEnd => {
+                    Some(LaneState::Task)
+                }
+                EventKind::TaskEnd => Some(LaneState::Idle),
+                EventKind::MpiStart => Some(LaneState::Mpi),
+                EventKind::TaskBlock => Some(LaneState::Paused),
+                _ => None,
+            };
+            if let Some(ns) = new_state {
+                fill(since, r.t, state, &mut occupancy);
+                state = ns;
+                since = r.t;
+            }
+        }
+        fill(since, t1, state, &mut occupancy);
+        let row: String = occupancy.iter().map(|(_, st)| st.glyph()).collect();
+        out.push_str(&format!("r{rank:02}w{worker:02} |{row}|\n"));
+    }
+    out.push_str("legend: '#' task  'M' in MPI  'b' paused  '.' idle\n");
+    out
+}
+
+/// Aggregate busy fraction per rank (used by tests and EXPERIMENTS.md).
+pub fn busy_fraction(records: &[Record]) -> BTreeMap<u32, f64> {
+    let mut spans: BTreeMap<u32, (u64, u64)> = BTreeMap::new(); // rank -> (busy, lanes*span)
+    if records.is_empty() {
+        return BTreeMap::new();
+    }
+    let t0 = records.iter().map(|r| r.t).min().unwrap();
+    let t1 = records.iter().map(|r| r.t).max().unwrap().max(t0 + 1);
+    let mut by_lane: BTreeMap<(u32, u32), Vec<&Record>> = BTreeMap::new();
+    for r in records {
+        by_lane.entry((r.rank, r.worker)).or_default().push(r);
+    }
+    for ((rank, _), evs) in &by_lane {
+        let mut busy = 0u64;
+        let mut running = false;
+        let mut since = t0;
+        for r in evs.iter() {
+            match r.kind {
+                EventKind::TaskStart | EventKind::TaskUnblock => {
+                    if !running {
+                        running = true;
+                        since = r.t;
+                    }
+                }
+                EventKind::TaskEnd | EventKind::TaskBlock => {
+                    if running {
+                        busy += r.t - since;
+                        running = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if running {
+            busy += t1 - since;
+        }
+        let e = spans.entry(*rank).or_insert((0, 0));
+        e.0 += busy;
+        e.1 += t1 - t0;
+    }
+    spans
+        .into_iter()
+        .map(|(rank, (busy, total))| (rank, busy as f64 / total.max(1) as f64))
+        .collect()
+}

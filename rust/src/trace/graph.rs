@@ -1,0 +1,92 @@
+//! Task dependency graph recording -> Graphviz DOT (Fig 8).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Records nodes (tasks) and edges (dependencies) as the runtime discovers
+/// them at access-registration time.
+#[derive(Default)]
+pub struct GraphRecorder {
+    inner: Mutex<GraphInner>,
+}
+
+#[derive(Default)]
+struct GraphInner {
+    /// task id -> (label, rank)
+    nodes: BTreeMap<u64, (String, u32)>,
+    /// (from, to, via-object label)
+    edges: Vec<(u64, u64, String)>,
+}
+
+impl GraphRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&self, id: u64, label: &str, rank: u32) {
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .insert(id, (label.to_string(), rank));
+    }
+
+    pub fn add_edge(&self, from: u64, to: u64, via: &str) {
+        self.inner.lock().unwrap().edges.push((from, to, via.to_string()));
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.inner.lock().unwrap().edges.len()
+    }
+
+    /// Edges as (from, to) pairs (tests).
+    pub fn edges(&self) -> Vec<(u64, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .edges
+            .iter()
+            .map(|(f, t, _)| (*f, *t))
+            .collect()
+    }
+
+    /// Render Graphviz DOT, clustering nodes by rank like Fig 8. Edges
+    /// whose object label matches `highlight` (e.g. the sentinel) are drawn
+    /// red — the paper's "red dependencies".
+    pub fn to_dot(&self, highlight: &str) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut s = String::from("digraph deps {\n  rankdir=TB;\n  node [shape=box,fontsize=9];\n");
+        let mut by_rank: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        for (id, (_, rank)) in &g.nodes {
+            by_rank.entry(*rank).or_default().push(*id);
+        }
+        for (rank, ids) in &by_rank {
+            s.push_str(&format!(
+                "  subgraph cluster_rank{rank} {{\n    label=\"rank {rank}\";\n"
+            ));
+            for id in ids {
+                let (label, _) = &g.nodes[id];
+                s.push_str(&format!("    t{id} [label=\"{label}\"];\n"));
+            }
+            s.push_str("  }\n");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (from, to, via) in &g.edges {
+            if !seen.insert((*from, *to)) {
+                continue; // fuse duplicate edges
+            }
+            let attr = if !highlight.is_empty() && via.contains(highlight) {
+                " [color=red,penwidth=2]"
+            } else {
+                ""
+            };
+            s.push_str(&format!("  t{from} -> t{to}{attr};\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+}

@@ -1,0 +1,109 @@
+//! Execution tracing (Fig 10) and dependency-graph recording (Fig 8).
+//!
+//! The tracer collects per-thread events stamped with *virtual* time; the
+//! renderer produces Paraver-style ASCII Gantt charts and CSV. The graph
+//! recorder captures the task dependency edges the runtime discovers at
+//! registration time and emits Graphviz DOT.
+
+pub mod gantt;
+pub mod graph;
+
+use std::sync::Mutex;
+
+use crate::sim::VNanos;
+
+pub use gantt::{busy_fraction, render_gantt};
+pub use graph::GraphRecorder;
+
+/// What happened.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EventKind {
+    TaskStart,
+    TaskEnd,
+    /// Task paused via the pause/resume API.
+    TaskBlock,
+    /// Task was sent back to the scheduler.
+    TaskUnblock,
+    /// A worker granted its core to a paused task.
+    TaskResumeGrant,
+    /// Entering an MPI primitive.
+    MpiStart,
+    /// Leaving an MPI primitive.
+    MpiEnd,
+    /// Free-form phase marker (e.g. "iteration 3").
+    Phase,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::TaskStart => "task_start",
+            EventKind::TaskEnd => "task_end",
+            EventKind::TaskBlock => "task_block",
+            EventKind::TaskUnblock => "task_unblock",
+            EventKind::TaskResumeGrant => "resume_grant",
+            EventKind::MpiStart => "mpi_start",
+            EventKind::MpiEnd => "mpi_end",
+            EventKind::Phase => "phase",
+        }
+    }
+}
+
+/// One trace record.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub t: VNanos,
+    pub rank: u32,
+    pub worker: u32,
+    pub kind: EventKind,
+    pub label: String,
+    pub task_id: u64,
+}
+
+/// Shared, thread-safe event sink.
+#[derive(Default)]
+pub struct Tracer {
+    records: Mutex<Vec<Record>>,
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn emit(&self, rec: Record) {
+        self.records.lock().unwrap().push(rec);
+    }
+
+    /// Snapshot of all records sorted by time.
+    pub fn snapshot(&self) -> Vec<Record> {
+        let mut v = self.records.lock().unwrap().clone();
+        v.sort_by_key(|r| (r.t, r.rank, r.worker));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// CSV dump: `t_ns,rank,worker,kind,task_id,label`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t_ns,rank,worker,kind,task_id,label\n");
+        for r in self.snapshot() {
+            s.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.t,
+                r.rank,
+                r.worker,
+                r.kind.as_str(),
+                r.task_id,
+                r.label.replace(',', ";")
+            ));
+        }
+        s
+    }
+}

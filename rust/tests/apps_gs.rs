@@ -1,0 +1,153 @@
+//! Gauss-Seidel application: correctness (all six versions bit-identical
+//! to a serial reference) and the paper's qualitative performance shape.
+
+use tampi_repro::apps::gauss_seidel::{run, sweep_native, GsParams, GsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::sim::ms;
+
+/// Serial reference: full-grid in-place sweeps (the literal algorithm).
+fn serial_checksum(rows: usize, cols: usize, iters: usize) -> f64 {
+    let mut u = vec![0f32; rows * cols];
+    let top = vec![1f32; cols]; // heat source
+    let bot = vec![0f32; cols];
+    let side = vec![0f32; rows];
+    for _ in 0..iters {
+        sweep_native(&mut u, rows, cols, &top, &bot, &side, &side);
+    }
+    u.iter().map(|&x| x as f64).sum()
+}
+
+fn base_params(version: GsVersion) -> GsParams {
+    // 64 x 128 grid, 32-blocks, 2 nodes x 2 cores, 6 iterations.
+    let mut p = GsParams::new(64, 128, 32, 6, 2, 2, version);
+    p.deadline = Some(ms(60_000)); // hang guard
+    p
+}
+
+#[test]
+fn all_versions_match_serial_reference() {
+    let want = serial_checksum(64, 128, 6);
+    assert!(want > 0.0);
+    for v in GsVersion::all() {
+        let out = run(&base_params(v)).unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        // The f32 grids are identical cell-for-cell; only the f64
+        // reduction order of the checksum differs per decomposition.
+        let rel = (out.checksum - want).abs() / want;
+        assert!(
+            rel < 1e-10,
+            "{} produced {} instead of {} (rel {rel:e})",
+            v.name(),
+            out.checksum,
+            want
+        );
+    }
+}
+
+#[test]
+fn single_node_single_core_degenerate() {
+    // 1 node, 1 core: every version degenerates to serial; still correct.
+    let want = serial_checksum(32, 32, 4);
+    for v in GsVersion::all() {
+        let mut p = GsParams::new(32, 32, 16, 4, 1, 1, v);
+        p.deadline = Some(ms(60_000));
+        let out = run(&p).unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        let rel = (out.checksum - want).abs() / want.max(1e-12);
+        assert!(rel < 1e-10, "{}: {} vs {want}", v.name(), out.checksum);
+    }
+}
+
+#[test]
+fn heat_propagates_from_top_boundary() {
+    let out = run(&base_params(GsVersion::InteropBlk)).unwrap();
+    assert!(out.checksum > 0.0, "heat must flow into the grid");
+    // More iterations -> more heat absorbed.
+    let mut p = base_params(GsVersion::InteropBlk);
+    p.iters = 12;
+    let out2 = run(&p).unwrap();
+    assert!(out2.checksum > out.checksum);
+}
+
+#[test]
+fn interop_blocking_pauses_tasks_and_nonblocking_does_not() {
+    let blk = run(&base_params(GsVersion::InteropBlk)).unwrap();
+    let nblk = run(&base_params(GsVersion::InteropNonBlk)).unwrap();
+    assert!(blk.stats.pauses > 0, "blocking mode must pause comm tasks");
+    assert_eq!(nblk.stats.pauses, 0, "non-blocking mode must not pause");
+    assert!(
+        nblk.stats.workers <= blk.stats.workers,
+        "non-blocking must not need more substitute workers"
+    );
+}
+
+#[test]
+fn sentinel_does_not_pause_but_still_completes() {
+    let out = run(&base_params(GsVersion::Sentinel)).unwrap();
+    assert_eq!(out.stats.pauses, 0, "sentinel uses raw blocking calls");
+}
+
+/// The paper's headline shape (Fig 9): with several nodes, the Interop
+/// versions beat Sentinel and Fork-Join, and Fork-Join is the slowest
+/// task-based version. Model compute, scaled-down cluster.
+#[test]
+fn performance_shape_across_versions() {
+    let mut times = std::collections::HashMap::new();
+    for v in [
+        GsVersion::ForkJoin,
+        GsVersion::Sentinel,
+        GsVersion::InteropBlk,
+        GsVersion::InteropNonBlk,
+    ] {
+        // 1024 x 1024, 128-blocks (8x8 blocks), 4 nodes x 4 cores, model.
+        let mut p = GsParams::new(1024, 1024, 128, 30, 4, 4, v);
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(600_000));
+        let out = run(&p).unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        times.insert(v.name(), out.vtime_ns);
+    }
+    let fj = times["fork-join"];
+    let se = times["sentinel"];
+    let ib = times["interop-blk"];
+    let inb = times["interop-nonblk"];
+    assert!(
+        ib < se && ib < fj,
+        "interop-blk ({ib}) must beat sentinel ({se}) and fork-join ({fj})"
+    );
+    assert!(
+        inb < se && inb < fj,
+        "interop-nonblk ({inb}) must beat sentinel ({se}) and fork-join ({fj})"
+    );
+}
+
+/// Hybrid versions on one node avoid MPI entirely and exploit the
+/// temporal wavefront; Fork-Join's per-iteration join forfeits it.
+#[test]
+fn single_node_hybrid_beats_forkjoin() {
+    let run_v = |v| {
+        let mut p = GsParams::new(512, 512, 128, 20, 1, 4, v);
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(600_000));
+        run(&p).unwrap().vtime_ns
+    };
+    let fj = run_v(GsVersion::ForkJoin);
+    let ib = run_v(GsVersion::InteropBlk);
+    assert!(
+        ib < fj,
+        "interop ({ib}) must beat fork-join ({fj}) on one node"
+    );
+}
+
+#[test]
+fn model_and_native_have_same_virtual_time() {
+    // The cost model drives virtual time; numerics must not change it.
+    let mut p1 = base_params(GsVersion::InteropNonBlk);
+    p1.compute = Compute::Native;
+    let mut p2 = base_params(GsVersion::InteropNonBlk);
+    p2.compute = Compute::Model;
+    let a = run(&p1).unwrap().vtime_ns;
+    let b = run(&p2).unwrap().vtime_ns;
+    let ratio = a as f64 / b as f64;
+    assert!(
+        (0.7..1.3).contains(&ratio),
+        "native {a} vs model {b} virtual time diverged"
+    );
+}

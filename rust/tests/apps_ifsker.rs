@@ -1,0 +1,93 @@
+//! IFSKer application: version equivalence and the Section 7.2 shape.
+
+use tampi_repro::apps::ifsker::{run, IfsParams, IfsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::sim::ms;
+
+fn base(version: IfsVersion) -> IfsParams {
+    // 4 ranks (2 nodes x 2), 512 gridpoints, 4 fields, 3 steps.
+    let mut p = IfsParams::new(512, 4, 3, 2, 2, version);
+    p.deadline = Some(ms(60_000));
+    p
+}
+
+#[test]
+fn all_versions_agree_bitwise() {
+    let pure = run(&base(IfsVersion::PureMpi)).unwrap();
+    assert!(pure.checksum > 0.0);
+    for v in [IfsVersion::InteropBlk, IfsVersion::InteropNonBlk] {
+        let out = run(&base(v)).unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        assert_eq!(
+            out.checksum.to_bits(),
+            pure.checksum.to_bits(),
+            "{} diverged: {} vs {}",
+            v.name(),
+            out.checksum,
+            pure.checksum
+        );
+    }
+}
+
+#[test]
+fn physics_changes_fields_each_step() {
+    let a = run(&base(IfsVersion::PureMpi)).unwrap();
+    let mut p = base(IfsVersion::PureMpi);
+    p.steps = 6;
+    let b = run(&p).unwrap();
+    assert_ne!(a.checksum.to_bits(), b.checksum.to_bits());
+}
+
+#[test]
+fn interop_beats_pure_across_nodes() {
+    // Section 7.2's shape: tasks overlap the many small transposition
+    // messages with compute; the gap is structural once wire latency is
+    // on the critical path (multi-node).
+    let mk = |v| {
+        let mut p = IfsParams::new(32 * 1024, 8, 4, 2, 8, v);
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(600_000));
+        run(&p).unwrap().vtime_ns
+    };
+    let pure = mk(IfsVersion::PureMpi);
+    let blk = mk(IfsVersion::InteropBlk);
+    let nblk = mk(IfsVersion::InteropNonBlk);
+    assert!(
+        blk < pure,
+        "interop-blk ({blk}) must beat pure ({pure}) across nodes"
+    );
+    assert!(
+        nblk < pure,
+        "interop-nonblk ({nblk}) must beat pure ({pure}) across nodes"
+    );
+    // On one node the gap narrows but interop must stay competitive.
+    let mk1 = |v| {
+        let mut p = IfsParams::new(16 * 1024, 8, 4, 1, 16, v);
+        p.compute = Compute::Model;
+        p.deadline = Some(ms(600_000));
+        run(&p).unwrap().vtime_ns
+    };
+    let pure1 = mk1(IfsVersion::PureMpi) as f64;
+    let blk1 = mk1(IfsVersion::InteropBlk) as f64;
+    assert!(
+        blk1 < pure1 * 1.5,
+        "interop-blk ({blk1}) must stay competitive on one node ({pure1})"
+    );
+}
+
+#[test]
+fn nonblocking_mode_never_pauses() {
+    let out = run(&base(IfsVersion::InteropNonBlk)).unwrap();
+    assert_eq!(out.stats.pauses, 0);
+    let blk = run(&base(IfsVersion::InteropBlk)).unwrap();
+    assert!(blk.stats.pauses > 0);
+}
+
+#[test]
+fn model_mode_runs_at_scale_without_field_memory() {
+    let mut p = IfsParams::new(64 * 64, 4, 2, 4, 4, IfsVersion::InteropNonBlk);
+    p.compute = Compute::Model;
+    p.deadline = Some(ms(600_000));
+    let out = run(&p).unwrap();
+    assert!(out.vtime_ns > 0);
+    assert_eq!(out.checksum, 0.0);
+}

@@ -1,0 +1,300 @@
+//! Task runtime semantics: deps, taskwait, pause/resume, external events,
+//! polling services, virtual-core accounting.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::nanos::{self, Mode, Runtime, RuntimeConfig};
+use tampi_repro::sim::{ms, us, Clock};
+
+/// Run `f` on an attached sim thread with a runtime of `cores` workers;
+/// returns (f's result, final virtual time).
+fn with_rt<T: Send + 'static>(
+    cores: usize,
+    f: impl FnOnce(&Runtime) -> T + Send + 'static,
+) -> (T, u64) {
+    let (clock, h) = Clock::start();
+    clock.set_panic_on_deadlock(false);
+    let hold = clock.hold(); // pin the clock during setup
+    let rt = Runtime::new(clock.clone(), RuntimeConfig::new(cores));
+    clock.register_thread();
+    drop(hold);
+    let c2 = clock.clone();
+    let rt2 = rt.clone();
+    let j = std::thread::spawn(move || {
+        rt2.attach();
+        let out = f(&rt2);
+        rt2.taskwait();
+        rt2.detach();
+        let t = c2.now();
+        c2.deregister_thread();
+        (out, t)
+    });
+    let out = j.join().unwrap();
+    rt.shutdown();
+    clock.stop();
+    h.join().unwrap();
+    out
+}
+
+#[test]
+fn tasks_run_to_completion() {
+    let n = Arc::new(AtomicU32::new(0));
+    let n2 = n.clone();
+    let ((), _) = with_rt(4, move |rt| {
+        for _ in 0..100 {
+            let n = n2.clone();
+            rt.task().spawn(move || {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(n.load(Ordering::Relaxed), 100);
+}
+
+#[test]
+fn virtual_work_overlaps_across_cores() {
+    let ((), t) = with_rt(4, |rt| {
+        for _ in 0..4 {
+            rt.task().spawn(|| nanos::work(ms(10)));
+        }
+    });
+    assert_eq!(t, ms(10), "4 tasks on 4 cores must overlap");
+}
+
+#[test]
+fn virtual_work_serializes_on_one_core() {
+    let ((), t) = with_rt(1, |rt| {
+        for _ in 0..3 {
+            rt.task().spawn(|| nanos::work(ms(10)));
+        }
+    });
+    assert_eq!(t, ms(30), "3 tasks on 1 core must serialize");
+}
+
+#[test]
+fn write_then_readers_then_writer_ordering() {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = log.clone();
+    let ((), _) = with_rt(4, move |rt| {
+        let obj = rt.dep("x");
+        let l = log2.clone();
+        rt.task().label("w1").dep(&obj, Mode::Out).spawn(move || {
+            nanos::work(us(10));
+            l.lock().unwrap().push("w1");
+        });
+        for i in 0..3 {
+            let l = log2.clone();
+            rt.task()
+                .label(format!("r{i}"))
+                .dep(&obj, Mode::In)
+                .spawn(move || {
+                    nanos::work(us(10));
+                    l.lock().unwrap().push("r");
+                });
+        }
+        let l = log2.clone();
+        rt.task().label("w2").dep(&obj, Mode::InOut).spawn(move || {
+            l.lock().unwrap().push("w2");
+        });
+    });
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 5);
+    assert_eq!(log[0], "w1");
+    assert_eq!(log[4], "w2");
+    assert!(log[1..4].iter().all(|s| *s == "r"));
+}
+
+#[test]
+fn readers_run_concurrently() {
+    // 3 readers of the same object on 3 cores, each 10 ms -> 10 ms total.
+    let ((), t) = with_rt(3, |rt| {
+        let obj = rt.dep("x");
+        for _ in 0..3 {
+            rt.task().dep(&obj, Mode::In).spawn(|| nanos::work(ms(10)));
+        }
+    });
+    assert_eq!(t, ms(10));
+}
+
+#[test]
+fn writers_serialize() {
+    let ((), t) = with_rt(3, |rt| {
+        let obj = rt.dep("x");
+        for _ in 0..3 {
+            rt.task().dep(&obj, Mode::InOut).spawn(|| nanos::work(ms(10)));
+        }
+    });
+    assert_eq!(t, ms(30));
+}
+
+#[test]
+fn pause_resume_roundtrip_on_one_core() {
+    // Task A pauses; task B (same single core) unblocks it. Requires the
+    // scheduler to run B while A is paused — the Section 4.1 mechanism.
+    let slot: Arc<Mutex<Option<nanos::BlockingContext>>> = Arc::new(Mutex::new(None));
+    let done = Arc::new(AtomicU32::new(0));
+    let (s2, d2) = (slot.clone(), done.clone());
+    let ((), _) = with_rt(1, move |rt| {
+        let (s, d) = (s2.clone(), d2.clone());
+        rt.task().label("A").spawn(move || {
+            let ctx = nanos::get_current_blocking_context();
+            *s.lock().unwrap() = Some(ctx.clone());
+            nanos::block_current_task(&ctx);
+            d.fetch_add(1, Ordering::Relaxed); // resumed
+        });
+        let (s, d) = (s2.clone(), d2.clone());
+        rt.task().label("B").spawn(move || {
+            nanos::work(ms(1));
+            let ctx = s.lock().unwrap().take().expect("A must have parked");
+            nanos::unblock_task(&ctx);
+            d.fetch_add(10, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(done.load(Ordering::Relaxed), 11);
+}
+
+#[test]
+fn unblock_before_block_is_consumed() {
+    let done = Arc::new(AtomicU32::new(0));
+    let d2 = done.clone();
+    let ((), _) = with_rt(1, move |rt| {
+        let d = d2.clone();
+        rt.task().spawn(move || {
+            let ctx = nanos::get_current_blocking_context();
+            nanos::unblock_task(&ctx); // early
+            nanos::block_current_task(&ctx); // must not park
+            d.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(done.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn blocked_task_releases_core_to_other_tasks() {
+    // One core: A pauses for 10 ms of virtual time (woken by a timer);
+    // B runs meanwhile. Without core release, B could only run after A.
+    let ((), t) = with_rt(1, |rt| {
+        rt.task().label("A").spawn(|| {
+            let ctx = nanos::get_current_blocking_context();
+            let clock = nanos::current_clock();
+            let ctx2 = ctx.clone();
+            clock.call_at(ms(10), move || nanos::unblock_task(&ctx2));
+            nanos::block_current_task(&ctx);
+        });
+        rt.task().label("B").spawn(|| nanos::work(ms(10)));
+    });
+    // A parks at ~0 and resumes at 10; B overlaps -> total 10, not 20.
+    assert_eq!(t, ms(10));
+}
+
+#[test]
+fn substitute_worker_is_spawned_on_block() {
+    let ((), _) = with_rt(1, |rt| {
+        rt.task().spawn(|| {
+            let ctx = nanos::get_current_blocking_context();
+            let clock = nanos::current_clock();
+            let ctx2 = ctx.clone();
+            clock.call_at(ms(5), move || nanos::unblock_task(&ctx2));
+            nanos::block_current_task(&ctx);
+        });
+        rt.task().spawn(|| nanos::work(ms(1)));
+    });
+    // Can't read stats from inside the closure after the fact, so re-run
+    // with explicit runtime access:
+    let (stats, _) = with_rt(1, |rt| {
+        rt.task().spawn(|| {
+            let ctx = nanos::get_current_blocking_context();
+            let clock = nanos::current_clock();
+            let ctx2 = ctx.clone();
+            clock.call_at(ms(5), move || nanos::unblock_task(&ctx2));
+            nanos::block_current_task(&ctx);
+        });
+        rt.task().spawn(|| nanos::work(ms(1)));
+        rt.clone()
+    });
+    let rt = stats;
+    let (tasks, pauses, workers) = rt.stats();
+    assert_eq!(tasks, 2);
+    assert_eq!(pauses, 1);
+    assert!(workers >= 2, "a substitute worker must have been spawned");
+}
+
+#[test]
+fn external_events_defer_dependency_release() {
+    // T binds an external event and finishes; successor S (in-dep) must
+    // not run until the event is fulfilled at t=5ms.
+    let s_started_at = Arc::new(AtomicU64::new(u64::MAX));
+    let sa = s_started_at.clone();
+    let ((), t) = with_rt(2, move |rt| {
+        let obj = rt.dep("buf");
+        rt.task().label("T").dep(&obj, Mode::Out).spawn(|| {
+            let ec = nanos::get_current_event_counter();
+            nanos::increase_current_task_event_counter(&ec, 1);
+            let clock = nanos::current_clock();
+            let ec2 = ec.clone();
+            clock.call_at(ms(5), move || {
+                nanos::decrease_task_event_counter(&ec2, 1);
+            });
+            // finish immediately; deps held by the pending event
+        });
+        let sa = sa.clone();
+        rt.task().label("S").dep(&obj, Mode::In).spawn(move || {
+            sa.store(nanos::current_clock().now(), Ordering::Release);
+        });
+    });
+    assert_eq!(s_started_at.load(Ordering::Acquire), ms(5));
+    assert_eq!(t, ms(5));
+}
+
+#[test]
+fn event_fulfilled_before_finish_releases_at_finish() {
+    let s_at = Arc::new(AtomicU64::new(u64::MAX));
+    let sa = s_at.clone();
+    let ((), _) = with_rt(2, move |rt| {
+        let obj = rt.dep("buf");
+        rt.task().dep(&obj, Mode::Out).spawn(|| {
+            let ec = nanos::get_current_event_counter();
+            nanos::increase_current_task_event_counter(&ec, 1);
+            nanos::decrease_task_event_counter(&ec, 1); // fulfilled early
+            nanos::work(ms(3)); // body continues
+        });
+        let sa = sa.clone();
+        rt.task().dep(&obj, Mode::In).spawn(move || {
+            sa.store(nanos::current_clock().now(), Ordering::Release);
+        });
+    });
+    assert_eq!(s_at.load(Ordering::Acquire), ms(3));
+}
+
+#[test]
+fn polling_service_runs_until_done() {
+    let calls = Arc::new(AtomicU32::new(0));
+    let c2 = calls.clone();
+    let (rt_out, _) = with_rt(1, move |rt| {
+        let c = c2.clone();
+        rt.register_polling_service(
+            "count3",
+            Box::new(move || c.fetch_add(1, Ordering::Relaxed) + 1 >= 3),
+        );
+        // Burn virtual time so the leader polls a few times.
+        rt.task().spawn(|| nanos::work(ms(2)));
+        rt.clone()
+    });
+    assert!(calls.load(Ordering::Relaxed) >= 3);
+    // Service unregistered itself: a few extra ms must not add calls.
+    let before = calls.load(Ordering::Relaxed);
+    drop(rt_out);
+    assert_eq!(calls.load(Ordering::Relaxed), before);
+}
+
+#[test]
+fn taskwait_returns_at_zero_pending() {
+    let ((), t) = with_rt(2, |rt| {
+        rt.task().spawn(|| nanos::work(ms(1)));
+        rt.taskwait();
+        assert_eq!(rt.pending_tasks(), 0);
+        rt.task().spawn(|| nanos::work(ms(2)));
+    });
+    assert_eq!(t, ms(3));
+}

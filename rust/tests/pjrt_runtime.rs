@@ -1,0 +1,116 @@
+//! PJRT bridge: AOT artifacts load, execute, and agree with the native
+//! kernels. Requires `make artifacts` (skipped gracefully otherwise).
+
+use tampi_repro::apps::gauss_seidel::sweep_native;
+use tampi_repro::runtime::{GsKernel, IfsKernel};
+use tampi_repro::util::SplitMix64;
+
+fn artifacts_present() -> bool {
+    tampi_repro::runtime::artifacts_dir()
+        .join("gs_block_32.hlo.txt")
+        .exists()
+}
+
+#[test]
+fn gs_kernel_matches_native_sweep() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let b = 32;
+    let k = GsKernel::load(b).expect("load gs_block_32");
+    let mut rng = SplitMix64::new(42);
+    let mut u: Vec<f32> = (0..b * b).map(|_| rng.next_f32()).collect();
+    let top: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+    let bottom: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+    let left: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+    let right: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+
+    let (pjrt, delta) = k.sweep(&u, &top, &bottom, &left, &right).expect("sweep");
+    let before = u.clone();
+    sweep_native(&mut u, b, b, &top, &bottom, &left, &right);
+
+    let mut max_err = 0f32;
+    for (a, w) in pjrt.iter().zip(u.iter()) {
+        max_err = max_err.max((a - w).abs());
+    }
+    assert!(max_err < 1e-3, "pjrt vs native max err {max_err}");
+
+    let want_delta: f32 = u
+        .iter()
+        .zip(before.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    assert!(
+        (delta - want_delta).abs() / want_delta.max(1e-6) < 1e-2,
+        "delta {delta} vs {want_delta}"
+    );
+}
+
+#[test]
+fn gs_kernel_zero_fixed_point() {
+    if !artifacts_present() {
+        return;
+    }
+    let b = 32;
+    let k = GsKernel::load(b).unwrap();
+    let z = vec![0f32; b * b];
+    let zh = vec![0f32; b];
+    let (out, delta) = k.sweep(&z, &zh, &zh, &zh, &zh).unwrap();
+    assert!(out.iter().all(|&x| x == 0.0));
+    assert_eq!(delta, 0.0);
+}
+
+#[test]
+fn gs_kernel_repeated_sweeps_converge() {
+    if !artifacts_present() {
+        return;
+    }
+    let b = 32;
+    let k = GsKernel::load(b).unwrap();
+    let mut u = vec![0.5f32; b * b];
+    let zh = vec![0f32; b];
+    let mut last_delta = f32::MAX;
+    for _ in 0..20 {
+        let (nu, delta) = k.sweep(&u, &zh, &zh, &zh, &zh).unwrap();
+        u = nu;
+        assert!(delta <= last_delta * 1.01, "delta must shrink");
+        last_delta = delta;
+    }
+    assert!(last_delta < 1.0);
+}
+
+#[test]
+fn ifs_kernel_runs_and_is_stable() {
+    if !artifacts_present() {
+        return;
+    }
+    let k = IfsKernel::load(8, 64).expect("load ifs_step_f8_n64");
+    let mut rng = SplitMix64::new(7);
+    let mut fields: Vec<f32> = (0..8 * 64).map(|_| rng.next_f32() * 0.5 + 0.25).collect();
+    for _ in 0..5 {
+        let (out, norm) = k.step(&fields).expect("step");
+        assert!(norm.is_finite() && norm > 0.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+        fields = out;
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    if !artifacts_present() {
+        return;
+    }
+    let a = tampi_repro::runtime::load("gs_block_32").unwrap();
+    let b = tampi_repro::runtime::load("gs_block_32").unwrap();
+    assert!(std::ptr::eq(a, b), "same artifact must be cached");
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let msg = match tampi_repro::runtime::load("no_such_artifact") {
+        Ok(_) => panic!("loading a missing artifact must fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("no_such_artifact"), "unhelpful error: {msg}");
+}

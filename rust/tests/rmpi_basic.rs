@@ -1,0 +1,368 @@
+//! rmpi substrate: p2p semantics, timing, collectives, Section 5 deadlock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::rmpi::{
+    ClusterConfig, NetworkModel, Request, Universe, ANY_SOURCE, ANY_TAG,
+};
+use tampi_repro::sim::{ms, us};
+
+fn two_ranks() -> ClusterConfig {
+    ClusterConfig::new(2, 1, 0) // 2 nodes x 1 rank, no task runtime
+}
+
+#[test]
+fn ping_pong_transfers_data_and_time() {
+    let got = Arc::new(Mutex::new((0u64, 0i32, 0usize)));
+    let g2 = got.clone();
+    let stats = Universe::run(two_ranks(), move |ctx| {
+        if ctx.rank == 0 {
+            let data = [42.5f32, -1.0, 7.25];
+            ctx.comm.send(&data, 1, 7);
+        } else {
+            let mut buf = [0f32; 3];
+            let st = ctx.comm.recv(&mut buf, 0, 7);
+            assert_eq!(buf, [42.5, -1.0, 7.25]);
+            *g2.lock().unwrap() = (ctx.clock.now(), st.source, st.bytes);
+        }
+    })
+    .unwrap();
+    let (t, src, bytes) = *got.lock().unwrap();
+    assert_eq!(src, 0);
+    assert_eq!(bytes, 12);
+    // Inter-node latency is 1.5us; must be reflected in virtual time.
+    assert!(t >= 1_500, "recv completed at {t} ns, before the wire latency");
+    assert!(stats.vtime_ns >= 1_500);
+}
+
+#[test]
+fn intra_node_is_faster_than_inter_node() {
+    let t_intra = Arc::new(AtomicU64::new(0));
+    let t2 = t_intra.clone();
+    Universe::run(ClusterConfig::new(1, 2, 0), move |ctx| {
+        if ctx.rank == 0 {
+            ctx.comm.send(&[1u8; 64], 1, 0);
+        } else {
+            let mut b = [0u8; 64];
+            ctx.comm.recv(&mut b, 0, 0);
+            t2.store(ctx.clock.now(), Ordering::Release);
+        }
+    })
+    .unwrap();
+    let t_inter = Arc::new(AtomicU64::new(0));
+    let t2 = t_inter.clone();
+    Universe::run(ClusterConfig::new(2, 1, 0), move |ctx| {
+        if ctx.rank == 0 {
+            ctx.comm.send(&[1u8; 64], 1, 0);
+        } else {
+            let mut b = [0u8; 64];
+            ctx.comm.recv(&mut b, 0, 0);
+            t2.store(ctx.clock.now(), Ordering::Release);
+        }
+    })
+    .unwrap();
+    assert!(
+        t_intra.load(Ordering::Acquire) < t_inter.load(Ordering::Acquire),
+        "shared-memory hop must beat the fabric"
+    );
+}
+
+#[test]
+fn message_order_preserved_same_pair_and_tag() {
+    Universe::run(two_ranks(), |ctx| {
+        if ctx.rank == 0 {
+            for i in 0..10i32 {
+                ctx.comm.send(&[i], 1, 3);
+            }
+        } else {
+            for i in 0..10i32 {
+                let mut b = [0i32];
+                ctx.comm.recv(&mut b, 0, 3);
+                assert_eq!(b[0], i, "non-overtaking violated");
+            }
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn wildcard_source_and_tag() {
+    Universe::run(ClusterConfig::new(3, 1, 0), |ctx| {
+        if ctx.rank == 2 {
+            let mut seen = [false; 2];
+            for _ in 0..2 {
+                let mut b = [0i32];
+                let st = ctx.comm.recv(&mut b, ANY_SOURCE, ANY_TAG);
+                assert_eq!(b[0], st.source * 100 + st.tag);
+                seen[st.source as usize] = true;
+            }
+            assert!(seen[0] && seen[1]);
+        } else {
+            let tag = ctx.rank as i32 + 5;
+            ctx.comm.send(&[(ctx.rank as i32) * 100 + tag], 2, tag);
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn ssend_completes_only_after_match() {
+    let sender_done = Arc::new(AtomicU64::new(0));
+    let s2 = sender_done.clone();
+    Universe::run(two_ranks(), move |ctx| {
+        if ctx.rank == 0 {
+            ctx.comm.ssend(&[9u8], 1, 0);
+            s2.store(ctx.clock.now(), Ordering::Release);
+        } else {
+            ctx.clock.sleep(ms(5)); // delay the matching recv
+            let mut b = [0u8];
+            ctx.comm.recv(&mut b, 0, 0);
+        }
+    })
+    .unwrap();
+    assert!(
+        sender_done.load(Ordering::Acquire) >= ms(5),
+        "ssend returned before the receive was posted"
+    );
+}
+
+#[test]
+fn eager_send_completes_immediately_but_rendezvous_waits() {
+    let eager_done = Arc::new(AtomicU64::new(u64::MAX));
+    let rndv_done = Arc::new(AtomicU64::new(0));
+    let (e2, r2) = (eager_done.clone(), rndv_done.clone());
+    Universe::run(two_ranks(), move |ctx| {
+        if ctx.rank == 0 {
+            ctx.comm.send(&[1u8; 16], 1, 0); // eager
+            e2.store(ctx.clock.now(), Ordering::Release);
+            let big = vec![2u8; 1 << 20]; // > eager threshold
+            ctx.comm.send(&big, 1, 1);
+            r2.store(ctx.clock.now(), Ordering::Release);
+        } else {
+            ctx.clock.sleep(ms(3));
+            let mut small = [0u8; 16];
+            ctx.comm.recv(&mut small, 0, 0);
+            let mut big = vec![0u8; 1 << 20];
+            ctx.comm.recv(&mut big, 0, 1);
+            assert!(big.iter().all(|&b| b == 2));
+        }
+    })
+    .unwrap();
+    // Eager sends buffer and return after only the per-call CPU cost.
+    assert!(
+        eager_done.load(Ordering::Acquire) < 5_000,
+        "eager send must not wait for the receiver"
+    );
+    assert!(rndv_done.load(Ordering::Acquire) >= ms(3), "rendezvous must wait");
+}
+
+#[test]
+fn bandwidth_shapes_transfer_time() {
+    // 1 MiB inter-node at 12.5 GB/s ~ 84 us; recv completion must reflect it.
+    let t = Arc::new(AtomicU64::new(0));
+    let t2 = t.clone();
+    Universe::run(two_ranks(), move |ctx| {
+        if ctx.rank == 0 {
+            let big = vec![1f32; 1 << 18]; // 1 MiB
+            ctx.comm.send(&big, 1, 0);
+        } else {
+            let mut big = vec![0f32; 1 << 18];
+            ctx.comm.recv(&mut big, 0, 0);
+            t2.store(ctx.clock.now(), Ordering::Release);
+        }
+    })
+    .unwrap();
+    let got = t.load(Ordering::Acquire);
+    assert!((us(80)..us(120)).contains(&got), "1 MiB took {got} ns");
+}
+
+#[test]
+fn self_send_recv_works() {
+    Universe::run(ClusterConfig::new(1, 1, 0), |ctx| {
+        let r = ctx.comm.isend(&[5i32], 0, 0);
+        let mut b = [0i32];
+        ctx.comm.recv(&mut b, 0, 0);
+        r.wait(&ctx.clock);
+        assert_eq!(b[0], 5);
+    })
+    .unwrap();
+}
+
+#[test]
+fn deadlock_detection_section5() {
+    // Section 5: matching blocking ssend/recv issued from one thread in
+    // the wrong order with no progress mechanism => certain deadlock.
+    let err = Universe::run(ClusterConfig::new(1, 1, 0), |ctx| {
+        ctx.comm.ssend(&[1u8], 0, 0); // blocks forever: recv never posted
+        let mut b = [0u8];
+        ctx.comm.recv(&mut b, 0, 0);
+    })
+    .unwrap_err();
+    assert!(matches!(
+        err,
+        tampi_repro::rmpi::universe::RunError::Deadlock { .. }
+    ));
+}
+
+#[test]
+fn barrier_synchronizes() {
+    let n = 5;
+    let t_after = Arc::new(Mutex::new(vec![0u64; n]));
+    let t2 = t_after.clone();
+    Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        // Stagger arrival; everyone leaves >= the slowest arrival.
+        ctx.clock.sleep(ms(ctx.rank as u64));
+        ctx.comm.barrier();
+        t2.lock().unwrap()[ctx.rank] = ctx.clock.now();
+    })
+    .unwrap();
+    for &t in t_after.lock().unwrap().iter() {
+        assert!(t >= ms((n - 1) as u64), "left barrier at {t}");
+    }
+}
+
+#[test]
+fn bcast_from_each_root() {
+    let n = 4;
+    for root in 0..n {
+        Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+            let mut buf = if ctx.rank == root {
+                [13i64, -7, root as i64]
+            } else {
+                [0, 0, 0]
+            };
+            ctx.comm.bcast(&mut buf, root);
+            assert_eq!(buf, [13, -7, root as i64]);
+        })
+        .unwrap();
+    }
+}
+
+#[test]
+fn reduce_and_allreduce_sum() {
+    let n = 6;
+    Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        let mut v = [ctx.rank as f64 + 1.0, 1.0];
+        ctx.comm.reduce(&mut v, 0, |acc, x| {
+            for (a, b) in acc.iter_mut().zip(x) {
+                *a += b;
+            }
+        });
+        if ctx.rank == 0 {
+            assert_eq!(v, [21.0, 6.0]); // 1+..+6, 6x1
+        }
+        let mut w = [ctx.rank as f64];
+        ctx.comm.allreduce(&mut w, |acc, x| acc[0] += x[0]);
+        assert_eq!(w[0], 15.0); // 0+..+5
+    })
+    .unwrap();
+}
+
+#[test]
+fn gather_collects_in_rank_order() {
+    let n = 5;
+    Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        let mine = [ctx.rank as i32 * 2, ctx.rank as i32 * 2 + 1];
+        if ctx.rank == 2 {
+            let mut all = vec![0i32; 2 * n];
+            ctx.comm.gather(&mine, Some(&mut all), 2);
+            assert_eq!(all, (0..2 * n as i32).collect::<Vec<_>>());
+        } else {
+            ctx.comm.gather(&mine, None, 2);
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn alltoall_transposes() {
+    let n = 4;
+    Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        // send[j] = rank*10 + j ; after alltoall recv[j] = j*10 + rank
+        let send: Vec<i32> = (0..n as i32).map(|j| ctx.rank as i32 * 10 + j).collect();
+        let mut recv = vec![0i32; n];
+        ctx.comm.alltoall(&send, &mut recv);
+        let want: Vec<i32> = (0..n as i32).map(|j| j * 10 + ctx.rank as i32).collect();
+        assert_eq!(recv, want);
+    })
+    .unwrap();
+}
+
+#[test]
+fn waitany_returns_a_completed_request() {
+    Universe::run(two_ranks(), |ctx| {
+        if ctx.rank == 0 {
+            ctx.clock.sleep(ms(2));
+            ctx.comm.send(&[1i32], 1, 1);
+            // Wait for the ack before satisfying the decoy receive, so
+            // rank 1's wait_any observes exactly one completed request.
+            let mut ack = [0u8];
+            ctx.comm.recv(&mut ack, 1, 9);
+            ctx.comm.send(&[0i32], 1, 0);
+        } else {
+            let mut a = [0i32];
+            let mut b = [0i32];
+            let r1 = ctx.comm.irecv(&mut a, 0, 0);
+            let r2 = ctx.comm.irecv(&mut b, 0, 1);
+            let idx = Request::wait_any(&ctx.clock, &[r1.clone(), r2.clone()]);
+            assert_eq!(idx, 1);
+            assert!(!r1.test());
+            ctx.comm.send(&[1u8], 0, 9); // ack
+            r1.wait(&ctx.clock);
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn comm_dup_isolates_traffic() {
+    Universe::run(two_ranks(), |ctx| {
+        let dup = ctx.comm.dup();
+        if ctx.rank == 0 {
+            ctx.comm.send(&[1i32], 1, 0);
+            dup.send(&[2i32], 1, 0);
+        } else {
+            // Same (src, tag) on both comms: each recv must see its own.
+            let mut a = [0i32];
+            let mut b = [0i32];
+            dup.recv(&mut b, 0, 0);
+            ctx.comm.recv(&mut a, 0, 0);
+            assert_eq!((a[0], b[0]), (1, 2));
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn instant_network_zero_latency() {
+    let mut cfg = two_ranks();
+    cfg.net = NetworkModel::instant();
+    let stats = Universe::run(cfg, |ctx| {
+        if ctx.rank == 0 {
+            ctx.comm.send(&[1u8; 128], 1, 0);
+        } else {
+            let mut b = [0u8; 128];
+            ctx.comm.recv(&mut b, 0, 0);
+        }
+    })
+    .unwrap();
+    assert_eq!(stats.vtime_ns, 0);
+}
+
+#[test]
+fn large_cluster_smoke_ring() {
+    // 16 nodes x 4 ranks: each rank sends to its successor around a ring.
+    let cfg = ClusterConfig::new(16, 4, 0);
+    let n = cfg.size();
+    Universe::run(cfg, move |ctx| {
+        let next = (ctx.rank + 1) % n;
+        let prev = (ctx.rank + n - 1) % n;
+        let s = ctx.comm.isend(&[ctx.rank as u64], next, 0);
+        let mut b = [0u64];
+        ctx.comm.recv(&mut b, prev as i32, 0);
+        s.wait(&ctx.clock);
+        assert_eq!(b[0], prev as u64);
+    })
+    .unwrap();
+}

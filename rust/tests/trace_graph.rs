@@ -1,0 +1,136 @@
+//! Tracing (Fig 10) and dependency graphs (Fig 8).
+
+use std::sync::Arc;
+
+use tampi_repro::apps::gauss_seidel::{run, GsParams, GsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::sim::ms;
+use tampi_repro::trace::{busy_fraction, render_gantt, GraphRecorder, Tracer};
+
+fn traced_params(v: GsVersion, tracer: Option<Arc<Tracer>>, graph: Option<Arc<GraphRecorder>>) -> GsParams {
+    let mut p = GsParams::new(128, 384, 32, 3, 4, 2, v); // Fig 7/8's 3x12 blocks
+    p.compute = Compute::Model;
+    p.tracer = tracer;
+    p.graph = graph;
+    p.deadline = Some(ms(600_000));
+    p
+}
+
+#[test]
+fn tracer_captures_task_and_mpi_events() {
+    let tracer = Arc::new(Tracer::new());
+    run(&traced_params(GsVersion::InteropBlk, Some(tracer.clone()), None)).unwrap();
+    let recs = tracer.snapshot();
+    assert!(!recs.is_empty());
+    let kinds: std::collections::HashSet<&str> =
+        recs.iter().map(|r| r.kind.as_str()).collect();
+    assert!(kinds.contains("task_start"));
+    assert!(kinds.contains("task_end"));
+    assert!(kinds.contains("task_block"), "TAMPI blocking mode must pause");
+    assert!(kinds.contains("task_unblock"));
+    // Virtual timestamps are monotone within the snapshot sort.
+    let mut last = 0;
+    for r in &recs {
+        assert!(r.t >= last);
+        last = r.t;
+    }
+}
+
+#[test]
+fn gantt_renders_all_lanes() {
+    let tracer = Arc::new(Tracer::new());
+    run(&traced_params(GsVersion::InteropBlk, Some(tracer.clone()), None)).unwrap();
+    let recs = tracer.snapshot();
+    let chart = render_gantt(&recs, 80);
+    // 4 ranks x >=2 workers -> at least 8 lanes.
+    assert!(chart.lines().filter(|l| l.starts_with('r')).count() >= 8, "{chart}");
+    assert!(chart.contains('#'), "some task activity expected\n{chart}");
+}
+
+#[test]
+fn busy_fraction_is_sane() {
+    let tracer = Arc::new(Tracer::new());
+    run(&traced_params(GsVersion::InteropBlk, Some(tracer.clone()), None)).unwrap();
+    let busy = busy_fraction(&tracer.snapshot());
+    assert_eq!(busy.len(), 4, "one entry per rank");
+    for (&rank, &f) in &busy {
+        assert!((0.0..=1.0).contains(&f), "rank {rank} busy {f}");
+    }
+}
+
+#[test]
+fn csv_roundtrip_has_header_and_rows() {
+    let tracer = Arc::new(Tracer::new());
+    run(&traced_params(GsVersion::Sentinel, Some(tracer.clone()), None)).unwrap();
+    let csv = tracer.to_csv();
+    let mut lines = csv.lines();
+    assert_eq!(lines.next().unwrap(), "t_ns,rank,worker,kind,task_id,label");
+    assert!(lines.count() > 10);
+}
+
+#[test]
+fn sentinel_graph_has_the_red_serialization_edges() {
+    // Fig 8: the Sentinel version adds artificial dependencies between
+    // communication tasks; Interop removes exactly those.
+    let g_sent = Arc::new(GraphRecorder::new());
+    run(&traced_params(GsVersion::Sentinel, None, Some(g_sent.clone()))).unwrap();
+    let g_int = Arc::new(GraphRecorder::new());
+    run(&traced_params(GsVersion::InteropBlk, None, Some(g_int.clone()))).unwrap();
+
+    assert_eq!(
+        g_sent.node_count(),
+        g_int.node_count(),
+        "same task structure"
+    );
+    assert!(
+        g_sent.edge_count() > g_int.edge_count(),
+        "sentinel ({}) must add serialization edges over interop ({})",
+        g_sent.edge_count(),
+        g_int.edge_count()
+    );
+
+    let dot = g_sent.to_dot("sentinel");
+    assert!(dot.contains("color=red"), "red dependencies must be marked");
+    assert!(dot.contains("cluster_rank0") && dot.contains("cluster_rank3"));
+    let dot_int = g_int.to_dot("sentinel");
+    assert!(!dot_int.contains("color=red"), "interop has no red edges");
+}
+
+#[test]
+fn graph_is_acyclic() {
+    // Kahn's algorithm over the recorded dependency graph.
+    let g = Arc::new(GraphRecorder::new());
+    run(&traced_params(GsVersion::InteropNonBlk, None, Some(g.clone()))).unwrap();
+    let edges = g.edges();
+    let mut nodes: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for (a, b) in &edges {
+        nodes.insert(*a);
+        nodes.insert(*b);
+    }
+    let mut indeg: std::collections::HashMap<u64, usize> =
+        nodes.iter().map(|&n| (n, 0)).collect();
+    for (_, b) in &edges {
+        *indeg.get_mut(b).unwrap() += 1;
+    }
+    let mut queue: Vec<u64> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&n, _)| n)
+        .collect();
+    let mut seen = 0;
+    let mut adj: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+    for (a, b) in &edges {
+        adj.entry(*a).or_default().push(*b);
+    }
+    while let Some(n) = queue.pop() {
+        seen += 1;
+        for &m in adj.get(&n).into_iter().flatten() {
+            let d = indeg.get_mut(&m).unwrap();
+            *d -= 1;
+            if *d == 0 {
+                queue.push(m);
+            }
+        }
+    }
+    assert_eq!(seen, nodes.len(), "dependency graph contains a cycle");
+}
