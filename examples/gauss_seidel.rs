@@ -20,11 +20,11 @@ fn main() {
     let (rows, cols, block, iters) = (512, 512, 128, 40);
     let (nodes, cores) = (2, 2);
 
-    if !tampi_repro::runtime::artifacts_dir()
-        .join(format!("gs_block_{block}.hlo.txt"))
-        .exists()
-    {
-        eprintln!("artifacts missing — run `make artifacts` first");
+    if !tampi_repro::runtime::available(&format!("gs_block_{block}")) {
+        eprintln!(
+            "PJRT backend unavailable — build with `--features pjrt` (vendored \
+             xla/anyhow) and run `make artifacts` first"
+        );
         std::process::exit(1);
     }
 

@@ -9,9 +9,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use tampi_repro::nanos::{self, Mode, Runtime, RuntimeConfig};
-use tampi_repro::rmpi::{ClusterConfig, Universe};
-use tampi_repro::sim::Clock;
+use tampi_repro::nanos::{self, CompletionMode, Mode, Runtime, RuntimeConfig};
+use tampi_repro::rmpi::{ClusterConfig, ThreadLevel, Universe};
+use tampi_repro::sim::{us, Clock};
+use tampi_repro::tampi;
 
 fn bench(name: &str, ops: u64, f: impl FnOnce()) {
     let t = Instant::now();
@@ -148,42 +149,72 @@ fn main() {
     // blocking mode grows one thread per paused task ("threads and stacks
     // proportional to in-flight operations") and wedges past the cap.
     let n = 4_000u64;
-    let run_mode = move |nonblk: bool| {
-        Universe::run(ClusterConfig::new(1, 2, 1), move |ctx| {
-            let rt = ctx.rt.as_ref().unwrap();
-            let tm = tampi_repro::tampi::init(
-                &ctx.comm,
-                rt,
-                tampi_repro::rmpi::ThreadLevel::TaskMultiple,
-            );
-            if ctx.rank == 0 {
-                for i in 0..n {
-                    let tm = tm.clone();
-                    rt.task().spawn(move || {
-                        let mut b = [0u32];
-                        if nonblk {
-                            let r = tm.comm().irecv(&mut b, 1, i as i32);
-                            tm.iwait(&r);
-                        } else {
-                            tm.recv(&mut b, 1, i as i32);
-                        }
-                    });
+    let run_mode = move |nonblk: bool, cmode: CompletionMode| {
+        Universe::run(
+            ClusterConfig::new(1, 2, 1).with_completion_mode(cmode),
+            move |ctx| {
+                let rt = ctx.rt.as_ref().unwrap();
+                let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+                if ctx.rank == 0 {
+                    for i in 0..n {
+                        let tm = tm.clone();
+                        rt.task().spawn(move || {
+                            let mut b = [0u32];
+                            if nonblk {
+                                let r = tm.comm().irecv(&mut b, 1, i as i32);
+                                tm.iwait(&r);
+                            } else {
+                                tm.recv(&mut b, 1, i as i32);
+                            }
+                        });
+                    }
+                    rt.taskwait();
+                } else {
+                    for i in 0..n {
+                        ctx.comm.send(&[7u32], 0, i as i32);
+                    }
                 }
-                rt.taskwait();
-            } else {
-                for i in 0..n {
-                    ctx.comm.send(&[7u32], 0, i as i32);
-                }
-            }
-        })
+            },
+        )
         .unwrap()
     };
-    bench("TAMPI blocking-mode recv task", n, || {
-        let s = run_mode(false);
-        println!("    (pauses={} workers={})", s.pauses, s.workers);
-    });
-    bench("TAMPI non-blocking-mode recv task", n, || {
-        let s = run_mode(true);
-        println!("    (pauses={} workers={})", s.pauses, s.workers);
-    });
+    for cmode in [CompletionMode::Polling, CompletionMode::Callback] {
+        bench(&format!("TAMPI blocking-mode recv task [{cmode:?}]"), n, || {
+            let s = run_mode(false, cmode);
+            println!(
+                "    (pauses={} workers={} vtime={} us)",
+                s.pauses,
+                s.workers,
+                s.vtime_ns / 1_000
+            );
+        });
+        bench(&format!("TAMPI non-blocking recv task [{cmode:?}]"), n, || {
+            let s = run_mode(true, cmode);
+            println!(
+                "    (pauses={} workers={} vtime={} us)",
+                s.pauses,
+                s.workers,
+                s.vtime_ns / 1_000
+            );
+        });
+    }
+
+    println!("--- completion pipeline: poll-scan vs continuations ---");
+    // Virtual-time notification latency of ONE pending recv inside a
+    // task; the calibrated scenario lives in bench::completion_latency_ns
+    // (shared with tests/tampi_callback.rs). Deterministic in virtual
+    // time: Polling is bounded by the 50 us poll_interval, Callback pays
+    // only the modeled resume cost.
+    let poll_ns = tampi_repro::bench::completion_latency_ns(CompletionMode::Polling);
+    let cb_ns = tampi_repro::bench::completion_latency_ns(CompletionMode::Callback);
+    println!("completion->resume latency [Polling]  {poll_ns:>10} virtual ns");
+    println!("completion->resume latency [Callback] {cb_ns:>10} virtual ns");
+    assert!(
+        cb_ns < us(50),
+        "callback mode must retire a pending recv in under one poll_interval"
+    );
+    println!(
+        "callback mode is {:.1}x faster to notify (poll_interval = 50 us)",
+        poll_ns as f64 / cb_ns.max(1) as f64
+    );
 }

@@ -99,6 +99,9 @@ pub struct GsParams {
     pub cell_ns: f64,
     pub net: crate::rmpi::NetworkModel,
     pub poll_interval: VNanos,
+    /// TAMPI completion-notification pipeline (default: callback
+    /// continuations; set `Polling` for paper-faithful figure runs).
+    pub completion_mode: crate::nanos::CompletionMode,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
     pub deadline: Option<VNanos>,
@@ -126,6 +129,7 @@ impl GsParams {
             cell_ns: DEFAULT_GS_CELL_NS,
             net: crate::rmpi::NetworkModel::default(),
             poll_interval: crate::sim::us(50),
+            completion_mode: crate::nanos::CompletionMode::default(),
             tracer: None,
             graph: None,
             deadline: None,
@@ -237,6 +241,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     };
     cc.net = p.net;
     cc.poll_interval = p.poll_interval;
+    cc.completion_mode = p.completion_mode;
     cc.tracer = p.tracer.clone();
     cc.graph = p.graph.clone();
     cc.deadline = p.deadline;

@@ -76,6 +76,9 @@ pub struct IfsParams {
     pub compute: Compute,
     pub net: crate::rmpi::NetworkModel,
     pub poll_interval: VNanos,
+    /// TAMPI completion-notification pipeline (default: callback
+    /// continuations; set `Polling` for paper-faithful figure runs).
+    pub completion_mode: crate::nanos::CompletionMode,
     pub tracer: Option<Arc<Tracer>>,
     pub deadline: Option<VNanos>,
 }
@@ -99,6 +102,7 @@ impl IfsParams {
             compute: Compute::Native,
             net: crate::rmpi::NetworkModel::default(),
             poll_interval: crate::sim::us(50),
+            completion_mode: crate::nanos::CompletionMode::default(),
             tracer: None,
             deadline: None,
         }
@@ -163,6 +167,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     let mut cc = ClusterConfig::new(p.nodes, p.cores_per_node, cores);
     cc.net = p.net;
     cc.poll_interval = p.poll_interval;
+    cc.completion_mode = p.completion_mode;
     cc.tracer = p.tracer.clone();
     cc.deadline = p.deadline;
     let p2 = p.clone();
@@ -222,7 +227,8 @@ fn pure(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
             ctx.clock
                 .work((chunk as f64 * PHYSICS_NS_PER_CELL) as u64);
             // 2. transposition grid -> spectral: ordered blocking exchange
-            exchange_pure(ctx, &fields[f], &mut spec, portion, tag(step, f, 0, p.fields), model, &dummy);
+            let t = tag(step, f, 0, p.fields);
+            exchange_pure(ctx, &fields[f], &mut spec, portion, t, model, &dummy);
             // 3. spectral computation
             if !model {
                 spectral_native(&mut spec);

@@ -21,6 +21,54 @@ use crate::apps::Compute;
 use crate::sim::ms;
 use crate::trace::{GraphRecorder, Tracer};
 
+/// Virtual-time completion→resume latency of one pending in-task recv
+/// under `mode` (the completion-pipeline micro-figure; shared by
+/// `benches/micro_runtime.rs` and `tests/tampi_callback.rs` so the
+/// calibrated scenario exists exactly once). Measured from the request's
+/// completion instant — observed by an `on_complete` continuation, which
+/// fires at that instant in every mode — to the paused task's
+/// resumption. Polling mode is bounded by the 50 us poll_interval used
+/// here; callback mode pays only the modeled resume cost. Deterministic
+/// in virtual time.
+pub fn completion_latency_ns(mode: crate::nanos::CompletionMode) -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use crate::rmpi::{ClusterConfig, ThreadLevel, Universe};
+    use crate::sim::us;
+
+    let arrived = Arc::new(AtomicU64::new(0));
+    let resumed = Arc::new(AtomicU64::new(0));
+    let (a2, r2) = (arrived.clone(), resumed.clone());
+    let mut cfg = ClusterConfig::new(2, 1, 1).with_completion_mode(mode);
+    cfg.poll_interval = us(50);
+    Universe::run(cfg, move |ctx| {
+        let rt = ctx.rt.as_ref().unwrap();
+        let tm = crate::tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+        if ctx.rank == 0 {
+            let (a, r) = (a2.clone(), r2.clone());
+            let tm = tm.clone();
+            let clock = ctx.clock.clone();
+            rt.task().label("recv").spawn(move || {
+                let mut b = [0u8];
+                let req = tm.comm().irecv(&mut b, 1, 0);
+                let c2 = clock.clone();
+                let a = a.clone();
+                req.on_complete(move |_| a.store(c2.now(), Ordering::Relaxed));
+                tm.wait(&req);
+                r.store(clock.now(), Ordering::Relaxed);
+            });
+        } else {
+            // Offset so the arrival does not align with a poll tick.
+            ctx.clock.sleep(ms(1) + us(17));
+            ctx.comm.send(&[9u8], 0, 0);
+        }
+    })
+    .expect("completion-latency scenario");
+    let (a, r) = (arrived.load(Ordering::Relaxed), resumed.load(Ordering::Relaxed));
+    assert!(a > 0 && r >= a, "latency bookkeeping broken: arrived={a} resumed={r}");
+    r - a
+}
+
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;
 /// `Full` runs the paper's actual sizes (64Kx64K, 48 cores/node, up to 64
 /// nodes) and takes correspondingly long.
@@ -155,6 +203,9 @@ impl GsSweep {
             v,
         );
         p.compute = Compute::Model;
+        // Paper figures reproduce the published TAMPI, whose interop
+        // layer discovers completions by polling.
+        p.completion_mode = crate::nanos::CompletionMode::Polling;
         p.deadline = Some(ms(120_000_000)); // 120 virtual seconds
         p
     }
@@ -303,6 +354,8 @@ pub fn fig14(scale: Scale) -> Vec<Row> {
     let mk = |v: IfsVersion, nodes: usize| -> IfsParams {
         let mut p = IfsParams::new(grid, fields, steps, nodes, cpn, v);
         p.compute = Compute::Model;
+        // Paper figures use the published polling interop layer.
+        p.completion_mode = crate::nanos::CompletionMode::Polling;
         p.deadline = Some(ms(120_000_000));
         p
     };
@@ -345,6 +398,7 @@ pub fn fig08() -> Vec<(String, String, usize)> {
         // Fig 7's domain: 12 block rows x 3 block cols over four ranks.
         let mut p = GsParams::new(384, 96, 32, 3, 4, 2, v);
         p.compute = Compute::Model;
+        p.completion_mode = crate::nanos::CompletionMode::Polling;
         p.graph = Some(g.clone());
         p.deadline = Some(ms(600_000));
         gauss_seidel::run(&p).expect("fig08 run");
@@ -368,6 +422,7 @@ pub fn fig10(scale: Scale) -> Vec<(String, String, String, BTreeMap<u32, f64>)> 
         let tracer = Arc::new(Tracer::new());
         let mut p = GsParams::new(rows, cols, block, iters, 4, cpn, v);
         p.compute = Compute::Model;
+        p.completion_mode = crate::nanos::CompletionMode::Polling;
         p.tracer = Some(tracer.clone());
         p.deadline = Some(ms(60_000_000));
         gauss_seidel::run(&p).expect("fig10 run");

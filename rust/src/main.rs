@@ -61,6 +61,17 @@ fn compute_of(m: &HashMap<String, String>) -> Compute {
     }
 }
 
+fn completion_of(m: &HashMap<String, String>) -> tampi_repro::nanos::CompletionMode {
+    match m.get("completion").map(String::as_str).unwrap_or("callback") {
+        "callback" => tampi_repro::nanos::CompletionMode::Callback,
+        "poll" | "polling" => tampi_repro::nanos::CompletionMode::Polling,
+        other => {
+            eprintln!("unknown --completion {other} (callback|poll)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_gs(m: HashMap<String, String>) {
     let version = m
         .get("version")
@@ -76,6 +87,7 @@ fn cmd_gs(m: HashMap<String, String>) {
         version,
     );
     p.compute = compute_of(&m);
+    p.completion_mode = completion_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
@@ -141,7 +153,10 @@ fn cmd_ifsker(m: HashMap<String, String>) {
         version,
     );
     p.compute = compute_of(&m);
+    p.completion_mode = completion_of(&m);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
+    let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
+    p.tracer = tracer.clone();
     let wall = Instant::now();
     match ifsker::run(&p) {
         Ok(out) => {
@@ -173,6 +188,11 @@ fn cmd_ifsker(m: HashMap<String, String>) {
             eprintln!("FAILED: {e}");
             std::process::exit(1);
         }
+    }
+    if let (Some(t), Some(path)) = (&tracer, m.get("trace")) {
+        std::fs::write(path, t.to_csv()).expect("write trace");
+        println!("  trace -> {path}");
+        println!("{}", tampi_repro::trace::render_gantt(&t.snapshot(), 100));
     }
 }
 
@@ -243,10 +263,9 @@ fn cmd_calibrate() {
         let ns = t.elapsed().as_nanos() as f64 / (reps * b * b) as f64;
         println!("  block {b}: {ns:.2} ns/cell (native)");
     }
-    if tampi_repro::runtime::artifacts_dir()
-        .join("gs_block_256.hlo.txt")
-        .exists()
-    {
+    // Also skips stub builds (no `pjrt` feature), which fail every
+    // load by design even when the artifact files exist on disk.
+    if tampi_repro::runtime::available("gs_block_256") {
         for b in [128usize, 256] {
             let k = tampi_repro::runtime::GsKernel::load(b).expect("kernel");
             let u = vec![0.5f32; b * b];

@@ -37,5 +37,5 @@ pub use api::{
     increase_current_task_event_counter, unblock_task, work,
 };
 pub use deps::{DepObj, Mode};
-pub use runtime::{Runtime, RuntimeConfig, TaskBuilder};
+pub use runtime::{CompletionMode, Runtime, RuntimeConfig, TaskBuilder};
 pub use task::{BlockingContext, EventCounter};

@@ -11,8 +11,19 @@
 //! [`PollingRegistry::hint_add`]/[`hint_sub`]. When every service is
 //! hinted and no work is pending, the leader parks entirely instead of
 //! ticking — long quiescent phases then generate zero clock events
-//! (essential for cluster-scale virtual-time runs). TAMPI uses this: its
-//! hint is the in-flight ticket count.
+//! (essential for cluster-scale virtual-time runs). TAMPI's poll-scan
+//! baseline uses this: its hint is the in-flight ticket count.
+//!
+//! **Completion modes**: this registry is the notification path only for
+//! [`super::runtime::CompletionMode::Polling`] — the paper-faithful
+//! baseline in which TAMPI files tickets and a service re-scans them per
+//! pass, bounding completion latency by `poll_interval`. Under the
+//! default [`super::runtime::CompletionMode::Callback`] TAMPI attaches
+//! request continuations instead and registers *no* service here: the
+//! leader stays parked and completions are pushed from the point where
+//! the request completes (see `crate::tampi` module docs). The registry
+//! itself stays — it serves the paper's Section 4.2 API, user services,
+//! and polling-mode collective waits.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, TryLockError, Weak};

@@ -59,6 +59,23 @@ impl RuntimeCosts {
     }
 }
 
+/// How the TAMPI interop layer learns that a pending MPI operation
+/// completed (Section 6 wiring; see `crate::tampi` module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompletionMode {
+    /// Paper-faithful baseline: pending operations file tickets and a
+    /// polling service re-scans them every `poll_interval` (plus
+    /// opportunistic idle-worker passes). O(pending) work per pass;
+    /// completion latency is bounded by the polling period. Preserved
+    /// for figure reproduction.
+    Polling,
+    /// Completion continuations: a callback attached to each pending
+    /// request pushes the notification from the exact virtual instant
+    /// the operation completes. No tickets, no scan, no polling latency.
+    #[default]
+    Callback,
+}
+
 /// Configuration of one rank's runtime instance.
 #[derive(Clone)]
 pub struct RuntimeConfig {
@@ -81,6 +98,8 @@ pub struct RuntimeConfig {
     pub graph: Option<Arc<GraphRecorder>>,
     /// Modeled runtime operation costs (virtual ns).
     pub costs: RuntimeCosts,
+    /// How TAMPI on this runtime is notified of MPI completions.
+    pub completion_mode: CompletionMode,
 }
 
 impl RuntimeConfig {
@@ -95,6 +114,7 @@ impl RuntimeConfig {
             tracer: None,
             graph: None,
             costs: RuntimeCosts::zero(),
+            completion_mode: CompletionMode::default(),
         }
     }
 }
@@ -250,6 +270,11 @@ impl Runtime {
     /// Modeled runtime costs.
     pub fn costs(&self) -> &RuntimeCosts {
         &self.rt.cfg.costs
+    }
+
+    /// How TAMPI on this runtime is notified of MPI completions.
+    pub fn completion_mode(&self) -> CompletionMode {
+        self.rt.cfg.completion_mode
     }
 
     /// Weak handle to the runtime internals (for registry closures that

@@ -87,7 +87,8 @@ impl Scheduler {
             // of blocking mode the paper warns about). Warn loudly; the
             // clock's deadlock detector reports the hang.
             eprintln!(
-                "nanos[{}]: worker cap {} reached with ready work pending —                  blocking-mode thread explosion (see RuntimeConfig::max_workers)",
+                "nanos[{}]: worker cap {} reached with ready work pending — \
+                 blocking-mode thread explosion (see RuntimeConfig::max_workers)",
                 rt.cfg.label, self.max_workers
             );
         }

@@ -6,6 +6,8 @@
 //! blocks the OS thread; `WaitMode::TaskAware` routes each internal wait
 //! through `tampi`-style pause/resume (installed by the tampi module).
 
+use crate::nanos::CompletionMode;
+
 use super::comm::Comm;
 use super::p2p::Ctx;
 use super::request::Request;
@@ -18,15 +20,21 @@ pub enum WaitMode {
     #[default]
     Park,
     /// Pause the calling task instead (requires TAMPI blocking mode;
-    /// panics outside a task).
-    TaskAware,
+    /// panics outside a task). Carries an optional completion-mode
+    /// override: `None` follows the runtime's configured mode; `Some`
+    /// pins the pipeline (set by [`crate::tampi::Tampi`] handles created
+    /// with `init_with_mode`, so a per-handle override also governs the
+    /// handle's collective waits).
+    TaskAware(Option<CompletionMode>),
 }
 
 impl Comm {
     fn coll_wait(&self, mode: WaitMode, reqs: &[Request]) {
         match mode {
             WaitMode::Park => Request::wait_all(&self.uni.clock, reqs),
-            WaitMode::TaskAware => crate::tampi::task_aware_wait_all(self, reqs),
+            WaitMode::TaskAware(over) => {
+                crate::tampi::task_aware_wait_all_with(self, reqs, over)
+            }
         }
     }
 

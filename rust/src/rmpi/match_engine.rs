@@ -62,6 +62,13 @@ fn matches(psrc: Option<usize>, ptag: Option<i32>, src: usize, tag: i32) -> bool
 
 /// Deliver a matched (envelope, posted-recv) pair: copy now (invisible to
 /// the receiver until completion), complete both requests at `when`.
+///
+/// Completion runs [`ReqState::complete`], which wakes parked waiters
+/// *and* fires any attached continuations (`Request::on_complete`) — on
+/// this thread for already-arrived payloads, or on the clock thread via
+/// `Clock::call_at` for in-flight ones. Both paths deliver at the exact
+/// virtual completion instant, which is what gives TAMPI's callback mode
+/// zero notification latency.
 pub(crate) fn deliver(
     clock: &Arc<Clock>,
     env: Envelope,
@@ -106,7 +113,8 @@ pub(crate) fn deliver(
 
 /// Direct delivery (send fast path): the payload goes straight from the
 /// sender's buffer into the posted receive — no envelope allocation
-/// (§Perf opt-3). Completion semantics identical to [`deliver`].
+/// (§Perf opt-3). Completion semantics (including continuation firing)
+/// identical to [`deliver`].
 pub(crate) fn deliver_direct(
     clock: &Arc<Clock>,
     bytes: &[u8],

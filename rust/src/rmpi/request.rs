@@ -1,7 +1,19 @@
-//! MPI request objects: completion state + passive waiting.
+//! MPI request objects: completion state, passive waiting, and completion
+//! continuations.
+//!
+//! Completion is delivered two ways:
+//!
+//! * **Pull** — [`Request::test`] / [`Request::wait`] (the MPI_Test /
+//!   MPI_Wait shapes), used by plain MPI code and by TAMPI's poll-scan
+//!   baseline ([`crate::nanos::CompletionMode::Polling`]).
+//! * **Push** — [`Request::on_complete`] attaches a *continuation* (the
+//!   MPI Continuations proposal's `MPIX_Continue` shape) that runs with
+//!   the request's final [`Status`] at the exact virtual instant the
+//!   operation completes. TAMPI's callback pipeline
+//!   ([`crate::nanos::CompletionMode::Callback`]) is built on this.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::sim::{Clock, WaitQueue};
 
@@ -13,20 +25,57 @@ pub struct Status {
     pub bytes: usize,
 }
 
+/// A completion continuation: runs exactly once with the request's final
+/// [`Status`].
+pub(crate) type Continuation = Box<dyn FnOnce(Status) + Send>;
+
 #[derive(Default)]
 pub(crate) struct ReqState {
     completed: AtomicBool,
     waiters: WaitQueue,
-    status: std::sync::Mutex<Status>,
+    status: Mutex<Status>,
+    /// Continuations to fire at completion time. Race-free protocol:
+    /// `attach` pushes only while holding this lock *and* observing
+    /// `completed == false`; `complete` stores `completed = true` before
+    /// draining under the same lock. A continuation is therefore either
+    /// drained-and-fired by `complete` or run inline by `attach` — never
+    /// both, never lost.
+    on_complete: Mutex<Vec<Continuation>>,
 }
 
 impl ReqState {
+    /// Mark the operation complete: publish the status, wake parked
+    /// waiters, and fire attached continuations. Called from the thread
+    /// that delivers the completion — a rank main, a worker, or the clock
+    /// thread for deferred network deliveries (`Clock::call_at` in
+    /// `match_engine::deliver`/`deliver_direct`).
     pub(crate) fn complete(&self, clock: &Clock, status: Option<Status>) {
         if let Some(s) = status {
             *self.status.lock().unwrap() = s;
         }
         self.completed.store(true, Ordering::Release);
         self.waiters.notify_all(clock);
+        let cbs = std::mem::take(&mut *self.on_complete.lock().unwrap());
+        if !cbs.is_empty() {
+            let st = *self.status.lock().unwrap();
+            for f in cbs {
+                f(st);
+            }
+        }
+    }
+
+    /// Attach a continuation; runs it inline if the request has already
+    /// completed (see the field docs for the race-free protocol).
+    pub(crate) fn attach(&self, f: Continuation) {
+        {
+            let mut g = self.on_complete.lock().unwrap();
+            if !self.completed.load(Ordering::Acquire) {
+                g.push(f);
+                return;
+            }
+        }
+        let st = *self.status.lock().unwrap();
+        f(st);
     }
 }
 
@@ -56,6 +105,19 @@ impl Request {
     /// Status of a completed receive.
     pub fn status(&self) -> Status {
         *self.0.status.lock().unwrap()
+    }
+
+    /// Attach a completion continuation: `f` runs exactly once with the
+    /// request's final [`Status`] — inline on the calling thread if the
+    /// request already completed, otherwise at the virtual instant the
+    /// operation completes.
+    ///
+    /// The continuation may run on any thread, including the clock thread
+    /// for deferred network deliveries, so it must not block on
+    /// simulation primitives; waking tasks through the `nanos` APIs
+    /// (`unblock_task`, `decrease_task_event_counter`) is safe.
+    pub fn on_complete(&self, f: impl FnOnce(Status) + Send + 'static) {
+        self.0.attach(Box::new(f));
     }
 
     /// Blocking wait: parks the calling OS thread in virtual time.
@@ -124,5 +186,34 @@ mod tests {
         assert!(!r.test());
         let d = Request::done();
         assert!(d.test());
+    }
+
+    #[test]
+    fn continuation_on_completed_request_runs_inline() {
+        let d = Request::done();
+        let hit = Arc::new(AtomicBool::new(false));
+        let h = hit.clone();
+        d.on_complete(move |_| h.store(true, Ordering::Relaxed));
+        assert!(hit.load(Ordering::Relaxed), "must fire inline at attach");
+    }
+
+    #[test]
+    fn continuation_fires_at_completion_with_final_status() {
+        let (clock, h) = Clock::start();
+        let r = Request::new();
+        let seen: Arc<Mutex<Vec<Status>>> = Arc::new(Mutex::new(Vec::new()));
+        let s2 = seen.clone();
+        r.on_complete(move |st| s2.lock().unwrap().push(st));
+        assert!(seen.lock().unwrap().is_empty(), "must not fire before completion");
+        let st = Status { source: 3, tag: 9, bytes: 4 };
+        r.0.complete(&clock, Some(st));
+        assert!(r.test());
+        assert_eq!(seen.lock().unwrap().as_slice(), &[st]);
+        // A second attach after completion fires inline with the same status.
+        let s3 = seen.clone();
+        r.on_complete(move |st| s3.lock().unwrap().push(st));
+        assert_eq!(seen.lock().unwrap().as_slice(), &[st, st]);
+        clock.stop();
+        h.join().unwrap();
     }
 }

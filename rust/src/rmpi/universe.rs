@@ -6,7 +6,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::nanos::runtime::RuntimeCosts;
-use crate::nanos::{Runtime, RuntimeConfig};
+use crate::nanos::{CompletionMode, Runtime, RuntimeConfig};
 use crate::sim::{Clock, VNanos};
 use crate::trace::{GraphRecorder, Tracer};
 
@@ -35,6 +35,9 @@ pub struct ClusterConfig {
     pub worker_stack: usize,
     /// Modeled runtime-operation costs (default: realistic Nanos6-class).
     pub costs: RuntimeCosts,
+    /// How TAMPI is notified of MPI completions (default: callback
+    /// continuations; `Polling` is the paper-faithful baseline).
+    pub completion_mode: CompletionMode,
 }
 
 impl ClusterConfig {
@@ -51,7 +54,14 @@ impl ClusterConfig {
             rank_stack: 1024 * 1024,
             worker_stack: 512 * 1024,
             costs: RuntimeCosts::realistic(),
+            completion_mode: CompletionMode::default(),
         }
+    }
+
+    /// Builder-style completion-mode override (bench/test convenience).
+    pub fn with_completion_mode(mut self, mode: CompletionMode) -> Self {
+        self.completion_mode = mode;
+        self
     }
 
     pub fn size(&self) -> usize {
@@ -176,6 +186,7 @@ impl Universe {
                     rc.rank = r as u32;
                     rc.worker_stack = cfg.worker_stack;
                     rc.costs = cfg.costs;
+                    rc.completion_mode = cfg.completion_mode;
                     rc.tracer = cfg.tracer.clone();
                     rc.graph = cfg.graph.clone();
                     Some(Runtime::new(clock.clone(), rc))

@@ -1,0 +1,208 @@
+//! Real XLA/PJRT backend (compiled only with the `pjrt` feature).
+//!
+//! Requires the `xla` and `anyhow` crates to be vendored and listed in
+//! `[dependencies]`; the default build uses [`super::stub`] instead.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use super::artifacts_dir;
+
+struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, &'static LoadedExe>>,
+    /// Serializes every PJRT call (compile/execute/transfer). The xla
+    /// crate uses `Rc` internally, so cross-thread use is only sound if
+    /// all operations (including internal clones/drops) are mutually
+    /// excluded — which this lock guarantees. The host has one physical
+    /// core, so serialization costs nothing.
+    pjrt_lock: Mutex<()>,
+}
+
+// SAFETY: all accesses to the Rc-based internals go through `pjrt_lock`
+// (see `LoadedExe::run_f32` and `load`); objects are never dropped.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// A compiled artifact. Leaked into 'static so executables can be shared
+/// freely across threads for the process lifetime.
+pub struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: see Engine (all PJRT calls serialize on the engine lock).
+unsafe impl Send for LoadedExe {}
+unsafe impl Sync for LoadedExe {}
+
+static ENGINE: OnceLock<Engine> = OnceLock::new();
+
+fn engine() -> &'static Engine {
+    ENGINE.get_or_init(|| Engine {
+        client: xla::PjRtClient::cpu().expect("PJRT CPU client"),
+        cache: Mutex::new(HashMap::new()),
+        pjrt_lock: Mutex::new(()),
+    })
+}
+
+/// Load + compile an artifact by name (e.g. `gs_block_256`), cached.
+pub fn load(name: &str) -> Result<&'static LoadedExe> {
+    let eng = engine();
+    let mut cache = eng.cache.lock().unwrap();
+    if let Some(e) = cache.get(name) {
+        return Ok(e);
+    }
+    let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+    let _g = eng.pjrt_lock.lock().unwrap();
+    let exe = compile(&eng.client, &path)
+        .with_context(|| format!("loading artifact {name} from {}", path.display()))?;
+    drop(_g);
+    let leaked: &'static LoadedExe = Box::leak(Box::new(LoadedExe {
+        exe,
+        name: name.to_string(),
+    }));
+    cache.insert(name.to_string(), leaked);
+    Ok(leaked)
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .map_err(|e| anyhow::anyhow!("parse HLO text: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("PJRT compile: {e:?}"))
+}
+
+impl LoadedExe {
+    /// Execute with f32 inputs of the given shapes; returns the tuple
+    /// elements as flat f32 vectors (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let _g = engine().pjrt_lock.lock().unwrap();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(dims)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+            };
+            lits.push(lit);
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        drop(_g);
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Typed wrapper for the Gauss-Seidel block kernel artifact.
+pub struct GsKernel {
+    exe: &'static LoadedExe,
+    pub block: usize,
+}
+
+impl GsKernel {
+    /// Load `gs_block_{block}` (block ∈ {32, 64, 128, 256, 512}).
+    pub fn load(block: usize) -> Result<GsKernel> {
+        Ok(GsKernel { exe: load(&format!("gs_block_{block}"))?, block })
+    }
+
+    /// One sweep: returns (new block, sum of squared change).
+    pub fn sweep(
+        &self,
+        u: &[f32],
+        top: &[f32],
+        bottom: &[f32],
+        left: &[f32],
+        right: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        let b = self.block;
+        assert_eq!(u.len(), b * b);
+        assert!(top.len() == b && bottom.len() == b && left.len() == b && right.len() == b);
+        let bi = b as i64;
+        let out = self.exe.run_f32(&[
+            (u, &[bi, bi][..]),
+            (top, &[bi][..]),
+            (bottom, &[bi][..]),
+            (left, &[bi][..]),
+            (right, &[bi][..]),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "gs artifact must return (block, delta)");
+        let delta = out[1][0];
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), delta))
+    }
+}
+
+/// Typed wrapper for the IFSKer timestep artifact.
+///
+/// The DFT transform matrices travel as runtime arguments (HLO text
+/// elides large constants — see aot.py); they are loaded once from the
+/// `ifs_consts_n{n}.bin` side file aot.py emits.
+pub struct IfsKernel {
+    exe: &'static LoadedExe,
+    pub nf: usize,
+    pub n: usize,
+    ft: Vec<f32>,
+    finvt: Vec<f32>,
+    damp: Vec<f32>,
+}
+
+impl IfsKernel {
+    /// Load `ifs_step_f{nf}_n{n}` plus its constants (aot.py IFS_SIZES).
+    pub fn load(nf: usize, n: usize) -> Result<IfsKernel> {
+        let exe = load(&format!("ifs_step_f{nf}_n{n}"))?;
+        let cpath = artifacts_dir().join(format!("ifs_consts_n{n}.bin"));
+        let bytes = std::fs::read(&cpath)
+            .with_context(|| format!("reading {}", cpath.display()))?;
+        let want = (2 * n * n + n) * 4;
+        anyhow::ensure!(
+            bytes.len() == want,
+            "ifs consts size {} != {}",
+            bytes.len(),
+            want
+        );
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let ft = floats[0..n * n].to_vec();
+        let finvt = floats[n * n..2 * n * n].to_vec();
+        let damp = floats[2 * n * n..].to_vec();
+        Ok(IfsKernel { exe, nf, n, ft, finvt, damp })
+    }
+
+    /// One timestep over the field chunk; returns (fields, l2 norm).
+    pub fn step(&self, fields: &[f32]) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(fields.len(), self.nf * self.n);
+        let ni = self.n as i64;
+        let out = self.exe.run_f32(&[
+            (fields, &[self.nf as i64, ni][..]),
+            (&self.ft, &[ni, ni][..]),
+            (&self.finvt, &[ni, ni][..]),
+            (&self.damp, &[ni][..]),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "ifs artifact must return (fields, norm)");
+        let norm = out[1][0];
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), norm))
+    }
+}

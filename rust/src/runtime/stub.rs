@@ -1,0 +1,103 @@
+//! Dependency-free stand-in for the PJRT bridge (default build).
+//!
+//! The reproduction host's registry is offline, so the default build
+//! carries no external crates; the real XLA-backed bridge in `pjrt.rs`
+//! compiles only with the `pjrt` feature (which requires vendoring the
+//! `xla` and `anyhow` crates). The stub keeps the full API surface:
+//! every load fails with a clean error naming the artifact — exactly
+//! the behaviour of a missing `make artifacts`. Callers decide what
+//! that means: the PJRT tests skip themselves, while an app run that
+//! explicitly requests `Compute::Pjrt` aborts with the error (use
+//! `Compute::Native`/`Compute::Model` in stub builds).
+
+use std::fmt;
+
+/// Error type of the stub bridge (API-compatible with `anyhow::Error`
+/// for the operations the apps and tests exercise: `Display`, `Debug`,
+/// `std::error::Error`).
+pub struct PjrtError(String);
+
+impl fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for PjrtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+pub type Result<T> = std::result::Result<T, PjrtError>;
+
+fn unavailable(name: &str) -> PjrtError {
+    PjrtError(format!(
+        "loading artifact {name} from {}: this build has no XLA/PJRT backend (the \
+         `pjrt` feature is disabled); use Compute::Native or Compute::Model",
+        super::artifacts_dir().join(format!("{name}.hlo.txt")).display()
+    ))
+}
+
+/// A compiled artifact (stub: never successfully constructed).
+pub struct LoadedExe {
+    pub name: String,
+}
+
+impl LoadedExe {
+    /// API parity with the real bridge; unreachable in stub builds
+    /// because [`load`] never hands out a `LoadedExe`.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(&self.name))
+    }
+}
+
+/// Load + compile an artifact by name — always fails in stub builds,
+/// with an error naming the artifact and the path that would be read.
+pub fn load(name: &str) -> Result<&'static LoadedExe> {
+    Err(unavailable(name))
+}
+
+/// Typed wrapper for the Gauss-Seidel block kernel artifact.
+pub struct GsKernel {
+    pub block: usize,
+}
+
+impl GsKernel {
+    /// Always fails in stub builds (see [`load`]).
+    pub fn load(block: usize) -> Result<GsKernel> {
+        Err(unavailable(&format!("gs_block_{block}")))
+    }
+
+    /// API parity; unreachable in stub builds.
+    pub fn sweep(
+        &self,
+        _u: &[f32],
+        _top: &[f32],
+        _bottom: &[f32],
+        _left: &[f32],
+        _right: &[f32],
+    ) -> Result<(Vec<f32>, f32)> {
+        Err(unavailable(&format!("gs_block_{}", self.block)))
+    }
+}
+
+/// Typed wrapper for the IFSKer timestep artifact.
+pub struct IfsKernel {
+    pub nf: usize,
+    pub n: usize,
+}
+
+impl IfsKernel {
+    /// Always fails in stub builds (see [`load`]).
+    pub fn load(nf: usize, n: usize) -> Result<IfsKernel> {
+        Err(unavailable(&format!("ifs_step_f{nf}_n{n}")))
+    }
+
+    /// API parity; unreachable in stub builds.
+    pub fn step(&self, _fields: &[f32]) -> Result<(Vec<f32>, f32)> {
+        Err(unavailable(&format!("ifs_step_f{}_n{}", self.nf, self.n)))
+    }
+}

@@ -5,33 +5,63 @@
 //! * **Blocking mode** (Section 6.1, enabled by requesting
 //!   [`crate::rmpi::ThreadLevel::TaskMultiple`]): blocking MPI calls made
 //!   inside a task are transparently transformed into their non-blocking
-//!   counterparts; if not immediately complete, a *ticket* (request +
-//!   blocking context) is filed and the task pauses, releasing its core.
-//!   A polling service tests pending tickets and unblocks tasks whose
-//!   operations completed.  This is the `MPI_Recv` flow of Fig 3.
+//!   counterparts; if not immediately complete, the task pauses,
+//!   releasing its core, and resumes when the operations completed.
+//!   This is the `MPI_Recv` flow of Fig 3.
 //! * **Non-blocking mode** (Section 6.2): [`Tampi::iwait`] /
 //!   [`Tampi::iwaitall`] bind in-flight requests to the calling task's
 //!   dependency release through the external-events API; the task finishes
 //!   without waiting, its stack is freed, and its successors run only when
 //!   the requests complete.  This is the `TAMPI_Iwait` flow of Fig 4.
 //!
-//! Both modes coexist (Section 6.2) and both rely on one polling service
-//! registered with the rank's runtime.
+//! Both modes coexist (Section 6.2).
 //!
 //! In the real TAMPI these flows hide behind the PMPI interception layer;
 //! here [`Tampi`] is an explicit wrapper handle over a [`Comm`], which is
 //! the same integration surface without symbol interposition.
+//!
+//! ## Completion notification pipeline
+//!
+//! *How* the library learns that an in-flight operation completed is
+//! selectable per runtime ([`CompletionMode`], default `Callback`; set
+//! `RuntimeConfig::completion_mode` / `ClusterConfig::completion_mode`,
+//! or override per handle with [`init_with_mode`]):
+//!
+//! * [`CompletionMode::Polling`] — the paper-faithful Section 6 baseline:
+//!   every pending operation files a *ticket* (request + blocking context
+//!   or event counter) in a shared vector, and a polling service re-scans
+//!   that vector under a mutex on every pass — the leader tick plus
+//!   opportunistic idle-worker passes (Section 4.5). O(pending) work per
+//!   pass; completion latency is bounded by `poll_interval`. Preserved
+//!   for reproducing the paper's figures.
+//! * [`CompletionMode::Callback`] — request continuations (the MPI
+//!   Continuations line of work: Schuchart et al., *"Callback-based
+//!   Completion Notification using MPI Continuations"*, 2021): each
+//!   pending request gets a continuation attached via
+//!   [`crate::rmpi::Request::on_complete`] that unblocks the paused task
+//!   or fulfils the external event directly at the virtual instant the
+//!   operation completes. No tickets, no scan, no polling service, no
+//!   polling latency. Multi-request waits share an atomic countdown so
+//!   the last completing request performs the single unblock; a request
+//!   that completes before its continuation is attached runs the
+//!   continuation inline, which `block_current_task` absorbs as an
+//!   early-unblock.
+//!
+//! Each delivered notification is traced as
+//! [`EventKind::CompletionDelivered`] and counted per pipeline
+//! ([`Tampi::mode_stats`]), so benches and traces can compare the two.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::nanos::{
-    self, BlockingContext, EventCounter, Runtime,
-};
+use crate::nanos::runtime::Rt;
+use crate::nanos::{self, BlockingContext, CompletionMode, EventCounter, Runtime};
 use crate::rmpi::{Comm, Pod, Request, Status, ThreadLevel};
 use crate::trace::EventKind;
 
-/// A pending operation the polling service watches.
+/// A pending operation the polling service watches
+/// ([`CompletionMode::Polling`] only; the callback pipeline has no
+/// tickets).
 enum Ticket {
     /// Blocking mode: unblock the paused task when all requests complete.
     Block { reqs: Vec<Request>, ctx: BlockingContext },
@@ -42,16 +72,44 @@ enum Ticket {
 struct TampiState {
     /// Runtime owning the polling service (weak: the registry's closure
     /// holds this state, so a strong handle would cycle).
-    rt: std::sync::Weak<crate::nanos::runtime::Rt>,
+    rt: std::sync::Weak<Rt>,
+    /// Which notification pipeline this handle uses.
+    mode: CompletionMode,
+    /// Polling mode only: pending tickets re-scanned by the service.
     tickets: Mutex<Vec<Ticket>>,
-    /// Metrics for the evaluation (Section 7): how many tickets took each
-    /// path, and how many operations completed immediately.
-    n_block_tickets: AtomicU64,
-    n_event_tickets: AtomicU64,
+    /// Metrics for the evaluation (Section 7): how many operations took
+    /// each path, and how many completed immediately.
+    n_block: AtomicU64,
+    n_event: AtomicU64,
     n_immediate: AtomicU64,
+    /// Completions delivered by the poll-scan (polling mode).
+    n_poll_delivered: AtomicU64,
+    /// Completions delivered by request continuations (callback mode).
+    n_callback_delivered: AtomicU64,
 }
 
 impl TampiState {
+    /// Record one completion notification reaching the runtime and emit
+    /// the [`EventKind::CompletionDelivered`] trace event, stamped on the
+    /// delivering thread's lane (a worker for inline/poll deliveries,
+    /// the clock thread for deferred network deliveries).
+    fn record_delivery(&self, by_callback: bool, label: &str, task_id: u64) {
+        if by_callback {
+            self.n_callback_delivered.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.n_poll_delivered.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(rt) = self.rt.upgrade() {
+            // Off-worker threads (the clock thread for deferred
+            // deliveries, the polling leader, rank mains) carry the
+            // worker_id sentinel usize::MAX, recorded as u32::MAX —
+            // see `trace::Record::worker`. Lane-building consumers
+            // ignore CompletionDelivered records entirely.
+            let w = crate::nanos::worker::worker_id();
+            rt.trace(EventKind::CompletionDelivered, w, label, task_id);
+        }
+    }
+
     /// One polling pass (the paper's `Interop::poll`, Figs 3-4).
     fn poll(&self) {
         let mut retired = 0usize;
@@ -60,6 +118,7 @@ impl TampiState {
             let done = match t {
                 Ticket::Block { reqs, ctx } => {
                     if reqs.iter().all(|r| r.test()) {
+                        self.record_delivery(false, &ctx.0.task_label, ctx.0.task_id);
                         nanos::unblock_task(ctx);
                         true
                     } else {
@@ -68,6 +127,7 @@ impl TampiState {
                 }
                 Ticket::Event { req, ec } => {
                     if req.test() {
+                        self.record_delivery(false, &ec.0.label, ec.0.id);
                         nanos::decrease_task_event_counter(ec, 1);
                         true
                     } else {
@@ -105,30 +165,54 @@ pub struct Tampi {
     enabled: bool,
 }
 
-/// Initialize TAMPI on this rank (the `MPI_Init_thread` moment, Fig 6).
+/// Initialize TAMPI on this rank (the `MPI_Init_thread` moment, Fig 6),
+/// using the runtime's configured completion mode.
 ///
 /// Requesting [`ThreadLevel::TaskMultiple`] enables both interoperability
-/// mechanisms and registers the polling service with the rank's runtime;
-/// anything lower yields plain MPI behaviour (`enabled() == false`), which
-/// is what portable applications test for to decide whether to serialize
-/// communication tasks with a sentinel (Section 6.3).
+/// mechanisms; anything lower yields plain MPI behaviour
+/// (`enabled() == false`), which is what portable applications test for
+/// to decide whether to serialize communication tasks with a sentinel
+/// (Section 6.3).
 pub fn init(comm: &Comm, rt: &Runtime, requested: ThreadLevel) -> Tampi {
+    init_with_mode(comm, rt, requested, rt.completion_mode())
+}
+
+/// Like [`init`], overriding the runtime's configured
+/// [`CompletionMode`] — used by benches and tests comparing the two
+/// notification pipelines on one cluster configuration.
+///
+/// In polling mode this registers the ticket-scan service with the
+/// rank's runtime (hinted: with no tickets in flight the leader parks).
+/// In callback mode no service is registered at all — completions are
+/// pushed by request continuations.
+pub fn init_with_mode(
+    comm: &Comm,
+    rt: &Runtime,
+    requested: ThreadLevel,
+    mode: CompletionMode,
+) -> Tampi {
     let enabled = requested == ThreadLevel::TaskMultiple;
     let state = Arc::new(TampiState {
         rt: rt.downgrade(),
+        mode,
         tickets: Mutex::new(Vec::new()),
-        n_block_tickets: AtomicU64::new(0),
-        n_event_tickets: AtomicU64::new(0),
+        n_block: AtomicU64::new(0),
+        n_event: AtomicU64::new(0),
         n_immediate: AtomicU64::new(0),
+        n_poll_delivered: AtomicU64::new(0),
+        n_callback_delivered: AtomicU64::new(0),
     });
-    if enabled {
+    if enabled && mode == CompletionMode::Polling {
         let st = state.clone();
         // Hinted: the pending-ticket count drives the leader; with no
         // tickets in flight the leader parks (zero polling events).
-        rt.register_polling_service_hinted("tampi", Box::new(move || {
-            st.poll();
-            false // permanent service
-        }));
+        rt.register_polling_service_hinted(
+            "tampi",
+            Box::new(move || {
+                st.poll();
+                false // permanent service
+            }),
+        );
     }
     Tampi { comm: comm.clone(), state, enabled }
 }
@@ -148,6 +232,11 @@ impl Tampi {
         self.enabled
     }
 
+    /// Which completion-notification pipeline this handle uses.
+    pub fn mode(&self) -> CompletionMode {
+        self.state.mode
+    }
+
     pub fn comm(&self) -> &Comm {
         &self.comm
     }
@@ -156,12 +245,25 @@ impl Tampi {
         nanos::api::in_task()
     }
 
-    /// (immediate completions, blocking tickets, event tickets).
+    /// (immediate completions, blocking-path operations, event-path
+    /// operations).
     pub fn stats(&self) -> (u64, u64, u64) {
         (
             self.state.n_immediate.load(Ordering::Relaxed),
-            self.state.n_block_tickets.load(Ordering::Relaxed),
-            self.state.n_event_tickets.load(Ordering::Relaxed),
+            self.state.n_block.load(Ordering::Relaxed),
+            self.state.n_event.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Per-pipeline delivery counts: (retired by the poll-scan, delivered
+    /// by request continuations). Covers the intercepted point-to-point
+    /// primitives and `iwait`/`iwaitall` event bindings; the internal
+    /// waits of task-aware collectives are not counted (they run through
+    /// [`task_aware_wait_all`], which has no handle state).
+    pub fn mode_stats(&self) -> (u64, u64) {
+        (
+            self.state.n_poll_delivered.load(Ordering::Relaxed),
+            self.state.n_callback_delivered.load(Ordering::Relaxed),
         )
     }
 
@@ -173,17 +275,23 @@ impl Tampi {
             self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        self.state.n_block_tickets.fetch_add(1, Ordering::Relaxed);
+        self.state.n_block.fetch_add(1, Ordering::Relaxed);
         let ctx = nanos::get_current_blocking_context();
-        self.state
-            .push_ticket(Ticket::Block { reqs: pending, ctx: ctx.clone() });
+        match self.state.mode {
+            CompletionMode::Polling => {
+                self.state.push_ticket(Ticket::Block { reqs: pending, ctx: ctx.clone() });
+            }
+            CompletionMode::Callback => {
+                attach_countdown_unblock(&pending, &ctx, Some(&self.state));
+            }
+        }
         nanos::block_current_task(&ctx);
     }
 
     // ----- blocking mode (Section 6.1): intercepted blocking primitives -----
 
     /// Task-aware `MPI_Recv` (Fig 3): inside a task with TAMPI enabled the
-    /// call becomes irecv + test + ticket + pause; otherwise PMPI_Recv.
+    /// call becomes irecv + test + notify + pause; otherwise PMPI_Recv.
     pub fn recv<T: Pod>(&self, buf: &mut [T], src: i32, tag: i32) -> Status {
         if !self.enabled || !self.in_task() {
             return self.comm.recv(buf, src, tag);
@@ -237,12 +345,14 @@ impl Tampi {
         self.block_on(reqs.to_vec());
     }
 
-    /// Task-aware `MPI_Barrier` (collectives are intercepted too).
+    /// Task-aware `MPI_Barrier` (collectives are intercepted too). The
+    /// collective's internal waits use this handle's completion mode.
     pub fn barrier(&self) {
         if !self.enabled || !self.in_task() {
             return self.comm.barrier();
         }
-        self.comm.barrier_with(crate::rmpi::collectives::WaitMode::TaskAware);
+        let wm = crate::rmpi::collectives::WaitMode::TaskAware(Some(self.state.mode));
+        self.comm.barrier_with(wm);
     }
 
     /// Task-aware `MPI_Allreduce`.
@@ -250,8 +360,8 @@ impl Tampi {
         if !self.enabled || !self.in_task() {
             return self.comm.allreduce(buf, op);
         }
-        self.comm
-            .allreduce_with(buf, op, crate::rmpi::collectives::WaitMode::TaskAware);
+        let wm = crate::rmpi::collectives::WaitMode::TaskAware(Some(self.state.mode));
+        self.comm.allreduce_with(buf, op, wm);
     }
 
     // ----- non-blocking mode (Section 6.2): TAMPI_Iwait / TAMPI_Iwaitall -----
@@ -260,23 +370,13 @@ impl Tampi {
     /// task's dependency release. Returns immediately; the buffers tied to
     /// `req` may only be consumed by successor tasks.
     pub fn iwait(&self, req: &Request) {
-        if !self.enabled || !self.in_task() {
-            // Paper fallback: PMPI_Wait.
-            return req.wait(self.comm.clock());
-        }
-        if req.test() {
-            self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
-            return;
-        }
-        let ec = nanos::get_current_event_counter();
-        nanos::increase_current_task_event_counter(&ec, 1);
-        self.state.n_event_tickets.fetch_add(1, Ordering::Relaxed);
-        self.state.push_ticket(Ticket::Event { req: req.clone(), ec });
+        self.iwaitall(std::slice::from_ref(req));
     }
 
     /// `TAMPI_Iwaitall` (Fig 5).
     pub fn iwaitall(&self, reqs: &[Request]) {
         if !self.enabled || !self.in_task() {
+            // Paper fallback: PMPI_Waitall.
             return Request::wait_all(self.comm.clock(), reqs);
         }
         let pending: Vec<&Request> = reqs.iter().filter(|r| !r.test()).collect();
@@ -285,11 +385,26 @@ impl Tampi {
             return;
         }
         let ec = nanos::get_current_event_counter();
+        // Bind the events BEFORE attaching/filing: a continuation may
+        // fire inline (its request completed concurrently), and the
+        // decrease must never precede the increase.
         nanos::increase_current_task_event_counter(&ec, pending.len() as u32);
         for r in pending {
-            self.state.n_event_tickets.fetch_add(1, Ordering::Relaxed);
-            self.state
-                .push_ticket(Ticket::Event { req: (*r).clone(), ec: ec.clone() });
+            self.state.n_event.fetch_add(1, Ordering::Relaxed);
+            match self.state.mode {
+                CompletionMode::Polling => {
+                    self.state
+                        .push_ticket(Ticket::Event { req: (*r).clone(), ec: ec.clone() });
+                }
+                CompletionMode::Callback => {
+                    let st = self.state.clone();
+                    let ec = ec.clone();
+                    r.on_complete(move |_| {
+                        st.record_delivery(true, &ec.0.label, ec.0.id);
+                        nanos::decrease_task_event_counter(&ec, 1);
+                    });
+                }
+            }
         }
     }
 
@@ -301,10 +416,55 @@ impl Tampi {
     }
 }
 
+/// Callback-pipeline core: attach a shared-countdown continuation to
+/// every pending request; the last completing request performs the
+/// single unblock. A request that completed between the caller's
+/// pending-filter and this attach runs its continuation inline on the
+/// calling thread; if that makes the countdown hit zero here, the early
+/// unblock is consumed by the caller's `block_current_task` (no pause
+/// happens). `state`, when present, records the delivery for
+/// [`Tampi::mode_stats`] and the `CompletionDelivered` trace.
+fn attach_countdown_unblock(
+    pending: &[Request],
+    ctx: &BlockingContext,
+    state: Option<&Arc<TampiState>>,
+) {
+    let remaining = Arc::new(AtomicUsize::new(pending.len()));
+    for r in pending {
+        let remaining = remaining.clone();
+        let ctx = ctx.clone();
+        let st = state.cloned();
+        r.on_complete(move |_| {
+            if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                if let Some(st) = &st {
+                    st.record_delivery(true, &ctx.0.task_label, ctx.0.task_id);
+                }
+                nanos::unblock_task(&ctx);
+            }
+        });
+    }
+}
+
 /// Task-aware waitall used by collective algorithms running under
 /// [`crate::rmpi::collectives::WaitMode::TaskAware`]. Outside a task this
 /// degrades to a parking wait.
+///
+/// Uses the runtime's configured [`CompletionMode`]: continuations with a
+/// shared countdown (callback mode), or a transient one-shot polling
+/// service (polling mode; works even without a [`Tampi`] handle).
 pub fn task_aware_wait_all(comm: &Comm, reqs: &[Request]) {
+    task_aware_wait_all_with(comm, reqs, None)
+}
+
+/// [`task_aware_wait_all`] with an optional completion-mode override
+/// (`Some` pins the pipeline — used by `WaitMode::TaskAware` waits issued
+/// through a [`Tampi`] handle so per-handle overrides govern collectives
+/// too; `None` follows the runtime's configured mode).
+pub(crate) fn task_aware_wait_all_with(
+    comm: &Comm,
+    reqs: &[Request],
+    mode_override: Option<CompletionMode>,
+) {
     if !nanos::api::in_task() {
         return Request::wait_all(comm.clock(), reqs);
     }
@@ -312,22 +472,30 @@ pub fn task_aware_wait_all(comm: &Comm, reqs: &[Request]) {
     if pending.is_empty() {
         return;
     }
-    // A transient ticket served by a self-registered one-shot polling
-    // service on the current runtime (works even without a Tampi handle).
     let rt = nanos::api::current_runtime().expect("task without runtime");
     let ctx = nanos::get_current_blocking_context();
-    let ctx2 = ctx.clone();
-    let reqs2 = pending.clone();
-    rt.register_polling_service(
-        "tampi-collective-wait",
-        Box::new(move || {
-            if reqs2.iter().all(|r| r.test()) {
-                nanos::unblock_task(&ctx2);
-                true // one-shot: unregister
-            } else {
-                false
-            }
-        }),
-    );
+    match mode_override.unwrap_or_else(|| rt.completion_mode()) {
+        CompletionMode::Callback => {
+            // No TampiState here: collective internal waits are not
+            // counted in mode_stats (see its docs) — this path also
+            // serves WaitMode::TaskAware users without any handle.
+            attach_countdown_unblock(&pending, &ctx, None);
+        }
+        CompletionMode::Polling => {
+            let ctx2 = ctx.clone();
+            let reqs2 = pending.clone();
+            rt.register_polling_service(
+                "tampi-collective-wait",
+                Box::new(move || {
+                    if reqs2.iter().all(|r| r.test()) {
+                        nanos::unblock_task(&ctx2);
+                        true // one-shot: unregister
+                    } else {
+                        false
+                    }
+                }),
+            );
+        }
+    }
     nanos::block_current_task(&ctx);
 }

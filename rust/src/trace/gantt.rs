@@ -38,8 +38,14 @@ pub fn render_gantt(records: &[Record], width: usize) -> String {
     let span = (t1 - t0) as f64;
 
     // Build per-lane interval lists by replaying events in time order.
+    // Annotation records are not lane occupancy — they may be stamped
+    // from non-worker threads (the polling leader, the clock thread),
+    // which must not create lanes.
     let mut by_lane: BTreeMap<(u32, u32), Vec<&Record>> = BTreeMap::new();
     for r in records {
+        if r.kind.is_annotation() {
+            continue;
+        }
         by_lane.entry((r.rank, r.worker)).or_default().push(r);
     }
 
@@ -104,6 +110,11 @@ pub fn busy_fraction(records: &[Record]) -> BTreeMap<u32, f64> {
     let t1 = records.iter().map(|r| r.t).max().unwrap().max(t0 + 1);
     let mut by_lane: BTreeMap<(u32, u32), Vec<&Record>> = BTreeMap::new();
     for r in records {
+        // Annotation records (possibly off-worker) are not lanes; a
+        // phantom lane would inflate the per-rank denominator below.
+        if r.kind.is_annotation() {
+            continue;
+        }
         by_lane.entry((r.rank, r.worker)).or_default().push(r);
     }
     for ((rank, _), evs) in &by_lane {

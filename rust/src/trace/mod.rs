@@ -30,11 +30,24 @@ pub enum EventKind {
     MpiStart,
     /// Leaving an MPI primitive.
     MpiEnd,
+    /// A completed MPI operation's notification reached the runtime: a
+    /// request continuation fired (callback mode) or the poll-scan
+    /// retired the ticket (polling mode). Stamped at delivery time, so
+    /// the gap to the task's `TaskUnblock` shows the notification
+    /// latency of each completion pipeline.
+    CompletionDelivered,
     /// Free-form phase marker (e.g. "iteration 3").
     Phase,
 }
 
 impl EventKind {
+    /// Annotation kinds are point events that may be stamped from
+    /// non-worker threads (`Record::worker` is then the `u32::MAX`
+    /// sentinel); lane-building trace consumers must skip them.
+    pub fn is_annotation(self) -> bool {
+        matches!(self, EventKind::CompletionDelivered)
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             EventKind::TaskStart => "task_start",
@@ -44,6 +57,7 @@ impl EventKind {
             EventKind::TaskResumeGrant => "resume_grant",
             EventKind::MpiStart => "mpi_start",
             EventKind::MpiEnd => "mpi_end",
+            EventKind::CompletionDelivered => "completion_delivered",
             EventKind::Phase => "phase",
         }
     }
@@ -54,6 +68,11 @@ impl EventKind {
 pub struct Record {
     pub t: VNanos,
     pub rank: u32,
+    /// Worker lane within the rank. `u32::MAX` is a sentinel meaning
+    /// "not a worker thread" — used by annotation records (currently
+    /// [`EventKind::CompletionDelivered`]) stamped from the clock
+    /// thread, the polling leader, or a rank main. Lane-building
+    /// consumers must skip annotation kinds (see `gantt.rs`).
     pub worker: u32,
     pub kind: EventKind,
     pub label: String,

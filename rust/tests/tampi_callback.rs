@@ -1,0 +1,263 @@
+//! Completion-callback notification pipeline: request continuations
+//! replacing TAMPI's poll-scan tickets.
+//!
+//! Covers the `rmpi` continuation primitive itself, the TAMPI callback
+//! mode built on it, and mode equivalence (polling vs callback must
+//! produce identical MPI-visible results — only notification latency
+//! differs).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::nanos::{self, CompletionMode, Mode};
+use tampi_repro::rmpi::{ClusterConfig, Status, ThreadLevel, Universe, ANY_SOURCE};
+use tampi_repro::sim::{ms, us};
+use tampi_repro::tampi;
+
+fn cfg_with_mode(nodes: usize, cores: usize, mode: CompletionMode) -> ClusterConfig {
+    ClusterConfig::new(nodes, 1, cores).with_completion_mode(mode)
+}
+
+#[test]
+fn continuation_attached_after_completion_fires_inline() {
+    Universe::run(ClusterConfig::new(2, 1, 0), |ctx| {
+        if ctx.rank == 0 {
+            let mut b = [0i32; 2];
+            let r = ctx.comm.irecv(&mut b, 1, 7);
+            r.wait(&ctx.clock);
+            // Attach after completion: must run inline with final status.
+            let fired = Arc::new(AtomicU32::new(0));
+            let f2 = fired.clone();
+            r.on_complete(move |st| {
+                assert_eq!((st.source, st.tag, st.bytes), (1, 7, 8));
+                f2.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(fired.load(Ordering::Relaxed), 1, "must fire inline");
+            assert_eq!(b, [5, 6]);
+        } else {
+            ctx.comm.send(&[5i32, 6], 0, 7);
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn continuation_fires_at_the_virtual_completion_instant() {
+    let fired_at = Arc::new(AtomicU64::new(0));
+    let f2 = fired_at.clone();
+    Universe::run(ClusterConfig::new(2, 1, 0), move |ctx| {
+        if ctx.rank == 0 {
+            let mut b = [0u8];
+            let r = ctx.comm.irecv(&mut b, 1, 0);
+            let clock = ctx.clock.clone();
+            let f = f2.clone();
+            r.on_complete(move |st| {
+                assert_eq!(st.bytes, 1);
+                f.store(clock.now(), Ordering::Release);
+            });
+            r.wait(&ctx.clock);
+        } else {
+            ctx.clock.sleep(ms(4));
+            ctx.comm.send(&[1u8], 0, 0);
+        }
+    })
+    .unwrap();
+    let t = fired_at.load(Ordering::Acquire);
+    assert!(t >= ms(4), "continuation fired at {t} ns, before the message existed");
+    assert!(t < ms(5), "continuation fired at {t} ns, long after arrival");
+}
+
+#[test]
+fn mixed_immediate_and_deferred_iwaitall_under_callback_mode() {
+    let done_t = Arc::new(AtomicU64::new(0));
+    let d2 = done_t.clone();
+    let stats = Universe::run(
+        cfg_with_mode(3, 1, CompletionMode::Callback),
+        move |ctx| {
+            let rt = ctx.rt.as_ref().unwrap();
+            let t = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            assert_eq!(t.mode(), CompletionMode::Callback);
+            if ctx.rank == 0 {
+                // Let rank 1's eager message arrive before the task posts
+                // its receive: one request of the iwaitall is then already
+                // complete (immediate), the other still in flight.
+                ctx.clock.sleep(ms(2));
+                let bufs: Arc<Mutex<([i32; 1], [i32; 1])>> =
+                    Arc::new(Mutex::new(([0], [0])));
+                let obj = rt.dep("bufs");
+                let (t1, b1) = (t.clone(), bufs.clone());
+                rt.task().dep(&obj, Mode::Out).spawn(move || {
+                    let mut g = b1.lock().unwrap();
+                    let (ref mut a, ref mut b) = *g;
+                    let r1 = t1.comm().irecv(a, 1, 0);
+                    let r2 = t1.comm().irecv(b, 2, 0);
+                    drop(g);
+                    assert!(r1.test(), "rank 1's message must already be here");
+                    assert!(!r2.test(), "rank 2's message must still be in flight");
+                    t1.iwaitall(&[r1, r2]);
+                });
+                let (d, b2) = (d2.clone(), bufs.clone());
+                rt.task().dep(&obj, Mode::In).spawn(move || {
+                    let g = b2.lock().unwrap();
+                    assert_eq!((g.0[0], g.1[0]), (111, 222));
+                    d.store(nanos::current_clock().now(), Ordering::Release);
+                });
+            } else if ctx.rank == 1 {
+                ctx.comm.send(&[111i32], 0, 0);
+            } else {
+                ctx.clock.sleep(ms(8));
+                ctx.comm.send(&[222i32], 0, 0);
+            }
+        },
+    )
+    .unwrap();
+    assert!(done_t.load(Ordering::Acquire) >= ms(8), "release gated by the slow request");
+    assert_eq!(stats.pauses, 0, "non-blocking mode must not pause tasks");
+}
+
+#[test]
+fn wildcard_source_recv_under_callback_mode() {
+    let seen: Arc<Mutex<Option<Status>>> = Arc::new(Mutex::new(None));
+    let s2 = seen.clone();
+    let stats = Universe::run(
+        cfg_with_mode(2, 1, CompletionMode::Callback),
+        move |ctx| {
+            let rt = ctx.rt.as_ref().unwrap();
+            let t = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            if ctx.rank == 0 {
+                let (t1, s) = (t.clone(), s2.clone());
+                rt.task().label("recv-any").spawn(move || {
+                    let mut b = [0i32; 3];
+                    let st = t1.recv(&mut b, ANY_SOURCE, 5);
+                    assert_eq!(b, [7, 8, 9]);
+                    *s.lock().unwrap() = Some(st);
+                });
+            } else {
+                ctx.clock.sleep(ms(3));
+                ctx.comm.send(&[7i32, 8, 9], 0, 5);
+            }
+        },
+    )
+    .unwrap();
+    let st = seen.lock().unwrap().expect("recv task must have run");
+    assert_eq!((st.source, st.tag, st.bytes), (1, 5, 12));
+    assert!(stats.pauses >= 1, "the recv task must have paused until delivery");
+}
+
+/// One mixed scenario (wildcard + specific sources, varied sizes and
+/// delays), returning the MPI-visible outcome: per-tag `Status` plus
+/// received payload sums, and the per-pipeline delivery counts.
+fn mixed_scenario(mode: CompletionMode) -> (Vec<(i32, i32, usize, i64)>, u64, u64) {
+    const N: usize = 6;
+    let results: Arc<Mutex<Vec<(i32, i32, usize, i64)>>> =
+        Arc::new(Mutex::new(vec![(0, 0, 0, 0); N]));
+    let deliveries = Arc::new((AtomicU64::new(0), AtomicU64::new(0)));
+    let (r2, d2) = (results.clone(), deliveries.clone());
+    Universe::run(cfg_with_mode(3, 2, mode), move |ctx| {
+        let rt = ctx.rt.as_ref().unwrap();
+        let t = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+        if ctx.rank == 0 {
+            for i in 0..N {
+                let (t1, res) = (t.clone(), r2.clone());
+                rt.task().label(format!("recv{i}")).spawn(move || {
+                    let mut b = vec![0i32; i + 1];
+                    // Even tags come from rank 1 and use a wildcard
+                    // source; odd tags name rank 2 explicitly.
+                    let src = if i % 2 == 0 { ANY_SOURCE } else { 2 };
+                    let st = t1.recv(&mut b, src, i as i32);
+                    let sum: i64 = b.iter().map(|&x| x as i64).sum();
+                    res.lock().unwrap()[i] = (st.source, st.tag, st.bytes, sum);
+                });
+            }
+            rt.taskwait();
+            let (poll, cb) = t.mode_stats();
+            d2.0.store(poll, Ordering::Release);
+            d2.1.store(cb, Ordering::Release);
+        } else {
+            // rank 1 owns even tags, rank 2 odd tags; staggered sends.
+            let first = if ctx.rank == 1 { 0 } else { 1 };
+            for i in (first..N).step_by(2) {
+                ctx.clock.sleep(ms(1));
+                let payload = vec![i as i32; i + 1];
+                ctx.comm.send(&payload, 0, i as i32);
+            }
+        }
+    })
+    .unwrap();
+    let out = results.lock().unwrap().clone();
+    (
+        out,
+        deliveries.0.load(Ordering::Acquire),
+        deliveries.1.load(Ordering::Acquire),
+    )
+}
+
+#[test]
+fn polling_and_callback_modes_produce_identical_results() {
+    let (poll_out, poll_by_scan, poll_by_cb) = mixed_scenario(CompletionMode::Polling);
+    let (cb_out, cb_by_scan, cb_by_cb) = mixed_scenario(CompletionMode::Callback);
+    assert_eq!(poll_out, cb_out, "MPI-visible results must not depend on the pipeline");
+    for (i, (source, tag, bytes, sum)) in poll_out.iter().enumerate() {
+        let want_src = if i % 2 == 0 { 1 } else { 2 };
+        assert_eq!(*source, want_src, "tag {i}");
+        assert_eq!(*tag, i as i32);
+        assert_eq!(*bytes, (i + 1) * 4);
+        assert_eq!(*sum, (i * (i + 1)) as i64);
+    }
+    // Each pipeline must have delivered through its own path only.
+    assert_eq!(poll_by_cb, 0, "polling mode must not use continuations");
+    assert!(poll_by_scan > 0, "polling mode must retire tickets via the scan");
+    assert_eq!(cb_by_scan, 0, "callback mode must not poll-scan");
+    assert!(cb_by_cb > 0, "callback mode must deliver via continuations");
+}
+
+// The virtual-time completion→resume latency scenario lives in
+// `tampi_repro::bench::completion_latency_ns` (shared with
+// `benches/micro_runtime.rs` so the calibrated setup exists once).
+
+#[test]
+fn per_handle_polling_override_governs_collectives_on_a_callback_runtime() {
+    // init_with_mode pins the pipeline per handle; the override must also
+    // reach the handle's collective waits (WaitMode::TaskAware carries it).
+    let n = 4;
+    let sum = Arc::new(AtomicU32::new(0));
+    let s2 = sum.clone();
+    Universe::run(
+        cfg_with_mode(n, 1, CompletionMode::Callback),
+        move |ctx| {
+            let rt = ctx.rt.as_ref().unwrap();
+            let t = tampi::init_with_mode(
+                &ctx.comm,
+                rt,
+                ThreadLevel::TaskMultiple,
+                CompletionMode::Polling,
+            );
+            assert_eq!(t.mode(), CompletionMode::Polling);
+            let rank = ctx.rank;
+            let s = s2.clone();
+            rt.task().label("coll").spawn(move || {
+                t.barrier();
+                let mut v = [rank as u64];
+                t.allreduce(&mut v, |a, b| a[0] += b[0]);
+                s.fetch_add(v[0] as u32, Ordering::Relaxed);
+            });
+        },
+    )
+    .unwrap();
+    assert_eq!(sum.load(Ordering::Relaxed), 6 * n as u32);
+}
+
+#[test]
+fn callback_mode_retires_recv_in_under_one_poll_interval() {
+    let cb = tampi_repro::bench::completion_latency_ns(CompletionMode::Callback);
+    let poll = tampi_repro::bench::completion_latency_ns(CompletionMode::Polling);
+    assert!(
+        cb < us(50),
+        "callback-mode completion-to-resume latency {cb} ns must be under one \
+         poll_interval (50 us)"
+    );
+    assert!(
+        cb <= poll,
+        "callback mode ({cb} ns) must not be slower than the poll-scan ({poll} ns)"
+    );
+}
