@@ -1,0 +1,15 @@
+//! cargo bench target regenerating extension Figure 15: completion→resume
+//! notification latency (poll-scan vs callback continuations, direct vs
+//! sharded delivery) plus the same-instant completion-wave delivery-cost
+//! table. Scale via TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig15_report(scale);
+    println!("{report}");
+    bench::write_output("fig15_completion_latency.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -4,12 +4,17 @@
 //!
 //! Hand-rolled harness (the offline registry has no criterion); each
 //! benchmark reports ns/op over enough iterations to stabilize.
+//!
+//! CLI: `cargo bench --bench micro_runtime -- --delivery direct|sharded`
+//! restricts the completion-wave section to one delivery mode (default:
+//! both, with the O(shards)-vs-O(N) lock-traffic assertions).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use tampi_repro::nanos::{self, CompletionMode, Mode, Runtime, RuntimeConfig};
+use tampi_repro::progress::DeliveryMode;
 use tampi_repro::rmpi::{ClusterConfig, ThreadLevel, Universe};
 use tampi_repro::sim::{us, Clock};
 use tampi_repro::tampi;
@@ -47,6 +52,25 @@ fn with_rt(cores: usize, f: impl FnOnce(&Runtime) + Send + 'static) {
     rt.shutdown();
     clock.stop();
     h.join().unwrap();
+}
+
+/// Which delivery modes the wave section runs (`--delivery` CLI).
+fn delivery_filter() -> Vec<DeliveryMode> {
+    let args: Vec<String> = std::env::args().collect();
+    match args
+        .iter()
+        .position(|a| a == "--delivery")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+    {
+        Some("direct") => vec![DeliveryMode::Direct],
+        Some("sharded") => vec![DeliveryMode::Sharded],
+        Some(other) => {
+            eprintln!("unknown --delivery {other} (direct|sharded)");
+            std::process::exit(2);
+        }
+        None => vec![DeliveryMode::Direct, DeliveryMode::Sharded],
+    }
 }
 
 fn main() {
@@ -217,4 +241,69 @@ fn main() {
         "callback mode is {:.1}x faster to notify (poll_interval = 50 us)",
         poll_ns as f64 / cb_ns.max(1) as f64
     );
+
+    println!("--- sharded progress engine: same-instant completion wave ---");
+    // N tasks on rank 0 each blocked on its own recv; rank 1 launches all
+    // N messages in one virtual instant. The delivery stats expose the
+    // scheduler-lock traffic of the resume burst: O(N) acquisitions under
+    // Direct (PR-1 baseline), O(shards) under Sharded — identical virtual
+    // makespan either way (bench::completion_wave).
+    let n = 256usize;
+    let modes = delivery_filter();
+    let mut results: Vec<(DeliveryMode, tampi_repro::bench::WaveStats)> = Vec::new();
+    for &mode in &modes {
+        let wall = Instant::now();
+        let w = tampi_repro::bench::completion_wave(n, mode);
+        println!(
+            "wave N={n} [{mode:?}]: resume_lock_ops={} batches={} max_batch={} \
+             vtime={} us ({:.2} s wall)",
+            w.resume_lock_ops,
+            w.delivery_batches,
+            w.max_batch,
+            w.vtime_ns / 1_000,
+            wall.elapsed().as_secs_f64()
+        );
+        results.push((mode, w));
+    }
+    for (mode, w) in &results {
+        match mode {
+            DeliveryMode::Direct => {
+                assert!(
+                    w.resume_lock_ops >= n as u64,
+                    "Direct delivery must take the scheduler lock O(N) times \
+                     (got {} for N={n})",
+                    w.resume_lock_ops
+                );
+                assert_eq!(w.delivery_batches, 0, "no shard batches under Direct");
+            }
+            DeliveryMode::Sharded => {
+                // One bulk enqueue for the wave's shard, plus slack for
+                // any straggler batch; far below N.
+                assert!(
+                    w.resume_lock_ops <= 4,
+                    "Sharded delivery must take the scheduler lock O(shards) \
+                     times (got {} for N={n})",
+                    w.resume_lock_ops
+                );
+                assert_eq!(
+                    w.max_batch, n as u64,
+                    "the whole wave must land as one shard batch"
+                );
+                assert!(w.deliveries >= n as u64);
+            }
+        }
+    }
+    if let (Some((_, d)), Some((_, s))) = (
+        results.iter().find(|(m, _)| *m == DeliveryMode::Direct),
+        results.iter().find(|(m, _)| *m == DeliveryMode::Sharded),
+    ) {
+        assert_eq!(
+            d.vtime_ns, s.vtime_ns,
+            "delivery modes must not change virtual time"
+        );
+        println!(
+            "sharded delivery: {}x fewer resume lock acquisitions at equal vtime",
+            d.resume_lock_ops / s.resume_lock_ops.max(1)
+        );
+    }
 }

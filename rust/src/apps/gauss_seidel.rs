@@ -102,6 +102,9 @@ pub struct GsParams {
     /// TAMPI completion-notification pipeline (default: callback
     /// continuations; set `Polling` for paper-faithful figure runs).
     pub completion_mode: crate::nanos::CompletionMode,
+    /// Continuation delivery (default: sharded progress engine; set
+    /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
+    pub delivery_mode: crate::progress::DeliveryMode,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
     pub deadline: Option<VNanos>,
@@ -130,6 +133,7 @@ impl GsParams {
             net: crate::rmpi::NetworkModel::default(),
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
+            delivery_mode: crate::progress::DeliveryMode::default(),
             tracer: None,
             graph: None,
             deadline: None,
@@ -242,6 +246,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     cc.net = p.net;
     cc.poll_interval = p.poll_interval;
     cc.completion_mode = p.completion_mode;
+    cc.delivery_mode = p.delivery_mode;
     cc.tracer = p.tracer.clone();
     cc.graph = p.graph.clone();
     cc.deadline = p.deadline;

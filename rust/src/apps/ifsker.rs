@@ -79,6 +79,9 @@ pub struct IfsParams {
     /// TAMPI completion-notification pipeline (default: callback
     /// continuations; set `Polling` for paper-faithful figure runs).
     pub completion_mode: crate::nanos::CompletionMode,
+    /// Continuation delivery (default: sharded progress engine; set
+    /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
+    pub delivery_mode: crate::progress::DeliveryMode,
     pub tracer: Option<Arc<Tracer>>,
     pub deadline: Option<VNanos>,
 }
@@ -103,6 +106,7 @@ impl IfsParams {
             net: crate::rmpi::NetworkModel::default(),
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
+            delivery_mode: crate::progress::DeliveryMode::default(),
             tracer: None,
             deadline: None,
         }
@@ -168,6 +172,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     cc.net = p.net;
     cc.poll_interval = p.poll_interval;
     cc.completion_mode = p.completion_mode;
+    cc.delivery_mode = p.delivery_mode;
     cc.tracer = p.tracer.clone();
     cc.deadline = p.deadline;
     let p2 = p.clone();

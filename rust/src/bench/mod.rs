@@ -22,15 +22,31 @@ use crate::sim::ms;
 use crate::trace::{GraphRecorder, Tracer};
 
 /// Virtual-time completion→resume latency of one pending in-task recv
-/// under `mode` (the completion-pipeline micro-figure; shared by
-/// `benches/micro_runtime.rs` and `tests/tampi_callback.rs` so the
-/// calibrated scenario exists exactly once). Measured from the request's
-/// completion instant — observed by an `on_complete` continuation, which
-/// fires at that instant in every mode — to the paused task's
-/// resumption. Polling mode is bounded by the 50 us poll_interval used
-/// here; callback mode pays only the modeled resume cost. Deterministic
-/// in virtual time.
+/// under `mode` and the default delivery (the completion-pipeline
+/// micro-figure; shared by `benches/micro_runtime.rs` and
+/// `tests/tampi_callback.rs` so the calibrated scenario exists exactly
+/// once). See [`completion_latency_with`].
 pub fn completion_latency_ns(mode: crate::nanos::CompletionMode) -> u64 {
+    completion_latency_with(
+        mode,
+        crate::progress::DeliveryMode::default(),
+        crate::sim::us(50),
+    )
+}
+
+/// [`completion_latency_ns`] parameterized over the delivery mode and
+/// poll interval (the Fig 15 sweep). Measured from the request's
+/// completion instant — observed by an `on_complete` continuation, which
+/// fires at that instant in every mode (under sharded delivery it is
+/// drained at the *same* virtual instant it was deposited) — to the
+/// paused task's resumption. Polling mode is bounded by `poll_interval`;
+/// callback mode pays only the modeled resume cost, in both delivery
+/// modes. Deterministic in virtual time.
+pub fn completion_latency_with(
+    mode: crate::nanos::CompletionMode,
+    delivery: crate::progress::DeliveryMode,
+    poll_interval: u64,
+) -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     use crate::rmpi::{ClusterConfig, ThreadLevel, Universe};
@@ -39,8 +55,10 @@ pub fn completion_latency_ns(mode: crate::nanos::CompletionMode) -> u64 {
     let arrived = Arc::new(AtomicU64::new(0));
     let resumed = Arc::new(AtomicU64::new(0));
     let (a2, r2) = (arrived.clone(), resumed.clone());
-    let mut cfg = ClusterConfig::new(2, 1, 1).with_completion_mode(mode);
-    cfg.poll_interval = us(50);
+    let mut cfg = ClusterConfig::new(2, 1, 1)
+        .with_completion_mode(mode)
+        .with_delivery_mode(delivery);
+    cfg.poll_interval = poll_interval.max(us(1));
     Universe::run(cfg, move |ctx| {
         let rt = ctx.rt.as_ref().unwrap();
         let tm = crate::tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
@@ -67,6 +85,173 @@ pub fn completion_latency_ns(mode: crate::nanos::CompletionMode) -> u64 {
     let (a, r) = (arrived.load(Ordering::Relaxed), resumed.load(Ordering::Relaxed));
     assert!(a > 0 && r >= a, "latency bookkeeping broken: arrived={a} resumed={r}");
     r - a
+}
+
+/// Delivery-path cost of one same-instant completion wave.
+#[derive(Clone, Copy, Debug)]
+pub struct WaveStats {
+    /// Requests in the wave (= blocked tasks resumed by it).
+    pub n: usize,
+    /// Scheduler queue-lock acquisitions that inserted resumes:
+    /// O(n) under direct delivery, O(shards) under sharded delivery.
+    pub resume_lock_ops: u64,
+    /// Shard batches drained (0 under direct delivery).
+    pub delivery_batches: u64,
+    /// Continuations delivered through shards (0 under direct).
+    pub deliveries: u64,
+    /// Largest single batch (= n when the wave lands as one batch).
+    pub max_batch: u64,
+    /// Virtual makespan — identical across delivery modes.
+    pub vtime_ns: u64,
+}
+
+/// Run a same-instant N-request completion wave under `delivery` and
+/// report the delivery-path stats (the acceptance scenario of the
+/// sharded progress engine; shared by `benches/micro_runtime.rs`, the
+/// fig15 harness and `tests/progress_sharded.rs`).
+///
+/// Rank 0 spawns `n` tasks, each pausing in a task-aware recv of its own
+/// tag; rank 1 first sleeps so every receive is posted and every task
+/// paused, then launches all `n` eager isends back-to-back — zero
+/// virtual time between them, so all completions land at one virtual
+/// instant. Under `Direct` each of the `n` continuations takes the
+/// scheduler lock for its resume; under `Sharded` the wave is drained as
+/// one batch on rank 0's shard and bulk-enqueued with a single lock
+/// acquisition. Virtual time is identical either way.
+pub fn completion_wave(n: usize, delivery: crate::progress::DeliveryMode) -> WaveStats {
+    use crate::rmpi::{ClusterConfig, ThreadLevel, Universe};
+
+    let cfg = ClusterConfig::new(2, 1, 2).with_delivery_mode(delivery);
+    let stats = Universe::run(cfg, move |ctx| {
+        if ctx.rank == 0 {
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = crate::tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            for i in 0..n {
+                let tm = tm.clone();
+                rt.task().label(format!("wave{i}")).spawn(move || {
+                    let mut b = [0u32];
+                    tm.recv(&mut b, 1, i as i32);
+                    assert_eq!(b[0], 1);
+                });
+            }
+            rt.taskwait();
+        } else {
+            // Let every receiver post and pause first, then launch the
+            // whole wave in one virtual instant. isend only: a blocking
+            // send would flush debt and stagger the send instants.
+            ctx.clock.sleep(ms(5));
+            let reqs: Vec<_> =
+                (0..n).map(|i| ctx.comm.isend(&[1u32], 0, i as i32)).collect();
+            for r in &reqs {
+                assert!(r.test(), "eager wave send must complete immediately");
+            }
+        }
+    })
+    .expect("completion wave scenario");
+    WaveStats {
+        n,
+        resume_lock_ops: stats.resume_lock_ops,
+        delivery_batches: stats.delivery_batches,
+        deliveries: stats.deliveries,
+        max_batch: stats.max_batch,
+        vtime_ns: stats.vtime_ns,
+    }
+}
+
+/// Fig 15 (paper extension): completion→resume notification latency of
+/// the three pipelines — poll-scan (swept over poll intervals),
+/// callback + direct delivery, callback + sharded delivery. Returns
+/// `(series, poll_interval_ns (0 = n/a), latency_ns)` rows; speedups are
+/// computed against the 50 us polling row by [`fig15_report`].
+pub fn fig15(scale: Scale) -> Vec<(String, u64, u64)> {
+    use crate::nanos::CompletionMode;
+    use crate::progress::DeliveryMode;
+    use crate::sim::us;
+
+    let intervals: Vec<u64> = match scale {
+        Scale::Quick => vec![us(50)],
+        Scale::Default => vec![us(10), us(50), us(200)],
+        Scale::Full => vec![us(10), us(50), us(200), us(1000)],
+    };
+    let mut rows = Vec::new();
+    for &pi in &intervals {
+        let lat = completion_latency_with(CompletionMode::Polling, DeliveryMode::Sharded, pi);
+        rows.push(("polling".to_string(), pi, lat));
+    }
+    rows.push((
+        "callback-direct".to_string(),
+        0,
+        completion_latency_with(CompletionMode::Callback, DeliveryMode::Direct, us(50)),
+    ));
+    rows.push((
+        "callback-sharded".to_string(),
+        0,
+        completion_latency_with(CompletionMode::Callback, DeliveryMode::Sharded, us(50)),
+    ));
+    rows
+}
+
+/// Render the full Fig 15 report: the latency table plus the
+/// same-instant completion-wave delivery-cost table (direct vs sharded).
+pub fn fig15_report(scale: Scale) -> String {
+    use crate::progress::DeliveryMode;
+    use crate::sim::us;
+
+    let rows = fig15(scale);
+    let base = rows
+        .iter()
+        .find(|(s, pi, _)| s == "polling" && *pi == us(50))
+        .map(|&(_, _, l)| l)
+        .unwrap_or(1)
+        .max(1) as f64;
+    let mut out = String::from(
+        "=== Figure 15: completion->resume notification latency (paper extension) ===\n",
+    );
+    out.push_str(&format!(
+        "{:<18} {:>9} {:>13} {:>18}\n",
+        "series", "poll_us", "latency_ns", "speedup_vs_poll50"
+    ));
+    for (series, pi, lat) in &rows {
+        let pi_s = if *pi == 0 { "-".to_string() } else { (pi / 1_000).to_string() };
+        out.push_str(&format!(
+            "{:<18} {:>9} {:>13} {:>18.1}\n",
+            series,
+            pi_s,
+            lat,
+            base / (*lat).max(1) as f64
+        ));
+    }
+
+    let n = match scale {
+        Scale::Quick => 64,
+        Scale::Default => 256,
+        Scale::Full => 1024,
+    };
+    out.push_str(&format!(
+        "\n=== same-instant completion wave (N={n}): scheduler-lock traffic ===\n"
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>16} {:>9} {:>10} {:>10}\n",
+        "delivery", "resume_lock_ops", "batches", "max_batch", "vtime_us"
+    ));
+    for (name, mode) in [
+        ("direct", DeliveryMode::Direct),
+        ("sharded", DeliveryMode::Sharded),
+    ] {
+        let w = completion_wave(n, mode);
+        out.push_str(&format!(
+            "{:<10} {:>16} {:>9} {:>10} {:>10}\n",
+            name,
+            w.resume_lock_ops,
+            w.delivery_batches,
+            w.max_batch,
+            w.vtime_ns / 1_000
+        ));
+    }
+    out.push_str(
+        "(direct: one lock acquisition per resumed task; sharded: one per shard-batch)\n",
+    );
+    out
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

@@ -12,6 +12,9 @@
 //!   matching semantics, requests and collectives,
 //! * [`tampi`] — the paper's contribution: `MPI_TASK_MULTIPLE` blocking
 //!   mode and `TAMPI_Iwait`/`TAMPI_Iwaitall` non-blocking mode (Section 6),
+//! * [`progress`] — the sharded progress engine: per-rank completion
+//!   shards, same-instant batched continuation waves, and bulk resume
+//!   enqueues into the scheduler's per-worker ready queues,
 //! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
 //!   compute kernels from `artifacts/*.hlo.txt`,
 //! * [`apps`] — the paper's two benchmarks: Gauss-Seidel (five + one
@@ -22,6 +25,7 @@
 pub mod apps;
 pub mod bench;
 pub mod nanos;
+pub mod progress;
 pub mod rmpi;
 pub mod runtime;
 pub mod sim;

@@ -3,13 +3,19 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) into bench_out/
+//!   figures   regenerate paper figures (8-14) + extension fig 15
+//!             into bench_out/
 //!   calibrate measure the compute cost model on this host
+//!
+//! `gs` and `ifsker` accept `--completion callback|poll` (notification
+//! pipeline) and `--delivery sharded|direct` (continuation delivery via
+//! the sharded progress engine vs the inline baseline).
 //!
 //! Examples:
 //!   repro gs --version interop-nonblk --rows 4096 --cols 4096 \
 //!            --block 256 --iters 50 --nodes 4 --cores 4 --compute model
-//!   repro figures --fig 9 --scale quick
+//!   repro gs --version interop-blk --delivery direct --completion poll
+//!   repro figures --fig 15 --scale quick
 //!   repro ifsker --version interop-blk --grid 65536 --nodes 2 --cores 4
 
 use std::collections::HashMap;
@@ -72,6 +78,17 @@ fn completion_of(m: &HashMap<String, String>) -> tampi_repro::nanos::CompletionM
     }
 }
 
+fn delivery_of(m: &HashMap<String, String>) -> tampi_repro::progress::DeliveryMode {
+    match m.get("delivery").map(String::as_str).unwrap_or("sharded") {
+        "sharded" => tampi_repro::progress::DeliveryMode::Sharded,
+        "direct" => tampi_repro::progress::DeliveryMode::Direct,
+        other => {
+            eprintln!("unknown --delivery {other} (direct|sharded)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_gs(m: HashMap<String, String>) {
     let version = m
         .get("version")
@@ -88,6 +105,7 @@ fn cmd_gs(m: HashMap<String, String>) {
     );
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
+    p.delivery_mode = delivery_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
@@ -154,6 +172,7 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     );
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
+    p.delivery_mode = delivery_of(&m);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
     p.tracer = tracer.clone();
@@ -221,6 +240,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                     }
                 }
             }
+            "15" => {
+                let report = bench::fig15_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig15_completion_latency.txt", &report);
+                println!("fig15 -> {}", p.display());
+            }
             other => {
                 let rows = match other {
                     "9" => bench::fig09(scale),
@@ -241,7 +266,7 @@ fn cmd_figures(m: HashMap<String, String>) {
         println!("(fig {n} took {:.1}s wall)\n", wall.elapsed().as_secs_f64());
     };
     if which == "all" {
-        for f in ["8", "9", "10", "11", "12", "13", "14"] {
+        for f in ["8", "9", "10", "11", "12", "13", "14", "15"] {
             run_fig(f);
         }
     } else {

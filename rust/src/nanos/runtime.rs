@@ -310,6 +310,15 @@ impl Runtime {
         &self.rt.clock
     }
 
+    /// Scheduler delivery-path counters: (queue-lock acquisitions that
+    /// inserted task resumes, bulk enqueues from shard-batch drains,
+    /// items stolen from other workers' local deques). The first is the
+    /// metric the sharded progress engine ([`crate::progress`]) reduces
+    /// from O(resumes) to O(shard-batches) on completion waves.
+    pub fn sched_counters(&self) -> (u64, u64, u64) {
+        self.rt.sched.counters()
+    }
+
     /// (tasks created, pauses performed, workers spawned).
     pub fn stats(&self) -> (u64, u64, usize) {
         (

@@ -1,17 +1,37 @@
-//! Ready queue + virtual-core licensing + idle-worker pool.
+//! Ready queues + virtual-core licensing + idle-worker pool.
 //!
 //! A worker must hold a *core license* to execute task code.  Pausing a
 //! task (Section 4.1 / 4.4) releases the license so another worker can
 //! pick up ready work; resuming transfers a license back to the parked
 //! thread (Nanos6's thread-leasing scheme).
+//!
+//! Ready work is held in **per-worker local deques plus a shared
+//! injector**: a worker enqueuing onto its own runtime pushes to its local
+//! deque; off-runtime threads (rank mains, the clock thread, polling
+//! leaders) and bulk resume batches from the sharded progress engine
+//! ([`crate::progress`]) land on the injector. Workers pop local-first,
+//! then the injector, then steal from the back of other locals — so a
+//! completion wave's resume burst spreads across workers without
+//! funnelling through a single queue mutex. Core licensing is unchanged:
+//! the license handshake still runs under the small `st` mutex, which no
+//! longer guards any queue.
+//!
+//! The [`DeferredEnqueue`] scope is the bulk-enqueue half of the progress
+//! engine: while a shard batch drains, `enqueue_new`/`enqueue_resume`
+//! collect items per runtime instead of inserting them, and the drain
+//! hands each runtime one [`Scheduler::enqueue_bulk`] — one queue-lock +
+//! one kick per shard-batch instead of one per continuation.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::sim::WaitQueue;
 
-use super::task::{BlockCtx, CtxState, TaskInner};
 use super::runtime::Rt;
+use super::task::{BlockCtx, CtxState, TaskInner};
+use super::worker;
 
 /// Unit of schedulable work.
 pub(crate) enum Item {
@@ -24,7 +44,6 @@ pub(crate) enum Item {
 
 pub(crate) struct SchedState {
     pub free_cores: usize,
-    pub ready: VecDeque<Item>,
     /// Workers parked on `work_q`.
     pub idle: usize,
     pub workers_total: usize,
@@ -33,8 +52,93 @@ pub(crate) struct SchedState {
 
 pub(crate) struct Scheduler {
     pub st: Mutex<SchedState>,
+    /// Shared overflow/injector queue: off-runtime pushes and bulk
+    /// resume batches land here.
+    injector: Mutex<VecDeque<Item>>,
+    /// Per-worker local deques (one slot per configured core; workers map
+    /// by `index % slots`, so substitute workers share the slot of the
+    /// core they stand in for).
+    locals: Vec<Mutex<VecDeque<Item>>>,
+    /// Total queued items across injector + locals. Push-then-increment
+    /// / pop-then-decrement, so readers may transiently see it *under*
+    /// (item pushed, count not yet bumped) or *over* (item popped, count
+    /// not yet dropped). Neither direction is load-bearing on its own:
+    /// a zero read never proves emptiness — every enqueue path calls
+    /// `kick` only after its own increment, which is what makes the
+    /// park/wake protocol in `next` lost-wakeup-free.
+    ready_len: AtomicUsize,
     pub work_q: WaitQueue,
     pub max_workers: usize,
+    /// Queue-lock acquisitions that inserted task resumes — the metric
+    /// the sharded progress engine amortizes (one per resume under
+    /// direct delivery, one per shard-batch under sharded delivery).
+    resume_lock_ops: AtomicU64,
+    /// Bulk inserts performed (shard-batch drains).
+    bulk_enqueues: AtomicU64,
+    /// Items taken from another worker's local deque.
+    steals: AtomicU64,
+}
+
+/// Deferred items grouped by target runtime.
+pub(crate) type DeferredGroups = Vec<(Arc<Rt>, Vec<Item>)>;
+
+thread_local! {
+    /// Active [`DeferredEnqueue`] scope of this thread: items grouped by
+    /// target runtime, awaiting one bulk insert each.
+    static DEFER: RefCell<Option<DeferredGroups>> = const { RefCell::new(None) };
+}
+
+/// RAII scope collecting `enqueue_new`/`enqueue_resume` calls on the
+/// current thread into per-runtime batches instead of inserting them.
+/// Used by [`crate::progress::Shard`] while draining a completion batch;
+/// finish with [`DeferredEnqueue::finish`] and hand each group to
+/// [`Scheduler::enqueue_bulk`].
+pub(crate) struct DeferredEnqueue(());
+
+impl DeferredEnqueue {
+    pub(crate) fn begin() -> DeferredEnqueue {
+        DEFER.with(|d| {
+            let mut b = d.borrow_mut();
+            assert!(b.is_none(), "nested DeferredEnqueue scopes");
+            *b = Some(Vec::new());
+        });
+        DeferredEnqueue(())
+    }
+
+    /// Close the scope and return the collected per-runtime batches.
+    pub(crate) fn finish(self) -> DeferredGroups {
+        DEFER.with(|d| d.borrow_mut().take()).unwrap_or_default()
+    }
+}
+
+impl Drop for DeferredEnqueue {
+    fn drop(&mut self) {
+        // Panic-unwind safety: never leave a stale scope on the thread.
+        DEFER.with(|d| {
+            d.borrow_mut().take();
+        });
+    }
+}
+
+/// Try to divert `item` into the thread's active deferral scope.
+/// Returns the item back when no scope is active.
+fn defer_push(rt: &Arc<Rt>, item: Item) -> Option<Item> {
+    DEFER.with(|d| {
+        let mut b = d.borrow_mut();
+        match b.as_mut() {
+            Some(groups) => {
+                if let Some((_, items)) =
+                    groups.iter_mut().find(|(r, _)| Arc::ptr_eq(r, rt))
+                {
+                    items.push(item);
+                } else {
+                    groups.push((rt.clone(), vec![item]));
+                }
+                None
+            }
+            None => Some(item),
+        }
+    })
 }
 
 impl Scheduler {
@@ -42,45 +146,141 @@ impl Scheduler {
         Scheduler {
             st: Mutex::new(SchedState {
                 free_cores: cores,
-                ready: VecDeque::new(),
                 idle: 0,
                 workers_total: 0,
                 shutdown: false,
             }),
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..cores.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            ready_len: AtomicUsize::new(0),
             work_q: WaitQueue::new(),
             max_workers,
+            resume_lock_ops: AtomicU64::new(0),
+            bulk_enqueues: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
         }
+    }
+
+    fn ready_count(&self) -> usize {
+        self.ready_len.load(Ordering::Acquire)
     }
 
     /// Enqueue a freshly-ready task.
     pub fn enqueue_new(&self, task: Arc<TaskInner>, rt: &Arc<Rt>) {
-        self.enqueue(Item::New(task), rt);
+        self.enqueue_item(Item::New(task), rt);
     }
 
     /// Enqueue a resume grant for an unblocked task.
     pub fn enqueue_resume(&self, ctx: Arc<BlockCtx>, rt: &Arc<Rt>) {
-        self.enqueue(Item::Resume(ctx), rt);
+        self.enqueue_item(Item::Resume(ctx), rt);
     }
 
-    fn enqueue(&self, item: Item, rt: &Arc<Rt>) {
+    fn enqueue_item(&self, item: Item, rt: &Arc<Rt>) {
+        // A shard drain on this thread collects instead of inserting.
+        let Some(item) = defer_push(rt, item) else { return };
+        if matches!(item, Item::Resume(_)) {
+            self.resume_lock_ops.fetch_add(1, Ordering::Relaxed);
+        }
+        self.push_item(item, rt);
         let mut g = self.st.lock().unwrap();
-        g.ready.push_back(item);
-        self.kick(&mut g, rt);
+        self.kick(&mut g, rt, 1);
     }
 
-    /// Ensure someone will serve the ready queue: wake an idle worker, or
-    /// spawn a substitute if a core is free but every worker is occupied
-    /// (all running tasks, parked in raw blocking calls, or paused).
-    fn kick(&self, g: &mut SchedState, rt: &Arc<Rt>) {
-        if g.free_cores == 0 || g.ready.is_empty() {
+    /// Insert a whole batch (a drained shard's resumes) with one queue
+    /// lock and one kick — the bulk half of the progress engine.
+    pub(crate) fn enqueue_bulk(&self, items: Vec<Item>, rt: &Arc<Rt>) {
+        if items.is_empty() {
             return;
         }
-        if g.idle > 0 {
+        let n = items.len();
+        if items.iter().any(|i| matches!(i, Item::Resume(_))) {
+            self.resume_lock_ops.fetch_add(1, Ordering::Relaxed);
+        }
+        self.bulk_enqueues.fetch_add(1, Ordering::Relaxed);
+        self.injector.lock().unwrap().extend(items);
+        self.ready_len.fetch_add(n, Ordering::AcqRel);
+        let mut g = self.st.lock().unwrap();
+        self.kick(&mut g, rt, n);
+    }
+
+    /// The local slot of the calling thread, when it is a worker of
+    /// *this* scheduler's runtime.
+    fn local_slot(&self, rt: &Arc<Rt>) -> Option<usize> {
+        let cur = worker::current_rt()?;
+        if !Arc::ptr_eq(&cur, rt) {
+            return None;
+        }
+        let w = worker::worker_id();
+        if w == usize::MAX {
+            None // attached rank main, not a worker
+        } else {
+            Some(w % self.locals.len())
+        }
+    }
+
+    fn push_item(&self, item: Item, rt: &Arc<Rt>) {
+        match self.local_slot(rt) {
+            Some(slot) => self.locals[slot].lock().unwrap().push_back(item),
+            None => self.injector.lock().unwrap().push_back(item),
+        }
+        self.ready_len.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Pop ready work for worker slot `wslot`: local deque first, then
+    /// the injector, then steal from the back of other locals.
+    fn try_pop(&self, wslot: usize) -> Option<Item> {
+        if let Some(item) = self.locals[wslot].lock().unwrap().pop_front() {
+            self.ready_len.fetch_sub(1, Ordering::AcqRel);
+            return Some(item);
+        }
+        if let Some(item) = self.injector.lock().unwrap().pop_front() {
+            self.ready_len.fetch_sub(1, Ordering::AcqRel);
+            return Some(item);
+        }
+        let n = self.locals.len();
+        for k in 1..n {
+            let victim = (wslot + k) % n;
+            if let Some(item) = self.locals[victim].lock().unwrap().pop_back() {
+                self.ready_len.fetch_sub(1, Ordering::AcqRel);
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Ensure up to `want` ready items will be served: wake idle workers,
+    /// or spawn substitutes while a core is free and every worker is
+    /// occupied (running tasks, parked in raw blocking calls, or paused).
+    fn kick(&self, g: &mut SchedState, rt: &Arc<Rt>, want: usize) {
+        let mut want = want.min(g.free_cores).min(self.ready_count());
+        if want == 0 {
+            return;
+        }
+        // Credit idle workers whether or not a token is still parked:
+        // a worker counted in `idle` whose token was already popped is
+        // mid-wakeup and will re-check the queues before re-parking, so
+        // spawning a substitute for it would only inflate the thread
+        // count (a reported metric).
+        let idle_wakes = want.min(g.idle);
+        for _ in 0..idle_wakes {
             self.work_q.notify_one(&rt.clock);
-        } else if g.workers_total < self.max_workers {
+        }
+        want -= idle_wakes;
+        // Never spawn once shutdown began: a teardown straggler (e.g. an
+        // observer continuation fired by the clock's stop-drain) may
+        // still enqueue, but creating a worker on a stopping/stopped
+        // clock would leak a thread; surviving workers drain the queues
+        // before exiting.
+        if g.shutdown {
+            return;
+        }
+        while want > 0 && g.workers_total < self.max_workers {
             g.workers_total += 1;
             super::worker::spawn_worker(rt.clone(), g.workers_total - 1);
-        } else {
+            want -= 1;
+        }
+        if want > 0 && g.idle == 0 {
             // At the substitute-worker cap with no idle worker: if every
             // worker is parked inside a paused task, nothing can serve the
             // ready queue — the runtime wedges (the thread-explosion limit
@@ -97,26 +297,33 @@ impl Scheduler {
     /// Worker main fetch: blocks (passively) until an item + core license
     /// is available, polling services opportunistically before idling
     /// (Section 4.5). Returns `None` on shutdown.
-    pub fn next(&self, rt: &Arc<Rt>) -> Option<Item> {
+    pub fn next(&self, rt: &Arc<Rt>, worker_index: usize) -> Option<Item> {
+        let wslot = worker_index % self.locals.len();
         let mut g = self.st.lock().unwrap();
         loop {
-            if g.shutdown && g.ready.is_empty() {
+            if g.shutdown && self.ready_count() == 0 {
                 return None;
             }
-            if g.free_cores > 0 {
-                if let Some(item) = g.ready.pop_front() {
-                    g.free_cores -= 1;
+            if g.free_cores > 0 && self.ready_count() > 0 {
+                g.free_cores -= 1;
+                drop(g);
+                if let Some(item) = self.try_pop(wslot) {
                     return Some(item);
                 }
+                // Raced with other workers for the last items: hand the
+                // license back and re-evaluate.
+                g = self.st.lock().unwrap();
+                g.free_cores += 1;
+                continue;
             }
             // Serve polling callbacks before letting the core go idle.
             drop(g);
             rt.polling.poll_once();
             g = self.st.lock().unwrap();
-            if g.free_cores > 0 && !g.ready.is_empty() {
+            if g.free_cores > 0 && self.ready_count() > 0 {
                 continue;
             }
-            if g.shutdown && g.ready.is_empty() {
+            if g.shutdown && self.ready_count() == 0 {
                 return None;
             }
             g.idle += 1;
@@ -134,7 +341,7 @@ impl Scheduler {
     pub fn release_core(&self, rt: &Arc<Rt>) {
         let mut g = self.st.lock().unwrap();
         g.free_cores += 1;
-        if !g.ready.is_empty() && g.idle > 0 {
+        if self.ready_count() > 0 && g.idle > 0 {
             self.work_q.notify_one(&rt.clock);
         }
     }
@@ -144,7 +351,7 @@ impl Scheduler {
     pub fn release_core_for_block(&self, rt: &Arc<Rt>) {
         let mut g = self.st.lock().unwrap();
         g.free_cores += 1;
-        self.kick(&mut g, rt);
+        self.kick(&mut g, rt, 1);
     }
 
     /// Grant the calling worker's license to a paused task's thread.
@@ -168,7 +375,17 @@ impl Scheduler {
     /// Diagnostics: (free cores, ready length, idle, total workers).
     pub fn stats(&self) -> (usize, usize, usize, usize) {
         let g = self.st.lock().unwrap();
-        (g.free_cores, g.ready.len(), g.idle, g.workers_total)
+        (g.free_cores, self.ready_count(), g.idle, g.workers_total)
+    }
+
+    /// Delivery-path counters: (resume-enqueue lock acquisitions, bulk
+    /// enqueues, work steals).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.resume_lock_ops.load(Ordering::Relaxed),
+            self.bulk_enqueues.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+        )
     }
 
     pub fn is_shutdown(&self) -> bool {

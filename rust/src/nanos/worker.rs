@@ -62,7 +62,7 @@ fn worker_main(rt: Arc<Rt>, index: usize) {
     WORKER_ID.with(|w| *w.borrow_mut() = index);
     CURRENT.with(|c| *c.borrow_mut() = Some((rt.clone(), None)));
     loop {
-        let Some(item) = rt.sched.next(&rt) else { break };
+        let Some(item) = rt.sched.next(&rt, index) else { break };
         match item {
             Item::New(task) => {
                 run_task(&rt, &task);

@@ -1,0 +1,165 @@
+//! `progress` — the sharded progress engine: completion delivery as a
+//! subsystem of its own.
+//!
+//! PR 1 replaced TAMPI's poll-scan with push continuations
+//! ([`crate::rmpi::Request::on_complete`]), but every completion still
+//! funnelled through two per-runtime globals: continuations fired inline
+//! inside [`ReqState::complete`](crate::rmpi::request::ReqState), and each
+//! resulting task resume took the scheduler mutex once. A same-instant
+//! completion wave — an alltoallv landing on a thousand-rank virtual
+//! cluster — therefore serialized on one lock, once per request.
+//!
+//! This module removes that last global serialization point with the
+//! pipeline **shard → batch → bulk-enqueue**:
+//!
+//! 1. **Per-rank completion shards** ([`Shard`]). Every request created
+//!    through a [`Comm`](crate::rmpi::Comm) on a
+//!    [`DeliveryMode::Sharded`] universe is stamped with the shard of its
+//!    *owning* rank (the rank that posted the receive / issued the send).
+//!    [`ReqState::complete`](crate::rmpi::request::ReqState) — whether it
+//!    runs inline on a rank thread or deferred on the clock thread via
+//!    `Clock::call_at` — deposits the request's continuations into that
+//!    shard instead of firing them under global state. A wildcard-source
+//!    receive is routed by its poster, not by whichever thread happens to
+//!    deliver the matching message.
+//! 2. **Batched wave delivery.** Deposits landing at the same virtual
+//!    instant accumulate in the shard; the first deposit schedules one
+//!    drain event at that instant, so a collective's completion wave is
+//!    drained as a single batch per shard (traced as
+//!    [`EventKind::BatchDelivered`](crate::trace::EventKind)).
+//! 3. **Bulk enqueue.** While a batch drains, task resumes produced by the
+//!    continuations are collected (a thread-local scope in
+//!    [`crate::nanos::scheduler`]) and handed to each runtime's scheduler
+//!    as one bulk insert that takes the scheduler lock once per
+//!    shard-batch instead of once per continuation. The scheduler's
+//!    per-worker ready deques + shared injector (work stealing) spread the
+//!    resulting burst across workers without re-serializing it.
+//!
+//! The shape follows the paper's Sections 4.1/4.4 (pause/resume is the
+//! delivery target; core licensing is preserved end-to-end) and the MPI
+//! Continuations line of work: Schuchart et al. (arXiv:2112.11978) argue
+//! completion callbacks deserve a dedicated, decoupled notification
+//! engine rather than ad-hoc firing inside the communication path, and
+//! Zhou et al., *MPI Progress For All* (arXiv:2405.13807) make the case
+//! for explicit, parallelizable progress domains — here, one domain per
+//! virtual rank.
+//!
+//! [`DeliveryMode::Direct`] preserves the PR-1 baseline (continuations
+//! fire inline at the completion point, one scheduler-lock acquisition
+//! per resume) for figure runs and A/B tests; both modes produce
+//! identical application results and identical virtual times — only the
+//! lock traffic differs (see `bench::completion_wave`).
+
+pub mod shard;
+
+use std::sync::Arc;
+
+use crate::trace::Tracer;
+
+pub use shard::{Shard, ShardStats};
+
+/// How completion continuations reach the scheduler.
+///
+/// Selectable alongside [`crate::nanos::CompletionMode`] (which chooses
+/// *whether* completions are discovered by poll-scan or pushed by
+/// continuations); this knob chooses *how* pushed continuations are
+/// delivered. Set via `ClusterConfig::delivery_mode` /
+/// `with_delivery_mode`, or `repro ... --delivery direct|sharded`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeliveryMode {
+    /// PR-1 baseline: continuations fire inline at the completion point;
+    /// every task resume takes the scheduler lock individually.
+    Direct,
+    /// Sharded progress engine: continuations are deposited into the
+    /// owning rank's shard, drained in same-instant batches, and their
+    /// resumes bulk-enqueued (one scheduler-lock acquisition per
+    /// shard-batch).
+    #[default]
+    Sharded,
+}
+
+/// Aggregate delivery statistics over all shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Batches drained (one scheduler bulk-enqueue each).
+    pub batches: u64,
+    /// Continuations delivered through shards.
+    pub delivered: u64,
+    /// Largest single batch.
+    pub max_batch: u64,
+}
+
+/// One universe's progress engine: a [`Shard`] per virtual rank (empty
+/// under [`DeliveryMode::Direct`], where requests stay unrouted and
+/// continuations fire inline).
+pub struct ProgressEngine {
+    mode: DeliveryMode,
+    shards: Vec<Arc<Shard>>,
+}
+
+impl ProgressEngine {
+    /// Build the engine for a `ranks`-rank universe. The tracer, when
+    /// present, receives one `EventKind::BatchDelivered` record per
+    /// drained batch.
+    pub fn new(
+        ranks: usize,
+        mode: DeliveryMode,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Arc<ProgressEngine> {
+        let shards = match mode {
+            DeliveryMode::Direct => Vec::new(),
+            DeliveryMode::Sharded => (0..ranks.max(1))
+                .map(|r| Arc::new(Shard::new(r as u32, tracer.clone())))
+                .collect(),
+        };
+        Arc::new(ProgressEngine { mode, shards })
+    }
+
+    pub fn mode(&self) -> DeliveryMode {
+        self.mode
+    }
+
+    /// Number of shards (0 under [`DeliveryMode::Direct`]).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `rank`'s completions; `None` under `Direct`.
+    pub(crate) fn shard_for(&self, rank: usize) -> Option<Arc<Shard>> {
+        self.shards.get(rank).cloned()
+    }
+
+    /// Delivery statistics of one rank's shard (zeros under `Direct`).
+    pub fn shard_stats(&self, rank: usize) -> ShardStats {
+        self.shards
+            .get(rank)
+            .map(|s| s.stats())
+            .unwrap_or_default()
+    }
+
+    /// Aggregate statistics across all shards.
+    pub fn stats(&self) -> EngineStats {
+        let mut agg = EngineStats::default();
+        for s in &self.shards {
+            let st = s.stats();
+            agg.batches += st.batches;
+            agg.delivered += st.delivered;
+            agg.max_batch = agg.max_batch.max(st.max_batch);
+        }
+        agg
+    }
+}
+
+impl std::fmt::Debug for ProgressEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "ProgressEngine {{ mode: {:?}, shards: {}, batches: {}, delivered: {} }}",
+            self.mode,
+            self.shards.len(),
+            s.batches,
+            s.delivered
+        )
+    }
+}

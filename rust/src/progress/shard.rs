@@ -1,0 +1,145 @@
+//! Per-rank completion shards: deposit → same-instant batch → drain.
+//!
+//! A shard owns the pending (continuation, status) pairs of one virtual
+//! rank. [`Shard::deposit`] is called by
+//! [`ReqState::complete`](crate::rmpi::request::ReqState) from whichever
+//! thread delivers the completion — a rank main, a worker, or the clock
+//! thread for deferred network deliveries. The first deposit at a given
+//! virtual instant schedules exactly one drain event *at that same
+//! instant* (`Clock::call_at` clamps to `now`), so every completion of a
+//! same-instant wave that lands before the drain fires is folded into one
+//! batch. Virtual time cannot advance past the instant while the drain
+//! event is pending, so batching never delays a notification in virtual
+//! time — it only amortizes real lock traffic.
+//!
+//! The drain runs on the clock thread: it opens a
+//! [`DeferredEnqueue`](crate::nanos::scheduler::DeferredEnqueue) scope,
+//! fires the batch's continuations (which call `nanos::unblock_task` /
+//! `decrease_task_event_counter` as usual), and then hands the collected
+//! task resumes to each runtime's scheduler as one bulk insert — the
+//! scheduler lock is taken once per shard-batch, not once per
+//! continuation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nanos::scheduler::DeferredEnqueue;
+use crate::rmpi::request::Continuation;
+use crate::rmpi::Status;
+use crate::sim::{Clock, VNanos};
+use crate::trace::{EventKind, Record, Tracer};
+
+/// Delivery statistics of one shard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Batches drained.
+    pub batches: u64,
+    /// Continuations delivered.
+    pub delivered: u64,
+    /// Largest single batch.
+    pub max_batch: u64,
+}
+
+/// One virtual rank's completion shard.
+pub struct Shard {
+    rank: u32,
+    tracer: Option<Arc<Tracer>>,
+    /// Continuations deposited but not yet drained, each with the final
+    /// status of its request. Non-empty exactly while a drain event is
+    /// pending on the clock.
+    pending: Mutex<Vec<(Continuation, Status)>>,
+    batches: AtomicU64,
+    delivered: AtomicU64,
+    max_batch: AtomicU64,
+}
+
+impl Shard {
+    pub(crate) fn new(rank: u32, tracer: Option<Arc<Tracer>>) -> Shard {
+        Shard {
+            rank,
+            tracer,
+            pending: Mutex::new(Vec::new()),
+            batches: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+        }
+    }
+
+    /// Virtual rank this shard serves.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            batches: self.batches.load(Ordering::Acquire),
+            delivered: self.delivered.load(Ordering::Acquire),
+            max_batch: self.max_batch.load(Ordering::Acquire),
+        }
+    }
+
+    /// Deposit a completed request's continuations for batched delivery.
+    /// The first deposit into an empty shard schedules one drain at the
+    /// current virtual instant; later same-instant deposits ride along.
+    pub(crate) fn deposit(self: &Arc<Self>, clock: &Clock, cbs: Vec<Continuation>, st: Status) {
+        debug_assert!(!cbs.is_empty(), "empty deposit");
+        let schedule = {
+            let mut g = self.pending.lock().unwrap();
+            let was_empty = g.is_empty();
+            g.extend(cbs.into_iter().map(|f| (f, st)));
+            was_empty
+        };
+        if schedule {
+            let shard = self.clone();
+            let at = clock.now();
+            clock.call_at(at, move || shard.drain(at));
+        }
+    }
+
+    /// Drain everything deposited for one virtual instant as one batch.
+    /// Runs on the clock thread (`Clock::call_at` contract: must not park
+    /// on sim primitives — and does not).
+    fn drain(&self, at: VNanos) {
+        let batch = std::mem::take(&mut *self.pending.lock().unwrap());
+        if batch.is_empty() {
+            return;
+        }
+        let count = batch.len() as u64;
+        // Publish stats and the trace record *before* firing: a rank
+        // thread woken by a continuation below (e.g. taskwait returning)
+        // must already observe this batch in the shard's counters.
+        self.batches.fetch_add(1, Ordering::AcqRel);
+        self.delivered.fetch_add(count, Ordering::AcqRel);
+        self.max_batch.fetch_max(count, Ordering::AcqRel);
+        if let Some(tr) = &self.tracer {
+            tr.emit(Record {
+                t: at,
+                rank: self.rank,
+                // Annotation record from the clock thread (see
+                // `trace::Record::worker` sentinel docs).
+                worker: u32::MAX,
+                kind: EventKind::BatchDelivered { shard: self.rank, count: count as u32 },
+                label: format!("{count} completions"),
+                task_id: 0,
+            });
+        }
+        let scope = DeferredEnqueue::begin();
+        for (f, st) in batch {
+            f(st);
+        }
+        for (rt, items) in scope.finish() {
+            rt.sched.enqueue_bulk(items, &rt);
+        }
+    }
+}
+
+impl std::fmt::Debug for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "Shard {{ rank: {}, batches: {}, delivered: {}, max_batch: {} }}",
+            self.rank, s.batches, s.delivered, s.max_batch
+        )
+    }
+}

@@ -5,6 +5,13 @@
 //! intercepts collective operations too, Section 6.1): `WaitMode::Park`
 //! blocks the OS thread; `WaitMode::TaskAware` routes each internal wait
 //! through `tampi`-style pause/resume (installed by the tampi module).
+//!
+//! Collective-internal requests are created through the calling rank's
+//! [`Comm`], so under [`crate::progress::DeliveryMode::Sharded`] a
+//! collective's completion wave — e.g. the `2(n-1)` requests of an
+//! alltoallv landing at one virtual instant — is delivered as *one*
+//! batch per participating rank's shard, not one scheduler-lock
+//! acquisition per request (see the `progress` module docs).
 
 use crate::nanos::CompletionMode;
 

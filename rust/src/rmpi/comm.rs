@@ -3,10 +3,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::progress::{DeliveryMode, EngineStats, ProgressEngine, ShardStats};
 use crate::sim::Clock;
 
 use super::match_engine::ContextQueues;
 use super::net::NetworkModel;
+use super::request::ReqState;
 
 /// Shared cluster state (one per [`super::Universe`]).
 pub(crate) struct UniState {
@@ -18,6 +20,9 @@ pub(crate) struct UniState {
     pub contexts: Mutex<Vec<Arc<ContextQueues>>>,
     /// (parent ctx, dup seq) -> allocated context pair.
     pub dup_map: Mutex<std::collections::HashMap<(usize, u64), (usize, usize)>>,
+    /// Completion-delivery engine (per-rank shards under
+    /// [`DeliveryMode::Sharded`]; empty under `Direct`).
+    pub progress: Arc<ProgressEngine>,
 }
 
 impl UniState {
@@ -125,5 +130,35 @@ impl Comm {
 
     pub(crate) fn next_coll_tag(&self) -> i32 {
         (self.coll_seq.fetch_add(1, Ordering::Relaxed) % (i32::MAX as u64)) as i32
+    }
+
+    /// Allocate request state for an operation *owned by this rank*,
+    /// routed through the rank's completion shard when the universe runs
+    /// sharded delivery. Every request born through a `Comm` (p2p and
+    /// collective-internal alike) goes through here, so a wildcard-source
+    /// receive is always delivered on its poster's shard no matter which
+    /// thread completes it.
+    pub(crate) fn mk_req_state(&self) -> Arc<ReqState> {
+        let s = Arc::new(ReqState::default());
+        if let Some(shard) = self.uni.progress.shard_for(self.rank) {
+            s.route_through(shard);
+        }
+        s
+    }
+
+    /// How this universe delivers completion continuations.
+    pub fn delivery_mode(&self) -> DeliveryMode {
+        self.uni.progress.mode()
+    }
+
+    /// Aggregate sharded-delivery statistics (zeros under
+    /// [`DeliveryMode::Direct`]).
+    pub fn progress_stats(&self) -> EngineStats {
+        self.uni.progress.stats()
+    }
+
+    /// Sharded-delivery statistics of one rank's shard.
+    pub fn progress_shard_stats(&self, rank: usize) -> ShardStats {
+        self.uni.progress.shard_stats(rank)
     }
 }

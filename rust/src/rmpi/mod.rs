@@ -35,6 +35,10 @@ pub use net::NetworkModel;
 pub use request::{Request, Status};
 pub use universe::{ClusterConfig, RankCtx, RunStats, Universe};
 
+/// Completion-delivery knob (defined in [`crate::progress`], re-exported
+/// here next to [`ClusterConfig`], which carries it).
+pub use crate::progress::DeliveryMode;
+
 /// Wildcard source.
 pub const ANY_SOURCE: i32 = -1;
 /// Wildcard tag.

@@ -42,8 +42,10 @@ impl Comm {
         let net = &self.uni.net;
         let arrive_at = self.uni.clock.now() + net.transfer_ns(bytes.len(), same_node);
         let rendezvous = sync || !net.is_eager(bytes.len());
+        // Rendezvous sender requests are owned by (and shard-routed to)
+        // the *sending* rank.
         let sender_req: Option<Arc<ReqState>> = if rendezvous {
-            Some(Arc::new(ReqState::default()))
+            Some(self.mk_req_state())
         } else {
             None
         };
@@ -87,7 +89,9 @@ impl Comm {
         ctx: Ctx,
     ) -> Request {
         crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
-        let req = Request::new();
+        // Owned by the posting rank: completions (wherever they are
+        // delivered from) route to this rank's shard.
+        let req = Request(self.mk_req_state());
         let bytes = as_bytes_mut(buf);
         let posted = PostedRecv {
             src: if src == ANY_SOURCE {

@@ -15,6 +15,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::progress::Shard;
 use crate::sim::{Clock, WaitQueue};
 
 /// Completion status of a receive (source/tag/len of the matched message).
@@ -41,6 +42,12 @@ pub(crate) struct ReqState {
     /// drained-and-fired by `complete` or run inline by `attach` — never
     /// both, never lost.
     on_complete: Mutex<Vec<Continuation>>,
+    /// Sharded-delivery route, stamped once at creation by
+    /// [`crate::rmpi::Comm`] on a `DeliveryMode::Sharded` universe: the
+    /// completion shard of the request's *owning* rank. `None` (bare
+    /// requests, `DeliveryMode::Direct`) fires continuations inline at
+    /// the completion point.
+    shard: Mutex<Option<Arc<Shard>>>,
 }
 
 impl ReqState {
@@ -58,10 +65,27 @@ impl ReqState {
         let cbs = std::mem::take(&mut *self.on_complete.lock().unwrap());
         if !cbs.is_empty() {
             let st = *self.status.lock().unwrap();
-            for f in cbs {
-                f(st);
+            let route = self.shard.lock().unwrap().clone();
+            match route {
+                // Sharded delivery: deposit for a same-instant batched
+                // drain on the owning rank's shard (one scheduler-lock
+                // acquisition per shard-batch; see `crate::progress`).
+                Some(shard) => shard.deposit(clock, cbs, st),
+                // Direct delivery: fire inline at the completion point.
+                None => {
+                    for f in cbs {
+                        f(st);
+                    }
+                }
             }
         }
+    }
+
+    /// Route this request's completion through `shard` (sharded
+    /// delivery). Called once, at creation, before the request can
+    /// complete.
+    pub(crate) fn route_through(&self, shard: Arc<Shard>) {
+        *self.shard.lock().unwrap() = Some(shard);
     }
 
     /// Attach a continuation; runs it inline if the request has already
@@ -134,6 +158,10 @@ impl Request {
             }
             let tok = self.0.waiters.enqueue();
             if self.test() {
+                // Completion's notify_all already drained the queue
+                // before our enqueue: sweep the stale token rather than
+                // pinning it for the request's remaining lifetime.
+                self.0.waiters.remove(&tok);
                 return;
             }
             clock.passive_wait(&tok);
@@ -157,15 +185,28 @@ impl Request {
             // One shared token enqueued on every incomplete request:
             // whichever completes first wakes us (idempotent wakes).
             let tok = crate::sim::Token::new();
+            let mut enqueued: Vec<&Request> = Vec::with_capacity(reqs.len());
             for r in reqs {
                 if !r.test() {
                     r.0.waiters.enqueue_token(tok.clone());
+                    enqueued.push(r);
                 }
             }
-            if let Some(i) = reqs.iter().position(|r| r.test()) {
+            let early = reqs.iter().position(|r| r.test());
+            if early.is_none() {
+                clock.passive_wait(&tok);
+            }
+            // Drain the stale token from every request that did not wake
+            // us: a completing request pops its own copy in `notify_all`,
+            // but without this sweep each waitany round would pin one
+            // token per still-pending request for the request's remaining
+            // lifetime (repeated waitany loops leak queue entries).
+            for r in enqueued {
+                r.0.waiters.remove(&tok);
+            }
+            if let Some(i) = early {
                 return i;
             }
-            clock.passive_wait(&tok);
         }
     }
 }
@@ -213,6 +254,30 @@ mod tests {
         let s3 = seen.clone();
         r.on_complete(move |st| s3.lock().unwrap().push(st));
         assert_eq!(seen.lock().unwrap().as_slice(), &[st, st]);
+        clock.stop();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_any_drains_stale_tokens() {
+        let (clock, h) = Clock::start();
+        clock.register_thread();
+        let a = Request::new();
+        let b = Request::new();
+        let a2 = a.clone();
+        let c2 = clock.clone();
+        clock.call_at(100, move || a2.0.complete(&c2, None));
+        let i = Request::wait_any(&clock, &[a.clone(), b.clone()]);
+        assert_eq!(i, 0);
+        // The shared token must not stay parked on the still-pending
+        // request (the continuation/token leak a repeated waitany loop
+        // would otherwise accumulate).
+        assert_eq!(b.0.waiters.len(), 0, "stale waitany token leaked");
+        assert_eq!(a.0.waiters.len(), 0);
+        // An immediately-satisfiable waitany leaves no residue either.
+        assert_eq!(Request::wait_any(&clock, &[b.clone(), a.clone()]), 1);
+        assert_eq!(b.0.waiters.len(), 0);
+        clock.deregister_thread();
         clock.stop();
         h.join().unwrap();
     }

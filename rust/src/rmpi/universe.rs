@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use crate::nanos::runtime::RuntimeCosts;
 use crate::nanos::{CompletionMode, Runtime, RuntimeConfig};
+use crate::progress::{DeliveryMode, ProgressEngine};
 use crate::sim::{Clock, VNanos};
 use crate::trace::{GraphRecorder, Tracer};
 
@@ -38,6 +39,10 @@ pub struct ClusterConfig {
     /// How TAMPI is notified of MPI completions (default: callback
     /// continuations; `Polling` is the paper-faithful baseline).
     pub completion_mode: CompletionMode,
+    /// How completion continuations are delivered (default: the sharded
+    /// progress engine; `Direct` preserves the PR-1 inline-firing
+    /// baseline). See [`crate::progress`].
+    pub delivery_mode: DeliveryMode,
 }
 
 impl ClusterConfig {
@@ -55,12 +60,19 @@ impl ClusterConfig {
             worker_stack: 512 * 1024,
             costs: RuntimeCosts::realistic(),
             completion_mode: CompletionMode::default(),
+            delivery_mode: DeliveryMode::default(),
         }
     }
 
     /// Builder-style completion-mode override (bench/test convenience).
     pub fn with_completion_mode(mut self, mode: CompletionMode) -> Self {
         self.completion_mode = mode;
+        self
+    }
+
+    /// Builder-style delivery-mode override (bench/test convenience).
+    pub fn with_delivery_mode(mut self, mode: DeliveryMode) -> Self {
+        self.delivery_mode = mode;
         self
     }
 
@@ -91,6 +103,19 @@ pub struct RunStats {
     pub pauses: u64,
     /// Total worker threads ever spawned (cores + substitutes).
     pub workers: usize,
+    /// Sharded-delivery batches drained across all shards (0 under
+    /// [`DeliveryMode::Direct`]).
+    pub delivery_batches: u64,
+    /// Continuations delivered through shards (0 under `Direct`).
+    pub deliveries: u64,
+    /// Largest single shard batch (a same-instant completion wave).
+    pub max_batch: u64,
+    /// Scheduler queue-lock acquisitions that inserted task resumes,
+    /// summed over ranks: O(resumes) under `Direct`, O(shard-batches)
+    /// under `Sharded` — the serialization the progress engine removes.
+    pub resume_lock_ops: u64,
+    /// Ready-queue items stolen across workers' local deques.
+    pub steals: u64,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
 }
@@ -166,6 +191,7 @@ impl Universe {
             node_of,
             contexts: Mutex::new(Vec::new()),
             dup_map: Mutex::new(HashMap::new()),
+            progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
         });
         {
             // World communicator owns contexts 0 (p2p) and 1 (collectives).
@@ -300,26 +326,42 @@ impl Universe {
                 for h in handles {
                     h.join().expect("rank thread panicked");
                 }
-                let mut tasks = 0;
-                let mut pauses = 0;
-                let mut workers = 0;
-                for rt in runtimes.iter().flatten() {
-                    let (t, p, w) = rt.stats();
-                    tasks += t;
-                    pauses += p;
-                    workers += w;
-                }
                 for rt in runtimes.iter().flatten() {
                     rt.shutdown();
                 }
                 clock.stop();
                 clock_handle.join().expect("clock thread panicked");
+                // Sample counters only after the clock thread exited:
+                // its stop-drain may fire final-instant shard drains
+                // (observer continuations only — every task settled
+                // before its rank declared done), and scheduler and
+                // engine counters must come from the same cut.
+                let mut tasks = 0;
+                let mut pauses = 0;
+                let mut workers = 0;
+                let mut resume_lock_ops = 0;
+                let mut steals = 0;
+                for rt in runtimes.iter().flatten() {
+                    let (t, p, w) = rt.stats();
+                    tasks += t;
+                    pauses += p;
+                    workers += w;
+                    let (rl, _bulk, st) = rt.sched_counters();
+                    resume_lock_ops += rl;
+                    steals += st;
+                }
                 let counters = counters.0.lock().unwrap().clone();
+                let pstats = uni.progress.stats();
                 Ok(RunStats {
                     vtime_ns: finish_vtime.load(Ordering::Acquire),
                     tasks,
                     pauses,
                     workers,
+                    delivery_batches: pstats.batches,
+                    deliveries: pstats.delivered,
+                    max_batch: pstats.max_batch,
+                    resume_lock_ops,
+                    steals,
                     counters,
                 })
             }

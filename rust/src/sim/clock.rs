@@ -279,7 +279,31 @@ impl Clock {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.stopped {
-                return;
+                // Fire actions already due at the current instant before
+                // exiting (e.g. sharded-delivery drains scheduled at the
+                // final instant): `stop` may race the last quiescence
+                // pass, and a straggler continuation must not be lost.
+                // Future-time events are still discarded, as before.
+                let now = self.now();
+                let mut due = Vec::new();
+                while let Some(Reverse(e)) = st.events.peek() {
+                    if e.at > now {
+                        break;
+                    }
+                    due.push(st.events.pop().unwrap().0);
+                }
+                if due.is_empty() {
+                    return;
+                }
+                drop(st);
+                for e in due {
+                    match e.action {
+                        Action::Wake(tok) => self.wake(&tok),
+                        Action::Call(f) => f(),
+                    }
+                }
+                st = self.state.lock().unwrap();
+                continue;
             }
             if self.active.load(Ordering::Acquire) == 0 {
                 // Quiescent. Fire the earliest batch or report deadlock.

@@ -67,6 +67,16 @@ impl WaitQueue {
         n
     }
 
+    /// Remove a specific (not yet woken) token from the queue, e.g. the
+    /// shared waitany token still parked on requests that did not
+    /// complete. Returns whether a copy was present.
+    pub fn remove(&self, tok: &Arc<Token>) -> bool {
+        let mut g = self.q.lock().unwrap();
+        let before = g.len();
+        g.retain(|t| !Arc::ptr_eq(t, tok));
+        g.len() != before
+    }
+
     /// Number of parked waiters (diagnostics).
     pub fn len(&self) -> usize {
         self.q.lock().unwrap().len()

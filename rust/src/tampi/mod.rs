@@ -50,6 +50,22 @@
 //! Each delivered notification is traced as
 //! [`EventKind::CompletionDelivered`] and counted per pipeline
 //! ([`Tampi::mode_stats`]), so benches and traces can compare the two.
+//!
+//! ## Delivery: direct vs sharded
+//!
+//! Orthogonal to *how completions are discovered* (the pipeline above)
+//! is *how continuation firings reach the scheduler*
+//! ([`crate::progress::DeliveryMode`], default `Sharded`, carried by
+//! `ClusterConfig::delivery_mode`). Under `Direct` (the PR-1 baseline)
+//! each continuation fires inline at the completion point and each task
+//! resume takes the scheduler lock individually; under `Sharded` the
+//! continuations TAMPI attaches here are deposited into the owning
+//! rank's completion shard, drained in same-instant batches (traced as
+//! `EventKind::BatchDelivered`), and their resumes bulk-enqueued — one
+//! scheduler-lock acquisition per shard-batch, which is what keeps an
+//! alltoallv completion wave from serializing on one mutex. Both modes
+//! are observationally identical to tasks (same statuses, same virtual
+//! times); `mode_stats` counts deliveries the same way in both.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -235,6 +251,12 @@ impl Tampi {
     /// Which completion-notification pipeline this handle uses.
     pub fn mode(&self) -> CompletionMode {
         self.state.mode
+    }
+
+    /// How this handle's universe delivers completion continuations
+    /// (see [`crate::progress::DeliveryMode`]).
+    pub fn delivery(&self) -> crate::progress::DeliveryMode {
+        self.comm.delivery_mode()
     }
 
     pub fn comm(&self) -> &Comm {

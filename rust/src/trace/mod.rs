@@ -36,6 +36,11 @@ pub enum EventKind {
     /// the gap to the task's `TaskUnblock` shows the notification
     /// latency of each completion pipeline.
     CompletionDelivered,
+    /// The sharded progress engine drained one same-instant completion
+    /// batch: `count` continuations of rank `shard` delivered in a single
+    /// pass with one scheduler bulk-enqueue (see [`crate::progress`]).
+    /// Stamped from the clock thread (worker = `u32::MAX` sentinel).
+    BatchDelivered { shard: u32, count: u32 },
     /// Free-form phase marker (e.g. "iteration 3").
     Phase,
 }
@@ -45,7 +50,10 @@ impl EventKind {
     /// non-worker threads (`Record::worker` is then the `u32::MAX`
     /// sentinel); lane-building trace consumers must skip them.
     pub fn is_annotation(self) -> bool {
-        matches!(self, EventKind::CompletionDelivered)
+        matches!(
+            self,
+            EventKind::CompletionDelivered | EventKind::BatchDelivered { .. }
+        )
     }
 
     pub fn as_str(self) -> &'static str {
@@ -58,6 +66,7 @@ impl EventKind {
             EventKind::MpiStart => "mpi_start",
             EventKind::MpiEnd => "mpi_end",
             EventKind::CompletionDelivered => "completion_delivered",
+            EventKind::BatchDelivered { .. } => "batch_delivered",
             EventKind::Phase => "phase",
         }
     }
@@ -69,10 +78,11 @@ pub struct Record {
     pub t: VNanos,
     pub rank: u32,
     /// Worker lane within the rank. `u32::MAX` is a sentinel meaning
-    /// "not a worker thread" — used by annotation records (currently
-    /// [`EventKind::CompletionDelivered`]) stamped from the clock
-    /// thread, the polling leader, or a rank main. Lane-building
-    /// consumers must skip annotation kinds (see `gantt.rs`).
+    /// "not a worker thread" — used by annotation records
+    /// ([`EventKind::CompletionDelivered`], [`EventKind::BatchDelivered`])
+    /// stamped from the clock thread, the polling leader, or a rank
+    /// main. Lane-building consumers must skip annotation kinds (see
+    /// `gantt.rs`).
     pub worker: u32,
     pub kind: EventKind,
     pub label: String,

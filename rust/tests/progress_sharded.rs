@@ -1,0 +1,202 @@
+//! Sharded progress engine: per-rank completion shards, same-instant
+//! batched waves, bulk resume enqueues, and per-worker ready queues with
+//! stealing (see `src/progress/`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tampi_repro::apps::gauss_seidel::{self, GsParams, GsVersion};
+use tampi_repro::bench;
+use tampi_repro::nanos::{self, runtime::RuntimeCosts};
+use tampi_repro::progress::DeliveryMode;
+use tampi_repro::rmpi::collectives::WaitMode;
+use tampi_repro::rmpi::{ClusterConfig, ThreadLevel, Universe, ANY_SOURCE};
+use tampi_repro::sim::{ms, us};
+use tampi_repro::tampi;
+use tampi_repro::trace::{EventKind, Tracer};
+
+/// A wildcard-source receive is delivered on the shard of the rank that
+/// *posted* it, even though the completion is initiated elsewhere (the
+/// sender's thread matches it; the clock thread delivers it).
+#[test]
+fn wildcard_recv_routes_to_poster_shard() {
+    let got = Arc::new(AtomicU64::new(0));
+    let g2 = got.clone();
+    let cfg = ClusterConfig::new(2, 1, 1).with_delivery_mode(DeliveryMode::Sharded);
+    Universe::run(cfg, move |ctx| {
+        assert_eq!(ctx.comm.delivery_mode(), DeliveryMode::Sharded);
+        if ctx.rank == 0 {
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            let g = g2.clone();
+            rt.task().label("wild").spawn(move || {
+                let mut b = [0u64];
+                let st = tm.recv(&mut b, ANY_SOURCE, 7);
+                assert_eq!(st.source, 1);
+                assert_eq!(b[0], 4242);
+                g.store(b[0], Ordering::Release);
+            });
+            rt.taskwait();
+            // The continuation was deposited on the poster's shard (rank
+            // 0), not on the completing side's (rank 1 stays empty).
+            let s0 = ctx.comm.progress_shard_stats(0);
+            let s1 = ctx.comm.progress_shard_stats(1);
+            assert!(s0.delivered >= 1, "poster shard must deliver: {s0:?}");
+            assert_eq!(s0.batches, s0.delivered, "single recv => batches of 1");
+            assert_eq!(s1.delivered, 0, "sender shard must stay empty: {s1:?}");
+        } else {
+            ctx.clock.sleep(ms(2));
+            ctx.comm.send(&[4242u64], 0, 7);
+        }
+    })
+    .unwrap();
+    assert_eq!(got.load(Ordering::Acquire), 4242);
+}
+
+/// A same-instant alltoallv completion wave drains as ONE batch per
+/// participating rank's shard — one `BatchDelivered` record of count
+/// n-1 per shard, not one per request.
+#[test]
+fn alltoallv_wave_is_one_batch_per_shard() {
+    let n = 4usize;
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(1, n, 1).with_delivery_mode(DeliveryMode::Sharded);
+    // Zero modeled costs: every rank posts, sends and pauses at the same
+    // virtual instant, so the whole wave completes at one instant too.
+    cfg.costs = RuntimeCosts::zero();
+    cfg.tracer = Some(tracer.clone());
+    let stats = Universe::run(cfg, move |ctx| {
+        let rt = ctx.rt.as_ref().unwrap();
+        let comm = ctx.comm.clone();
+        let size = ctx.size;
+        let rank = ctx.rank;
+        rt.task().label("a2av").spawn(move || {
+            let send: Vec<u32> = (0..size).map(|d| (rank * 100 + d) as u32).collect();
+            let mut recv = vec![0u32; size];
+            let counts = vec![1usize; size];
+            let displs: Vec<usize> = (0..size).collect();
+            comm.alltoallv(
+                &send,
+                &counts,
+                &displs,
+                &mut recv,
+                &counts,
+                &displs,
+                WaitMode::TaskAware(None),
+            );
+            for s in 0..size {
+                assert_eq!(recv[s], (s * 100 + rank) as u32, "rank {rank} from {s}");
+            }
+        });
+        rt.taskwait();
+    })
+    .unwrap();
+
+    // Engine totals: n-1 pending recvs per rank, one batch per shard.
+    assert_eq!(stats.deliveries, (n * (n - 1)) as u64, "{stats:?}");
+    assert_eq!(stats.delivery_batches, n as u64, "one batch per shard");
+    assert_eq!(stats.max_batch, (n - 1) as u64);
+
+    // Trace view: exactly one BatchDelivered per shard, count n-1.
+    let mut per_shard: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for r in tracer.snapshot() {
+        if let EventKind::BatchDelivered { shard, count } = r.kind {
+            assert_eq!(r.rank, shard);
+            per_shard.entry(shard).or_default().push(count);
+        }
+    }
+    assert_eq!(per_shard.len(), n, "every shard must drain once: {per_shard:?}");
+    for (shard, counts) in &per_shard {
+        assert_eq!(
+            counts.as_slice(),
+            &[(n - 1) as u32],
+            "shard {shard}: the wave must land as one batch, not per-request"
+        );
+    }
+}
+
+/// An imbalanced resume/spawn burst lands on one worker's local deque;
+/// the other workers serve it by stealing.
+#[test]
+fn work_stealing_drains_imbalanced_burst() {
+    let hits = Arc::new(AtomicU64::new(0));
+    let h2 = hits.clone();
+    let children = 128u64;
+    let cfg = ClusterConfig::new(1, 1, 4);
+    let stats = Universe::run(cfg, move |ctx| {
+        let rt = ctx.rt.as_ref().unwrap().clone();
+        let rt2 = rt.clone();
+        let h3 = h2.clone();
+        // The spawner runs on ONE worker, so all children enqueue into
+        // that worker's local deque; the other three cores can only get
+        // work by stealing.
+        rt.task().label("spawner").spawn(move || {
+            for i in 0..children {
+                let h = h3.clone();
+                rt2.task().label(format!("burst{i}")).spawn(move || {
+                    nanos::work(us(20));
+                    h.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        rt.taskwait();
+    })
+    .unwrap();
+    assert_eq!(hits.load(Ordering::Relaxed), children);
+    assert!(
+        stats.steals > 0,
+        "idle workers must steal from the loaded local deque ({stats:?})"
+    );
+}
+
+/// The acceptance scenario: a same-instant N-request completion wave
+/// takes the scheduler lock O(N) times under Direct and O(shards) under
+/// Sharded, at identical virtual time (`bench::completion_wave`, also
+/// asserted with N=256 in benches/micro_runtime.rs).
+#[test]
+fn wave_lock_ops_scale_with_shards_not_requests() {
+    let n = 32usize;
+    let d = bench::completion_wave(n, DeliveryMode::Direct);
+    let s = bench::completion_wave(n, DeliveryMode::Sharded);
+    assert!(
+        d.resume_lock_ops >= n as u64,
+        "Direct: one lock acquisition per resume, got {}",
+        d.resume_lock_ops
+    );
+    assert_eq!(d.delivery_batches, 0);
+    assert!(
+        s.resume_lock_ops <= 4,
+        "Sharded: O(shards) lock acquisitions, got {}",
+        s.resume_lock_ops
+    );
+    assert_eq!(s.max_batch, n as u64, "the wave must land as one batch");
+    assert!(s.deliveries >= n as u64);
+    assert_eq!(
+        d.vtime_ns, s.vtime_ns,
+        "delivery mode must not change virtual time"
+    );
+}
+
+/// Direct and Sharded delivery produce bit-identical application results
+/// on Gauss-Seidel (both TAMPI interop versions).
+#[test]
+fn gs_results_identical_across_delivery_modes() {
+    for v in [GsVersion::InteropBlk, GsVersion::InteropNonBlk] {
+        let run = |delivery: DeliveryMode| {
+            let mut p = GsParams::new(256, 256, 64, 6, 2, 2, v);
+            p.delivery_mode = delivery;
+            gauss_seidel::run(&p).unwrap()
+        };
+        let a = run(DeliveryMode::Direct);
+        let b = run(DeliveryMode::Sharded);
+        assert!(a.checksum > 0.0, "{}: heat must flow", v.name());
+        assert_eq!(
+            a.checksum,
+            b.checksum,
+            "{}: Direct and Sharded must agree bit-for-bit",
+            v.name()
+        );
+        assert_eq!(a.stats.tasks, b.stats.tasks);
+    }
+}
