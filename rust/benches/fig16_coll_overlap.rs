@@ -1,0 +1,16 @@
+//! cargo bench target regenerating extension Figure 16: blocking vs
+//! non-blocking collectives — the schedule-driven `iallreduce` riding
+//! the progress engine while compute runs, on a synthetic compute sweep
+//! and on Gauss-Seidel residual monitoring. Scale via
+//! TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig16_report(scale);
+    println!("{report}");
+    bench::write_output("fig16_coll_overlap.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

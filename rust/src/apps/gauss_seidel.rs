@@ -105,6 +105,19 @@ pub struct GsParams {
     /// Continuation delivery (default: sharded progress engine; set
     /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
     pub delivery_mode: crate::progress::DeliveryMode,
+    /// Every `residual_every` iterations, allreduce the grid sum as a
+    /// convergence residual (0 = off). Task versions only (Sentinel,
+    /// Interop blk/non-blk): the residual task reads every block of the
+    /// iteration.
+    pub residual_every: usize,
+    /// `false`: the residual task performs a blocking allreduce (pausing
+    /// until the collective completes — the collective latency sits on
+    /// the dependency critical path). `true`: the task posts
+    /// `iallreduce` and finishes immediately; the engine-driven
+    /// [`crate::rmpi::CollRequest`] rides alongside the next iterations'
+    /// halo compute and is harvested after the final taskwait (fig16's
+    /// overlap).
+    pub residual_nonblocking: bool,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
     pub deadline: Option<VNanos>,
@@ -134,6 +147,8 @@ impl GsParams {
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
             delivery_mode: crate::progress::DeliveryMode::default(),
+            residual_every: 0,
+            residual_nonblocking: false,
             tracer: None,
             graph: None,
             deadline: None,
@@ -167,6 +182,15 @@ impl GsParams {
                 "PJRT backend requires a block-decomposed (hybrid) version"
             );
         }
+        if self.residual_every > 0 {
+            assert!(
+                matches!(
+                    self.version,
+                    GsVersion::Sentinel | GsVersion::InteropBlk | GsVersion::InteropNonBlk
+                ),
+                "residual monitoring requires a task version with a full dep graph"
+            );
+        }
     }
 }
 
@@ -177,6 +201,8 @@ pub struct GsOutcome {
     pub stats: RunStats,
     /// f64 sum of the final grid (0.0 under the Model backend).
     pub checksum: f64,
+    /// Last residual allreduce value (0.0 when `residual_every == 0`).
+    pub residual: f64,
 }
 
 impl GsOutcome {
@@ -261,7 +287,12 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
         .get("checksum_bits")
         .map(|&b| f64::from_bits(b))
         .unwrap_or(0.0);
-    Ok(GsOutcome { vtime_ns: stats.vtime_ns, stats, checksum })
+    let residual = stats
+        .counters
+        .get("residual_bits")
+        .map(|&b| f64::from_bits(b))
+        .unwrap_or(0.0);
+    Ok(GsOutcome { vtime_ns: stats.vtime_ns, stats, checksum, residual })
 }
 
 /// Reduce the local f64 sum and record it once.
@@ -607,6 +638,18 @@ fn hybrid(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
     let sentinel = rt.dep(format!("r{r}sentinel"));
     let use_sentinel = p.version == GsVersion::Sentinel;
 
+    // Residual monitoring (fig16): one allreduce of the grid sum every
+    // `residual_every` iterations. Slots are the collectives' stable
+    // reduction buffers; requests of fire-and-forget iallreduces are
+    // harvested after the final taskwait.
+    let res_rounds = if p.residual_every > 0 { p.iters / p.residual_every } else { 0 };
+    let res_store = super::store::ScalarStore::zeros(res_rounds.max(1));
+    let res_reqs: Arc<std::sync::Mutex<Vec<crate::rmpi::Request>>> =
+        Arc::new(std::sync::Mutex::new(Vec::new()));
+    // InOut chain: successive residual tasks issue their collectives in
+    // iteration order on every rank (MPI collective-ordering rule).
+    let obj_res = rt.dep(format!("r{r}residual"));
+
     match p.version {
         GsVersion::ForkJoin => {
             // Sequential comm phases + parallel compute + taskwait per iter.
@@ -685,13 +728,81 @@ fn hybrid(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
                         );
                     }
                 }
+                if p.residual_every > 0 && (t + 1) % p.residual_every == 0 {
+                    let idx = (t + 1) / p.residual_every - 1;
+                    spawn_residual(
+                        rt, &tm, &st, &obj_blk, &obj_res, idx, t,
+                        p.residual_nonblocking, &res_store, &res_reqs,
+                    );
+                }
             }
             rt.taskwait();
         }
     }
 
+    // Harvest outstanding fire-and-forget residual collectives (they
+    // progressed on the engine while later iterations computed).
+    for req in res_reqs.lock().unwrap().iter() {
+        req.wait(&ctx.clock);
+    }
+    if res_rounds > 0 && ctx.rank == 0 {
+        // SAFETY: all residual collectives completed above.
+        let last = unsafe { res_store.value(res_rounds - 1) };
+        counters.add("residual_bits", last.to_bits());
+    }
+
     let local = if model { 0.0 } else { st.blocks.checksum() };
     record_checksum(ctx, counters, local);
+}
+
+/// Spawn one residual-monitoring task: reads every block of the just-
+/// finished iteration (In deps) and allreduces the grid sum. Blocking
+/// variant: the task pauses on the collective, holding its block reads
+/// — the collective's latency gates the next iteration's writers.
+/// Non-blocking variant: the task stores its local sum into the round's
+/// slot, posts `iallreduce` and finishes; dependencies release
+/// immediately and the engine-driven collective overlaps the next
+/// iterations' halo compute (its request is harvested post-taskwait).
+#[allow(clippy::too_many_arguments)]
+fn spawn_residual(
+    rt: &crate::nanos::Runtime,
+    tm: &Tampi,
+    st: &Arc<HybridState>,
+    obj_blk: &[DepObj],
+    obj_res: &DepObj,
+    idx: usize,
+    t: usize,
+    nonblocking: bool,
+    res_store: &Arc<super::store::ScalarStore>,
+    res_reqs: &Arc<std::sync::Mutex<Vec<crate::rmpi::Request>>>,
+) {
+    let mut tb = rt
+        .task()
+        .label(format!("residual[{t}]"))
+        .dep(obj_res, Mode::InOut);
+    for obj in obj_blk {
+        tb = tb.dep(obj, Mode::In);
+    }
+    let st = st.clone();
+    let tm = tm.clone();
+    let res_store = res_store.clone();
+    let res_reqs = res_reqs.clone();
+    tb.spawn(move || {
+        let local = if st.model { 0.0 } else { st.blocks.checksum() };
+        if nonblocking {
+            // SAFETY: slot `idx` is written only by this task (obj_res
+            // chain) and read only after its collective completes.
+            let slot = unsafe { res_store.get_mut(idx) };
+            slot[0] = local;
+            let cr = tm.comm().iallreduce(slot, |a, b| a[0] += b[0]);
+            res_reqs.lock().unwrap().push(cr.into_request());
+        } else {
+            let mut v = [local];
+            tm.allreduce(&mut v, |a, b| a[0] += b[0]);
+            // SAFETY: as above; the collective completed in-task here.
+            unsafe { res_store.get_mut(idx) }[0] = v[0];
+        }
+    });
 }
 
 /// Spawn one block-update task with the Fig 7 dependency pattern.

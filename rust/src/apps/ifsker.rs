@@ -82,6 +82,13 @@ pub struct IfsParams {
     /// Continuation delivery (default: sharded progress engine; set
     /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
     pub delivery_mode: crate::progress::DeliveryMode,
+    /// Every `residual_every` steps, allreduce the field sum as a
+    /// diagnostic residual (0 = off; interop versions only).
+    pub residual_every: usize,
+    /// `false`: blocking in-task allreduce; `true`: fire-and-forget
+    /// `iallreduce` whose engine-driven request overlaps later steps
+    /// (see [`crate::apps::gauss_seidel::GsParams::residual_nonblocking`]).
+    pub residual_nonblocking: bool,
     pub tracer: Option<Arc<Tracer>>,
     pub deadline: Option<VNanos>,
 }
@@ -107,6 +114,8 @@ impl IfsParams {
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
             delivery_mode: crate::progress::DeliveryMode::default(),
+            residual_every: 0,
+            residual_nonblocking: false,
             tracer: None,
             deadline: None,
         }
@@ -121,6 +130,12 @@ impl IfsParams {
         assert_eq!(self.gridpoints % r, 0, "gridpoints not divisible by ranks");
         let chunk = self.gridpoints / r;
         assert_eq!(chunk % r, 0, "chunk ({chunk}) not divisible by ranks ({r})");
+        if self.residual_every > 0 {
+            assert!(
+                self.version != IfsVersion::PureMpi,
+                "residual monitoring requires an interop (task) version"
+            );
+        }
     }
 }
 
@@ -129,6 +144,8 @@ pub struct IfsOutcome {
     pub vtime_ns: u64,
     pub stats: RunStats,
     pub checksum: f64,
+    /// Last residual allreduce value (0.0 when `residual_every == 0`).
+    pub residual: f64,
 }
 
 impl IfsOutcome {
@@ -185,7 +202,12 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
         .get("checksum_bits")
         .map(|&b| f64::from_bits(b))
         .unwrap_or(0.0);
-    Ok(IfsOutcome { vtime_ns: stats.vtime_ns, stats, checksum })
+    let residual = stats
+        .counters
+        .get("residual_bits")
+        .map(|&b| f64::from_bits(b))
+        .unwrap_or(0.0);
+    Ok(IfsOutcome { vtime_ns: stats.vtime_ns, stats, checksum, residual })
 }
 
 fn record_checksum(ctx: &RankCtx, counters: &Counters, local: f64) {
@@ -340,6 +362,14 @@ fn interop(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
     let obj_field: Vec<DepObj> = (0..p.fields).map(|f| rt.dep(format!("r{r}f{f}"))).collect();
     let obj_spec: Vec<DepObj> = (0..p.fields).map(|f| rt.dep(format!("r{r}s{f}"))).collect();
 
+    // Residual monitoring (fig16): see gauss_seidel::spawn_residual for
+    // the blocking-vs-fire-and-forget shapes.
+    let res_rounds = if p.residual_every > 0 { p.steps / p.residual_every } else { 0 };
+    let res_store = super::store::ScalarStore::zeros(res_rounds.max(1));
+    let res_reqs: Arc<std::sync::Mutex<Vec<crate::rmpi::Request>>> =
+        Arc::new(std::sync::Mutex::new(Vec::new()));
+    let obj_res = rt.dep(format!("r{r}residual"));
+
     let nonblk = p.version == IfsVersion::InteropNonBlk;
     for step in 0..p.steps {
         for f in 0..p.fields {
@@ -387,8 +417,48 @@ fn interop(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
                 tag(step, f, 1, p.fields), nonblk, Dir::SpecToGrid,
             );
         }
+        if p.residual_every > 0 && (step + 1) % p.residual_every == 0 {
+            let idx = (step + 1) / p.residual_every - 1;
+            let mut tb = rt
+                .task()
+                .label(format!("residual[{step}]"))
+                .dep(&obj_res, Mode::InOut);
+            for obj in &obj_field {
+                tb = tb.dep(obj, Mode::In);
+            }
+            let st2 = st.clone();
+            let tm2 = tm.clone();
+            let store2 = res_store.clone();
+            let reqs2 = res_reqs.clone();
+            let nonblocking = p.residual_nonblocking;
+            tb.spawn(move || {
+                let local = if st2.model { 0.0 } else { st2.fields.checksum() };
+                if nonblocking {
+                    // SAFETY: slot idx written only by this task (obj_res
+                    // chain), read only after its collective completes.
+                    let slot = unsafe { store2.get_mut(idx) };
+                    slot[0] = local;
+                    let cr = tm2.comm().iallreduce(slot, |a, b| a[0] += b[0]);
+                    reqs2.lock().unwrap().push(cr.into_request());
+                } else {
+                    let mut v = [local];
+                    tm2.allreduce(&mut v, |a, b| a[0] += b[0]);
+                    // SAFETY: as above; collective completed in-task.
+                    unsafe { store2.get_mut(idx) }[0] = v[0];
+                }
+            });
+        }
     }
     rt.taskwait();
+    // Harvest outstanding fire-and-forget residual collectives.
+    for req in res_reqs.lock().unwrap().iter() {
+        req.wait(&ctx.clock);
+    }
+    if res_rounds > 0 && ctx.rank == 0 {
+        // SAFETY: all residual collectives completed above.
+        let last = unsafe { res_store.value(res_rounds - 1) };
+        counters.add("residual_bits", last.to_bits());
+    }
     let local: f64 = if model { 0.0 } else { st.fields.checksum() };
     record_checksum(ctx, counters, local);
 }

@@ -66,6 +66,45 @@ impl BlockStore {
     }
 }
 
+/// A set of single-f64 slots with dependency-guaranteed exclusivity —
+/// the stable in-flight buffers of fire-and-forget `iallreduce` residual
+/// monitoring (each slot is the reduction buffer of one collective and
+/// must stay untouched until its `CollRequest` completes).
+pub struct ScalarStore {
+    slots: Vec<UnsafeCell<[f64; 1]>>,
+}
+
+// SAFETY: concurrent access is serialized by the task dependency system
+// plus the i-collective buffer contract (see field docs).
+unsafe impl Sync for ScalarStore {}
+unsafe impl Send for ScalarStore {}
+
+impl ScalarStore {
+    pub fn zeros(count: usize) -> Arc<Self> {
+        Arc::new(ScalarStore {
+            slots: (0..count).map(|_| UnsafeCell::new([0.0])).collect(),
+        })
+    }
+
+    pub fn count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// # Safety
+    /// The calling task must have declared dependencies ordering this
+    /// access, and the slot must not be an in-flight collective buffer.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, idx: usize) -> &mut [f64] {
+        unsafe { &mut (*self.slots[idx].get())[..] }
+    }
+
+    /// # Safety
+    /// Only call after the slot's collective completed (quiescent read).
+    pub unsafe fn value(&self, idx: usize) -> f64 {
+        unsafe { (*self.slots[idx].get())[0] }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +115,15 @@ mod tests {
         assert_eq!(s.count(), 3);
         // 0+1+..+11 = 66
         assert_eq!(s.checksum(), 66.0);
+    }
+
+    #[test]
+    fn scalar_store_slots() {
+        let s = ScalarStore::zeros(2);
+        assert_eq!(s.count(), 2);
+        // SAFETY: single-threaded test.
+        unsafe { s.get_mut(1)[0] = 4.5 };
+        assert_eq!(unsafe { s.value(1) }, 4.5);
+        assert_eq!(unsafe { s.value(0) }, 0.0);
     }
 }

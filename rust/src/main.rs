@@ -3,13 +3,16 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension fig 15
+//!   figures   regenerate paper figures (8-14) + extension figs 15-16
 //!             into bench_out/
 //!   calibrate measure the compute cost model on this host
 //!
 //! `gs` and `ifsker` accept `--completion callback|poll` (notification
-//! pipeline) and `--delivery sharded|direct` (continuation delivery via
-//! the sharded progress engine vs the inline baseline).
+//! pipeline), `--delivery sharded|direct` (continuation delivery via
+//! the sharded progress engine vs the inline baseline), and
+//! `--residual-every N` + `--residual blk|nonblk` (periodic residual
+//! allreduce: blocking in-task vs fire-and-forget `iallreduce` riding
+//! the schedule-driven collective engine).
 //!
 //! Examples:
 //!   repro gs --version interop-nonblk --rows 4096 --cols 4096 \
@@ -89,6 +92,18 @@ fn delivery_of(m: &HashMap<String, String>) -> tampi_repro::progress::DeliveryMo
     }
 }
 
+fn residual_nonblocking_of(m: &HashMap<String, String>) -> bool {
+    // Default matches the library default (GsParams/IfsParams): blocking.
+    match m.get("residual").map(String::as_str).unwrap_or("blk") {
+        "nonblk" | "nonblocking" => true,
+        "blk" | "blocking" => false,
+        other => {
+            eprintln!("unknown --residual {other} (blk|nonblk)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_gs(m: HashMap<String, String>) {
     let version = m
         .get("version")
@@ -106,6 +121,8 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
     p.delivery_mode = delivery_of(&m);
+    p.residual_every = get(&m, "residual-every", 0usize);
+    p.residual_nonblocking = residual_nonblocking_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
@@ -173,6 +190,8 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
     p.delivery_mode = delivery_of(&m);
+    p.residual_every = get(&m, "residual-every", 0usize);
+    p.residual_nonblocking = residual_nonblocking_of(&m);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
     p.tracer = tracer.clone();
@@ -246,6 +265,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 let p = bench::write_output("fig15_completion_latency.txt", &report);
                 println!("fig15 -> {}", p.display());
             }
+            "16" => {
+                let report = bench::fig16_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig16_coll_overlap.txt", &report);
+                println!("fig16 -> {}", p.display());
+            }
             other => {
                 let rows = match other {
                     "9" => bench::fig09(scale),
@@ -266,7 +291,7 @@ fn cmd_figures(m: HashMap<String, String>) {
         println!("(fig {n} took {:.1}s wall)\n", wall.elapsed().as_secs_f64());
     };
     if which == "all" {
-        for f in ["8", "9", "10", "11", "12", "13", "14", "15"] {
+        for f in ["8", "9", "10", "11", "12", "13", "14", "15", "16"] {
             run_fig(f);
         }
     } else {

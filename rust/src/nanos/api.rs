@@ -9,14 +9,64 @@
 //! Polling services (Section 4.2) live on [`super::Runtime`] because they
 //! are per-runtime, not per-task.
 
+use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::sim::{Clock, Token, VNanos};
 use crate::trace::EventKind;
 
-use super::task::{BlockCtx, BlockingContext, CtxState, EventCounter};
+use super::task::{BlockCtx, BlockingContext, CtxState, EventCounter, TaskInner};
 use super::worker;
+
+/// Deferred external-event decrements grouped by task.
+type DecGroups = Vec<(Arc<TaskInner>, u32)>;
+
+thread_local! {
+    /// Active [`DeferredEventDecs`] scope of this thread: per-task
+    /// external-event decrements awaiting one coalesced `dec_events(n)`.
+    static DEC_DEFER: RefCell<Option<DecGroups>> = const { RefCell::new(None) };
+}
+
+/// RAII scope coalescing [`decrease_task_event_counter`] calls on the
+/// current thread into one `dec_events(n)` per task. Opened by
+/// [`crate::progress::Shard`] while draining a completion batch: a
+/// collective wave that fulfils many external events of the *same* task
+/// (e.g. an iwaitall over 2(n-1) transposition requests) then touches
+/// the task's counter — and potentially releases its dependencies —
+/// once, not once per continuation. Close with
+/// [`DeferredEventDecs::finish`] *inside* the drain's bulk-enqueue scope
+/// so released successors join the batch insert.
+pub(crate) struct DeferredEventDecs(());
+
+impl DeferredEventDecs {
+    pub(crate) fn begin() -> DeferredEventDecs {
+        DEC_DEFER.with(|d| {
+            let mut b = d.borrow_mut();
+            assert!(b.is_none(), "nested DeferredEventDecs scopes");
+            *b = Some(Vec::new());
+        });
+        DeferredEventDecs(())
+    }
+
+    /// Apply the coalesced decrements (one `dec_events(n)` per task, in
+    /// first-decrement order) and close the scope.
+    pub(crate) fn finish(self) {
+        let groups = DEC_DEFER.with(|d| d.borrow_mut().take()).unwrap_or_default();
+        for (task, n) in groups {
+            task.dec_events_counted(n);
+        }
+    }
+}
+
+impl Drop for DeferredEventDecs {
+    fn drop(&mut self) {
+        // Panic-unwind safety: never leave a stale scope on the thread.
+        DEC_DEFER.with(|d| {
+            d.borrow_mut().take();
+        });
+    }
+}
 
 /// Inform the runtime that the current task is about to enter a
 /// pause-resume cycle; returns the blocking context for one round trip.
@@ -113,8 +163,31 @@ pub fn increase_current_task_event_counter(counter: &EventCounter, increment: u3
 /// Fulfil `decrement` external events of the counter's task (Section 4.3).
 /// Callable from any thread. When the counter reaches zero and the task
 /// body has finished, the task's dependencies are released.
+///
+/// Inside a shard drain ([`DeferredEventDecs`] scope) decrements are
+/// coalesced per task and applied once at the end of the batch —
+/// observationally identical (all at the same virtual instant, before
+/// the batch's bulk enqueue), one atomic RMW per task per wave.
 pub fn decrease_task_event_counter(counter: &EventCounter, decrement: u32) {
-    counter.0.dec_events(decrement);
+    let deferred = DEC_DEFER.with(|d| {
+        let mut b = d.borrow_mut();
+        match b.as_mut() {
+            Some(groups) => {
+                if let Some((_, n)) =
+                    groups.iter_mut().find(|(t, _)| Arc::ptr_eq(t, &counter.0))
+                {
+                    *n += decrement;
+                } else {
+                    groups.push((counter.0.clone(), decrement));
+                }
+                true
+            }
+            None => false,
+        }
+    });
+    if !deferred {
+        counter.0.dec_events_counted(decrement);
+    }
 }
 
 /// Advance the calling thread's virtual core by `cost` ns of "work".

@@ -131,6 +131,10 @@ pub struct Rt {
     /// Statistics: tasks created / paused (for EXPERIMENTS.md).
     pub(crate) n_tasks: AtomicU64,
     pub(crate) n_pauses: AtomicU64,
+    /// External-event decrement operations applied (each `dec_events(n)`
+    /// from the events API counts once; drain-time coalescing makes this
+    /// O(tasks) instead of O(events) per completion wave).
+    pub(crate) n_event_decs: AtomicU64,
     /// Panics captured from task bodies (re-raised at taskwait).
     task_panics: Mutex<Vec<String>>,
 }
@@ -187,6 +191,7 @@ impl Runtime {
             shutdown: AtomicBool::new(false),
             n_tasks: AtomicU64::new(0),
             n_pauses: AtomicU64::new(0),
+            n_event_decs: AtomicU64::new(0),
             task_panics: Mutex::new(Vec::new()),
             cfg,
         });
@@ -312,11 +317,19 @@ impl Runtime {
 
     /// Scheduler delivery-path counters: (queue-lock acquisitions that
     /// inserted task resumes, bulk enqueues from shard-batch drains,
-    /// items stolen from other workers' local deques). The first is the
-    /// metric the sharded progress engine ([`crate::progress`]) reduces
-    /// from O(resumes) to O(shard-batches) on completion waves.
-    pub fn sched_counters(&self) -> (u64, u64, u64) {
+    /// items stolen from other workers' local deques, failed steal
+    /// probes). The first is the metric the sharded progress engine
+    /// ([`crate::progress`]) reduces from O(resumes) to O(shard-batches)
+    /// on completion waves; the last is what the adaptive steal order
+    /// cuts.
+    pub fn sched_counters(&self) -> (u64, u64, u64, u64) {
         self.rt.sched.counters()
+    }
+
+    /// External-event decrement operations applied on this runtime (see
+    /// `RunStats::event_dec_ops`).
+    pub fn event_dec_ops(&self) -> u64 {
+        self.rt.n_event_decs.load(Ordering::Relaxed)
     }
 
     /// (tasks created, pauses performed, workers spawned).

@@ -77,6 +77,15 @@ pub(crate) struct Scheduler {
     bulk_enqueues: AtomicU64,
     /// Items taken from another worker's local deque.
     steals: AtomicU64,
+    /// Failed steal probes: a victim deque locked and found empty. The
+    /// adaptive last-victim order below exists to keep this low on wide
+    /// runtimes.
+    steal_probes: AtomicU64,
+    /// Per-slot memory of the last successful steal victim: a loaded
+    /// deque (one worker spawning or receiving a resume burst) tends to
+    /// stay loaded, so re-probing it first skips most of the
+    /// round-robin scan. `usize::MAX` = no memory yet.
+    last_victim: Vec<AtomicUsize>,
 }
 
 /// Deferred items grouped by target runtime.
@@ -158,6 +167,10 @@ impl Scheduler {
             resume_lock_ops: AtomicU64::new(0),
             bulk_enqueues: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            steal_probes: AtomicU64::new(0),
+            last_victim: (0..cores.max(1))
+                .map(|_| AtomicUsize::new(usize::MAX))
+                .collect(),
         }
     }
 
@@ -227,7 +240,9 @@ impl Scheduler {
     }
 
     /// Pop ready work for worker slot `wslot`: local deque first, then
-    /// the injector, then steal from the back of other locals.
+    /// the injector, then steal from the back of other locals — probing
+    /// the slot's last successful victim first, falling back to a
+    /// round-robin scan (adaptive steal order).
     fn try_pop(&self, wslot: usize) -> Option<Item> {
         if let Some(item) = self.locals[wslot].lock().unwrap().pop_front() {
             self.ready_len.fetch_sub(1, Ordering::AcqRel);
@@ -238,15 +253,38 @@ impl Scheduler {
             return Some(item);
         }
         let n = self.locals.len();
+        let remembered = self.last_victim[wslot].load(Ordering::Relaxed);
+        if remembered < n && remembered != wslot {
+            if let Some(item) = self.steal_from(remembered) {
+                return Some(item);
+            }
+        }
         for k in 1..n {
             let victim = (wslot + k) % n;
-            if let Some(item) = self.locals[victim].lock().unwrap().pop_back() {
-                self.ready_len.fetch_sub(1, Ordering::AcqRel);
-                self.steals.fetch_add(1, Ordering::Relaxed);
+            if victim == remembered {
+                continue; // already probed above
+            }
+            if let Some(item) = self.steal_from(victim) {
+                self.last_victim[wslot].store(victim, Ordering::Relaxed);
                 return Some(item);
             }
         }
         None
+    }
+
+    /// One steal probe against `victim`'s deque; counts misses.
+    fn steal_from(&self, victim: usize) -> Option<Item> {
+        match self.locals[victim].lock().unwrap().pop_back() {
+            Some(item) => {
+                self.ready_len.fetch_sub(1, Ordering::AcqRel);
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                Some(item)
+            }
+            None => {
+                self.steal_probes.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
     /// Ensure up to `want` ready items will be served: wake idle workers,
@@ -379,12 +417,13 @@ impl Scheduler {
     }
 
     /// Delivery-path counters: (resume-enqueue lock acquisitions, bulk
-    /// enqueues, work steals).
-    pub fn counters(&self) -> (u64, u64, u64) {
+    /// enqueues, work steals, failed steal probes).
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
         (
             self.resume_lock_ops.load(Ordering::Relaxed),
             self.bulk_enqueues.load(Ordering::Relaxed),
             self.steals.load(Ordering::Relaxed),
+            self.steal_probes.load(Ordering::Relaxed),
         )
     }
 

@@ -56,6 +56,17 @@ impl TaskInner {
         }
     }
 
+    /// [`TaskInner::dec_events`] for *external*-event fulfilment paths,
+    /// counted per applied operation (`Rt::n_event_decs`): the metric
+    /// the drain-time coalescing reduces from O(events) to O(tasks) per
+    /// completion wave.
+    pub(crate) fn dec_events_counted(self: &Arc<Self>, n: u32) {
+        if let Some(rt) = self.rt.upgrade() {
+            rt.n_event_decs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.dec_events(n);
+    }
+
     /// Body done and all external events fulfilled: release dependencies
     /// (Section 4.6) and notify taskwait.
     fn fully_complete(self: &Arc<Self>) {

@@ -49,6 +49,15 @@
 //! per resume) for figure runs and A/B tests; both modes produce
 //! identical application results and identical virtual times — only the
 //! lock traffic differs (see `bench::completion_wave`).
+//!
+//! The engine also *drives collectives*: every collective compiles into
+//! a schedule of rounds ([`crate::rmpi::coll_schedule`]) whose advance
+//! continuations ride this same pipeline — under `Sharded` delivery a
+//! round's completion wave lands as one shard batch whose drain posts
+//! the next round (and coalesces same-task external-event decrements
+//! into one `dec_events(n)`), tying the paper's Section 4.6 event
+//! counters and Section 6.1 collective interception to the shard →
+//! batch → bulk-enqueue pipeline.
 
 pub mod shard;
 

@@ -12,17 +12,31 @@
 //! event is pending, so batching never delays a notification in virtual
 //! time — it only amortizes real lock traffic.
 //!
+//! The pending list is a **lock-free MPSC stack** (Treiber push from the
+//! depositors — rank threads plus the clock thread — single-consumer
+//! swap in the drain): the completion hot path's last lock is gone; a
+//! deposit is one CAS per continuation. The empty→non-empty transition
+//! (the CAS that observed a null head) is what schedules the drain, so
+//! exactly one drain event exists per batch — the same protocol the
+//! previous mutexed Vec used, with identical observable counts
+//! ([`ShardStats`]).
+//!
 //! The drain runs on the clock thread: it opens a
-//! [`DeferredEnqueue`](crate::nanos::scheduler::DeferredEnqueue) scope,
-//! fires the batch's continuations (which call `nanos::unblock_task` /
-//! `decrease_task_event_counter` as usual), and then hands the collected
-//! task resumes to each runtime's scheduler as one bulk insert — the
-//! scheduler lock is taken once per shard-batch, not once per
-//! continuation.
+//! [`DeferredEnqueue`](crate::nanos::scheduler::DeferredEnqueue) scope
+//! *and* a [`DeferredEventDecs`](crate::nanos::api) scope, fires the
+//! batch's continuations (which call `nanos::unblock_task` /
+//! `decrease_task_event_counter` as usual), applies the coalesced
+//! per-task event decrements (one `dec_events(n)` per task per wave —
+//! collective completion waves routinely fulfil many events of one
+//! task), and then hands the collected task resumes to each runtime's
+//! scheduler as one bulk insert — the scheduler lock is taken once per
+//! shard-batch, not once per continuation.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::Arc;
 
+use crate::nanos::api::DeferredEventDecs;
 use crate::nanos::scheduler::DeferredEnqueue;
 use crate::rmpi::request::Continuation;
 use crate::rmpi::Status;
@@ -40,14 +54,21 @@ pub struct ShardStats {
     pub max_batch: u64,
 }
 
+/// One node of the pending stack.
+struct Node {
+    cont: Continuation,
+    st: Status,
+    next: *mut Node,
+}
+
 /// One virtual rank's completion shard.
 pub struct Shard {
     rank: u32,
     tracer: Option<Arc<Tracer>>,
-    /// Continuations deposited but not yet drained, each with the final
-    /// status of its request. Non-empty exactly while a drain event is
-    /// pending on the clock.
-    pending: Mutex<Vec<(Continuation, Status)>>,
+    /// Head of the lock-free pending stack (LIFO; the drain reverses to
+    /// deposit order). Non-null exactly while a drain event is pending
+    /// on the clock.
+    pending: AtomicPtr<Node>,
     batches: AtomicU64,
     delivered: AtomicU64,
     max_batch: AtomicU64,
@@ -58,7 +79,7 @@ impl Shard {
         Shard {
             rank,
             tracer,
-            pending: Mutex::new(Vec::new()),
+            pending: AtomicPtr::new(ptr::null_mut()),
             batches: AtomicU64::new(0),
             delivered: AtomicU64::new(0),
             max_batch: AtomicU64::new(0),
@@ -79,16 +100,30 @@ impl Shard {
     }
 
     /// Deposit a completed request's continuations for batched delivery.
-    /// The first deposit into an empty shard schedules one drain at the
-    /// current virtual instant; later same-instant deposits ride along.
+    /// Lock-free: one CAS push per continuation; the push that turned
+    /// the stack non-empty schedules one drain at the current virtual
+    /// instant; later same-instant deposits ride along.
     pub(crate) fn deposit(self: &Arc<Self>, clock: &Clock, cbs: Vec<Continuation>, st: Status) {
         debug_assert!(!cbs.is_empty(), "empty deposit");
-        let schedule = {
-            let mut g = self.pending.lock().unwrap();
-            let was_empty = g.is_empty();
-            g.extend(cbs.into_iter().map(|f| (f, st)));
-            was_empty
-        };
+        let mut schedule = false;
+        for cont in cbs {
+            let node = Box::into_raw(Box::new(Node { cont, st, next: ptr::null_mut() }));
+            loop {
+                let head = self.pending.load(Ordering::Acquire);
+                // SAFETY: `node` is ours until the CAS publishes it.
+                unsafe { (*node).next = head };
+                if self
+                    .pending
+                    .compare_exchange_weak(head, node, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    if head.is_null() {
+                        schedule = true;
+                    }
+                    break;
+                }
+            }
+        }
         if schedule {
             let shard = self.clone();
             let at = clock.now();
@@ -98,12 +133,22 @@ impl Shard {
 
     /// Drain everything deposited for one virtual instant as one batch.
     /// Runs on the clock thread (`Clock::call_at` contract: must not park
-    /// on sim primitives — and does not).
+    /// on sim primitives — and does not). Single consumer: one atomic
+    /// swap detaches the whole stack.
     fn drain(&self, at: VNanos) {
-        let batch = std::mem::take(&mut *self.pending.lock().unwrap());
-        if batch.is_empty() {
+        let mut head = self.pending.swap(ptr::null_mut(), Ordering::AcqRel);
+        if head.is_null() {
             return;
         }
+        // Reverse the LIFO chain back into deposit order.
+        let mut batch: Vec<(Continuation, Status)> = Vec::new();
+        while !head.is_null() {
+            // SAFETY: detached exclusively by the swap above.
+            let node = unsafe { Box::from_raw(head) };
+            head = node.next;
+            batch.push((node.cont, node.st));
+        }
+        batch.reverse();
         let count = batch.len() as u64;
         // Publish stats and the trace record *before* firing: a rank
         // thread woken by a continuation below (e.g. taskwait returning)
@@ -124,11 +169,27 @@ impl Shard {
             });
         }
         let scope = DeferredEnqueue::begin();
+        let decs = DeferredEventDecs::begin();
         for (f, st) in batch {
             f(st);
         }
+        // Apply coalesced event decrements first: a released successor's
+        // enqueue must join the bulk insert below.
+        decs.finish();
         for (rt, items) in scope.finish() {
             rt.sched.enqueue_bulk(items, &rt);
+        }
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        // Free any undrained nodes (teardown with a pending batch).
+        let mut head = self.pending.swap(ptr::null_mut(), Ordering::AcqRel);
+        while !head.is_null() {
+            // SAFETY: exclusive access in Drop.
+            let node = unsafe { Box::from_raw(head) };
+            head = node.next;
         }
     }
 }

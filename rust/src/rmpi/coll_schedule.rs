@@ -1,0 +1,623 @@
+//! The schedule-driven collective engine.
+//!
+//! Every collective compiles into a [`CollSchedule`]: a per-rank DAG of
+//! *rounds*, where each round posts a set of point-to-point operations
+//! (sends, receives, local copies, reduction combines) and the next
+//! round is posted when the previous round's completions fire through
+//! [`Request::on_complete`]. The caller gets back a single
+//! [`CollRequest`] the moment round 0 is posted; from then on the
+//! *progress engine* drives the collective:
+//!
+//! * under [`crate::progress::DeliveryMode::Sharded`] the round's
+//!   completion wave lands as one batch on the owning rank's shard and
+//!   the drain (on the clock thread) advances the schedule;
+//! * under `Direct` the continuations fire inline at each completion
+//!   point — same virtual instants, same data, different real threads.
+//!
+//! No OS thread ever parks inside a collective round. This is what makes
+//! the non-blocking surface (`ibarrier`/`ibcast`/`iallreduce`/…,
+//! Section 6.1's interception extended to collectives) possible: the
+//! returned `CollRequest` composes with [`Request::wait`] /
+//! [`Request::wait_any`], with TAMPI `iwait`/`iwaitall` (task
+//! external-event binding, Section 6.2), and with plain `test`. The
+//! blocking entry points in [`super::collectives`] are thin wrappers
+//! that launch a schedule and wait on its final request — one engine
+//! serves both paths, so Direct-vs-Sharded and blocking-vs-non-blocking
+//! runs stay bit-identical in application results.
+//!
+//! ## Rounds, tags and determinism
+//!
+//! Each collective call consumes one sequence number per phase from the
+//! communicator's collective counter ([`coll_tag`] packs `(seq, phase)`
+//! into an `i32` tag), so any number of collectives may be in flight on
+//! one communicator: messages of different calls or rounds can never be
+//! confused because every `(source, tag)` pair in a schedule is unique.
+//! Reduction combiners run at a fixed child order (the binomial-tree
+//! order the blocking algorithms used), independent of arrival order, so
+//! floating-point results are bit-identical across delivery modes and
+//! wait styles.
+//!
+//! ## Virtual-time accounting
+//!
+//! Rounds after the first are posted by whichever thread delivers the
+//! last completion of the previous round (a rank thread under `Direct`,
+//! the clock thread under `Sharded`). The per-call CPU debt those posts
+//! would accrue is discarded uniformly ([`CollSchedule::advance`]): the
+//! engine models an asynchronous progress thread (the shape argued for
+//! by arXiv:2112.11978 and arXiv:2405.13807), and charging the debt to
+//! an arbitrary delivering thread would make virtual time depend on the
+//! delivery mode.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::Clock;
+use crate::trace::{EventKind, Record};
+
+use super::comm::Comm;
+use super::p2p::Ctx;
+use super::request::Request;
+use super::Pod;
+
+/// Tag-space stride per collective sequence number: one sub-tag per
+/// schedule phase (dissemination barriers use one phase per round; tree
+/// collectives need only phase 0 because every `(src, dst)` pair is
+/// level-unique). 64 phases cover dissemination on any cluster size.
+const PHASE_STRIDE: u64 = 64;
+
+/// Pack a collective sequence number and phase into an `i32` tag on the
+/// collective match context.
+pub(crate) fn coll_tag(seq: u64, phase: u32) -> i32 {
+    ((seq * PHASE_STRIDE + phase as u64) % i32::MAX as u64) as i32
+}
+
+/// Raw view of a caller-owned buffer a schedule reads/writes across
+/// rounds. MPI non-blocking-collective contract: the buffer must stay
+/// valid and untouched from the `i*` call until the `CollRequest`
+/// completes; rounds are ordered by request completion, so accesses are
+/// data-race-free under that contract (same discipline as
+/// [`super::match_engine::RecvBuf`]).
+pub(crate) struct UserBuf<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for UserBuf<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for UserBuf<T> {}
+
+// SAFETY: accesses are serialized by round completion order plus the
+// caller's buffer contract (see type docs).
+unsafe impl<T: Send> Send for UserBuf<T> {}
+
+impl<T> UserBuf<T> {
+    pub(crate) fn new(s: &mut [T]) -> UserBuf<T> {
+        UserBuf { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// # Safety
+    /// Caller must hold the schedule's round-ordering guarantee (no
+    /// concurrent access to the aliased region).
+    pub(crate) unsafe fn slice(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// # Safety
+    /// See [`UserBuf::slice`].
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_mut(&self) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    /// Disjoint sub-region as its own `&mut` (used for scatter-style
+    /// destinations so outstanding receives never share a Rust borrow).
+    ///
+    /// # Safety
+    /// `[offset, offset + len)` must be in bounds and disjoint from any
+    /// other live region of this buffer.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn region_mut(&self, offset: usize, len: usize) -> &mut [T] {
+        debug_assert!(offset + len <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(offset), len) }
+    }
+}
+
+/// Read-only raw view of a caller-owned send buffer (the read side of
+/// the [`UserBuf`] contract). Single-round schedules (gather,
+/// alltoall(v)) dereference it only while posting round 0 — i.e. inside
+/// the `i*` call, while the caller's borrow is still live — so no copy
+/// of the payload is ever made beyond `isend`'s own eager copy.
+pub(crate) struct UserRef<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for UserRef<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for UserRef<T> {}
+
+// SAFETY: see the type docs — reads are confined to round posting under
+// the caller's buffer contract.
+unsafe impl<T: Send> Send for UserRef<T> {}
+
+impl<T> UserRef<T> {
+    pub(crate) fn new(s: &[T]) -> UserRef<T> {
+        UserRef { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// # Safety
+    /// Caller must hold the buffer contract (no concurrent mutation, the
+    /// allocation outlives this use).
+    pub(crate) unsafe fn slice(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+/// What one round produced: the requests gating the next round, plus
+/// buffers that must stay alive until this round's requests complete
+/// (kept on the schedule, freed at final completion).
+pub(crate) struct RoundPost {
+    pub reqs: Vec<Request>,
+    pub retain: Vec<Box<dyn Any + Send>>,
+}
+
+impl RoundPost {
+    fn bare(reqs: Vec<Request>) -> RoundPost {
+        RoundPost { reqs, retain: Vec::new() }
+    }
+}
+
+/// One round of a schedule: posts its operations and returns the
+/// requests whose completions trigger the next round.
+pub(crate) type RoundFn = Box<dyn FnOnce() -> RoundPost + Send>;
+
+/// A compiled, in-flight collective: the remaining rounds plus the final
+/// completion request. Shared between the [`CollRequest`] handle and the
+/// advance continuations attached to round requests, so a schedule stays
+/// alive (and keeps progressing) even if the caller drops its handle
+/// before completion — true fire-and-forget.
+pub(crate) struct CollSchedule {
+    comm: Comm,
+    kind: &'static str,
+    rounds: Mutex<VecDeque<RoundFn>>,
+    /// Round-owned buffers pinned until the collective completes.
+    retain: Mutex<Vec<Box<dyn Any + Send>>>,
+    total: u32,
+    advanced: AtomicU32,
+    /// Final completion request (created through the rank's [`Comm`], so
+    /// its continuations route through the rank's shard like any other
+    /// request's).
+    req: Request,
+}
+
+impl CollSchedule {
+    /// Compile `rounds` into a schedule, post round 0 on the calling
+    /// thread, and hand back the composable request.
+    pub(crate) fn launch(comm: &Comm, kind: &'static str, rounds: Vec<RoundFn>) -> CollRequest {
+        let sched = Arc::new(CollSchedule {
+            comm: comm.clone(),
+            kind,
+            total: rounds.len() as u32,
+            rounds: Mutex::new(rounds.into()),
+            retain: Mutex::new(Vec::new()),
+            advanced: AtomicU32::new(0),
+            req: Request(comm.mk_req_state()),
+        });
+        sched.advance();
+        CollRequest { req: sched.req.clone(), sched }
+    }
+
+    /// Post the next round; attach an advance continuation to its
+    /// pending requests; loop through rounds that complete at post time.
+    /// Runs on the launching thread for round 0 and afterwards on
+    /// whichever thread delivers the previous round's last completion (a
+    /// shard drain on the clock thread under Sharded delivery).
+    fn advance(self: &Arc<Self>) {
+        loop {
+            let next = self.rounds.lock().unwrap().pop_front();
+            let Some(round) = next else {
+                self.finish();
+                return;
+            };
+            // Neutralize the per-call CPU debt of engine-driven posts so
+            // virtual time cannot depend on which thread advances the
+            // schedule (see module docs).
+            let caller_debt = Clock::take_debt();
+            let post = round();
+            let _engine_debt = Clock::take_debt();
+            Clock::add_debt(caller_debt);
+            let n = self.advanced.fetch_add(1, Ordering::AcqRel) + 1;
+            self.trace_round(n);
+            if !post.retain.is_empty() {
+                self.retain.lock().unwrap().extend(post.retain);
+            }
+            let pending: Vec<Request> =
+                post.reqs.into_iter().filter(|r| !r.test()).collect();
+            if pending.is_empty() {
+                continue; // round satisfied at post time: fall through
+            }
+            let remaining = Arc::new(AtomicUsize::new(pending.len()));
+            for r in &pending {
+                let sched = self.clone();
+                let remaining = remaining.clone();
+                r.on_complete(move |_| {
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        sched.advance();
+                    }
+                });
+            }
+            return;
+        }
+    }
+
+    /// All rounds done: release pinned buffers and complete the final
+    /// request (waking Park waiters and firing TAMPI/event continuations
+    /// through the normal completion pipeline).
+    fn finish(&self) {
+        self.retain.lock().unwrap().clear();
+        self.req.0.complete(&self.comm.uni.clock, None);
+    }
+
+    fn trace_round(&self, round: u32) {
+        if let Some(tr) = &self.comm.uni.tracer {
+            tr.emit(Record {
+                t: self.comm.uni.clock.now(),
+                rank: self.comm.rank as u32,
+                // Annotation record; may be stamped from the clock
+                // thread (see `trace::Record::worker` sentinel docs).
+                worker: u32::MAX,
+                kind: EventKind::CollRoundAdvanced { round, total: self.total },
+                label: self.kind.to_string(),
+                task_id: 0,
+            });
+        }
+    }
+}
+
+/// Handle to an in-flight collective (MPI's request-returning `MPI_I*`
+/// collectives, Section 6.1). Derefs to the underlying [`Request`], so
+/// it composes with `Request::wait` / `wait_any`, `Tampi::iwait[all]`,
+/// and task external-event binding exactly like a point-to-point
+/// request.
+#[derive(Clone)]
+pub struct CollRequest {
+    req: Request,
+    sched: Arc<CollSchedule>,
+}
+
+impl CollRequest {
+    /// The composable completion request (clone it into `wait_any`
+    /// slices or hand it to `Tampi::iwait`).
+    pub fn request(&self) -> &Request {
+        &self.req
+    }
+
+    /// Consume the handle, keeping only the completion request. The
+    /// schedule keeps advancing regardless (its continuations own it).
+    pub fn into_request(self) -> Request {
+        self.req
+    }
+
+    /// Park the calling OS thread until the collective completes.
+    pub fn wait(&self) {
+        self.req.wait(&self.sched.comm.uni.clock);
+    }
+
+    /// Algorithm name ("barrier", "bcast", ...).
+    pub fn kind(&self) -> &'static str {
+        self.sched.kind
+    }
+
+    /// Rounds in this rank's schedule.
+    pub fn rounds_total(&self) -> u32 {
+        self.sched.total
+    }
+
+    /// Rounds posted so far.
+    pub fn rounds_advanced(&self) -> u32 {
+        self.sched.advanced.load(Ordering::Acquire)
+    }
+}
+
+impl std::ops::Deref for CollRequest {
+    type Target = Request;
+    fn deref(&self) -> &Request {
+        &self.req
+    }
+}
+
+impl std::fmt::Debug for CollRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CollRequest({} round {}/{}, completed={})",
+            self.sched.kind,
+            self.rounds_advanced(),
+            self.rounds_total(),
+            self.req.test()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Schedule builders: one per collective algorithm. Each returns this
+// rank's round list; `CollSchedule::launch` posts round 0 immediately.
+// ---------------------------------------------------------------------
+
+/// Dissemination barrier: round k exchanges a token with the rank
+/// `2^k` away; log2(size) rounds, each gated on the previous.
+pub(crate) fn barrier_schedule(comm: &Comm) -> Vec<RoundFn> {
+    let n = comm.size;
+    let mut rounds: Vec<RoundFn> = Vec::new();
+    if n == 1 {
+        return rounds;
+    }
+    let seq = comm.next_coll_seq();
+    let mut round = 1usize;
+    let mut phase = 0u32;
+    while round < n {
+        let comm = comm.clone();
+        let tag = coll_tag(seq, phase);
+        let dist = round;
+        rounds.push(Box::new(move || {
+            let n = comm.size;
+            let to = (comm.rank + dist) % n;
+            let from = (comm.rank + n - dist) % n;
+            let mut buf = Box::new([0u8; 1]);
+            let s = comm.isend_ctx(&[1u8], to, tag, false, Ctx::Coll);
+            let r = comm.irecv_ctx(&mut buf[..], from as i32, tag, Ctx::Coll);
+            RoundPost { reqs: vec![s, r], retain: vec![buf as Box<dyn Any + Send>] }
+        }));
+        round <<= 1;
+        phase += 1;
+    }
+    rounds
+}
+
+/// Binomial-tree broadcast rooted at `root`: non-root ranks receive from
+/// their parent (round 0), then forward to their children (round 1);
+/// the root forwards immediately.
+pub(crate) fn bcast_schedule<T: Pod>(
+    comm: &Comm,
+    buf: UserBuf<T>,
+    root: usize,
+    seq: u64,
+) -> Vec<RoundFn> {
+    let n = comm.size;
+    let mut rounds: Vec<RoundFn> = Vec::new();
+    if n == 1 {
+        return rounds;
+    }
+    let tag = coll_tag(seq, 0);
+    let vr = (comm.rank + n - root) % n; // virtual rank, root -> 0
+    if vr != 0 {
+        let comm = comm.clone();
+        rounds.push(Box::new(move || {
+            let parent = ((vr - 1) / 2 + root) % n;
+            // SAFETY: i-collective buffer contract (untouched by the
+            // caller until completion); no prior round aliases it.
+            let dst = unsafe { buf.slice_mut() };
+            RoundPost::bare(vec![comm.irecv_ctx(dst, parent as i32, tag, Ctx::Coll)])
+        }));
+    }
+    {
+        let comm = comm.clone();
+        rounds.push(Box::new(move || {
+            let mut reqs = Vec::new();
+            for child in [2 * vr + 1, 2 * vr + 2] {
+                if child < n {
+                    let dst = (child + root) % n;
+                    // SAFETY: the parent's payload landed in round 0 (or
+                    // this is the root's own data).
+                    let src = unsafe { buf.slice() };
+                    reqs.push(comm.isend_ctx(src, dst, tag, false, Ctx::Coll));
+                }
+            }
+            RoundPost::bare(reqs)
+        }));
+    }
+    rounds
+}
+
+/// Binomial-tree reduction to `root`: round 0 posts all child receives
+/// into temporaries; round 1 folds them into the user buffer in fixed
+/// child order (bit-identical to the sequential blocking algorithm) and
+/// forwards the partial result to the parent.
+pub(crate) fn reduce_schedule<T: Pod>(
+    comm: &Comm,
+    buf: UserBuf<T>,
+    root: usize,
+    seq: u64,
+    op: Box<dyn Fn(&mut [T], &[T]) + Send>,
+) -> Vec<RoundFn> {
+    let n = comm.size;
+    let mut rounds: Vec<RoundFn> = Vec::new();
+    if n == 1 {
+        return rounds;
+    }
+    let tag = coll_tag(seq, 0);
+    let vr = (comm.rank + n - root) % n;
+    // Binomial children: vr + 2^k while valid.
+    let mut children = Vec::new();
+    let mut k = 1usize;
+    while vr + k < n && (vr & k) == 0 {
+        children.push(((vr + k) + root) % n);
+        k <<= 1;
+    }
+    let temps: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
+    if !children.is_empty() {
+        let comm = comm.clone();
+        let temps = temps.clone();
+        let children = children.clone();
+        rounds.push(Box::new(move || {
+            let len = buf.len();
+            // SAFETY: contract; seed value only (recv overwrites).
+            let seed = unsafe { buf.slice()[0] };
+            let mut g = temps.lock().unwrap();
+            for _ in &children {
+                g.push(vec![seed; len]);
+            }
+            let mut reqs = Vec::new();
+            for (i, &child) in children.iter().enumerate() {
+                reqs.push(comm.irecv_ctx(&mut g[i][..], child as i32, tag, Ctx::Coll));
+            }
+            RoundPost::bare(reqs)
+        }));
+    }
+    {
+        let comm = comm.clone();
+        rounds.push(Box::new(move || {
+            // SAFETY: children's contributions landed in round 0; the
+            // caller holds the buffer untouched.
+            let acc = unsafe { buf.slice_mut() };
+            let g = temps.lock().unwrap();
+            for t in g.iter() {
+                op(&mut *acc, &t[..]); // fixed child order: deterministic rounding
+            }
+            drop(g);
+            let mut reqs = Vec::new();
+            if vr != 0 {
+                let parent_vr = vr & (vr - 1);
+                let parent = (parent_vr + root) % n;
+                let src = unsafe { buf.slice() };
+                reqs.push(comm.isend_ctx(src, parent, tag, false, Ctx::Coll));
+            }
+            RoundPost::bare(reqs)
+        }));
+    }
+    rounds
+}
+
+/// Allreduce = reduce-to-0 then bcast-from-0, chained in one schedule
+/// (two sequence numbers, matching the blocking composition).
+pub(crate) fn allreduce_schedule<T: Pod>(
+    comm: &Comm,
+    buf: UserBuf<T>,
+    op: Box<dyn Fn(&mut [T], &[T]) + Send>,
+) -> Vec<RoundFn> {
+    let seq_reduce = comm.next_coll_seq();
+    let seq_bcast = comm.next_coll_seq();
+    let mut rounds = reduce_schedule(comm, buf, 0, seq_reduce, op);
+    rounds.extend(bcast_schedule(comm, buf, 0, seq_bcast));
+    rounds
+}
+
+/// Flat gather to `root`: one round (root posts all receives and copies
+/// its own chunk; leaves send). Round 0 posts at launch, so `send` is
+/// read zero-copy while the caller's borrow is live.
+pub(crate) fn gather_schedule<T: Pod>(
+    comm: &Comm,
+    send: UserRef<T>,
+    recv: Option<UserBuf<T>>,
+    root: usize,
+) -> Vec<RoundFn> {
+    let n = comm.size;
+    let seq = comm.next_coll_seq();
+    let tag = coll_tag(seq, 0);
+    let mut rounds: Vec<RoundFn> = Vec::new();
+    if comm.rank == root {
+        let recv = recv.expect("root must pass a receive buffer");
+        assert_eq!(recv.len(), send.len() * n);
+        let comm = comm.clone();
+        rounds.push(Box::new(move || {
+            let chunk = send.len();
+            let mut reqs = Vec::new();
+            for r in 0..n {
+                // SAFETY: per-rank regions are disjoint by construction;
+                // the send view is read during launch only.
+                let dst = unsafe { recv.region_mut(r * chunk, chunk) };
+                if r == root {
+                    dst.copy_from_slice(unsafe { send.slice() });
+                } else {
+                    reqs.push(comm.irecv_ctx(dst, r as i32, tag, Ctx::Coll));
+                }
+            }
+            RoundPost::bare(reqs)
+        }));
+    } else {
+        let comm = comm.clone();
+        rounds.push(Box::new(move || {
+            // SAFETY: read during launch; isend copies eagerly.
+            let src = unsafe { send.slice() };
+            RoundPost::bare(vec![comm.isend_ctx(src, root, tag, false, Ctx::Coll)])
+        }));
+    }
+    rounds
+}
+
+/// Alltoallv: a single round posting all receives (in displacement
+/// order, like the blocking algorithm) followed by all sends. Round 0
+/// posts at launch, so `send` is read zero-copy while the caller's
+/// borrow is live.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn alltoallv_schedule<T: Pod>(
+    comm: &Comm,
+    send: UserRef<T>,
+    scounts: Vec<usize>,
+    sdispls: Vec<usize>,
+    recv: UserBuf<T>,
+    rcounts: Vec<usize>,
+    rdispls: Vec<usize>,
+) -> Vec<RoundFn> {
+    let n = comm.size;
+    assert!(scounts.len() == n && rcounts.len() == n);
+    // Validate the receive regions are disjoint and in bounds (the
+    // blocking algorithm enforced this through split_at_mut arithmetic).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&r| rdispls[r]);
+    let mut end = 0usize;
+    for &r in &order {
+        assert!(rdispls[r] >= end, "overlapping alltoallv receive regions");
+        end = rdispls[r] + rcounts[r];
+    }
+    assert!(end <= recv.len(), "alltoallv receive buffer too small");
+
+    let seq = comm.next_coll_seq();
+    let tag = coll_tag(seq, 0);
+    let comm = comm.clone();
+    let round: RoundFn = Box::new(move || {
+        let rank = comm.rank;
+        // SAFETY: read during launch only; isend copies eagerly.
+        let send = unsafe { send.slice() };
+        let mut reqs = Vec::with_capacity(2 * n);
+        // Receives first (deterministic matching), in displacement order.
+        for &r in &order {
+            // SAFETY: regions validated disjoint above; caller contract.
+            let dst = unsafe { recv.region_mut(rdispls[r], rcounts[r]) };
+            if r == rank {
+                dst.copy_from_slice(&send[sdispls[r]..sdispls[r] + rcounts[r]]);
+            } else {
+                reqs.push(comm.irecv_ctx(dst, r as i32, tag, Ctx::Coll));
+            }
+        }
+        for r in 0..n {
+            if r != rank {
+                reqs.push(comm.isend_ctx(
+                    &send[sdispls[r]..sdispls[r] + scounts[r]],
+                    r,
+                    tag,
+                    false,
+                    Ctx::Coll,
+                ));
+            }
+        }
+        RoundPost::bare(reqs)
+    });
+    vec![round]
+}

@@ -1,37 +1,55 @@
-//! Collectives over p2p on the dedicated collective context.
+//! Collectives over p2p on the dedicated collective context — all built
+//! on the schedule-driven engine in [`super::coll_schedule`].
 //!
-//! Every collective is expressed through a *wait strategy* so the TAMPI
-//! layer can reuse the same algorithms with task-aware waiting (the paper
-//! intercepts collective operations too, Section 6.1): `WaitMode::Park`
-//! blocks the OS thread; `WaitMode::TaskAware` routes each internal wait
-//! through `tampi`-style pause/resume (installed by the tampi module).
+//! Two surfaces over ONE engine:
+//!
+//! * **Non-blocking** (`ibarrier`, `ibcast`, `ireduce`, `iallreduce`,
+//!   `igather`, `ialltoall`, `ialltoallv`): compile the collective into
+//!   a [`CollSchedule`] and return a [`CollRequest`] immediately. The
+//!   progress engine advances the rounds; the request composes with
+//!   [`Request::wait`]/[`Request::wait_any`], TAMPI `iwait`/`iwaitall`,
+//!   and task external-event binding (Section 6.1/6.2 extended to
+//!   collectives). MPI contract: the buffers passed to an `i*` call must
+//!   stay valid and untouched until the request completes.
+//! * **Blocking** (`barrier`, `bcast`, …, plus the `*_with(WaitMode)`
+//!   variants TAMPI uses): thin wrappers that launch the same schedule
+//!   and wait on its final request. `WaitMode::Park` blocks the OS
+//!   thread; `WaitMode::TaskAware` routes the single wait through
+//!   `tampi`-style pause/resume. Because rounds advance on the engine —
+//!   never on the waiting thread — even a Park-mode collective inside a
+//!   task cannot stall the collective's own progress.
 //!
 //! Collective-internal requests are created through the calling rank's
 //! [`Comm`], so under [`crate::progress::DeliveryMode::Sharded`] a
-//! collective's completion wave — e.g. the `2(n-1)` requests of an
-//! alltoallv landing at one virtual instant — is delivered as *one*
-//! batch per participating rank's shard, not one scheduler-lock
-//! acquisition per request (see the `progress` module docs).
+//! round's completion wave — e.g. the `2(n-1)` requests of an alltoallv
+//! landing at one virtual instant — is delivered as *one* batch per
+//! participating rank's shard, and the shard drain itself posts the next
+//! round (see the `progress` and `coll_schedule` module docs).
 
 use crate::nanos::CompletionMode;
 
+use super::coll_schedule::{
+    allreduce_schedule, alltoallv_schedule, barrier_schedule, bcast_schedule,
+    gather_schedule, reduce_schedule, CollSchedule, UserBuf, UserRef,
+};
 use super::comm::Comm;
-use super::p2p::Ctx;
 use super::request::Request;
 use super::Pod;
 
-/// How a collective waits for its internal requests.
+pub use super::coll_schedule::CollRequest;
+
+/// How a blocking collective waits for its final request.
 #[derive(Clone, Copy, Default)]
 pub enum WaitMode {
     /// Block the calling OS thread (plain MPI behaviour).
     #[default]
     Park,
     /// Pause the calling task instead (requires TAMPI blocking mode;
-    /// panics outside a task). Carries an optional completion-mode
-    /// override: `None` follows the runtime's configured mode; `Some`
-    /// pins the pipeline (set by [`crate::tampi::Tampi`] handles created
-    /// with `init_with_mode`, so a per-handle override also governs the
-    /// handle's collective waits).
+    /// degrades to `Park` outside a task). Carries an optional
+    /// completion-mode override: `None` follows the runtime's configured
+    /// mode; `Some` pins the pipeline (set by [`crate::tampi::Tampi`]
+    /// handles created with `init_with_mode`, so a per-handle override
+    /// also governs the handle's collective waits).
     TaskAware(Option<CompletionMode>),
 }
 
@@ -45,28 +63,119 @@ impl Comm {
         }
     }
 
+    // ----- non-blocking surface: schedule launch, request back -----
+
+    /// Non-blocking barrier (MPI_Ibarrier): dissemination algorithm,
+    /// log2(size) engine-driven rounds.
+    pub fn ibarrier(&self) -> CollRequest {
+        CollSchedule::launch(self, "barrier", barrier_schedule(self))
+    }
+
+    /// Non-blocking broadcast (MPI_Ibcast): binomial tree rooted at
+    /// `root`. `buf` must stay untouched until the request completes.
+    pub fn ibcast<T: Pod>(&self, buf: &mut [T], root: usize) -> CollRequest {
+        let seq = self.next_coll_seq();
+        CollSchedule::launch(
+            self,
+            "bcast",
+            bcast_schedule(self, UserBuf::new(buf), root, seq),
+        )
+    }
+
+    /// Non-blocking reduction (MPI_Ireduce) with combiner
+    /// `op(acc, incoming)`, applied in a fixed deterministic order.
+    pub fn ireduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        root: usize,
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) -> CollRequest {
+        let seq = self.next_coll_seq();
+        CollSchedule::launch(
+            self,
+            "reduce",
+            reduce_schedule(self, UserBuf::new(buf), root, seq, Box::new(op)),
+        )
+    }
+
+    /// Non-blocking allreduce (MPI_Iallreduce) = reduce-to-0 + bcast-
+    /// from-0 chained in one schedule.
+    pub fn iallreduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) -> CollRequest {
+        CollSchedule::launch(
+            self,
+            "allreduce",
+            allreduce_schedule(self, UserBuf::new(buf), Box::new(op)),
+        )
+    }
+
+    /// Non-blocking gather (MPI_Igather): fixed-size contribution per
+    /// rank into root's buffer.
+    pub fn igather<T: Pod>(
+        &self,
+        send: &[T],
+        recv: Option<&mut [T]>,
+        root: usize,
+    ) -> CollRequest {
+        CollSchedule::launch(
+            self,
+            "gather",
+            gather_schedule(self, UserRef::new(send), recv.map(UserBuf::new), root),
+        )
+    }
+
+    /// Non-blocking alltoall (MPI_Ialltoall): equal-size blocks.
+    pub fn ialltoall<T: Pod>(&self, send: &[T], recv: &mut [T]) -> CollRequest {
+        let n = self.size;
+        assert_eq!(send.len() % n, 0);
+        assert_eq!(recv.len(), send.len());
+        let chunk = send.len() / n;
+        let counts: Vec<usize> = vec![chunk; n];
+        let displs: Vec<usize> = (0..n).map(|i| i * chunk).collect();
+        self.ialltoallv(send, &counts, &displs, recv, &counts, &displs)
+    }
+
+    /// Non-blocking alltoallv (MPI_Ialltoallv): variable blocks; the
+    /// transposition primitive IFSKer uses between grid-point and
+    /// spectral distributions (Section 7.2).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ialltoallv<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) -> CollRequest {
+        CollSchedule::launch(
+            self,
+            "alltoallv",
+            alltoallv_schedule(
+                self,
+                UserRef::new(send),
+                scounts.to_vec(),
+                sdispls.to_vec(),
+                UserBuf::new(recv),
+                rcounts.to_vec(),
+                rdispls.to_vec(),
+            ),
+        )
+    }
+
+    // ----- blocking surface: wrappers over the same schedules -----
+
     /// MPI_Barrier (dissemination algorithm, log2(size) rounds).
     pub fn barrier(&self) {
         self.barrier_with(WaitMode::Park)
     }
 
     pub fn barrier_with(&self, mode: WaitMode) {
-        let tag = self.next_coll_tag();
-        let n = self.size;
-        if n == 1 {
-            return;
-        }
-        let token = [1u8];
-        let mut round = 1usize;
-        while round < n {
-            let to = (self.rank + round) % n;
-            let from = (self.rank + n - round % n) % n;
-            let mut buf = [0u8];
-            let s = self.isend_ctx(&token, to, tag, false, Ctx::Coll);
-            let r = self.irecv_ctx(&mut buf, from as i32, tag, Ctx::Coll);
-            self.coll_wait(mode, &[s, r]);
-            round <<= 1;
-        }
+        let cr = self.ibarrier();
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
     /// MPI_Bcast (binomial tree rooted at `root`).
@@ -75,31 +184,17 @@ impl Comm {
     }
 
     pub fn bcast_with<T: Pod>(&self, buf: &mut [T], root: usize, mode: WaitMode) {
-        let tag = self.next_coll_tag();
-        let n = self.size;
-        if n == 1 {
-            return;
-        }
-        let vr = (self.rank + n - root) % n; // virtual rank, root -> 0
-        if vr != 0 {
-            let parent = ((vr - 1) / 2 + root) % n;
-            let r = self.irecv_ctx(buf, parent as i32, tag, Ctx::Coll);
-            self.coll_wait(mode, &[r]);
-        }
-        let mut reqs = Vec::new();
-        for child in [2 * vr + 1, 2 * vr + 2] {
-            if child < n {
-                let dst = (child + root) % n;
-                reqs.push(self.isend_ctx(&*buf, dst, tag, false, Ctx::Coll));
-            }
-        }
-        if !reqs.is_empty() {
-            self.coll_wait(mode, &reqs);
-        }
+        let cr = self.ibcast(buf, root);
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
     /// MPI_Reduce with a user combiner `op(acc, incoming)`.
-    pub fn reduce<T: Pod>(&self, buf: &mut [T], root: usize, op: impl Fn(&mut [T], &[T])) {
+    pub fn reduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        root: usize,
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) {
         self.reduce_with(buf, root, op, WaitMode::Park)
     }
 
@@ -107,47 +202,30 @@ impl Comm {
         &self,
         buf: &mut [T],
         root: usize,
-        op: impl Fn(&mut [T], &[T]),
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
         mode: WaitMode,
     ) {
-        let tag = self.next_coll_tag();
-        let n = self.size;
-        if n == 1 {
-            return;
-        }
-        let vr = (self.rank + n - root) % n;
-        // Receive from children (binomial: children are vr + 2^k while valid).
-        let mut k = 1usize;
-        while vr + k < n && (vr & k) == 0 {
-            let child = ((vr + k) + root) % n;
-            let mut tmp = vec![buf[0]; buf.len()];
-            let r = self.irecv_ctx(&mut tmp, child as i32, tag, Ctx::Coll);
-            self.coll_wait(mode, &[r]);
-            op(buf, &tmp);
-            k <<= 1;
-        }
-        if vr != 0 {
-            // Parent: clear the lowest set bit of vr.
-            let parent_vr = vr & (vr - 1);
-            let parent = (parent_vr + root) % n;
-            let s = self.isend_ctx(&*buf, parent, tag, false, Ctx::Coll);
-            self.coll_wait(mode, &[s]);
-        }
+        let cr = self.ireduce(buf, root, op);
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
     /// MPI_Allreduce = reduce to 0 + bcast from 0.
-    pub fn allreduce<T: Pod>(&self, buf: &mut [T], op: impl Fn(&mut [T], &[T])) {
+    pub fn allreduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) {
         self.allreduce_with(buf, op, WaitMode::Park)
     }
 
     pub fn allreduce_with<T: Pod>(
         &self,
         buf: &mut [T],
-        op: impl Fn(&mut [T], &[T]),
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
         mode: WaitMode,
     ) {
-        self.reduce_with(buf, 0, op, mode);
-        self.bcast_with(buf, 0, mode);
+        let cr = self.iallreduce(buf, op);
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
     /// MPI_Gather: fixed-size contribution per rank into root's buffer.
@@ -162,45 +240,17 @@ impl Comm {
         root: usize,
         mode: WaitMode,
     ) {
-        let tag = self.next_coll_tag();
-        let n = self.size;
-        if self.rank == root {
-            let recv = recv.expect("root must pass a receive buffer");
-            assert_eq!(recv.len(), send.len() * n);
-            let chunk = send.len();
-            let mut reqs = Vec::new();
-            for r in 0..n {
-                if r == root {
-                    recv[r * chunk..(r + 1) * chunk].copy_from_slice(send);
-                } else {
-                    reqs.push(self.irecv_ctx(
-                        &mut recv[r * chunk..(r + 1) * chunk],
-                        r as i32,
-                        tag,
-                        Ctx::Coll,
-                    ));
-                }
-            }
-            self.coll_wait(mode, &reqs);
-        } else {
-            let s = self.isend_ctx(send, root, tag, false, Ctx::Coll);
-            self.coll_wait(mode, &[s]);
-        }
+        let cr = self.igather(send, recv, root);
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
     /// MPI_Alltoall: equal-size blocks to/from every rank.
     pub fn alltoall<T: Pod>(&self, send: &[T], recv: &mut [T]) {
-        let n = self.size;
-        assert_eq!(send.len() % n, 0);
-        assert_eq!(recv.len(), send.len());
-        let chunk = send.len() / n;
-        let scounts: Vec<usize> = vec![chunk; n];
-        let sdispls: Vec<usize> = (0..n).map(|i| i * chunk).collect();
-        self.alltoallv(send, &scounts, &sdispls, recv, &scounts, &sdispls, WaitMode::Park);
+        let cr = self.ialltoall(send, recv);
+        self.coll_wait(WaitMode::Park, std::slice::from_ref(cr.request()));
     }
 
-    /// MPI_Alltoallv: variable blocks; the transposition primitive IFSKer
-    /// uses between grid-point and spectral distributions (Section 7.2).
+    /// MPI_Alltoallv: variable blocks.
     #[allow(clippy::too_many_arguments)]
     pub fn alltoallv<T: Pod>(
         &self,
@@ -212,43 +262,7 @@ impl Comm {
         rdispls: &[usize],
         mode: WaitMode,
     ) {
-        let tag = self.next_coll_tag();
-        let n = self.size;
-        assert!(scounts.len() == n && rcounts.len() == n);
-        let mut reqs = Vec::with_capacity(2 * n);
-        // Post all receives first (deterministic matching), then sends.
-        // Split recv into disjoint slices.
-        let mut rest: &mut [T] = recv;
-        let mut offset = 0usize;
-        let mut rslices: Vec<(usize, &mut [T])> = Vec::new(); // (rank, slice)
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&r| rdispls[r]);
-        for &r in &order {
-            let skip = rdispls[r] - offset;
-            let (_, tail) = rest.split_at_mut(skip);
-            let (slice, tail) = tail.split_at_mut(rcounts[r]);
-            rest = tail;
-            offset = rdispls[r] + rcounts[r];
-            rslices.push((r, slice));
-        }
-        for (r, slice) in rslices.iter_mut() {
-            if *r == self.rank {
-                slice.copy_from_slice(&send[sdispls[*r]..sdispls[*r] + rcounts[*r]]);
-            } else {
-                reqs.push(self.irecv_ctx(slice, *r as i32, tag, Ctx::Coll));
-            }
-        }
-        for r in 0..n {
-            if r != self.rank {
-                reqs.push(self.isend_ctx(
-                    &send[sdispls[r]..sdispls[r] + scounts[r]],
-                    r,
-                    tag,
-                    false,
-                    Ctx::Coll,
-                ));
-            }
-        }
-        self.coll_wait(mode, &reqs);
+        let cr = self.ialltoallv(send, scounts, sdispls, recv, rcounts, rdispls);
+        self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 }

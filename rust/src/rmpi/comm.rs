@@ -5,6 +5,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::progress::{DeliveryMode, EngineStats, ProgressEngine, ShardStats};
 use crate::sim::Clock;
+use crate::trace::Tracer;
 
 use super::match_engine::ContextQueues;
 use super::net::NetworkModel;
@@ -23,6 +24,9 @@ pub(crate) struct UniState {
     /// Completion-delivery engine (per-rank shards under
     /// [`DeliveryMode::Sharded`]; empty under `Direct`).
     pub progress: Arc<ProgressEngine>,
+    /// Cluster tracer (annotation records from the collective engine's
+    /// round advances are stamped here).
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl UniState {
@@ -128,8 +132,13 @@ impl Comm {
         }
     }
 
-    pub(crate) fn next_coll_tag(&self) -> i32 {
-        (self.coll_seq.fetch_add(1, Ordering::Relaxed) % (i32::MAX as u64)) as i32
+    /// Consume one collective sequence number. MPI requires all ranks to
+    /// issue collectives on a communicator in the same order, so equal
+    /// call indices resolve to equal sequence numbers on every rank; the
+    /// schedule engine packs `(seq, phase)` into per-round message tags
+    /// (see [`super::coll_schedule::coll_tag`]).
+    pub(crate) fn next_coll_seq(&self) -> u64 {
+        self.coll_seq.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Allocate request state for an operation *owned by this rank*,

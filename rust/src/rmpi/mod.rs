@@ -11,7 +11,12 @@
 //!   tasks deadlock, Section 5) and `isend`/`issend`/`irecv` plus
 //!   `test`/`wait`/`waitall` over [`request::Request`]s.
 //! * **Collectives**: barrier, bcast, reduce, allreduce, gather, alltoall
-//!   and alltoallv, built over p2p on a separate match context.
+//!   and alltoallv, built over p2p on a separate match context — each
+//!   compiled into a schedule of engine-driven rounds ([`coll_schedule`])
+//!   with a first-class non-blocking surface (`ibarrier`, `ibcast`,
+//!   `iallreduce`, `ialltoallv`, …) returning a [`CollRequest`] that
+//!   composes with waits and task external events; the blocking calls
+//!   are wrappers waiting on the same schedule.
 //! * **Threading levels**: `Single`..`Multiple` plus the paper's proposed
 //!   `TaskMultiple` (Section 6.3), which [`crate::tampi`] turns on.
 //! * **Interconnect model** ([`net`]): per-message delivery deadline
@@ -22,6 +27,7 @@
 //! cluster shape (nodes × ranks-per-node × cores) is configured in
 //! [`universe::ClusterConfig`].
 
+pub mod coll_schedule;
 pub mod collectives;
 pub mod comm;
 pub mod match_engine;
@@ -30,6 +36,7 @@ pub mod p2p;
 pub mod request;
 pub mod universe;
 
+pub use coll_schedule::CollRequest;
 pub use comm::Comm;
 pub use net::NetworkModel;
 pub use request::{Request, Status};

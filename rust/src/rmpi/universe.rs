@@ -116,6 +116,13 @@ pub struct RunStats {
     pub resume_lock_ops: u64,
     /// Ready-queue items stolen across workers' local deques.
     pub steals: u64,
+    /// Failed steal probes (a victim deque locked and found empty) —
+    /// the waste the adaptive last-victim steal order reduces.
+    pub steal_probes: u64,
+    /// External-event decrement operations applied to task counters:
+    /// O(events) under `Direct`; under `Sharded` a drain coalesces all
+    /// same-task decrements of one batch into a single `dec_events(n)`.
+    pub event_dec_ops: u64,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
 }
@@ -192,6 +199,7 @@ impl Universe {
             contexts: Mutex::new(Vec::new()),
             dup_map: Mutex::new(HashMap::new()),
             progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
+            tracer: cfg.tracer.clone(),
         });
         {
             // World communicator owns contexts 0 (p2p) and 1 (collectives).
@@ -341,14 +349,18 @@ impl Universe {
                 let mut workers = 0;
                 let mut resume_lock_ops = 0;
                 let mut steals = 0;
+                let mut steal_probes = 0;
+                let mut event_dec_ops = 0;
                 for rt in runtimes.iter().flatten() {
                     let (t, p, w) = rt.stats();
                     tasks += t;
                     pauses += p;
                     workers += w;
-                    let (rl, _bulk, st) = rt.sched_counters();
+                    let (rl, _bulk, st, pr) = rt.sched_counters();
                     resume_lock_ops += rl;
                     steals += st;
+                    steal_probes += pr;
+                    event_dec_ops += rt.event_dec_ops();
                 }
                 let counters = counters.0.lock().unwrap().clone();
                 let pstats = uni.progress.stats();
@@ -362,6 +374,8 @@ impl Universe {
                     max_batch: pstats.max_batch,
                     resume_lock_ops,
                     steals,
+                    steal_probes,
+                    event_dec_ops,
                     counters,
                 })
             }

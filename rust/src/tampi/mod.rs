@@ -16,6 +16,16 @@
 //!
 //! Both modes coexist (Section 6.2).
 //!
+//! Collectives are intercepted too (Section 6.1), on both surfaces:
+//! blocking collectives inside tasks pause once on the schedule engine's
+//! final request ([`Tampi::barrier`]/[`Tampi::allreduce`]), and the
+//! non-blocking [`Tampi::ibarrier`]/[`Tampi::ibcast`]/
+//! [`Tampi::iallreduce`]/[`Tampi::ialltoallv`] bind a
+//! [`crate::rmpi::CollRequest`]'s completion to the calling task's
+//! dependency release through the external-events API — the `MPI_I*` +
+//! `TAMPI_Iwait` fusion. The collective's rounds advance on the progress
+//! engine either way (see `rmpi::coll_schedule`).
+//!
 //! In the real TAMPI these flows hide behind the PMPI interception layer;
 //! here [`Tampi`] is an explicit wrapper handle over a [`Comm`], which is
 //! the same integration surface without symbol interposition.
@@ -367,8 +377,10 @@ impl Tampi {
         self.block_on(reqs.to_vec());
     }
 
-    /// Task-aware `MPI_Barrier` (collectives are intercepted too). The
-    /// collective's internal waits use this handle's completion mode.
+    /// Task-aware `MPI_Barrier` (collectives are intercepted too,
+    /// Section 6.1). The schedule engine drives the rounds; the task
+    /// pauses once on the collective's final request, using this
+    /// handle's completion mode.
     pub fn barrier(&self) {
         if !self.enabled || !self.in_task() {
             return self.comm.barrier();
@@ -378,12 +390,83 @@ impl Tampi {
     }
 
     /// Task-aware `MPI_Allreduce`.
-    pub fn allreduce<T: Pod>(&self, buf: &mut [T], op: impl Fn(&mut [T], &[T])) {
+    pub fn allreduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) {
         if !self.enabled || !self.in_task() {
             return self.comm.allreduce(buf, op);
         }
         let wm = crate::rmpi::collectives::WaitMode::TaskAware(Some(self.state.mode));
         self.comm.allreduce_with(buf, op, wm);
+    }
+
+    // ----- non-blocking collectives (Section 6.1 interception extended
+    // ----- to the request-returning MPI_I* collectives + TAMPI_Iwait) --
+
+    /// Task-aware `MPI_Ibarrier` + `TAMPI_Iwait` fusion: bind the
+    /// barrier's completion to the calling task's dependency release and
+    /// return immediately. Outside a task (or with interop disabled)
+    /// this degrades to the blocking barrier, like the paper's PMPI
+    /// fallback.
+    pub fn ibarrier(&self) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.barrier();
+        }
+        let cr = self.comm.ibarrier();
+        self.iwait(cr.request());
+    }
+
+    /// Task-aware `MPI_Ibcast` + `TAMPI_Iwait`: the buffer may only be
+    /// consumed by successor tasks (released when the bcast completes).
+    pub fn ibcast<T: Pod>(&self, buf: &mut [T], root: usize) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.bcast(buf, root);
+        }
+        let cr = self.comm.ibcast(buf, root);
+        self.iwait(cr.request());
+    }
+
+    /// Task-aware `MPI_Iallreduce` + `TAMPI_Iwait` (Fig 4's flow over a
+    /// collective): the task finishes without waiting; its dependencies
+    /// release when the engine-driven allreduce completes.
+    pub fn iallreduce<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Fn(&mut [T], &[T]) + Send + 'static,
+    ) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.allreduce(buf, op);
+        }
+        let cr = self.comm.iallreduce(buf, op);
+        self.iwait(cr.request());
+    }
+
+    /// Task-aware `MPI_Ialltoallv` + `TAMPI_Iwait`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ialltoallv<T: Pod>(
+        &self,
+        send: &[T],
+        scounts: &[usize],
+        sdispls: &[usize],
+        recv: &mut [T],
+        rcounts: &[usize],
+        rdispls: &[usize],
+    ) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.alltoallv(
+                send,
+                scounts,
+                sdispls,
+                recv,
+                rcounts,
+                rdispls,
+                crate::rmpi::collectives::WaitMode::Park,
+            );
+        }
+        let cr = self.comm.ialltoallv(send, scounts, sdispls, recv, rcounts, rdispls);
+        self.iwait(cr.request());
     }
 
     // ----- non-blocking mode (Section 6.2): TAMPI_Iwait / TAMPI_Iwaitall -----

@@ -41,6 +41,11 @@ pub enum EventKind {
     /// pass with one scheduler bulk-enqueue (see [`crate::progress`]).
     /// Stamped from the clock thread (worker = `u32::MAX` sentinel).
     BatchDelivered { shard: u32, count: u32 },
+    /// The collective engine posted round `round` of `total` of one
+    /// rank's collective schedule (see `rmpi::coll_schedule`). Stamped
+    /// from whichever thread delivered the previous round's last
+    /// completion — often the clock thread (worker = `u32::MAX`).
+    CollRoundAdvanced { round: u32, total: u32 },
     /// Free-form phase marker (e.g. "iteration 3").
     Phase,
 }
@@ -52,7 +57,9 @@ impl EventKind {
     pub fn is_annotation(self) -> bool {
         matches!(
             self,
-            EventKind::CompletionDelivered | EventKind::BatchDelivered { .. }
+            EventKind::CompletionDelivered
+                | EventKind::BatchDelivered { .. }
+                | EventKind::CollRoundAdvanced { .. }
         )
     }
 
@@ -67,6 +74,7 @@ impl EventKind {
             EventKind::MpiEnd => "mpi_end",
             EventKind::CompletionDelivered => "completion_delivered",
             EventKind::BatchDelivered { .. } => "batch_delivered",
+            EventKind::CollRoundAdvanced { .. } => "coll_round_advanced",
             EventKind::Phase => "phase",
         }
     }

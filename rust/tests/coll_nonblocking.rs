@@ -1,0 +1,427 @@
+//! Schedule-driven collective engine: non-blocking collectives as
+//! first-class requests (rmpi::coll_schedule / collectives), TAMPI
+//! collective interception, event-decrement coalescing, and the
+//! blocking-vs-non-blocking application acceptance criteria.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::apps::gauss_seidel::{self, GsParams, GsVersion};
+use tampi_repro::apps::ifsker::{self, IfsParams, IfsVersion};
+use tampi_repro::bench;
+use tampi_repro::nanos::{self, Mode};
+use tampi_repro::progress::DeliveryMode;
+use tampi_repro::rmpi::{ClusterConfig, Request, ThreadLevel, Universe};
+use tampi_repro::sim::ms;
+use tampi_repro::tampi;
+use tampi_repro::trace::{EventKind, Tracer};
+
+/// Per-rank schedule shapes: round counts of each algorithm on 8 ranks.
+#[test]
+fn schedule_round_counts_per_algorithm() {
+    let n = 8usize;
+    Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        let r = ctx.rank;
+
+        // Dissemination barrier: rounds 1, 2, 4 -> 3 rounds everywhere.
+        let cr = ctx.comm.ibarrier();
+        assert_eq!(cr.rounds_total(), 3, "rank {r} barrier rounds");
+        assert_eq!(cr.kind(), "barrier");
+        cr.wait();
+        assert_eq!(cr.rounds_advanced(), cr.rounds_total());
+
+        // Binomial bcast: the root only forwards (1 round); everyone
+        // else receives then forwards (2 rounds).
+        let mut b = [0u64; 2];
+        if r == 0 {
+            b = [7, 9];
+        }
+        let cr = ctx.comm.ibcast(&mut b, 0);
+        let want = if r == 0 { 1 } else { 2 };
+        assert_eq!(cr.rounds_total(), want, "rank {r} bcast rounds");
+        cr.wait();
+        assert_eq!(b, [7, 9], "rank {r} bcast payload");
+
+        // Binomial reduce: leaves combine+send (1 round); interior
+        // ranks and the root first post child receives (2 rounds).
+        let mut v = [r as u64];
+        let cr = ctx.comm.ireduce(&mut v, 0, |a, b| a[0] += b[0]);
+        let vr = r; // root 0 => virtual rank == rank
+        let has_children = vr % 2 == 0 && n > 1;
+        let want = if has_children { 2 } else { 1 };
+        assert_eq!(cr.rounds_total(), want, "rank {r} reduce rounds");
+        cr.wait();
+        if r == 0 {
+            assert_eq!(v[0], (0..n as u64).sum::<u64>());
+        }
+
+        // Allreduce chains reduce + bcast schedules.
+        let mut w = [r as u64 + 1];
+        let cr = ctx.comm.iallreduce(&mut w, |a, b| a[0] += b[0]);
+        let reduce_rounds = if has_children { 2 } else { 1 };
+        let bcast_rounds = if r == 0 { 1 } else { 2 };
+        assert_eq!(cr.rounds_total(), reduce_rounds + bcast_rounds, "rank {r}");
+        cr.wait();
+        assert_eq!(w[0], (1..=n as u64).sum::<u64>());
+
+        // Gather and alltoallv are single-round schedules.
+        let mine = [r as u32];
+        if r == 3 {
+            let mut all = vec![0u32; n];
+            let cr = ctx.comm.igather(&mine, Some(&mut all), 3);
+            assert_eq!(cr.rounds_total(), 1);
+            cr.wait();
+            assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+        } else {
+            let cr = ctx.comm.igather(&mine, None, 3);
+            assert_eq!(cr.rounds_total(), 1);
+            cr.wait();
+        }
+        let send: Vec<u32> = (0..n).map(|d| (r * 100 + d) as u32).collect();
+        let mut recv = vec![0u32; n];
+        let cr = ctx.comm.ialltoall(&send, &mut recv);
+        assert_eq!(cr.rounds_total(), 1);
+        cr.wait();
+        for s in 0..n {
+            assert_eq!(recv[s], (s * 100 + r) as u32);
+        }
+    })
+    .unwrap();
+}
+
+/// iallreduce must agree bit-for-bit with the blocking allreduce, across
+/// Park / TaskAware wait styles and Direct / Sharded delivery.
+#[test]
+fn iallreduce_matches_blocking_allreduce_across_modes() {
+    let n = 6usize;
+    let run = |delivery: DeliveryMode, style: &'static str| -> u64 {
+        let bits = Arc::new(AtomicU64::new(0));
+        let b2 = bits.clone();
+        let cores = if style == "taskaware" { 1 } else { 0 };
+        let cfg = ClusterConfig::new(n, 1, cores).with_delivery_mode(delivery);
+        Universe::run(cfg, move |ctx| {
+            let seed = (ctx.rank as f64 + 0.5) * 1.25;
+            let result = match style {
+                "park" => {
+                    let mut v = [seed];
+                    ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+                    v[0]
+                }
+                "icoll" => {
+                    let mut v = [seed];
+                    let cr = ctx.comm.iallreduce(&mut v, |a, b| a[0] += b[0]);
+                    cr.wait();
+                    v[0]
+                }
+                _ => {
+                    let rt = ctx.rt.as_ref().unwrap();
+                    let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+                    let out = Arc::new(Mutex::new(0.0f64));
+                    let o2 = out.clone();
+                    rt.task().label("coll").spawn(move || {
+                        let mut v = [seed];
+                        tm.allreduce(&mut v, |a, b| a[0] += b[0]);
+                        *o2.lock().unwrap() = v[0];
+                    });
+                    rt.taskwait();
+                    *out.lock().unwrap()
+                }
+            };
+            if ctx.rank == 0 {
+                b2.store(result.to_bits(), Ordering::Release);
+            }
+        })
+        .unwrap();
+        bits.load(Ordering::Acquire)
+    };
+    let reference = run(DeliveryMode::Sharded, "park");
+    assert!(f64::from_bits(reference) > 0.0);
+    for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+        for style in ["park", "icoll", "taskaware"] {
+            assert_eq!(
+                run(delivery, style),
+                reference,
+                "allreduce diverged under {delivery:?}/{style}"
+            );
+        }
+    }
+}
+
+/// `Tampi::ibcast` binds the collective to the task's dependency release
+/// through the external-events API: the consumer task runs only after
+/// the broadcast payload really arrived, with zero pauses (Fig 4's flow
+/// over a collective).
+#[test]
+fn ibcast_event_binding_defers_task_release() {
+    let consumer_t = Arc::new(AtomicU64::new(0));
+    let seen = Arc::new(AtomicU64::new(0));
+    let (ct2, s2) = (consumer_t.clone(), seen.clone());
+    let stats = Universe::run(ClusterConfig::new(2, 1, 1), move |ctx| {
+        if ctx.rank == 0 {
+            // Root delays, so the non-root's collective stays in flight
+            // long after its comm task finished.
+            ctx.clock.sleep(ms(5));
+            let mut v = [4242u64];
+            ctx.comm.bcast(&mut v, 0);
+        } else {
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            let buf: Arc<Mutex<[u64; 1]>> = Arc::new(Mutex::new([0]));
+            let obj = rt.dep("bcast-buf");
+            let (t1, b1) = (tm.clone(), buf.clone());
+            rt.task().label("comm").dep(&obj, Mode::Out).spawn(move || {
+                let mut g = b1.lock().unwrap();
+                t1.ibcast(&mut *g, 0);
+                // returns immediately; deps held by the external event
+            });
+            let (ct, s, b2) = (ct2.clone(), s2.clone(), buf.clone());
+            rt.task().label("consume").dep(&obj, Mode::In).spawn(move || {
+                ct.store(nanos::current_clock().now(), Ordering::Release);
+                s.store(b2.lock().unwrap()[0], Ordering::Release);
+            });
+        }
+    })
+    .unwrap();
+    assert_eq!(seen.load(Ordering::Acquire), 4242);
+    assert!(
+        consumer_t.load(Ordering::Acquire) >= ms(5),
+        "consumer ran before the broadcast arrived"
+    );
+    assert_eq!(stats.pauses, 0, "non-blocking collective must not pause tasks");
+}
+
+/// A CollRequest composes with `Request::wait_any` alongside p2p
+/// requests (first-class request acceptance).
+#[test]
+fn wait_any_over_mixed_p2p_and_collective_requests() {
+    Universe::run(ClusterConfig::new(2, 1, 0), |ctx| {
+        if ctx.rank == 0 {
+            let mut b = [0u32];
+            let p2p = ctx.comm.irecv(&mut b, 1, 9);
+            let coll = ctx.comm.ibarrier();
+            let reqs = [p2p.clone(), coll.request().clone()];
+            let idx = Request::wait_any(&ctx.clock, &reqs);
+            assert_eq!(idx, 0, "the early p2p message must win");
+            assert_eq!(b[0], 77);
+            assert!(!coll.test(), "barrier cannot be done before rank 1 enters");
+            coll.wait();
+            assert!(ctx.clock.now() >= ms(8), "barrier completed too early");
+            assert_eq!(coll.rounds_advanced(), coll.rounds_total());
+        } else {
+            ctx.clock.sleep(ms(2));
+            ctx.comm.send(&[77u32], 0, 9);
+            ctx.clock.sleep(ms(6)); // enter the barrier late
+            ctx.comm.barrier();
+        }
+    })
+    .unwrap();
+}
+
+/// Blocking collectives are wrappers over the schedule engine: a plain
+/// `barrier()` call advances engine rounds (visible as
+/// `CollRoundAdvanced` trace records on every rank).
+#[test]
+fn blocking_collectives_drive_through_the_engine() {
+    let n = 4usize;
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(n, 1, 0);
+    cfg.tracer = Some(tracer.clone());
+    Universe::run(cfg, |ctx| {
+        ctx.comm.barrier();
+    })
+    .unwrap();
+    let mut per_rank = vec![0u32; n];
+    for rec in tracer.snapshot() {
+        if let EventKind::CollRoundAdvanced { round, total } = rec.kind {
+            assert_eq!(total, 2, "log2(4) dissemination rounds");
+            assert!((1..=total).contains(&round));
+            assert_eq!(rec.label, "barrier");
+            per_rank[rec.rank as usize] += 1;
+        }
+    }
+    for (r, &count) in per_rank.iter().enumerate() {
+        assert_eq!(count, 2, "rank {r} must advance every round through the engine");
+    }
+}
+
+/// A shard drain coalesces same-task external-event decrements: a wave
+/// fulfilling K events of ONE task applies one `dec_events(K)` under
+/// Sharded delivery, K separate decrements under Direct.
+#[test]
+fn shard_drain_coalesces_event_decrements() {
+    let k = 16usize;
+    let run = |delivery: DeliveryMode| {
+        let cfg = ClusterConfig::new(2, 1, 1).with_delivery_mode(delivery);
+        Universe::run(cfg, move |ctx| {
+            if ctx.rank == 0 {
+                let rt = ctx.rt.as_ref().unwrap();
+                let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+                // Kept alive by this rank main until taskwait returns
+                // (full completion releases the task's events first).
+                let bufs: Arc<Mutex<Vec<[u32; 1]>>> =
+                    Arc::new(Mutex::new(vec![[0u32]; k]));
+                let b1 = bufs.clone();
+                let tm2 = tm.clone();
+                rt.task().label("iwaitall").spawn(move || {
+                    let mut g = b1.lock().unwrap();
+                    let mut reqs = Vec::new();
+                    for (i, b) in g.iter_mut().enumerate() {
+                        reqs.push(tm2.comm().irecv(b, 1, i as i32));
+                    }
+                    drop(g);
+                    tm2.iwaitall(&reqs); // K events on one task
+                });
+                rt.taskwait();
+                assert!(bufs.lock().unwrap().iter().all(|b| b[0] == 1));
+            } else {
+                ctx.clock.sleep(ms(5));
+                // One virtual instant: eager isends back-to-back.
+                let reqs: Vec<_> =
+                    (0..k).map(|i| ctx.comm.isend(&[1u32], 0, i as i32)).collect();
+                assert!(reqs.iter().all(|r| r.test()));
+            }
+        })
+        .unwrap()
+    };
+    let direct = run(DeliveryMode::Direct);
+    let sharded = run(DeliveryMode::Sharded);
+    assert_eq!(
+        direct.event_dec_ops, k as u64,
+        "Direct: one decrement per continuation"
+    );
+    assert_eq!(
+        sharded.event_dec_ops, 1,
+        "Sharded: the wave must coalesce into one dec_events(K)"
+    );
+    assert_eq!(direct.vtime_ns, sharded.vtime_ns, "coalescing is time-neutral");
+}
+
+/// Lock-free MPSC shard deposit: counter parity with the mutex-era
+/// behaviour — same deliveries, same single-batch wave, same virtual
+/// time as Direct delivery.
+#[test]
+fn mpsc_deposit_counter_parity() {
+    let n = 32usize;
+    let d = bench::completion_wave(n, DeliveryMode::Direct);
+    let s = bench::completion_wave(n, DeliveryMode::Sharded);
+    assert_eq!(s.deliveries, n as u64, "every continuation must be delivered");
+    assert_eq!(s.max_batch, n as u64, "the wave lands as one batch");
+    assert_eq!(
+        s.delivery_batches, 1,
+        "one empty->non-empty transition schedules exactly one drain"
+    );
+    assert_eq!(d.deliveries, 0, "Direct bypasses the shards");
+    assert_eq!(d.vtime_ns, s.vtime_ns, "deposit structure must not change time");
+}
+
+/// Rank-count sweep: resume-lock traffic is O(N) under Direct and
+/// O(shards) under Sharded for the same total wave (fig15 extension).
+#[test]
+fn wave_lock_ops_cross_over_with_rank_count() {
+    let total = 16usize;
+    for receivers in [2usize, 4] {
+        let per = total / receivers;
+        let d = bench::completion_wave_ranks(receivers, per, DeliveryMode::Direct);
+        let s = bench::completion_wave_ranks(receivers, per, DeliveryMode::Sharded);
+        assert!(
+            d.resume_lock_ops >= total as u64,
+            "Direct: O(N) lock ops, got {} for N={total}",
+            d.resume_lock_ops
+        );
+        assert!(
+            s.resume_lock_ops <= 2 * receivers as u64,
+            "Sharded: O(shards) lock ops, got {} for {receivers} shards",
+            s.resume_lock_ops
+        );
+        assert_eq!(d.vtime_ns, s.vtime_ns);
+    }
+}
+
+/// Acceptance criterion: Gauss-Seidel with residual monitoring produces
+/// bit-identical grid checksums AND residuals across
+/// {blocking, non-blocking} x {Direct, Sharded}.
+#[test]
+fn gs_checksums_bitidentical_across_residual_style_and_delivery() {
+    let run = |nonblocking: bool, delivery: DeliveryMode| {
+        let mut p = GsParams::new(128, 128, 32, 4, 2, 2, GsVersion::InteropNonBlk);
+        p.residual_every = 2;
+        p.residual_nonblocking = nonblocking;
+        p.delivery_mode = delivery;
+        p.deadline = Some(ms(60_000));
+        gauss_seidel::run(&p).unwrap()
+    };
+    let base = run(false, DeliveryMode::Direct);
+    assert!(base.checksum > 0.0, "heat must flow");
+    assert!(base.residual > 0.0, "residual must be recorded");
+    for nonblocking in [false, true] {
+        for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+            let out = run(nonblocking, delivery);
+            assert_eq!(
+                out.checksum.to_bits(),
+                base.checksum.to_bits(),
+                "gs checksum diverged (nonblocking={nonblocking}, {delivery:?})"
+            );
+            assert_eq!(
+                out.residual.to_bits(),
+                base.residual.to_bits(),
+                "gs residual diverged (nonblocking={nonblocking}, {delivery:?})"
+            );
+        }
+    }
+}
+
+/// Same acceptance criterion for IFSKer.
+#[test]
+fn ifsker_checksums_bitidentical_across_residual_style_and_delivery() {
+    let run = |nonblocking: bool, delivery: DeliveryMode| {
+        // 2 nodes x 2 ranks/node = 4 ranks; chunk 16 divisible by 4.
+        let mut p = IfsParams::new(256, 2, 4, 2, 2, IfsVersion::InteropNonBlk);
+        p.residual_every = 2;
+        p.residual_nonblocking = nonblocking;
+        p.delivery_mode = delivery;
+        p.deadline = Some(ms(60_000));
+        ifsker::run(&p).unwrap()
+    };
+    let base = run(false, DeliveryMode::Direct);
+    assert!(base.checksum > 0.0);
+    assert!(base.residual > 0.0);
+    for nonblocking in [false, true] {
+        for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+            let out = run(nonblocking, delivery);
+            assert_eq!(
+                out.checksum.to_bits(),
+                base.checksum.to_bits(),
+                "ifsker checksum diverged (nonblocking={nonblocking}, {delivery:?})"
+            );
+            assert_eq!(
+                out.residual.to_bits(),
+                base.residual.to_bits(),
+                "ifsker residual diverged (nonblocking={nonblocking}, {delivery:?})"
+            );
+        }
+    }
+}
+
+/// Non-blocking residual monitoring must not be slower than blocking
+/// residual monitoring (the fig16 overlap claim, app-level).
+#[test]
+fn nonblocking_residual_overlap_is_not_slower() {
+    let run = |nonblocking: bool| {
+        let mut p = GsParams::new(256, 256, 64, 8, 2, 2, GsVersion::InteropNonBlk);
+        p.compute = tampi_repro::apps::Compute::Model;
+        p.residual_every = 1;
+        p.residual_nonblocking = nonblocking;
+        p.deadline = Some(ms(600_000));
+        gauss_seidel::run(&p).unwrap()
+    };
+    let blk = run(false);
+    let nblk = run(true);
+    assert_eq!(blk.residual.to_bits(), nblk.residual.to_bits());
+    assert!(
+        nblk.vtime_ns <= blk.vtime_ns,
+        "fire-and-forget iallreduce ({} ns) must not be slower than the \
+         blocking residual ({} ns)",
+        nblk.vtime_ns,
+        blk.vtime_ns
+    );
+}

@@ -56,7 +56,10 @@ fn wildcard_recv_routes_to_poster_shard() {
 
 /// A same-instant alltoallv completion wave drains as ONE batch per
 /// participating rank's shard — one `BatchDelivered` record of count
-/// n-1 per shard, not one per request.
+/// n-1 (the schedule engine's round continuations), not one per
+/// request. The collective's own completion (the task-unblock
+/// continuation on the final `CollRequest`, fired by the drain itself)
+/// rides a same-instant follow-up batch of 1.
 #[test]
 fn alltoallv_wave_is_one_batch_per_shard() {
     let n = 4usize;
@@ -93,12 +96,15 @@ fn alltoallv_wave_is_one_batch_per_shard() {
     })
     .unwrap();
 
-    // Engine totals: n-1 pending recvs per rank, one batch per shard.
-    assert_eq!(stats.deliveries, (n * (n - 1)) as u64, "{stats:?}");
-    assert_eq!(stats.delivery_batches, n as u64, "one batch per shard");
+    // Engine totals per rank: the n-1 round continuations of the
+    // alltoallv schedule land as one wave batch; the final request's
+    // unblock continuation lands as a same-instant follow-up batch.
+    assert_eq!(stats.deliveries, (n * n) as u64, "{stats:?}");
+    assert_eq!(stats.delivery_batches, (2 * n) as u64, "wave + finish per shard");
     assert_eq!(stats.max_batch, (n - 1) as u64);
 
-    // Trace view: exactly one BatchDelivered per shard, count n-1.
+    // Trace view: per shard, one BatchDelivered of count n-1 (the wave)
+    // followed by one of count 1 (the collective's completion).
     let mut per_shard: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
     for r in tracer.snapshot() {
         if let EventKind::BatchDelivered { shard, count } = r.kind {
@@ -106,11 +112,11 @@ fn alltoallv_wave_is_one_batch_per_shard() {
             per_shard.entry(shard).or_default().push(count);
         }
     }
-    assert_eq!(per_shard.len(), n, "every shard must drain once: {per_shard:?}");
+    assert_eq!(per_shard.len(), n, "every shard must drain: {per_shard:?}");
     for (shard, counts) in &per_shard {
         assert_eq!(
             counts.as_slice(),
-            &[(n - 1) as u32],
+            &[(n - 1) as u32, 1],
             "shard {shard}: the wave must land as one batch, not per-request"
         );
     }
