@@ -1,0 +1,16 @@
+//! cargo bench target regenerating extension Figure 17: topology-aware
+//! hierarchical collective schedules (flat vs leader-staged virtual
+//! time across a ranks-per-node sweep) and the persistent schedule
+//! cache's cold vs cached compile cost. Scale via
+//! TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig17_report(scale);
+    println!("{report}");
+    bench::write_output("fig17_coll_topology.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -105,6 +105,10 @@ pub struct GsParams {
     /// Continuation delivery (default: sharded progress engine; set
     /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
     pub delivery_mode: crate::progress::DeliveryMode,
+    /// Collective schedule topology (default: node-hierarchical plans
+    /// where the network model says they win; `Flat` reproduces the
+    /// PR-3 schedules). See [`crate::rmpi::TopologyMode`].
+    pub topology: crate::rmpi::TopologyMode,
     /// Every `residual_every` iterations, allreduce the grid sum as a
     /// convergence residual (0 = off). Task versions only (Sentinel,
     /// Interop blk/non-blk): the residual task reads every block of the
@@ -147,6 +151,7 @@ impl GsParams {
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
             delivery_mode: crate::progress::DeliveryMode::default(),
+            topology: crate::rmpi::TopologyMode::default(),
             residual_every: 0,
             residual_nonblocking: false,
             tracer: None,
@@ -273,6 +278,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     cc.poll_interval = p.poll_interval;
     cc.completion_mode = p.completion_mode;
     cc.delivery_mode = p.delivery_mode;
+    cc.topology = p.topology;
     cc.tracer = p.tracer.clone();
     cc.graph = p.graph.clone();
     cc.deadline = p.deadline;

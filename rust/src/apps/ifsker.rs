@@ -82,6 +82,10 @@ pub struct IfsParams {
     /// Continuation delivery (default: sharded progress engine; set
     /// `Direct` for the PR-1 inline baseline). See [`crate::progress`].
     pub delivery_mode: crate::progress::DeliveryMode,
+    /// Collective schedule topology (IFSKer runs several ranks per
+    /// node, so its residual allreduce exercises the hierarchical
+    /// plans). See [`crate::rmpi::TopologyMode`].
+    pub topology: crate::rmpi::TopologyMode,
     /// Every `residual_every` steps, allreduce the field sum as a
     /// diagnostic residual (0 = off; interop versions only).
     pub residual_every: usize,
@@ -114,6 +118,7 @@ impl IfsParams {
             poll_interval: crate::sim::us(50),
             completion_mode: crate::nanos::CompletionMode::default(),
             delivery_mode: crate::progress::DeliveryMode::default(),
+            topology: crate::rmpi::TopologyMode::default(),
             residual_every: 0,
             residual_nonblocking: false,
             tracer: None,
@@ -190,6 +195,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     cc.poll_interval = p.poll_interval;
     cc.completion_mode = p.completion_mode;
     cc.delivery_mode = p.delivery_mode;
+    cc.topology = p.topology;
     cc.tracer = p.tracer.clone();
     cc.deadline = p.deadline;
     let p2 = p.clone();

@@ -507,6 +507,311 @@ pub fn fig16_report(scale: Scale) -> String {
     out
 }
 
+/// Virtual makespan of `reps` back-to-back collectives of one kind on a
+/// `nodes x rpn` cluster under `topo`, with the network model's
+/// per-message receiver cost set to `rx_ns` (the fig17 measurement
+/// point; also the substrate of `tests/coll_topology.rs`'s
+/// hierarchical-not-slower assertions). Roots are deliberately *not*
+/// node-aligned (rank 1) for bcast/gather so the re-rooted hierarchical
+/// trees are exercised.
+pub fn coll_topology_vtime(
+    collective: &str,
+    nodes: usize,
+    rpn: usize,
+    reps: usize,
+    topo: crate::rmpi::TopologyMode,
+    rx_ns: u64,
+) -> u64 {
+    use crate::rmpi::{ClusterConfig, Universe};
+
+    let mut cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(topo);
+    cfg.net.coll_rx_ns = rx_ns;
+    cfg.deadline = Some(ms(600_000));
+    let collective = collective.to_string();
+    let stats = Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        for _ in 0..reps {
+            match collective.as_str() {
+                "barrier" => ctx.comm.barrier(),
+                "bcast" => {
+                    let mut b = vec![if ctx.rank == 1 { 7u64 } else { 0 }; 8];
+                    ctx.comm.bcast(&mut b, 1);
+                    assert_eq!(b[0], 7);
+                }
+                "reduce" => {
+                    let mut v = [ctx.rank as f64 + 0.5];
+                    ctx.comm.reduce(&mut v, 0, |a, b| a[0] += b[0]);
+                }
+                "allreduce" => {
+                    let mut v = [ctx.rank as f64 + 1.0];
+                    ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+                }
+                "gather" => {
+                    let mine = [ctx.rank as u64];
+                    if ctx.rank == 1 {
+                        let mut all = vec![0u64; n];
+                        ctx.comm.gather(&mine, Some(&mut all), 1);
+                        for (r, &v) in all.iter().enumerate() {
+                            assert_eq!(v, r as u64);
+                        }
+                    } else {
+                        ctx.comm.gather(&mine, None, 1);
+                    }
+                }
+                "alltoall" => {
+                    let send: Vec<u32> =
+                        (0..n).map(|d| (ctx.rank * 1000 + d) as u32).collect();
+                    let mut recv = vec![0u32; n];
+                    ctx.comm.alltoall(&send, &mut recv);
+                    for (s, &v) in recv.iter().enumerate() {
+                        assert_eq!(v, (s * 1000 + ctx.rank) as u32);
+                    }
+                }
+                other => panic!("unknown collective {other}"),
+            }
+        }
+    })
+    .expect("coll_topology scenario");
+    stats.vtime_ns
+}
+
+/// The six collectives fig17 sweeps.
+pub const COLL_TOPOLOGY_KINDS: [&str; 6] =
+    ["barrier", "bcast", "reduce", "allreduce", "gather", "alltoall"];
+
+/// One fig17 flat-vs-hierarchical row.
+#[derive(Clone, Debug)]
+pub struct TopoRow {
+    pub collective: String,
+    pub nodes: usize,
+    pub rpn: usize,
+    pub flat_us: f64,
+    pub hier_us: f64,
+    pub speedup: f64,
+}
+
+/// One fig17 schedule-cache row: `calls` repeated same-shape
+/// `iallreduce` with the persistent cache on or off.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCacheRow {
+    pub calls: usize,
+    pub cache: bool,
+    pub vtime_us: f64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Run `calls` same-shape blocking allreduces and report the cache
+/// traffic (cold compile per call vs compile-once-reuse).
+pub fn coll_cache_run(calls: usize, cache: bool) -> SchedCacheRow {
+    use crate::rmpi::{ClusterConfig, Universe};
+
+    let cfg = ClusterConfig::new(2, 2, 0).with_sched_cache(cache);
+    let stats = Universe::run(cfg, move |ctx| {
+        for i in 0..calls {
+            let mut v = [ctx.rank as f64 + i as f64];
+            ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+        }
+    })
+    .expect("coll_cache scenario");
+    SchedCacheRow {
+        calls,
+        cache,
+        vtime_us: stats.vtime_ns as f64 / 1_000.0,
+        hits: stats.sched_cache.hits,
+        misses: stats.sched_cache.misses,
+    }
+}
+
+/// Fig 17 (paper extension): topology-aware hierarchical schedules —
+/// flat vs hierarchical virtual time per collective across a
+/// ranks-per-node sweep (with a message-rate term `coll_rx_ns` = 300 ns
+/// so fan-in is visible), plus the persistent-schedule-cache cold vs
+/// cached compile-cost table.
+pub fn fig17(scale: Scale) -> (Vec<TopoRow>, Vec<SchedCacheRow>) {
+    let (nodes, rpns, reps): (usize, Vec<usize>, usize) = match scale {
+        Scale::Quick => (3, vec![2, 4], 4),
+        Scale::Default => (4, vec![2, 4, 8], 8),
+        Scale::Full => (8, vec![2, 4, 8, 16], 8),
+    };
+    let rx = 300u64;
+    let mut rows = Vec::new();
+    for kind in COLL_TOPOLOGY_KINDS {
+        for &rpn in &rpns {
+            let flat = coll_topology_vtime(
+                kind,
+                nodes,
+                rpn,
+                reps,
+                crate::rmpi::TopologyMode::Flat,
+                rx,
+            );
+            let hier = coll_topology_vtime(
+                kind,
+                nodes,
+                rpn,
+                reps,
+                crate::rmpi::TopologyMode::Hierarchical,
+                rx,
+            );
+            rows.push(TopoRow {
+                collective: kind.to_string(),
+                nodes,
+                rpn,
+                flat_us: flat as f64 / 1_000.0,
+                hier_us: hier as f64 / 1_000.0,
+                speedup: flat as f64 / hier.max(1) as f64,
+            });
+        }
+    }
+    let calls = match scale {
+        Scale::Quick => 8,
+        _ => 32,
+    };
+    let cache_rows = vec![
+        coll_cache_run(calls, false),
+        coll_cache_run(calls, true),
+        coll_cache_run(1, true),
+    ];
+    (rows, cache_rows)
+}
+
+/// Render the fig17 report tables.
+pub fn fig17_report(scale: Scale) -> String {
+    let (rows, cache) = fig17(scale);
+    let mut out = String::from(
+        "=== Figure 17: topology-aware hierarchical collective schedules ===\n\
+         (coll_rx_ns = 300: per-message receiver processing; hierarchical = \n\
+         cost-driven leader staging, never chosen when flat is cheaper)\n",
+    );
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>5} {:>10} {:>10} {:>9}\n",
+        "collective", "nodes", "rpn", "flat_us", "hier_us", "speedup"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>5} {:>10.1} {:>10.1} {:>9.2}\n",
+            r.collective, r.nodes, r.rpn, r.flat_us, r.hier_us, r.speedup
+        ));
+    }
+    out.push_str(
+        "\n=== persistent schedule cache: cold vs cached compile cost ===\n",
+    );
+    out.push_str(&format!(
+        "{:<18} {:>6} {:>10} {:>6} {:>8}\n",
+        "series", "calls", "vtime_us", "hits", "misses"
+    ));
+    for c in &cache {
+        let series = match (c.cache, c.calls) {
+            (false, _) => "compile-per-call",
+            (true, 1) => "cold-first-call",
+            (true, _) => "cached-reuse",
+        };
+        out.push_str(&format!(
+            "{:<18} {:>6} {:>10.1} {:>6} {:>8}\n",
+            series, c.calls, c.vtime_us, c.hits, c.misses
+        ));
+    }
+    out.push_str(
+        "(cached-reuse: every call after the first hits the per-communicator\n\
+         schedule cache — hits >= ranks x (calls - 1); see RunStats::sched_cache)\n",
+    );
+    out
+}
+
+// ------------------------------------------------------------------
+// Machine-readable figure output (the CI perf trajectory): one JSON
+// document per figure, schema-checked by scripts/validate_bench.py.
+// ------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_doc(fig: u32, scale: Scale, body: String) -> String {
+    let scale = match scale {
+        Scale::Quick => "quick",
+        Scale::Default => "default",
+        Scale::Full => "full",
+    };
+    format!(
+        "{{\"schema_version\":1,\"fig\":{fig},\"scale\":\"{scale}\",{body}}}\n"
+    )
+}
+
+/// Fig 15 as JSON: `rows[] = {{series, poll_us|null, latency_ns}}`.
+pub fn fig15_json(scale: Scale) -> String {
+    let rows: Vec<String> = fig15(scale)
+        .into_iter()
+        .map(|(series, pi, lat)| {
+            let poll = if pi == 0 { "null".to_string() } else { (pi / 1_000).to_string() };
+            format!(
+                "{{\"series\":\"{}\",\"poll_us\":{},\"latency_ns\":{}}}",
+                json_escape(&series),
+                poll,
+                lat
+            )
+        })
+        .collect();
+    json_doc(15, scale, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// Fig 16 as JSON: `rows[] = {{series, ranks, compute_us|null, vtime_ms,
+/// speedup}}`.
+pub fn fig16_json(scale: Scale) -> String {
+    let rows: Vec<String> = fig16(scale)
+        .into_iter()
+        .map(|(series, ranks, c_us, vtime_ms, speedup)| {
+            let c = if c_us.is_nan() { "null".to_string() } else { format!("{c_us}") };
+            format!(
+                "{{\"series\":\"{}\",\"ranks\":{},\"compute_us\":{},\"vtime_ms\":{},\
+                 \"speedup\":{}}}",
+                json_escape(&series),
+                ranks,
+                c,
+                vtime_ms,
+                speedup
+            )
+        })
+        .collect();
+    json_doc(16, scale, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// Fig 17 as JSON: the topology sweep in `rows[]`, the cache table in
+/// `cache[]`.
+pub fn fig17_json(scale: Scale) -> String {
+    let (rows, cache) = fig17(scale);
+    let rows: Vec<String> = rows
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"collective\":\"{}\",\"nodes\":{},\"rpn\":{},\"flat_us\":{},\
+                 \"hier_us\":{},\"speedup\":{}}}",
+                json_escape(&r.collective),
+                r.nodes,
+                r.rpn,
+                r.flat_us,
+                r.hier_us,
+                r.speedup
+            )
+        })
+        .collect();
+    let cache: Vec<String> = cache
+        .into_iter()
+        .map(|c| {
+            format!(
+                "{{\"calls\":{},\"cache\":{},\"vtime_us\":{},\"hits\":{},\"misses\":{}}}",
+                c.calls, c.cache, c.vtime_us, c.hits, c.misses
+            )
+        })
+        .collect();
+    json_doc(
+        17,
+        scale,
+        format!("\"rows\":[{}],\"cache\":[{}]", rows.join(","), cache.join(",")),
+    )
+}
+
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;
 /// `Full` runs the paper's actual sizes (64Kx64K, 48 cores/node, up to 64
 /// nodes) and takes correspondingly long.

@@ -19,8 +19,10 @@
 //!   compute kernels from `artifacts/*.hlo.txt`,
 //! * [`apps`] — the paper's two benchmarks: Gauss-Seidel (five + one
 //!   versions, Section 7.1) and IFSKer (Section 7.2),
-//! * [`trace`] — execution traces (Fig 10) and dependency graphs (Fig 8),
-//! * [`bench`] — the figure-regeneration harness (Figs 9-14).
+//! * [`trace`] — execution traces (Fig 10), dependency graphs (Fig 8),
+//!   and the collective stall diagnostic (`trace::stalls`),
+//! * [`bench`] — the figure-regeneration harness (Figs 9-14 plus
+//!   extension Figs 15-17 with machine-readable JSON output for CI).
 
 pub mod apps;
 pub mod bench;

@@ -3,13 +3,17 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension figs 15-16
-//!             into bench_out/
+//!   figures   regenerate paper figures (8-14) + extension figs 15-17
+//!             into bench_out/; with --json <path> figs 15/16/17 emit
+//!             the machine-readable document instead (CI perf artifact)
+//!   stalls    collective stall diagnostic on a deliberately skewed run
+//!             (which rank's rounds_advanced holds a collective back)
 //!   calibrate measure the compute cost model on this host
 //!
 //! `gs` and `ifsker` accept `--completion callback|poll` (notification
 //! pipeline), `--delivery sharded|direct` (continuation delivery via
-//! the sharded progress engine vs the inline baseline), and
+//! the sharded progress engine vs the inline baseline), `--topology
+//! hier|flat` (node-hierarchical vs flat collective schedules), and
 //! `--residual-every N` + `--residual blk|nonblk` (periodic residual
 //! allreduce: blocking in-task vs fire-and-forget `iallreduce` riding
 //! the schedule-driven collective engine).
@@ -19,7 +23,9 @@
 //!            --block 256 --iters 50 --nodes 4 --cores 4 --compute model
 //!   repro gs --version interop-blk --delivery direct --completion poll
 //!   repro figures --fig 15 --scale quick
+//!   repro figures --fig 17 --scale quick --json BENCH_fig17.json
 //!   repro ifsker --version interop-blk --grid 65536 --nodes 2 --cores 4
+//!   repro stalls --ranks 4 --skew-ms 20
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -92,6 +98,17 @@ fn delivery_of(m: &HashMap<String, String>) -> tampi_repro::progress::DeliveryMo
     }
 }
 
+fn topology_of(m: &HashMap<String, String>) -> tampi_repro::rmpi::TopologyMode {
+    match m.get("topology").map(String::as_str).unwrap_or("hier") {
+        "hier" | "hierarchical" => tampi_repro::rmpi::TopologyMode::Hierarchical,
+        "flat" => tampi_repro::rmpi::TopologyMode::Flat,
+        other => {
+            eprintln!("unknown --topology {other} (hier|flat)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn residual_nonblocking_of(m: &HashMap<String, String>) -> bool {
     // Default matches the library default (GsParams/IfsParams): blocking.
     match m.get("residual").map(String::as_str).unwrap_or("blk") {
@@ -121,6 +138,7 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
     p.delivery_mode = delivery_of(&m);
+    p.topology = topology_of(&m);
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
@@ -190,6 +208,7 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.compute = compute_of(&m);
     p.completion_mode = completion_of(&m);
     p.delivery_mode = delivery_of(&m);
+    p.topology = topology_of(&m);
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
@@ -234,12 +253,42 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     }
 }
 
+const KNOWN_FIGS: [&str; 11] = ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "all"];
+
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
         .get("scale")
         .and_then(|s| Scale::parse(s))
         .unwrap_or_else(Scale::from_env);
     let which = m.get("fig").map(String::as_str).unwrap_or("all");
+    // Reject unknown figures up front with a non-zero exit (regression-
+    // tested in tests/coll_topology.rs): a typo must not silently run
+    // nothing — or everything.
+    if !KNOWN_FIGS.contains(&which) {
+        eprintln!(
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 | all)"
+        );
+        std::process::exit(2);
+    }
+    // `--json` replaces the text run: the machine-readable document is
+    // built from the same rows, so running the sweep a second time for
+    // the table would double the bench job's cost for no information.
+    if let Some(path) = m.get("json") {
+        let json = match which {
+            "15" => bench::fig15_json(scale),
+            "16" => bench::fig16_json(scale),
+            "17" => bench::fig17_json(scale),
+            other => {
+                eprintln!(
+                    "--json requires a machine-readable figure (--fig 15|16|17), got {other}"
+                );
+                std::process::exit(2);
+            }
+        };
+        std::fs::write(path, &json).expect("write bench json");
+        println!("fig {which} json -> {path}");
+        return;
+    }
     let run_fig = |n: &str| {
         let wall = Instant::now();
         match n {
@@ -271,6 +320,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 let p = bench::write_output("fig16_coll_overlap.txt", &report);
                 println!("fig16 -> {}", p.display());
             }
+            "17" => {
+                let report = bench::fig17_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig17_coll_topology.txt", &report);
+                println!("fig17 -> {}", p.display());
+            }
             other => {
                 let rows = match other {
                     "9" => bench::fig09(scale),
@@ -278,10 +333,7 @@ fn cmd_figures(m: HashMap<String, String>) {
                     "12" => bench::fig12(scale),
                     "13" => bench::fig13(scale),
                     "14" => bench::fig14(scale),
-                    _ => {
-                        eprintln!("unknown figure {other}");
-                        std::process::exit(2);
-                    }
+                    _ => unreachable!("filtered by KNOWN_FIGS"),
                 };
                 let table = bench::format_table(&rows);
                 println!("=== Figure {other} ({scale:?}) ===\n{table}");
@@ -291,12 +343,51 @@ fn cmd_figures(m: HashMap<String, String>) {
         println!("(fig {n} took {:.1}s wall)\n", wall.elapsed().as_secs_f64());
     };
     if which == "all" {
-        for f in ["8", "9", "10", "11", "12", "13", "14", "15", "16"] {
+        for f in ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17"] {
             run_fig(f);
         }
     } else {
         run_fig(which);
     }
+}
+
+/// `repro stalls`: run a deliberately skewed cluster (the last rank
+/// enters its collectives `--skew-ms` late), snapshot the trace halfway
+/// through the skew, and print which rank the stall diagnostic blames.
+fn cmd_stalls(m: HashMap<String, String>) {
+    use tampi_repro::rmpi::{ClusterConfig, Universe};
+
+    let ranks = get(&m, "ranks", 4usize);
+    let skew = ms(get(&m, "skew-ms", 20u64));
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(ranks, 1, 0);
+    cfg.tracer = Some(tracer.clone());
+    cfg.deadline = Some(ms(600_000));
+    Universe::run(cfg, move |ctx| {
+        if ctx.rank == ctx.size - 1 {
+            ctx.clock.sleep(skew); // the straggler every cluster has
+        }
+        ctx.comm.barrier();
+        let mut v = [ctx.rank as f64];
+        ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+    })
+    .expect("stalls scenario");
+    let records = tracer.snapshot();
+    let at = skew / 2;
+    let report = tampi_repro::trace::stall_report(&records, at, ranks);
+    println!(
+        "=== collective stall report at t={} ms (rank {} enters {} ms late) ===",
+        at / 1_000_000,
+        ranks - 1,
+        skew / 1_000_000
+    );
+    print!("{}", tampi_repro::trace::format_stall_report(&report, at));
+    let done = tampi_repro::trace::stall_report(&records, skew * 2, ranks);
+    println!(
+        "after the straggler arrives (t={} ms): {} collectives in flight",
+        2 * skew / 1_000_000,
+        done.len()
+    );
 }
 
 fn cmd_calibrate() {
@@ -341,7 +432,7 @@ fn cmd_calibrate() {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
-        eprintln!("usage: repro <gs|ifsker|figures|calibrate> [--key value ...]");
+        eprintln!("usage: repro <gs|ifsker|figures|stalls|calibrate> [--key value ...]");
         std::process::exit(2);
     };
     let m = parse_args(rest);
@@ -349,6 +440,7 @@ fn main() {
         "gs" => cmd_gs(m),
         "ifsker" => cmd_ifsker(m),
         "figures" => cmd_figures(m),
+        "stalls" => cmd_stalls(m),
         "calibrate" => cmd_calibrate(),
         other => {
             eprintln!("unknown command {other}");

@@ -1,12 +1,12 @@
 //! The schedule-driven collective engine.
 //!
-//! Every collective compiles into a [`CollSchedule`]: a per-rank DAG of
-//! *rounds*, where each round posts a set of point-to-point operations
-//! (sends, receives, local copies, reduction combines) and the next
-//! round is posted when the previous round's completions fire through
-//! [`Request::on_complete`]. The caller gets back a single
-//! [`CollRequest`] the moment round 0 is posted; from then on the
-//! *progress engine* drives the collective:
+//! Every collective runs from a compiled plan ([`super::topology`]): a
+//! per-rank list of *rounds*, where each round posts a set of
+//! point-to-point operations (sends, receives, local copies, reduction
+//! combines) and the next round is posted when the previous round's
+//! completions fire through [`Request::on_complete`]. The caller gets
+//! back a single [`CollRequest`] the moment round 0 is posted; from
+//! then on the *progress engine* drives the collective:
 //!
 //! * under [`crate::progress::DeliveryMode::Sharded`] the round's
 //!   completion wave lands as one batch on the owning rank's shard and
@@ -25,17 +25,31 @@
 //! serves both paths, so Direct-vs-Sharded and blocking-vs-non-blocking
 //! runs stay bit-identical in application results.
 //!
+//! ## Compile once, instantiate per call
+//!
+//! Plans carry no buffers — just peers, phases and regions — so they
+//! persist in the communicator's schedule cache
+//! ([`super::topology::SchedCache`], the MPI persistent-collective
+//! analogue) and each call only *instantiates* the plan against the
+//! caller's buffers and a fresh sequence number. Each launch is traced
+//! as [`EventKind::CollScheduleCompiled`] `{ cached }`, each round
+//! advance as [`EventKind::CollRoundAdvanced`]; both carry the
+//! `(comm, seq)` identity that the stall diagnostic
+//! ([`crate::trace::stalls`]) groups by.
+//!
 //! ## Rounds, tags and determinism
 //!
-//! Each collective call consumes one sequence number per phase from the
-//! communicator's collective counter ([`coll_tag`] packs `(seq, phase)`
-//! into an `i32` tag), so any number of collectives may be in flight on
-//! one communicator: messages of different calls or rounds can never be
-//! confused because every `(source, tag)` pair in a schedule is unique.
-//! Reduction combiners run at a fixed child order (the binomial-tree
-//! order the blocking algorithms used), independent of arrival order, so
-//! floating-point results are bit-identical across delivery modes and
-//! wait styles.
+//! Each collective call consumes one sequence number per phase group
+//! from the communicator's collective counter ([`coll_tag`] packs
+//! `(seq, phase)` into an `i32` tag), so any number of collectives may
+//! be in flight on one communicator: messages of different calls,
+//! rounds or hierarchy stages can never be confused because every
+//! `(source, tag)` pair in a schedule is unique. Reduction combiners
+//! run at a fixed child order (the binomial-tree order pinned by the
+//! plan compiler — see the bit-identity contract in
+//! [`super::topology`]), independent of arrival order and of the
+//! topology mode, so floating-point results are bit-identical across
+//! delivery modes, wait styles and flat/hierarchical schedules.
 //!
 //! ## Virtual-time accounting
 //!
@@ -46,7 +60,12 @@
 //! engine models an asynchronous progress thread (the shape argued for
 //! by arXiv:2112.11978 and arXiv:2405.13807), and charging the debt to
 //! an arbitrary delivering thread would make virtual time depend on the
-//! delivery mode.
+//! delivery mode. What *is* charged — structurally, identically on
+//! every delivery mode — is the receiver-side message processing of a
+//! round: a round that posted `k` receives defers the next round's post
+//! by `k x` [`crate::rmpi::NetworkModel::coll_rx_ns`]. This is the
+//! message-rate term that makes fan-in visible (and is what the
+//! topology compiler's leader staging buys back); it defaults to 0.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -59,12 +78,14 @@ use crate::trace::{EventKind, Record};
 use super::comm::Comm;
 use super::p2p::Ctx;
 use super::request::Request;
+use super::topology::{AlltoallHier, GatherPlan, ReducePlan, TokenPlan, TreePlan};
 use super::Pod;
 
 /// Tag-space stride per collective sequence number: one sub-tag per
-/// schedule phase (dissemination barriers use one phase per round; tree
-/// collectives need only phase 0 because every `(src, dst)` pair is
-/// level-unique). 64 phases cover dissemination on any cluster size.
+/// schedule phase (dissemination barriers use one phase per round;
+/// hierarchical plans one per stage; tree collectives need only phase 0
+/// because every `(src, dst)` pair is level-unique). 64 phases cover
+/// dissemination on any cluster size.
 const PHASE_STRIDE: u64 = 64;
 
 /// Pack a collective sequence number and phase into an `i32` tag on the
@@ -132,10 +153,11 @@ impl<T> UserBuf<T> {
 }
 
 /// Read-only raw view of a caller-owned send buffer (the read side of
-/// the [`UserBuf`] contract). Single-round schedules (gather,
-/// alltoall(v)) dereference it only while posting round 0 — i.e. inside
-/// the `i*` call, while the caller's borrow is still live — so no copy
-/// of the payload is ever made beyond `isend`'s own eager copy.
+/// the [`UserBuf`] contract). Schedules dereference it only while
+/// posting round 0 — i.e. inside the `i*` call, while the caller's
+/// borrow is still live — so no copy of the payload is ever made beyond
+/// `isend`'s own eager copy (or an explicit staging copy taken at
+/// launch by hierarchical plans).
 pub(crate) struct UserRef<T> {
     ptr: *const T,
     len: usize,
@@ -187,6 +209,20 @@ impl RoundPost {
 /// requests whose completions trigger the next round.
 pub(crate) type RoundFn = Box<dyn FnOnce() -> RoundPost + Send>;
 
+/// An instantiated round: the posting closure plus the receiver-side
+/// processing charge paid (via a deferred clock event) between this
+/// round's completion and the next round's post.
+pub(crate) struct Round {
+    pub run: RoundFn,
+    pub rx_ns: u64,
+}
+
+impl Round {
+    fn new(run: RoundFn, n_recvs: usize, rx_per_msg: u64) -> Round {
+        Round { run, rx_ns: n_recvs as u64 * rx_per_msg }
+    }
+}
+
 /// A compiled, in-flight collective: the remaining rounds plus the final
 /// completion request. Shared between the [`CollRequest`] handle and the
 /// advance continuations attached to round requests, so a schedule stays
@@ -195,7 +231,11 @@ pub(crate) type RoundFn = Box<dyn FnOnce() -> RoundPost + Send>;
 pub(crate) struct CollSchedule {
     comm: Comm,
     kind: &'static str,
-    rounds: Mutex<VecDeque<RoundFn>>,
+    /// `(comm context, first sequence number)` — the collective's
+    /// cluster-wide identity in trace records.
+    comm_id: u32,
+    seq: u64,
+    rounds: Mutex<VecDeque<Round>>,
     /// Round-owned buffers pinned until the collective completes.
     retain: Mutex<Vec<Box<dyn Any + Send>>>,
     total: u32,
@@ -207,17 +247,33 @@ pub(crate) struct CollSchedule {
 }
 
 impl CollSchedule {
-    /// Compile `rounds` into a schedule, post round 0 on the calling
-    /// thread, and hand back the composable request.
-    pub(crate) fn launch(comm: &Comm, kind: &'static str, rounds: Vec<RoundFn>) -> CollRequest {
+    /// Instantiate `rounds`, post round 0 on the calling thread, and
+    /// hand back the composable request. `seq` is the call's first
+    /// collective sequence number and `cached` whether the plan came
+    /// from the schedule cache (both traced).
+    pub(crate) fn launch(
+        comm: &Comm,
+        kind: &'static str,
+        seq: u64,
+        cached: bool,
+        rounds: Vec<Round>,
+    ) -> CollRequest {
         let sched = Arc::new(CollSchedule {
             comm: comm.clone(),
             kind,
+            comm_id: comm.ctx_p2p_id as u32,
+            seq,
             total: rounds.len() as u32,
             rounds: Mutex::new(rounds.into()),
             retain: Mutex::new(Vec::new()),
             advanced: AtomicU32::new(0),
             req: Request(comm.mk_req_state()),
+        });
+        sched.trace(EventKind::CollScheduleCompiled {
+            comm: sched.comm_id,
+            seq,
+            cached,
+            rounds: sched.total,
         });
         sched.advance();
         CollRequest { req: sched.req.clone(), sched }
@@ -227,7 +283,9 @@ impl CollSchedule {
     /// pending requests; loop through rounds that complete at post time.
     /// Runs on the launching thread for round 0 and afterwards on
     /// whichever thread delivers the previous round's last completion (a
-    /// shard drain on the clock thread under Sharded delivery).
+    /// shard drain on the clock thread under Sharded delivery) — or on
+    /// the clock thread via [`CollSchedule::defer_advance`] when the
+    /// completed round carried a receiver-processing charge.
     fn advance(self: &Arc<Self>) {
         loop {
             let next = self.rounds.lock().unwrap().pop_front();
@@ -239,31 +297,59 @@ impl CollSchedule {
             // virtual time cannot depend on which thread advances the
             // schedule (see module docs).
             let caller_debt = Clock::take_debt();
-            let post = round();
+            let post = (round.run)();
             let _engine_debt = Clock::take_debt();
             Clock::add_debt(caller_debt);
             let n = self.advanced.fetch_add(1, Ordering::AcqRel) + 1;
-            self.trace_round(n);
+            self.trace(EventKind::CollRoundAdvanced {
+                comm: self.comm_id,
+                seq: self.seq,
+                round: n,
+                total: self.total,
+            });
             if !post.retain.is_empty() {
                 self.retain.lock().unwrap().extend(post.retain);
             }
             let pending: Vec<Request> =
                 post.reqs.into_iter().filter(|r| !r.test()).collect();
             if pending.is_empty() {
-                continue; // round satisfied at post time: fall through
+                // Round satisfied at post time: charge its receiver
+                // processing (if any) and fall through.
+                if round.rx_ns == 0 {
+                    continue;
+                }
+                self.defer_advance(round.rx_ns);
+                return;
             }
             let remaining = Arc::new(AtomicUsize::new(pending.len()));
+            let rx_ns = round.rx_ns;
             for r in &pending {
                 let sched = self.clone();
                 let remaining = remaining.clone();
                 r.on_complete(move |_| {
                     if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        sched.advance();
+                        if rx_ns == 0 {
+                            sched.advance();
+                        } else {
+                            sched.defer_advance(rx_ns);
+                        }
                     }
                 });
             }
             return;
         }
+    }
+
+    /// Charge a completed round's receiver-side processing: re-enter
+    /// [`CollSchedule::advance`] `rx_ns` of virtual time later, on the
+    /// clock thread. Structural (computed from the plan at
+    /// instantiation), so both delivery modes defer from the same
+    /// completion instant to the same post instant.
+    fn defer_advance(self: &Arc<Self>, rx_ns: u64) {
+        let clock = self.comm.uni.clock.clone();
+        let at = clock.now() + rx_ns;
+        let sched = self.clone();
+        clock.call_at(at, move || sched.advance());
     }
 
     /// All rounds done: release pinned buffers and complete the final
@@ -274,7 +360,7 @@ impl CollSchedule {
         self.req.0.complete(&self.comm.uni.clock, None);
     }
 
-    fn trace_round(&self, round: u32) {
+    fn trace(&self, kind: EventKind) {
         if let Some(tr) = &self.comm.uni.tracer {
             tr.emit(Record {
                 t: self.comm.uni.clock.now(),
@@ -282,7 +368,7 @@ impl CollSchedule {
                 // Annotation record; may be stamped from the clock
                 // thread (see `trace::Record::worker` sentinel docs).
                 worker: u32::MAX,
-                kind: EventKind::CollRoundAdvanced { round, total: self.total },
+                kind,
                 label: self.kind.to_string(),
                 task_id: 0,
             });
@@ -356,133 +442,131 @@ impl std::fmt::Debug for CollRequest {
 }
 
 // ---------------------------------------------------------------------
-// Schedule builders: one per collective algorithm. Each returns this
-// rank's round list; `CollSchedule::launch` posts round 0 immediately.
+// Plan instantiators: bind a compiled plan to the caller's buffers and
+// a fresh sequence number. `CollSchedule::launch` posts round 0
+// immediately, so `UserRef` send views are read while the caller's
+// borrow is live.
 // ---------------------------------------------------------------------
 
-/// Dissemination barrier: round k exchanges a token with the rank
-/// `2^k` away; log2(size) rounds, each gated on the previous.
-pub(crate) fn barrier_schedule(comm: &Comm) -> Vec<RoundFn> {
-    let n = comm.size;
-    let mut rounds: Vec<RoundFn> = Vec::new();
-    if n == 1 {
-        return rounds;
-    }
-    let seq = comm.next_coll_seq();
-    let mut round = 1usize;
-    let mut phase = 0u32;
-    while round < n {
-        let comm = comm.clone();
-        let tag = coll_tag(seq, phase);
-        let dist = round;
-        rounds.push(Box::new(move || {
-            let n = comm.size;
-            let to = (comm.rank + dist) % n;
-            let from = (comm.rank + n - dist) % n;
-            let mut buf = Box::new([0u8; 1]);
-            let s = comm.isend_ctx(&[1u8], to, tag, false, Ctx::Coll);
-            let r = comm.irecv_ctx(&mut buf[..], from as i32, tag, Ctx::Coll);
-            RoundPost { reqs: vec![s, r], retain: vec![buf as Box<dyn Any + Send>] }
-        }));
-        round <<= 1;
-        phase += 1;
-    }
-    rounds
+/// Barrier: one round per [`TokenPlan`] round, exchanging 1-byte
+/// tokens on the plan's `(peer, phase)` edges.
+pub(crate) fn instantiate_barrier(comm: &Comm, plan: &TokenPlan, seq: u64) -> Vec<Round> {
+    let rx = comm.uni.net.coll_rx_ns;
+    plan.rounds
+        .iter()
+        .map(|r| {
+            let comm = comm.clone();
+            let sends: Vec<(usize, i32)> =
+                r.sends.iter().map(|&(to, ph)| (to, coll_tag(seq, ph))).collect();
+            let recvs: Vec<(usize, i32)> =
+                r.recvs.iter().map(|&(from, ph)| (from, coll_tag(seq, ph))).collect();
+            let n_recvs = recvs.len();
+            let run: RoundFn = Box::new(move || {
+                let mut reqs = Vec::with_capacity(sends.len() + recvs.len());
+                let mut retain: Vec<Box<dyn Any + Send>> = Vec::new();
+                for &(to, tag) in &sends {
+                    reqs.push(comm.isend_ctx(&[1u8], to, tag, false, Ctx::Coll));
+                }
+                for &(from, tag) in &recvs {
+                    let mut buf = Box::new([0u8; 1]);
+                    reqs.push(comm.irecv_ctx(&mut buf[..], from as i32, tag, Ctx::Coll));
+                    retain.push(buf as Box<dyn Any + Send>);
+                }
+                RoundPost { reqs, retain }
+            });
+            Round::new(run, n_recvs, rx)
+        })
+        .collect()
 }
 
-/// Binomial-tree broadcast rooted at `root`: non-root ranks receive from
-/// their parent (round 0), then forward to their children (round 1);
-/// the root forwards immediately.
-pub(crate) fn bcast_schedule<T: Pod>(
+/// Broadcast: receive the payload from the plan's parent (round 0 on
+/// non-roots), then forward it to the plan's children.
+pub(crate) fn instantiate_bcast<T: Pod>(
     comm: &Comm,
+    plan: &TreePlan,
     buf: UserBuf<T>,
-    root: usize,
     seq: u64,
-) -> Vec<RoundFn> {
+) -> Vec<Round> {
     let n = comm.size;
-    let mut rounds: Vec<RoundFn> = Vec::new();
+    let mut rounds = Vec::new();
     if n == 1 {
         return rounds;
     }
+    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
-    let vr = (comm.rank + n - root) % n; // virtual rank, root -> 0
-    if vr != 0 {
+    if let Some(parent) = plan.recv_from {
         let comm = comm.clone();
-        rounds.push(Box::new(move || {
-            let parent = ((vr - 1) / 2 + root) % n;
+        let run: RoundFn = Box::new(move || {
             // SAFETY: i-collective buffer contract (untouched by the
             // caller until completion); no prior round aliases it.
             let dst = unsafe { buf.slice_mut() };
             RoundPost::bare(vec![comm.irecv_ctx(dst, parent as i32, tag, Ctx::Coll)])
-        }));
+        });
+        rounds.push(Round::new(run, 1, rx));
     }
     {
         let comm = comm.clone();
-        rounds.push(Box::new(move || {
-            let mut reqs = Vec::new();
-            for child in [2 * vr + 1, 2 * vr + 2] {
-                if child < n {
-                    let dst = (child + root) % n;
-                    // SAFETY: the parent's payload landed in round 0 (or
-                    // this is the root's own data).
-                    let src = unsafe { buf.slice() };
-                    reqs.push(comm.isend_ctx(src, dst, tag, false, Ctx::Coll));
-                }
+        let children = plan.send_to.clone();
+        let run: RoundFn = Box::new(move || {
+            let mut reqs = Vec::with_capacity(children.len());
+            for &dst in &children {
+                // SAFETY: the parent's payload landed in the previous
+                // round (or this is the root's own data).
+                let src = unsafe { buf.slice() };
+                reqs.push(comm.isend_ctx(src, dst, tag, false, Ctx::Coll));
             }
             RoundPost::bare(reqs)
-        }));
+        });
+        rounds.push(Round::new(run, 0, rx));
     }
     rounds
 }
 
-/// Binomial-tree reduction to `root`: round 0 posts all child receives
-/// into temporaries; round 1 folds them into the user buffer in fixed
-/// child order (bit-identical to the sequential blocking algorithm) and
-/// forwards the partial result to the parent.
-pub(crate) fn reduce_schedule<T: Pod>(
+/// Reduce: round 0 posts the plan's child receives into temporaries;
+/// round 1 folds them into the user buffer *in plan order* (the
+/// bit-identity contract) and forwards the partial to the parent.
+pub(crate) fn instantiate_reduce<T: Pod>(
     comm: &Comm,
+    plan: &ReducePlan,
     buf: UserBuf<T>,
-    root: usize,
     seq: u64,
     op: Box<dyn Fn(&mut [T], &[T]) + Send>,
-) -> Vec<RoundFn> {
+) -> Vec<Round> {
     let n = comm.size;
-    let mut rounds: Vec<RoundFn> = Vec::new();
+    let mut rounds = Vec::new();
     if n == 1 {
         return rounds;
     }
+    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
-    let vr = (comm.rank + n - root) % n;
-    // Binomial children: vr + 2^k while valid.
-    let mut children = Vec::new();
-    let mut k = 1usize;
-    while vr + k < n && (vr & k) == 0 {
-        children.push(((vr + k) + root) % n);
-        k <<= 1;
-    }
+    let children = plan.children.clone();
+    let parent = plan.parent;
     let temps: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
     if !children.is_empty() {
         let comm = comm.clone();
         let temps = temps.clone();
         let children = children.clone();
-        rounds.push(Box::new(move || {
+        let n_recvs = children.len();
+        let run: RoundFn = Box::new(move || {
             let len = buf.len();
             // SAFETY: contract; seed value only (recv overwrites).
-            let seed = unsafe { buf.slice()[0] };
+            // `None` only for zero-length buffers (legal; empty temps).
+            let seed = unsafe { buf.slice() }.first().copied();
             let mut g = temps.lock().unwrap();
             for _ in &children {
-                g.push(vec![seed; len]);
+                g.push(seed.map_or_else(Vec::new, |s| vec![s; len]));
             }
             let mut reqs = Vec::new();
             for (i, &child) in children.iter().enumerate() {
                 reqs.push(comm.irecv_ctx(&mut g[i][..], child as i32, tag, Ctx::Coll));
             }
             RoundPost::bare(reqs)
-        }));
+        });
+        rounds.push(Round::new(run, n_recvs, rx));
     }
     {
         let comm = comm.clone();
-        rounds.push(Box::new(move || {
+        let run: RoundFn = Box::new(move || {
             // SAFETY: children's contributions landed in round 0; the
             // caller holds the buffer untouched.
             let acc = unsafe { buf.slice_mut() };
@@ -492,81 +576,118 @@ pub(crate) fn reduce_schedule<T: Pod>(
             }
             drop(g);
             let mut reqs = Vec::new();
-            if vr != 0 {
-                let parent_vr = vr & (vr - 1);
-                let parent = (parent_vr + root) % n;
+            if let Some(parent) = parent {
                 let src = unsafe { buf.slice() };
                 reqs.push(comm.isend_ctx(src, parent, tag, false, Ctx::Coll));
             }
             RoundPost::bare(reqs)
-        }));
+        });
+        rounds.push(Round::new(run, 0, rx));
     }
     rounds
 }
 
-/// Allreduce = reduce-to-0 then bcast-from-0, chained in one schedule
-/// (two sequence numbers, matching the blocking composition).
-pub(crate) fn allreduce_schedule<T: Pod>(
+/// Gather to the plan's root: leaves send one chunk; staging leaders
+/// collect their node's chunks and forward one contiguous block; the
+/// root receives direct chunks and node blocks straight into their
+/// final offsets, so the result bytes are identical to the flat plan's.
+pub(crate) fn instantiate_gather<T: Pod>(
     comm: &Comm,
-    buf: UserBuf<T>,
-    op: Box<dyn Fn(&mut [T], &[T]) + Send>,
-) -> Vec<RoundFn> {
-    let seq_reduce = comm.next_coll_seq();
-    let seq_bcast = comm.next_coll_seq();
-    let mut rounds = reduce_schedule(comm, buf, 0, seq_reduce, op);
-    rounds.extend(bcast_schedule(comm, buf, 0, seq_bcast));
-    rounds
-}
-
-/// Flat gather to `root`: one round (root posts all receives and copies
-/// its own chunk; leaves send). Round 0 posts at launch, so `send` is
-/// read zero-copy while the caller's borrow is live.
-pub(crate) fn gather_schedule<T: Pod>(
-    comm: &Comm,
+    plan: &GatherPlan,
     send: UserRef<T>,
     recv: Option<UserBuf<T>>,
-    root: usize,
-) -> Vec<RoundFn> {
-    let n = comm.size;
-    let seq = comm.next_coll_seq();
+    seq: u64,
+) -> Vec<Round> {
+    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
-    let mut rounds: Vec<RoundFn> = Vec::new();
-    if comm.rank == root {
-        let recv = recv.expect("root must pass a receive buffer");
-        assert_eq!(recv.len(), send.len() * n);
-        let comm = comm.clone();
-        rounds.push(Box::new(move || {
-            let chunk = send.len();
-            let mut reqs = Vec::new();
-            for r in 0..n {
+    let chunk = send.len();
+    match plan {
+        GatherPlan::Leaf { to } => {
+            let comm = comm.clone();
+            let to = *to;
+            let run: RoundFn = Box::new(move || {
+                // SAFETY: read during launch; isend copies eagerly.
+                let src = unsafe { send.slice() };
+                RoundPost::bare(vec![comm.isend_ctx(src, to, tag, false, Ctx::Coll)])
+            });
+            vec![Round::new(run, 0, rx)]
+        }
+        GatherPlan::Leader { members, root, node_base } => {
+            // Round 0: stage the node's chunks (own chunk copied at
+            // launch, members received). Round 1: forward the block.
+            let temps: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
+            let (members, root, node_base) = (members.clone(), *root, *node_base);
+            let leader = comm.rank;
+            let n_members = members.len();
+            let c0 = comm.clone();
+            let t0 = temps.clone();
+            let r0: RoundFn = Box::new(move || {
+                let mut g = t0.lock().unwrap();
+                // SAFETY: launch-time read of the caller's send buffer.
+                g.push(unsafe { send.slice() }.to_vec());
+                // `None` only for zero-length chunks, whose staging
+                // buffers are empty anyway (zero-count MPI collectives
+                // are legal).
+                let seed = g[0].first().copied();
+                for _ in &members {
+                    g.push(seed.map_or_else(Vec::new, |s| vec![s; chunk]));
+                }
+                let mut reqs = Vec::new();
+                for (i, &m) in members.iter().enumerate() {
+                    reqs.push(c0.irecv_ctx(&mut g[i + 1][..], m as i32, tag, Ctx::Coll));
+                }
+                RoundPost::bare(reqs)
+            });
+            let c1 = comm.clone();
+            let r1: RoundFn = Box::new(move || {
+                let g = temps.lock().unwrap();
+                // Assemble the node block in rank order: the leader is
+                // the node's first rank, members ascend after it.
+                let mut block = Vec::with_capacity((g.len()) * chunk);
+                debug_assert_eq!(leader, node_base);
+                for part in g.iter() {
+                    block.extend_from_slice(part);
+                }
+                drop(g);
+                RoundPost::bare(vec![c1.isend_ctx(&block, root, tag, false, Ctx::Coll)])
+            });
+            vec![Round::new(r0, n_members, rx), Round::new(r1, 0, rx)]
+        }
+        GatherPlan::Root { direct, blocks } => {
+            let recv = recv.expect("root must pass a receive buffer");
+            assert_eq!(recv.len(), chunk * comm.size);
+            let comm = comm.clone();
+            let root = comm.rank;
+            let direct = direct.clone();
+            let n_msgs = direct.len() + blocks.len();
+            let blocks: Vec<(usize, usize, usize)> =
+                blocks.iter().map(|b| (b.leader, b.first_rank, b.nranks)).collect();
+            let run: RoundFn = Box::new(move || {
+                let mut reqs = Vec::new();
                 // SAFETY: per-rank regions are disjoint by construction;
                 // the send view is read during launch only.
-                let dst = unsafe { recv.region_mut(r * chunk, chunk) };
-                if r == root {
-                    dst.copy_from_slice(unsafe { send.slice() });
-                } else {
+                let own = unsafe { recv.region_mut(root * chunk, chunk) };
+                own.copy_from_slice(unsafe { send.slice() });
+                for &r in &direct {
+                    let dst = unsafe { recv.region_mut(r * chunk, chunk) };
                     reqs.push(comm.irecv_ctx(dst, r as i32, tag, Ctx::Coll));
                 }
-            }
-            RoundPost::bare(reqs)
-        }));
-    } else {
-        let comm = comm.clone();
-        rounds.push(Box::new(move || {
-            // SAFETY: read during launch; isend copies eagerly.
-            let src = unsafe { send.slice() };
-            RoundPost::bare(vec![comm.isend_ctx(src, root, tag, false, Ctx::Coll)])
-        }));
+                for &(leader, first, nranks) in &blocks {
+                    let dst = unsafe { recv.region_mut(first * chunk, nranks * chunk) };
+                    reqs.push(comm.irecv_ctx(dst, leader as i32, tag, Ctx::Coll));
+                }
+                RoundPost::bare(reqs)
+            });
+            vec![Round::new(run, n_msgs, rx)]
+        }
     }
-    rounds
 }
 
-/// Alltoallv: a single round posting all receives (in displacement
-/// order, like the blocking algorithm) followed by all sends. Round 0
-/// posts at launch, so `send` is read zero-copy while the caller's
-/// borrow is live.
+/// Pairwise alltoallv (the flat plan): a single round posting all
+/// receives (in displacement order, like the PR-3 algorithm) followed
+/// by all sends.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn alltoallv_schedule<T: Pod>(
+pub(crate) fn instantiate_alltoallv_flat<T: Pod>(
     comm: &Comm,
     send: UserRef<T>,
     scounts: Vec<usize>,
@@ -574,7 +695,8 @@ pub(crate) fn alltoallv_schedule<T: Pod>(
     recv: UserBuf<T>,
     rcounts: Vec<usize>,
     rdispls: Vec<usize>,
-) -> Vec<RoundFn> {
+    seq: u64,
+) -> Vec<Round> {
     let n = comm.size;
     assert!(scounts.len() == n && rcounts.len() == n);
     // Validate the receive regions are disjoint and in bounds (the
@@ -588,10 +710,11 @@ pub(crate) fn alltoallv_schedule<T: Pod>(
     }
     assert!(end <= recv.len(), "alltoallv receive buffer too small");
 
-    let seq = comm.next_coll_seq();
+    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
     let comm = comm.clone();
-    let round: RoundFn = Box::new(move || {
+    let n_recvs = n - 1;
+    let run: RoundFn = Box::new(move || {
         let rank = comm.rank;
         // SAFETY: read during launch only; isend copies eagerly.
         let send = unsafe { send.slice() };
@@ -619,5 +742,148 @@ pub(crate) fn alltoallv_schedule<T: Pod>(
         }
         RoundPost::bare(reqs)
     });
-    vec![round]
+    vec![Round::new(run, n_recvs, rx)]
+}
+
+/// Leader-staged uniform alltoall. Three phases (tag phases 0/1/2):
+/// members ship their whole send buffer to the node leader; leaders
+/// exchange per-node-pair blocks laid out `(src member, dst member)`;
+/// leaders scatter each member's assembled result. Every element lands
+/// at the same offset the flat plan would put it — placement only, no
+/// combining — so results are bit-identical.
+pub(crate) fn instantiate_alltoall_hier<T: Pod>(
+    comm: &Comm,
+    plan: &AlltoallHier,
+    send: UserRef<T>,
+    recv: UserBuf<T>,
+    chunk: usize,
+    seq: u64,
+) -> Vec<Round> {
+    let n = comm.size;
+    assert_eq!(send.len(), n * chunk);
+    assert_eq!(recv.len(), n * chunk);
+    let rx = comm.uni.net.coll_rx_ns;
+    let (t_up, t_x, t_down) = (coll_tag(seq, 0), coll_tag(seq, 1), coll_tag(seq, 2));
+
+    if !plan.is_leader {
+        let leader = plan.nodes_list[plan.my_node][0];
+        let comm = comm.clone();
+        let run: RoundFn = Box::new(move || {
+            // SAFETY: send read at launch; recv held until completion
+            // (i-collective contract).
+            let s = unsafe { send.slice() };
+            let r = unsafe { recv.slice_mut() };
+            RoundPost::bare(vec![
+                comm.isend_ctx(s, leader, t_up, false, Ctx::Coll),
+                comm.irecv_ctx(r, leader as i32, t_down, Ctx::Coll),
+            ])
+        });
+        return vec![Round::new(run, 1, rx)];
+    }
+
+    // Leader. Staging: `gathered[i]` = member i's full send buffer
+    // (own first, rank order); `inbound[b]` = node b's block.
+    let members: Vec<usize> = plan.nodes_list[plan.my_node].clone();
+    let my_node = plan.my_node;
+    let nodes_list = plan.nodes_list.clone();
+    let rpn = members.len();
+    let gathered: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
+    let inbound: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let c0 = comm.clone();
+    let g0 = gathered.clone();
+    let m0 = members.clone();
+    let r0: RoundFn = Box::new(move || {
+        let mut g = g0.lock().unwrap();
+        // SAFETY: launch-time read of the caller's send buffer.
+        g.push(unsafe { send.slice() }.to_vec());
+        // `None` only for chunk == 0 (legal, empty staging throughout).
+        let seed = g[0].first().copied();
+        for _ in 1..m0.len() {
+            g.push(seed.map_or_else(Vec::new, |s| vec![s; n * chunk]));
+        }
+        let mut reqs = Vec::new();
+        for (i, &m) in m0.iter().enumerate().skip(1) {
+            reqs.push(c0.irecv_ctx(&mut g[i][..], m as i32, t_up, Ctx::Coll));
+        }
+        RoundPost::bare(reqs)
+    });
+
+    let c1 = comm.clone();
+    let g1 = gathered.clone();
+    let i1 = inbound.clone();
+    let nl1 = nodes_list.clone();
+    let r1: RoundFn = Box::new(move || {
+        let g = g1.lock().unwrap();
+        let mut reqs = Vec::new();
+        // Post the inbound block receives first (deterministic
+        // matching), then ship ours. Peers send from their own round 1,
+        // which they reach independently of ours — no circular wait.
+        let mut inb = i1.lock().unwrap();
+        let seed = g[0].first().copied();
+        for (b, dst_members) in nl1.iter().enumerate() {
+            if b == my_node {
+                inb.push(Vec::new());
+            } else {
+                let len = g.len() * dst_members.len() * chunk;
+                inb.push(seed.map_or_else(Vec::new, |s| vec![s; len]));
+            }
+        }
+        for (b, dst_members) in nl1.iter().enumerate() {
+            if b != my_node {
+                let peer = dst_members[0];
+                reqs.push(c1.irecv_ctx(&mut inb[b][..], peer as i32, t_x, Ctx::Coll));
+            }
+        }
+        drop(inb);
+        for (b, dst_members) in nl1.iter().enumerate() {
+            if b == my_node {
+                continue;
+            }
+            let mut block = Vec::with_capacity(g.len() * dst_members.len() * chunk);
+            for src in g.iter() {
+                for &d in dst_members.iter() {
+                    block.extend_from_slice(&src[d * chunk..(d + 1) * chunk]);
+                }
+            }
+            reqs.push(c1.isend_ctx(&block, dst_members[0], t_x, false, Ctx::Coll));
+        }
+        RoundPost::bare(reqs)
+    });
+
+    let c2 = comm.clone();
+    let n_nodes = nodes_list.len();
+    let r2: RoundFn = Box::new(move || {
+        let g = gathered.lock().unwrap();
+        let inb = inbound.lock().unwrap();
+        let idx_in = |b: usize, r: usize| r - nodes_list[b][0];
+        let mut reqs = Vec::new();
+        for (j, &m) in members.iter().enumerate() {
+            let mut out: Vec<T> = Vec::with_capacity(n * chunk);
+            for s in 0..n {
+                let b = s / rpn; // uniform blocked layout (plan contract)
+                let si = idx_in(b, s);
+                if b == my_node {
+                    out.extend_from_slice(&g[si][m * chunk..(m + 1) * chunk]);
+                } else {
+                    let off = (si * rpn + j) * chunk;
+                    out.extend_from_slice(&inb[b][off..off + chunk]);
+                }
+            }
+            if j == 0 {
+                // SAFETY: the leader's own result region; no other round
+                // touches the recv buffer.
+                unsafe { recv.slice_mut() }.copy_from_slice(&out);
+            } else {
+                reqs.push(c2.isend_ctx(&out, m, t_down, false, Ctx::Coll));
+            }
+        }
+        RoundPost::bare(reqs)
+    });
+
+    vec![
+        Round::new(r0, rpn - 1, rx),
+        Round::new(r1, n_nodes - 1, rx),
+        Round::new(r2, 0, rx),
+    ]
 }

@@ -1,11 +1,14 @@
 //! Collectives over p2p on the dedicated collective context — all built
-//! on the schedule-driven engine in [`super::coll_schedule`].
+//! on the schedule-driven engine in [`super::coll_schedule`], compiled
+//! by the topology-aware planner in [`super::topology`].
 //!
 //! Two surfaces over ONE engine:
 //!
 //! * **Non-blocking** (`ibarrier`, `ibcast`, `ireduce`, `iallreduce`,
-//!   `igather`, `ialltoall`, `ialltoallv`): compile the collective into
-//!   a [`CollSchedule`] and return a [`CollRequest`] immediately. The
+//!   `igather`, `ialltoall`, `ialltoallv`): look the collective's plan
+//!   up in the communicator's persistent schedule cache (compiling on a
+//!   miss — MPI persistent-collective semantics), instantiate it into a
+//!   [`CollSchedule`] and return a [`CollRequest`] immediately. The
 //!   progress engine advances the rounds; the request composes with
 //!   [`Request::wait`]/[`Request::wait_any`], TAMPI `iwait`/`iwaitall`,
 //!   and task external-event binding (Section 6.1/6.2 extended to
@@ -19,6 +22,13 @@
 //!   never on the waiting thread — even a Park-mode collective inside a
 //!   task cannot stall the collective's own progress.
 //!
+//! Plan lookups charge the model's compile cost on a miss
+//! ([`crate::rmpi::NetworkModel::sched_compile_ns`]) and the much
+//! smaller lookup cost on a hit (`sched_cache_hit_ns`), bump the
+//! cluster-wide counters surfaced as
+//! [`crate::rmpi::RunStats::sched_cache`], and stamp the launch with a
+//! [`crate::trace::EventKind::CollScheduleCompiled`] `{ cached }` record.
+//!
 //! Collective-internal requests are created through the calling rank's
 //! [`Comm`], so under [`crate::progress::DeliveryMode::Sharded`] a
 //! round's completion wave — e.g. the `2(n-1)` requests of an alltoallv
@@ -29,11 +39,13 @@
 use crate::nanos::CompletionMode;
 
 use super::coll_schedule::{
-    allreduce_schedule, alltoallv_schedule, barrier_schedule, bcast_schedule,
-    gather_schedule, reduce_schedule, CollSchedule, UserBuf, UserRef,
+    instantiate_alltoall_hier, instantiate_alltoallv_flat, instantiate_barrier,
+    instantiate_bcast, instantiate_gather, instantiate_reduce, CollSchedule, UserBuf,
+    UserRef,
 };
 use super::comm::Comm;
 use super::request::Request;
+use super::topology::{CollKind, CollPlan, SchedKey, ShapeKey};
 use super::Pod;
 
 pub use super::coll_schedule::CollRequest;
@@ -63,22 +75,33 @@ impl Comm {
         }
     }
 
-    // ----- non-blocking surface: schedule launch, request back -----
+    // ----- non-blocking surface: plan lookup, schedule launch -----
 
-    /// Non-blocking barrier (MPI_Ibarrier): dissemination algorithm,
-    /// log2(size) engine-driven rounds.
+    /// Non-blocking barrier (MPI_Ibarrier): dissemination rounds, flat
+    /// or leader-staged per the topology compiler.
     pub fn ibarrier(&self) -> CollRequest {
-        CollSchedule::launch(self, "barrier", barrier_schedule(self))
+        let key = SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None };
+        let (plan, cached) = self.plan_for(key);
+        let seq = self.next_coll_seq();
+        let CollPlan::Barrier(p) = &*plan else { unreachable!("barrier plan") };
+        CollSchedule::launch(self, "barrier", seq, cached, instantiate_barrier(self, p, seq))
     }
 
-    /// Non-blocking broadcast (MPI_Ibcast): binomial tree rooted at
-    /// `root`. `buf` must stay untouched until the request completes.
+    /// Non-blocking broadcast (MPI_Ibcast): binomial/hierarchical tree
+    /// rooted at `root`. `buf` must stay untouched until the request
+    /// completes.
     pub fn ibcast<T: Pod>(&self, buf: &mut [T], root: usize) -> CollRequest {
+        let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
+        let key = SchedKey { kind: CollKind::Bcast, root, shape };
+        let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
+        let CollPlan::Bcast(p) = &*plan else { unreachable!("bcast plan") };
         CollSchedule::launch(
             self,
             "bcast",
-            bcast_schedule(self, UserBuf::new(buf), root, seq),
+            seq,
+            cached,
+            instantiate_bcast(self, p, UserBuf::new(buf), seq),
         )
     }
 
@@ -90,57 +113,114 @@ impl Comm {
         root: usize,
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) -> CollRequest {
+        // Reduce plans are shape-independent (the binomial tree depends
+        // only on size and root), so the key is shapeless: every
+        // payload size shares one cached plan per root.
+        let key = SchedKey { kind: CollKind::Reduce, root, shape: ShapeKey::None };
+        let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
+        let CollPlan::Reduce(p) = &*plan else { unreachable!("reduce plan") };
         CollSchedule::launch(
             self,
             "reduce",
-            reduce_schedule(self, UserBuf::new(buf), root, seq, Box::new(op)),
+            seq,
+            cached,
+            instantiate_reduce(self, p, UserBuf::new(buf), seq, Box::new(op)),
         )
     }
 
     /// Non-blocking allreduce (MPI_Iallreduce) = reduce-to-0 + bcast-
-    /// from-0 chained in one schedule.
+    /// from-0 chained in one schedule (two sequence numbers, one plan).
     pub fn iallreduce<T: Pod>(
         &self,
         buf: &mut [T],
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) -> CollRequest {
-        CollSchedule::launch(
-            self,
-            "allreduce",
-            allreduce_schedule(self, UserBuf::new(buf), Box::new(op)),
-        )
+        let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
+        let key = SchedKey { kind: CollKind::Allreduce, root: 0, shape };
+        let (plan, cached) = self.plan_for(key);
+        let seq_reduce = self.next_coll_seq();
+        let seq_bcast = self.next_coll_seq();
+        let CollPlan::Allreduce { reduce, bcast } = &*plan else {
+            unreachable!("allreduce plan")
+        };
+        let ub = UserBuf::new(buf);
+        let mut rounds = instantiate_reduce(self, reduce, ub, seq_reduce, Box::new(op));
+        rounds.extend(instantiate_bcast(self, bcast, ub, seq_bcast));
+        CollSchedule::launch(self, "allreduce", seq_reduce, cached, rounds)
     }
 
     /// Non-blocking gather (MPI_Igather): fixed-size contribution per
-    /// rank into root's buffer.
+    /// rank into root's buffer (leader-staged when fan-in processing
+    /// dominates).
     pub fn igather<T: Pod>(
         &self,
         send: &[T],
         recv: Option<&mut [T]>,
         root: usize,
     ) -> CollRequest {
+        let shape = ShapeKey::ChunkBytes(std::mem::size_of_val::<[T]>(send));
+        let key = SchedKey { kind: CollKind::Gather, root, shape };
+        let (plan, cached) = self.plan_for(key);
+        let seq = self.next_coll_seq();
+        let CollPlan::Gather(p) = &*plan else { unreachable!("gather plan") };
         CollSchedule::launch(
             self,
             "gather",
-            gather_schedule(self, UserRef::new(send), recv.map(UserBuf::new), root),
+            seq,
+            cached,
+            instantiate_gather(self, p, UserRef::new(send), recv.map(UserBuf::new), seq),
         )
     }
 
-    /// Non-blocking alltoall (MPI_Ialltoall): equal-size blocks.
+    /// Non-blocking alltoall (MPI_Ialltoall): equal-size blocks,
+    /// pairwise or leader-staged per the topology compiler.
     pub fn ialltoall<T: Pod>(&self, send: &[T], recv: &mut [T]) -> CollRequest {
         let n = self.size;
         assert_eq!(send.len() % n, 0);
         assert_eq!(recv.len(), send.len());
         let chunk = send.len() / n;
-        let counts: Vec<usize> = vec![chunk; n];
-        let displs: Vec<usize> = (0..n).map(|i| i * chunk).collect();
-        self.ialltoallv(send, &counts, &displs, recv, &counts, &displs)
+        let shape = ShapeKey::ChunkBytes(chunk * std::mem::size_of::<T>());
+        let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape };
+        let (plan, cached) = self.plan_for(key);
+        let seq = self.next_coll_seq();
+        let rounds = match &*plan {
+            CollPlan::AlltoallHier(h) => instantiate_alltoall_hier(
+                self,
+                h,
+                UserRef::new(send),
+                UserBuf::new(recv),
+                chunk,
+                seq,
+            ),
+            CollPlan::AlltoallvFlat => {
+                let counts: Vec<usize> = vec![chunk; n];
+                let displs: Vec<usize> = (0..n).map(|i| i * chunk).collect();
+                instantiate_alltoallv_flat(
+                    self,
+                    UserRef::new(send),
+                    counts.clone(),
+                    displs.clone(),
+                    UserBuf::new(recv),
+                    counts,
+                    displs,
+                    seq,
+                )
+            }
+            _ => unreachable!("alltoall plan"),
+        };
+        CollSchedule::launch(self, "alltoall", seq, cached, rounds)
     }
 
     /// Non-blocking alltoallv (MPI_Ialltoallv): variable blocks; the
     /// transposition primitive IFSKer uses between grid-point and
-    /// spectral distributions (Section 7.2).
+    /// spectral distributions (Section 7.2). Always pairwise: counts
+    /// are per-rank values, so a staged plan could not be agreed on (or
+    /// sized) without an extra count exchange — see
+    /// [`super::topology::compile_plan`]. The plan is therefore
+    /// count-independent and the cache key shapeless (no O(ranks)
+    /// count vectors cloned or stored per signature); counts bind at
+    /// instantiation.
     #[allow(clippy::too_many_arguments)]
     pub fn ialltoallv<T: Pod>(
         &self,
@@ -151,10 +231,16 @@ impl Comm {
         rcounts: &[usize],
         rdispls: &[usize],
     ) -> CollRequest {
+        let key = SchedKey { kind: CollKind::Alltoallv, root: 0, shape: ShapeKey::None };
+        let (plan, cached) = self.plan_for(key);
+        let seq = self.next_coll_seq();
+        debug_assert!(matches!(&*plan, CollPlan::AlltoallvFlat));
         CollSchedule::launch(
             self,
             "alltoallv",
-            alltoallv_schedule(
+            seq,
+            cached,
+            instantiate_alltoallv_flat(
                 self,
                 UserRef::new(send),
                 scounts.to_vec(),
@@ -162,13 +248,14 @@ impl Comm {
                 UserBuf::new(recv),
                 rcounts.to_vec(),
                 rdispls.to_vec(),
+                seq,
             ),
         )
     }
 
     // ----- blocking surface: wrappers over the same schedules -----
 
-    /// MPI_Barrier (dissemination algorithm, log2(size) rounds).
+    /// MPI_Barrier.
     pub fn barrier(&self) {
         self.barrier_with(WaitMode::Park)
     }
@@ -178,7 +265,7 @@ impl Comm {
         self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
-    /// MPI_Bcast (binomial tree rooted at `root`).
+    /// MPI_Bcast (tree rooted at `root`).
     pub fn bcast<T: Pod>(&self, buf: &mut [T], root: usize) {
         self.bcast_with(buf, root, WaitMode::Park)
     }

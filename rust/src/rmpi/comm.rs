@@ -10,6 +10,7 @@ use crate::trace::Tracer;
 use super::match_engine::ContextQueues;
 use super::net::NetworkModel;
 use super::request::ReqState;
+use super::topology::{compile_plan, CollPlan, SchedCache, SchedKey, TopoCtx, TopologyMode};
 
 /// Shared cluster state (one per [`super::Universe`]).
 pub(crate) struct UniState {
@@ -17,6 +18,15 @@ pub(crate) struct UniState {
     pub net: NetworkModel,
     /// rank -> node id.
     pub node_of: Vec<usize>,
+    /// How the collective schedule compiler sees the node hierarchy.
+    pub topology: TopologyMode,
+    /// Whether compiled schedules persist in per-communicator caches
+    /// (`false` forces a recompile per call — the fig17 cold baseline).
+    pub sched_cache_on: bool,
+    /// Cluster-wide schedule-cache hit/miss counters (surfaced as
+    /// [`super::RunStats::sched_cache`]).
+    pub sched_hits: AtomicU64,
+    pub sched_misses: AtomicU64,
     /// Match contexts; a communicator owns two (p2p + collectives).
     pub contexts: Mutex<Vec<Arc<ContextQueues>>>,
     /// (parent ctx, dup seq) -> allocated context pair.
@@ -76,6 +86,10 @@ pub struct Comm {
     pub(crate) coll_seq: Arc<AtomicU64>,
     /// Dup call sequence of this rank on this communicator.
     pub(crate) dup_seq: Arc<AtomicU64>,
+    /// Persistent schedule store of this communicator (shared by
+    /// clones; a `dup` starts fresh, and dropping the communicator
+    /// drops its compiled plans — MPI persistent-request lifetime).
+    pub(crate) sched_cache: Arc<SchedCache>,
 }
 
 impl Comm {
@@ -92,6 +106,7 @@ impl Comm {
             ctx_coll,
             coll_seq: Arc::new(AtomicU64::new(0)),
             dup_seq: Arc::new(AtomicU64::new(0)),
+            sched_cache: Arc::new(SchedCache::default()),
         }
     }
 
@@ -129,7 +144,50 @@ impl Comm {
             ctx_coll: self.uni.context(c),
             coll_seq: Arc::new(AtomicU64::new(0)),
             dup_seq: Arc::new(AtomicU64::new(0)),
+            // A fresh schedule store: cached plans die with their
+            // communicator, and a dup never sees the parent's plans.
+            sched_cache: Arc::new(SchedCache::default()),
         }
+    }
+
+    /// Look up (or compile) the plan for one collective call: the
+    /// persistent-collective fast path. A hit charges
+    /// [`NetworkModel::sched_cache_hit_ns`] of caller CPU, a miss
+    /// charges `sched_compile_ns` and stores the plan; both bump the
+    /// cluster-wide counters surfaced as
+    /// [`super::RunStats::sched_cache`].
+    pub(crate) fn plan_for(&self, key: SchedKey) -> (Arc<CollPlan>, bool) {
+        let ctx = TopoCtx {
+            rank: self.rank,
+            size: self.size,
+            node_of: &self.uni.node_of,
+            mode: self.uni.topology,
+            net: &self.uni.net,
+        };
+        let (plan, cached) = if self.uni.sched_cache_on {
+            self.sched_cache.get_or_compile(&key, || compile_plan(&key, &ctx))
+        } else {
+            (Arc::new(compile_plan(&key, &ctx)), false)
+        };
+        if cached {
+            self.uni.sched_hits.fetch_add(1, Ordering::Relaxed);
+            Clock::add_debt(self.uni.net.sched_cache_hit_ns);
+        } else {
+            self.uni.sched_misses.fetch_add(1, Ordering::Relaxed);
+            Clock::add_debt(self.uni.net.sched_compile_ns);
+        }
+        (plan, cached)
+    }
+
+    /// How the schedule compiler sees this universe's node hierarchy.
+    pub fn topology(&self) -> TopologyMode {
+        self.uni.topology
+    }
+
+    /// Compiled plans currently held by this communicator's persistent
+    /// schedule store.
+    pub fn sched_cache_len(&self) -> usize {
+        self.sched_cache.len()
     }
 
     /// Consume one collective sequence number. MPI requires all ranks to

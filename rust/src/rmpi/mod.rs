@@ -12,8 +12,11 @@
 //!   `test`/`wait`/`waitall` over [`request::Request`]s.
 //! * **Collectives**: barrier, bcast, reduce, allreduce, gather, alltoall
 //!   and alltoallv, built over p2p on a separate match context — each
-//!   compiled into a schedule of engine-driven rounds ([`coll_schedule`])
-//!   with a first-class non-blocking surface (`ibarrier`, `ibcast`,
+//!   compiled by the topology-aware planner ([`topology`]: flat or
+//!   node-hierarchical shapes, chosen by cost under the network model,
+//!   cached per communicator like MPI persistent collectives) into a
+//!   schedule of engine-driven rounds ([`coll_schedule`]) with a
+//!   first-class non-blocking surface (`ibarrier`, `ibcast`,
 //!   `iallreduce`, `ialltoallv`, …) returning a [`CollRequest`] that
 //!   composes with waits and task external events; the blocking calls
 //!   are wrappers waiting on the same schedule.
@@ -34,13 +37,15 @@ pub mod match_engine;
 pub mod net;
 pub mod p2p;
 pub mod request;
+pub mod topology;
 pub mod universe;
 
 pub use coll_schedule::CollRequest;
 pub use comm::Comm;
 pub use net::NetworkModel;
 pub use request::{Request, Status};
-pub use universe::{ClusterConfig, RankCtx, RunStats, Universe};
+pub use topology::TopologyMode;
+pub use universe::{ClusterConfig, RankCtx, RunStats, SchedCacheStats, Universe};
 
 /// Completion-delivery knob (defined in [`crate::progress`], re-exported
 /// here next to [`ClusterConfig`], which carries it).

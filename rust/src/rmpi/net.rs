@@ -26,6 +26,19 @@ pub struct NetworkModel {
     /// CPU time one MPI call burns on the calling core (library overhead,
     /// matching, copies). Charged as virtual-time debt to the caller.
     pub call_cpu_ns: u64,
+    /// Receiver-side processing per message *within a collective
+    /// schedule round* (the message-rate term): a round that posted `k`
+    /// receives defers the next round's post by `k x` this. Default 0
+    /// (pure latency model); setting it makes fan-in visible, which is
+    /// what the topology compiler's leader staging buys back (see
+    /// `rmpi::topology`). Applied structurally from the plan, so both
+    /// delivery modes observe identical virtual instants.
+    pub coll_rx_ns: u64,
+    /// CPU cost of compiling a collective schedule (charged to the
+    /// caller on a schedule-cache miss).
+    pub sched_compile_ns: u64,
+    /// CPU cost of a schedule-cache hit (key hash + lookup).
+    pub sched_cache_hit_ns: u64,
 }
 
 impl Default for NetworkModel {
@@ -37,6 +50,9 @@ impl Default for NetworkModel {
             inter_bw_bytes_per_s: 12_500_000_000,         // 100 Gbit/s
             eager_threshold: 64 * 1024,
             call_cpu_ns: 400,                             // per-call library cost
+            coll_rx_ns: 0,                                // pure latency model
+            sched_compile_ns: 1_000,                      // rounds + trees + regions
+            sched_cache_hit_ns: 50,                       // hash + lookup
         }
     }
 }
@@ -51,6 +67,9 @@ impl NetworkModel {
             inter_bw_bytes_per_s: u64::MAX,
             eager_threshold: usize::MAX,
             call_cpu_ns: 0,
+            coll_rx_ns: 0,
+            sched_compile_ns: 0,
+            sched_cache_hit_ns: 0,
         }
     }
 

@@ -1,0 +1,787 @@
+//! Topology-aware collective plans and the persistent schedule cache.
+//!
+//! PR 3's schedule engine treated the cluster as flat: binomial and
+//! dissemination rounds crossed the node boundary as cheaply as they
+//! stayed inside it, and every collective call recompiled its schedule
+//! from scratch. This module separates *what a collective's rounds look
+//! like* (a [`CollPlan`]: pure per-rank structure — peers, phases,
+//! buffer regions — with no buffers bound) from *running them*
+//! ([`super::coll_schedule`] instantiates a plan against the caller's
+//! buffers and launches it), which buys two things at once:
+//!
+//! 1. **Node-hierarchical schedules.** The compiler knows the node
+//!    hierarchy ([`super::universe::ClusterConfig`]'s `ranks_per_node`;
+//!    the intra- vs inter-node link classes of
+//!    [`NetworkModel`]) and emits leader-staged plans — intra-node
+//!    gather/reduce to a node leader, an inter-node tree among leaders,
+//!    intra-node bcast/scatter fan-out — the shape MPICH's collective
+//!    extensions compile (arXiv:2402.12274). Selection is cost-driven:
+//!    for each collective the compiler estimates the critical path of
+//!    the flat and hierarchical shapes under the universe's
+//!    [`NetworkModel`] (link latencies plus the per-message receiver
+//!    processing cost `coll_rx_ns`) and picks the cheaper one, so
+//!    `TopologyMode::Hierarchical` can never lose to `Flat` by more
+//!    than the estimate's error. The estimate uses only values every
+//!    rank agrees on (communicator size, node shape, payload shape),
+//!    so all ranks of one collective always pick the same plan shape —
+//!    a mismatch would deadlock the rounds.
+//! 2. **Persistent schedules.** Plans are cached per communicator in a
+//!    [`SchedCache`] keyed by `(collective kind, root, shape)` — the
+//!    moral equivalent of MPI-4 persistent collectives
+//!    (`MPI_Allreduce_init`): the per-iteration residual `iallreduce`
+//!    of gauss_seidel/ifsker compiles once and every later call reuses
+//!    the compiled rounds. Hits and misses are counted cluster-wide
+//!    ([`crate::rmpi::RunStats::sched_cache`]) and each launch is traced as
+//!    [`crate::trace::EventKind::CollScheduleCompiled`] `{ cached }`. The
+//!    cache lives on the communicator handle, so dropping a
+//!    communicator (or `dup`ing a fresh one) drops/starts its schedule
+//!    store — the MPI persistent-request lifetime.
+//!
+//! ## Reduction bit-identity is a contract
+//!
+//! `reduce`/`allreduce` results must be bit-identical between flat and
+//! hierarchical runs (and across delivery modes and wait styles), so
+//! the combiner order is pinned to the flat binomial tree's fixed child
+//! order. On the blocked rank layout the flat binomial tree is already
+//! node-hierarchical whenever the node blocks align with its subtrees
+//! (power-of-two ranks-per-node, root on a node boundary — always true
+//! for allreduce's internal root-0 reduce): non-leaf edges stay
+//! intra-node and leader-to-leader edges carry the inter-node traffic.
+//! When the blocks do not align, restructuring the tree would change
+//! the combine association (different floating-point rounding), so the
+//! compiler keeps the flat tree. The hierarchy win for `allreduce`
+//! comes from its broadcast half, which has no combining and may be
+//! re-rooted freely.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::net::NetworkModel;
+
+/// How the schedule compiler sees the cluster.
+///
+/// Carried by `ClusterConfig::topology` (default `Hierarchical`). Flat
+/// reproduces the PR-3 schedules exactly; Hierarchical enables the
+/// cost-driven node-aware shapes above (degenerating to flat when the
+/// cluster has one node, one rank per node, or the estimate says flat
+/// is cheaper).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologyMode {
+    /// Ignore the node boundary (PR-3 behaviour).
+    Flat,
+    /// Compile node-hierarchical schedules where the network model says
+    /// they win.
+    #[default]
+    Hierarchical,
+}
+
+/// Collective algorithm identity (part of the cache key).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) enum CollKind {
+    Barrier,
+    Bcast,
+    Reduce,
+    Allreduce,
+    Gather,
+    Alltoall,
+    Alltoallv,
+}
+
+/// Payload shape (the rest of the cache key): what a compiled plan
+/// depends on besides the algorithm and root — byte sizes, so the
+/// critical-path comparison is exact for any element type. Alltoallv
+/// carries no shape at all: its counts are per-rank values the plan
+/// shape must not depend on (see [`compile_plan`]), so every signature
+/// shares the one pairwise plan (and the key stays O(1) — no cloned
+/// count vectors in the cache).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) enum ShapeKey {
+    /// Shapeless (barrier, alltoallv).
+    None,
+    /// Byte length of the single buffer (bcast/reduce/allreduce).
+    Bytes(usize),
+    /// Per-rank chunk byte length (gather, uniform alltoall).
+    ChunkBytes(usize),
+}
+
+/// Cache key of one compiled schedule: `(collective kind, root, shape)`
+/// on one communicator (the cache itself is per-communicator).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) struct SchedKey {
+    pub kind: CollKind,
+    pub root: usize,
+    pub shape: ShapeKey,
+}
+
+/// One dissemination/fan round of a token collective (barrier): token
+/// sends and receives with their tag phases.
+pub(crate) struct TokenRound {
+    pub sends: Vec<(usize, u32)>,
+    pub recvs: Vec<(usize, u32)>,
+}
+
+/// Barrier plan: a list of token rounds.
+pub(crate) struct TokenPlan {
+    pub rounds: Vec<TokenRound>,
+}
+
+/// Broadcast plan: receive the payload from one parent (None at the
+/// root), then forward it to a fixed child list in one send round.
+pub(crate) struct TreePlan {
+    pub recv_from: Option<usize>,
+    pub send_to: Vec<usize>,
+}
+
+/// Reduce plan: receive child contributions (combined *in this exact
+/// order* — the bit-identity contract), then forward the partial to the
+/// parent (None at the root).
+pub(crate) struct ReducePlan {
+    pub children: Vec<usize>,
+    pub parent: Option<usize>,
+}
+
+/// One aggregated node block arriving at the gather root.
+pub(crate) struct GatherBlock {
+    pub leader: usize,
+    pub first_rank: usize,
+    pub nranks: usize,
+}
+
+/// Gather plan, by role.
+pub(crate) enum GatherPlan {
+    /// Send the chunk to `to` (the root, or this node's leader under
+    /// the staged plan).
+    Leaf { to: usize },
+    /// Stage the node's chunks (members excludes self) and forward the
+    /// contiguous block to the root.
+    Leader { members: Vec<usize>, root: usize, node_base: usize },
+    /// Receive direct chunks plus aggregated node blocks.
+    Root { direct: Vec<usize>, blocks: Vec<GatherBlock> },
+}
+
+/// Leader-staged uniform alltoall plan (flat alltoall(v) needs no plan
+/// data beyond the shape; the element chunk binds at instantiation).
+pub(crate) struct AlltoallHier {
+    /// Rank lists per node, ascending (uniform, contiguous).
+    pub nodes_list: Vec<Vec<usize>>,
+    pub my_node: usize,
+    pub is_leader: bool,
+}
+
+/// A compiled per-rank collective plan.
+pub(crate) enum CollPlan {
+    Barrier(TokenPlan),
+    Bcast(TreePlan),
+    Reduce(ReducePlan),
+    Allreduce { reduce: ReducePlan, bcast: TreePlan },
+    Gather(GatherPlan),
+    /// Pairwise exchange; shape (counts/displacements) supplied at
+    /// instantiation time. Used by alltoallv always and by uniform
+    /// alltoall when staging would not pay.
+    AlltoallvFlat,
+    AlltoallHier(AlltoallHier),
+}
+
+/// Per-communicator persistent schedule store (MPI persistent-request
+/// analogue). Shared by clones of one rank's communicator handle;
+/// `Comm::dup` starts a fresh one and dropping the communicator drops
+/// its plans.
+#[derive(Default)]
+pub(crate) struct SchedCache {
+    map: Mutex<HashMap<SchedKey, Arc<CollPlan>>>,
+}
+
+impl SchedCache {
+    /// Look the key up, compiling (and storing) on a miss. Returns the
+    /// plan and whether this was a cache hit.
+    pub fn get_or_compile(
+        &self,
+        key: &SchedKey,
+        compile: impl FnOnce() -> CollPlan,
+    ) -> (Arc<CollPlan>, bool) {
+        let mut g = self.map.lock().unwrap();
+        if let Some(p) = g.get(key) {
+            return (p.clone(), true);
+        }
+        let p = Arc::new(compile());
+        g.insert(*key, p.clone());
+        (p, false)
+    }
+
+    /// Distinct plans currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+/// Everything the compiler may depend on. All fields are identical on
+/// every rank except `rank` itself, and plan-shape decisions never use
+/// `rank` (only roles derived from it), so all ranks agree on shapes.
+pub(crate) struct TopoCtx<'a> {
+    pub rank: usize,
+    pub size: usize,
+    pub node_of: &'a [usize],
+    pub mode: TopologyMode,
+    pub net: &'a NetworkModel,
+}
+
+/// ceil(log2(n)) for n >= 1.
+fn ceil_log2(n: usize) -> u64 {
+    debug_assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()) as u64
+}
+
+impl TopoCtx<'_> {
+    /// Rank lists per node, ascending within each node.
+    fn nodes_list(&self) -> Vec<Vec<usize>> {
+        let n_nodes = self.node_of.iter().copied().max().unwrap_or(0) + 1;
+        let mut nodes: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+        for (r, &nd) in self.node_of.iter().enumerate() {
+            nodes[nd].push(r);
+        }
+        nodes
+    }
+
+    /// The hierarchy the compiler may exploit: `Some((nodes_list, rpn))`
+    /// when hierarchical mode is on and the layout is uniform blocked
+    /// (equal-size nodes of contiguous ranks) with more than one node
+    /// and more than one rank per node.
+    fn hierarchy(&self) -> Option<(Vec<Vec<usize>>, usize)> {
+        if self.mode != TopologyMode::Hierarchical {
+            return None;
+        }
+        let nodes = self.nodes_list();
+        if nodes.len() < 2 {
+            return None;
+        }
+        let rpn = nodes[0].len();
+        if rpn < 2 {
+            return None;
+        }
+        for (b, members) in nodes.iter().enumerate() {
+            if members.len() != rpn {
+                return None;
+            }
+            for (i, &r) in members.iter().enumerate() {
+                if r != b * rpn + i {
+                    return None;
+                }
+            }
+        }
+        Some((nodes, rpn))
+    }
+
+    fn t_intra(&self, bytes: usize) -> u64 {
+        self.net.transfer_ns(bytes, true)
+    }
+
+    fn t_inter(&self, bytes: usize) -> u64 {
+        self.net.transfer_ns(bytes, false)
+    }
+
+    fn rx(&self) -> u64 {
+        self.net.coll_rx_ns
+    }
+}
+
+/// Compile the plan for `key` on `ctx.rank`. Pure: same inputs, same
+/// plan — which is what makes the cache sound.
+pub(crate) fn compile_plan(key: &SchedKey, ctx: &TopoCtx) -> CollPlan {
+    match (key.kind, key.shape) {
+        (CollKind::Barrier, _) => CollPlan::Barrier(compile_barrier(ctx)),
+        (CollKind::Bcast, ShapeKey::Bytes(b)) => {
+            CollPlan::Bcast(compile_bcast(ctx, key.root, b))
+        }
+        (CollKind::Reduce, _) => CollPlan::Reduce(compile_reduce(ctx, key.root)),
+        (CollKind::Allreduce, ShapeKey::Bytes(b)) => CollPlan::Allreduce {
+            reduce: compile_reduce(ctx, 0),
+            bcast: compile_bcast(ctx, 0, b),
+        },
+        (CollKind::Gather, ShapeKey::ChunkBytes(cb)) => {
+            CollPlan::Gather(compile_gather(ctx, key.root, cb))
+        }
+        (CollKind::Alltoall, ShapeKey::ChunkBytes(cb)) => compile_alltoall(ctx, cb),
+        // Alltoallv counts are per-rank values: basing the plan shape on
+        // them would let ranks disagree (deadlock), and leaders cannot
+        // size staging buffers without a count exchange — the same
+        // reason real MPI ships hierarchical alltoall but not
+        // alltoallv. Always pairwise.
+        (CollKind::Alltoallv, _) => CollPlan::AlltoallvFlat,
+        other => unreachable!("inconsistent schedule key: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Barrier
+// ---------------------------------------------------------------------
+
+/// Flat dissemination barrier: round k exchanges a token with the rank
+/// `2^k` away (phase = round index).
+fn flat_barrier(rank: usize, n: usize) -> TokenPlan {
+    let mut rounds = Vec::new();
+    let mut d = 1usize;
+    let mut phase = 0u32;
+    while d < n {
+        rounds.push(TokenRound {
+            sends: vec![((rank + d) % n, phase)],
+            recvs: vec![((rank + n - d) % n, phase)],
+        });
+        d <<= 1;
+        phase += 1;
+    }
+    TokenPlan { rounds }
+}
+
+/// Exact completion time of the flat dissemination barrier under
+/// synchronized entry: per round, a rank's next post waits for the
+/// token from `2^k` below (its own send is eager), plus the round's
+/// receive processing.
+fn flat_barrier_time(ctx: &TopoCtx) -> u64 {
+    let n = ctx.size;
+    let mut t = vec![0u64; n];
+    let mut d = 1usize;
+    while d < n {
+        let prev = t.clone();
+        for (r, tr) in t.iter_mut().enumerate() {
+            let src = (r + n - d) % n;
+            let hop = if ctx.node_of[src] == ctx.node_of[r] {
+                ctx.t_intra(1)
+            } else {
+                ctx.t_inter(1)
+            };
+            *tr = (*tr).max(prev[src] + hop) + ctx.rx();
+        }
+        d <<= 1;
+    }
+    t.into_iter().max().unwrap_or(0)
+}
+
+/// Exact completion time of the leader-staged barrier under
+/// synchronized entry (symmetric across nodes, so a closed recurrence).
+fn hier_barrier_time(ctx: &TopoCtx, l: usize, rpn: usize) -> u64 {
+    let check_in = ctx.t_intra(1) + (rpn as u64 - 1) * ctx.rx();
+    let dissemination = ceil_log2(l) * (ctx.t_inter(1) + ctx.rx());
+    let release = ctx.t_intra(1) + ctx.rx();
+    check_in + dissemination + release
+}
+
+fn compile_barrier(ctx: &TopoCtx) -> TokenPlan {
+    let n = ctx.size;
+    if n == 1 {
+        return TokenPlan { rounds: Vec::new() };
+    }
+    let Some((nodes, rpn)) = ctx.hierarchy() else {
+        return flat_barrier(ctx.rank, n);
+    };
+    let l = nodes.len();
+    if hier_barrier_time(ctx, l, rpn) >= flat_barrier_time(ctx) {
+        return flat_barrier(ctx.rank, n);
+    }
+    // Hierarchical: members check in with their leader (phase 0), the
+    // leaders run a dissemination barrier among themselves (phases
+    // 1..=log2(L)), then each leader releases its members (phase REL).
+    let my_node = ctx.node_of[ctx.rank];
+    let leaders: Vec<usize> = nodes.iter().map(|m| m[0]).collect();
+    let leader = leaders[my_node];
+    let release = 1 + ceil_log2(l) as u32;
+    if ctx.rank != leader {
+        return TokenPlan {
+            rounds: vec![TokenRound {
+                sends: vec![(leader, 0)],
+                recvs: vec![(leader, release)],
+            }],
+        };
+    }
+    let mut rounds = Vec::new();
+    let members: Vec<usize> = nodes[my_node][1..].to_vec();
+    rounds.push(TokenRound {
+        sends: Vec::new(),
+        recvs: members.iter().map(|&m| (m, 0)).collect(),
+    });
+    let li = my_node;
+    let mut d = 1usize;
+    let mut phase = 1u32;
+    while d < l {
+        rounds.push(TokenRound {
+            sends: vec![(leaders[(li + d) % l], phase)],
+            recvs: vec![(leaders[(li + l - d) % l], phase)],
+        });
+        d <<= 1;
+        phase += 1;
+    }
+    rounds.push(TokenRound {
+        sends: members.iter().map(|&m| (m, release)).collect(),
+        recvs: Vec::new(),
+    });
+    TokenPlan { rounds }
+}
+
+// ---------------------------------------------------------------------
+// Bcast
+// ---------------------------------------------------------------------
+
+/// Binomial children of position `i` among `m` positions (increasing
+/// distance — the fixed combine order), and its parent.
+fn binomial_children(i: usize, m: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut k = 1usize;
+    while i + k < m && (i & k) == 0 {
+        out.push(i + k);
+        k <<= 1;
+    }
+    out
+}
+
+fn binomial_parent(i: usize) -> Option<usize> {
+    if i == 0 {
+        None
+    } else {
+        Some(i & (i - 1))
+    }
+}
+
+/// Flat binary broadcast tree in virtual-rank space (PR-3 shape), as a
+/// parent array.
+fn flat_bcast_parents(n: usize, root: usize) -> Vec<Option<usize>> {
+    (0..n)
+        .map(|rank| {
+            let vr = (rank + n - root) % n;
+            if vr == 0 {
+                None
+            } else {
+                Some(((vr - 1) / 2 + root) % n)
+            }
+        })
+        .collect()
+}
+
+/// Hierarchical broadcast tree: the root represents its own node,
+/// other nodes are represented by their leader; representatives form a
+/// binomial tree in virtual-node space and each runs a binomial tree
+/// over its node's members.
+fn hier_bcast_parents(
+    n: usize,
+    root: usize,
+    nodes: &[Vec<usize>],
+    node_of: &[usize],
+) -> Vec<Option<usize>> {
+    let l = nodes.len();
+    let root_node = node_of[root];
+    let rep = |node: usize| if node == root_node { root } else { nodes[node][0] };
+    (0..n)
+        .map(|rank| {
+            let my_node = node_of[rank];
+            if rank == rep(my_node) {
+                let vnode = (my_node + l - root_node) % l;
+                return binomial_parent(vnode).map(|pv| rep((pv + root_node) % l));
+            }
+            // Intra order: representative first, then the remaining
+            // members ascending.
+            let mut intra: Vec<usize> = vec![rep(my_node)];
+            intra.extend(nodes[my_node].iter().copied().filter(|&r| r != rep(my_node)));
+            let pos = intra.iter().position(|&r| r == rank).unwrap();
+            Some(intra[binomial_parent(pos).unwrap()])
+        })
+        .collect()
+}
+
+/// Exact completion time of a parent-tree broadcast under synchronized
+/// entry: each rank receives one transfer (plus its receive-processing
+/// charge) after its parent, parents forward to all children
+/// concurrently.
+fn tree_time(parents: &[Option<usize>], bytes: usize, ctx: &TopoCtx) -> u64 {
+    let n = parents.len();
+    let mut t: Vec<Option<u64>> = vec![None; n];
+    for start in 0..n {
+        // Walk up to the nearest resolved ancestor, then fill down.
+        let mut chain = Vec::new();
+        let mut r = start;
+        while t[r].is_none() {
+            chain.push(r);
+            match parents[r] {
+                Some(p) => r = p,
+                None => break,
+            }
+        }
+        for &c in chain.iter().rev() {
+            t[c] = Some(match parents[c] {
+                None => 0,
+                Some(p) => {
+                    let hop = if ctx.node_of[p] == ctx.node_of[c] {
+                        ctx.t_intra(bytes)
+                    } else {
+                        ctx.t_inter(bytes)
+                    };
+                    t[p].expect("parent resolved") + hop + ctx.rx()
+                }
+            });
+        }
+    }
+    (0..n).map(|r| t[r].unwrap_or(0)).max().unwrap_or(0)
+}
+
+/// Plan view of a parent array for one rank: receive from the parent,
+/// forward to the children (ascending — sends post concurrently, so
+/// the order carries no semantics).
+fn plan_from_parents(parents: &[Option<usize>], rank: usize) -> TreePlan {
+    TreePlan {
+        recv_from: parents[rank],
+        send_to: (0..parents.len()).filter(|&c| parents[c] == Some(rank)).collect(),
+    }
+}
+
+fn compile_bcast(ctx: &TopoCtx, root: usize, bytes: usize) -> TreePlan {
+    let n = ctx.size;
+    if n == 1 {
+        return TreePlan { recv_from: None, send_to: Vec::new() };
+    }
+    let flat = flat_bcast_parents(n, root);
+    let Some((nodes, _rpn)) = ctx.hierarchy() else {
+        return plan_from_parents(&flat, ctx.rank);
+    };
+    // Exact critical paths of both candidate trees at the exact payload
+    // byte size (the shape key carries bytes, not elements); ties keep
+    // flat.
+    let hier = hier_bcast_parents(n, root, &nodes, ctx.node_of);
+    if tree_time(&hier, bytes, ctx) < tree_time(&flat, bytes, ctx) {
+        plan_from_parents(&hier, ctx.rank)
+    } else {
+        plan_from_parents(&flat, ctx.rank)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduce
+// ---------------------------------------------------------------------
+
+/// Binomial reduce tree in virtual-rank space. The child order *is* the
+/// combine order, and (see module docs) it is pinned: on blocked
+/// layouts with aligned node blocks this tree is already
+/// node-hierarchical, and restructuring it otherwise would change the
+/// floating-point association. Identical under both topology modes.
+fn compile_reduce(ctx: &TopoCtx, root: usize) -> ReducePlan {
+    let n = ctx.size;
+    if n == 1 {
+        return ReducePlan { children: Vec::new(), parent: None };
+    }
+    let vr = (ctx.rank + n - root) % n;
+    let children = binomial_children(vr, n).into_iter().map(|c| (c + root) % n).collect();
+    let parent = binomial_parent(vr).map(|p| (p + root) % n);
+    ReducePlan { children, parent }
+}
+
+// ---------------------------------------------------------------------
+// Gather
+// ---------------------------------------------------------------------
+
+fn flat_gather(ctx: &TopoCtx, root: usize) -> GatherPlan {
+    if ctx.rank == root {
+        GatherPlan::Root {
+            direct: (0..ctx.size).filter(|&r| r != root).collect(),
+            blocks: Vec::new(),
+        }
+    } else {
+        GatherPlan::Leaf { to: root }
+    }
+}
+
+fn compile_gather(ctx: &TopoCtx, root: usize, cb: usize) -> GatherPlan {
+    let n = ctx.size;
+    let Some((nodes, rpn)) = ctx.hierarchy() else {
+        return flat_gather(ctx, root);
+    };
+    // Flat: one inter-node hop, but the root processes n-1 messages.
+    // Staged: leaders absorb the fan-in, the root sees one block per
+    // node — worth it exactly when per-message processing dominates.
+    let l = nodes.len();
+    let est_flat = ctx.t_inter(cb) + (n as u64 - 1) * ctx.rx();
+    let est_hier = ctx.t_intra(cb)
+        + (rpn as u64 - 1) * ctx.rx()
+        + ctx.t_inter(cb * rpn)
+        + ((l as u64 - 1) + (rpn as u64 - 1)) * ctx.rx();
+    if est_hier > est_flat {
+        return flat_gather(ctx, root);
+    }
+    let root_node = ctx.node_of[root];
+    let my_node = ctx.node_of[ctx.rank];
+    if ctx.rank == root {
+        let direct = nodes[root_node].iter().copied().filter(|&r| r != root).collect();
+        let blocks = nodes
+            .iter()
+            .enumerate()
+            .filter(|&(b, _)| b != root_node)
+            .map(|(_, members)| GatherBlock {
+                leader: members[0],
+                first_rank: members[0],
+                nranks: members.len(),
+            })
+            .collect();
+        GatherPlan::Root { direct, blocks }
+    } else if my_node == root_node {
+        GatherPlan::Leaf { to: root }
+    } else if ctx.rank == nodes[my_node][0] {
+        GatherPlan::Leader {
+            members: nodes[my_node][1..].to_vec(),
+            root,
+            node_base: nodes[my_node][0],
+        }
+    } else {
+        GatherPlan::Leaf { to: nodes[my_node][0] }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Alltoall
+// ---------------------------------------------------------------------
+
+fn compile_alltoall(ctx: &TopoCtx, cb: usize) -> CollPlan {
+    let n = ctx.size;
+    let Some((nodes, rpn)) = ctx.hierarchy() else {
+        return CollPlan::AlltoallvFlat;
+    };
+    // Flat: every rank processes n-1 incoming messages in one round.
+    // Staged: three rounds (members -> leader, leader <-> leader node
+    // blocks, leader -> members) with inflated payloads but O(rpn +
+    // nodes) messages per processor.
+    let l = nodes.len();
+    let est_flat = ctx.t_inter(cb) + (n as u64 - 1) * ctx.rx();
+    let est_hier = ctx.t_intra(n * cb)
+        + (rpn as u64 - 1) * ctx.rx()
+        + ctx.t_inter(rpn * rpn * cb)
+        + (l as u64 - 1) * ctx.rx()
+        + ctx.t_intra(n * cb)
+        + (rpn as u64 - 1) * ctx.rx();
+    if est_hier > est_flat {
+        return CollPlan::AlltoallvFlat;
+    }
+    let my_node = ctx.node_of[ctx.rank];
+    CollPlan::AlltoallHier(AlltoallHier {
+        is_leader: ctx.rank == nodes[my_node][0],
+        my_node,
+        nodes_list: nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        rank: usize,
+        node_of: &'a [usize],
+        mode: TopologyMode,
+        net: &'a NetworkModel,
+    ) -> TopoCtx<'a> {
+        TopoCtx { rank, size: node_of.len(), node_of, mode, net }
+    }
+
+    fn blocked(nodes: usize, rpn: usize) -> Vec<usize> {
+        (0..nodes * rpn).map(|r| r / rpn).collect()
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn hierarchy_degenerates_to_flat() {
+        let net = NetworkModel::default();
+        // One rank per node: no hierarchy to exploit.
+        let node_of = blocked(8, 1);
+        for r in 0..8 {
+            let c = ctx(r, &node_of, TopologyMode::Hierarchical, &net);
+            assert!(c.hierarchy().is_none());
+            let p = compile_barrier(&c);
+            assert_eq!(p.rounds.len(), 3, "flat dissemination on rank {r}");
+        }
+        // One node: likewise.
+        let node_of = blocked(1, 8);
+        assert!(ctx(0, &node_of, TopologyMode::Hierarchical, &net).hierarchy().is_none());
+    }
+
+    #[test]
+    fn hierarchical_barrier_round_shape() {
+        let net = NetworkModel::default();
+        let node_of = blocked(4, 4);
+        // Leader: check-in + log2(4) dissemination rounds + release.
+        let leader = compile_barrier(&ctx(4, &node_of, TopologyMode::Hierarchical, &net));
+        assert_eq!(leader.rounds.len(), 1 + 2 + 1);
+        // Member: one round (token out, release in).
+        let member = compile_barrier(&ctx(5, &node_of, TopologyMode::Hierarchical, &net));
+        assert_eq!(member.rounds.len(), 1);
+        assert_eq!(member.rounds[0].sends, vec![(4, 0)]);
+        assert_eq!(member.rounds[0].recvs, vec![(4, 3)]);
+    }
+
+    #[test]
+    fn reduce_plan_identical_across_modes() {
+        let net = NetworkModel::default();
+        let node_of = blocked(2, 4);
+        for r in 0..8 {
+            let f = compile_reduce(&ctx(r, &node_of, TopologyMode::Flat, &net), 0);
+            let h = compile_reduce(&ctx(r, &node_of, TopologyMode::Hierarchical, &net), 0);
+            assert_eq!(f.children, h.children, "combine order is a contract (rank {r})");
+            assert_eq!(f.parent, h.parent);
+        }
+    }
+
+    #[test]
+    fn gather_stages_only_when_rx_pays() {
+        let mut net = NetworkModel::default();
+        let node_of = blocked(4, 8);
+        // Free receiver processing: flat single-hop wins (8-byte chunk).
+        net.coll_rx_ns = 0;
+        match compile_gather(&ctx(0, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
+            GatherPlan::Root { blocks, direct } => {
+                assert!(blocks.is_empty());
+                assert_eq!(direct.len(), 31);
+            }
+            _ => panic!("rank 0 must be the root"),
+        }
+        // Costly fan-in: the staged plan wins.
+        net.coll_rx_ns = 400;
+        match compile_gather(&ctx(0, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
+            GatherPlan::Root { blocks, direct } => {
+                assert_eq!(blocks.len(), 3);
+                assert_eq!(direct.len(), 7);
+            }
+            _ => panic!("rank 0 must be the root"),
+        }
+        // Non-root-node leaders stage; their members send to them.
+        net.coll_rx_ns = 400;
+        match compile_gather(&ctx(8, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
+            GatherPlan::Leader { members, root, node_base } => {
+                assert_eq!(members, (9..16).collect::<Vec<_>>());
+                assert_eq!((root, node_base), (0, 8));
+            }
+            _ => panic!("rank 8 must lead node 1"),
+        }
+        match compile_gather(&ctx(9, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
+            GatherPlan::Leaf { to } => assert_eq!(to, 8),
+            _ => panic!("rank 9 must feed its leader"),
+        }
+    }
+
+    #[test]
+    fn sched_cache_hits_and_misses() {
+        let cache = SchedCache::default();
+        let key = SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None };
+        let (_, hit) =
+            cache.get_or_compile(&key, || CollPlan::Barrier(TokenPlan { rounds: vec![] }));
+        assert!(!hit);
+        let (_, hit) = cache.get_or_compile(&key, || unreachable!("must hit"));
+        assert!(hit);
+        assert_eq!(cache.len(), 1);
+        let key2 = SchedKey { kind: CollKind::Bcast, root: 0, shape: ShapeKey::Bytes(32) };
+        let (_, hit) = cache.get_or_compile(&key2, || {
+            CollPlan::Bcast(TreePlan { recv_from: None, send_to: vec![] })
+        });
+        assert!(!hit);
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -14,6 +14,7 @@ use crate::trace::{GraphRecorder, Tracer};
 use super::comm::{Comm, UniState};
 use super::match_engine::ContextQueues;
 use super::net::NetworkModel;
+use super::topology::TopologyMode;
 
 /// Shape and knobs of the simulated cluster.
 #[derive(Clone)]
@@ -43,6 +44,15 @@ pub struct ClusterConfig {
     /// progress engine; `Direct` preserves the PR-1 inline-firing
     /// baseline). See [`crate::progress`].
     pub delivery_mode: DeliveryMode,
+    /// How the collective schedule compiler sees the node hierarchy
+    /// (default: `Hierarchical` — node-aware plans wherever the network
+    /// model says they win; `Flat` reproduces the PR-3 schedules).
+    /// See [`crate::rmpi::TopologyMode`].
+    pub topology: TopologyMode,
+    /// Whether compiled collective schedules persist per communicator
+    /// (default `true`; `false` recompiles every call — the cold
+    /// baseline of fig17's cache sweep).
+    pub sched_cache: bool,
 }
 
 impl ClusterConfig {
@@ -61,6 +71,8 @@ impl ClusterConfig {
             costs: RuntimeCosts::realistic(),
             completion_mode: CompletionMode::default(),
             delivery_mode: DeliveryMode::default(),
+            topology: TopologyMode::default(),
+            sched_cache: true,
         }
     }
 
@@ -73,6 +85,18 @@ impl ClusterConfig {
     /// Builder-style delivery-mode override (bench/test convenience).
     pub fn with_delivery_mode(mut self, mode: DeliveryMode) -> Self {
         self.delivery_mode = mode;
+        self
+    }
+
+    /// Builder-style topology-mode override (bench/test convenience).
+    pub fn with_topology(mut self, mode: TopologyMode) -> Self {
+        self.topology = mode;
+        self
+    }
+
+    /// Builder-style schedule-cache toggle (bench/test convenience).
+    pub fn with_sched_cache(mut self, on: bool) -> Self {
+        self.sched_cache = on;
         self
     }
 
@@ -123,8 +147,23 @@ pub struct RunStats {
     /// O(events) under `Direct`; under `Sharded` a drain coalesces all
     /// same-task decrements of one batch into a single `dec_events(n)`.
     pub event_dec_ops: u64,
+    /// Persistent-schedule cache traffic, summed over ranks: a repeated
+    /// same-shape collective should show `hits >= calls - 1` per rank
+    /// (the MPI persistent-collective win; see `rmpi::topology`).
+    pub sched_cache: SchedCacheStats,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
+}
+
+/// Cluster-wide schedule-cache counters (see
+/// [`crate::rmpi::topology::SchedCache`]'s module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedCacheStats {
+    /// Collective calls that reused a cached plan.
+    pub hits: u64,
+    /// Collective calls that compiled (and, cache permitting, stored)
+    /// their plan.
+    pub misses: u64,
 }
 
 /// Why a run did not complete.
@@ -196,6 +235,10 @@ impl Universe {
             clock: clock.clone(),
             net: cfg.net,
             node_of,
+            topology: cfg.topology,
+            sched_cache_on: cfg.sched_cache,
+            sched_hits: AtomicU64::new(0),
+            sched_misses: AtomicU64::new(0),
             contexts: Mutex::new(Vec::new()),
             dup_map: Mutex::new(HashMap::new()),
             progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
@@ -376,6 +419,10 @@ impl Universe {
                     steals,
                     steal_probes,
                     event_dec_ops,
+                    sched_cache: SchedCacheStats {
+                        hits: uni.sched_hits.load(Ordering::Relaxed),
+                        misses: uni.sched_misses.load(Ordering::Relaxed),
+                    },
                     counters,
                 })
             }

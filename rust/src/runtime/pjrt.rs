@@ -52,7 +52,9 @@ fn engine() -> &'static Engine {
 pub fn load(name: &str) -> Result<&'static LoadedExe> {
     let eng = engine();
     let mut cache = eng.cache.lock().unwrap();
-    if let Some(e) = cache.get(name) {
+    if let Some(&e) = cache.get(name) {
+        // Copy the 'static inner reference out of the guard-borrowed
+        // map entry (a bare `Ok(e)` would borrow from the guard).
         return Ok(e);
     }
     let path = artifacts_dir().join(format!("{name}.hlo.txt"));

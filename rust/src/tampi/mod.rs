@@ -443,6 +443,28 @@ impl Tampi {
         self.iwait(cr.request());
     }
 
+    /// Task-aware `MPI_Igather` + `TAMPI_Iwait`: the root's receive
+    /// buffer (and the leaf's chunk) may only be consumed by successor
+    /// tasks. The schedule runs the topology compiler's plan — leader-
+    /// staged when the node hierarchy pays (see `rmpi::topology`).
+    pub fn igather<T: Pod>(&self, send: &[T], recv: Option<&mut [T]>, root: usize) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.gather(send, recv, root);
+        }
+        let cr = self.comm.igather(send, recv, root);
+        self.iwait(cr.request());
+    }
+
+    /// Task-aware `MPI_Ialltoall` + `TAMPI_Iwait` (uniform blocks; the
+    /// leader-staged hierarchical plan applies here too).
+    pub fn ialltoall<T: Pod>(&self, send: &[T], recv: &mut [T]) {
+        if !self.enabled || !self.in_task() {
+            return self.comm.alltoall(send, recv);
+        }
+        let cr = self.comm.ialltoall(send, recv);
+        self.iwait(cr.request());
+    }
+
     /// Task-aware `MPI_Ialltoallv` + `TAMPI_Iwait`.
     #[allow(clippy::too_many_arguments)]
     pub fn ialltoallv<T: Pod>(

@@ -7,6 +7,7 @@
 
 pub mod gantt;
 pub mod graph;
+pub mod stalls;
 
 use std::sync::Mutex;
 
@@ -14,6 +15,7 @@ use crate::sim::VNanos;
 
 pub use gantt::{busy_fraction, render_gantt};
 pub use graph::GraphRecorder;
+pub use stalls::{format_stall_report, stall_report, CollStall};
 
 /// What happened.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -41,11 +43,19 @@ pub enum EventKind {
     /// pass with one scheduler bulk-enqueue (see [`crate::progress`]).
     /// Stamped from the clock thread (worker = `u32::MAX` sentinel).
     BatchDelivered { shard: u32, count: u32 },
+    /// One rank launched a collective schedule: the plan came from the
+    /// communicator's persistent schedule cache (`cached`) or was
+    /// compiled on the spot; `rounds` is this rank's round count and
+    /// `(comm, seq)` the collective's cluster-wide identity (the
+    /// communicator's context id and the call's first collective
+    /// sequence number — what [`stalls`] groups by).
+    CollScheduleCompiled { comm: u32, seq: u64, cached: bool, rounds: u32 },
     /// The collective engine posted round `round` of `total` of one
     /// rank's collective schedule (see `rmpi::coll_schedule`). Stamped
     /// from whichever thread delivered the previous round's last
     /// completion — often the clock thread (worker = `u32::MAX`).
-    CollRoundAdvanced { round: u32, total: u32 },
+    /// `(comm, seq)` as in [`EventKind::CollScheduleCompiled`].
+    CollRoundAdvanced { comm: u32, seq: u64, round: u32, total: u32 },
     /// Free-form phase marker (e.g. "iteration 3").
     Phase,
 }
@@ -59,6 +69,7 @@ impl EventKind {
             self,
             EventKind::CompletionDelivered
                 | EventKind::BatchDelivered { .. }
+                | EventKind::CollScheduleCompiled { .. }
                 | EventKind::CollRoundAdvanced { .. }
         )
     }
@@ -74,6 +85,7 @@ impl EventKind {
             EventKind::MpiEnd => "mpi_end",
             EventKind::CompletionDelivered => "completion_delivered",
             EventKind::BatchDelivered { .. } => "batch_delivered",
+            EventKind::CollScheduleCompiled { .. } => "coll_schedule_compiled",
             EventKind::CollRoundAdvanced { .. } => "coll_round_advanced",
             EventKind::Phase => "phase",
         }

@@ -1,0 +1,247 @@
+//! Collective stall diagnostic: which rank is holding a collective back?
+//!
+//! The collective engine stamps every schedule launch
+//! ([`EventKind::CollScheduleCompiled`]) and every round advance
+//! ([`EventKind::CollRoundAdvanced`]) with the collective's cluster-wide
+//! identity `(comm, seq)`. This consumer replays a trace up to a chosen
+//! virtual instant and reports, per in-flight collective, the rank
+//! whose `rounds_advanced` is minimal and how long it has been sitting
+//! there — the "who is late to the allreduce" question that is
+//! otherwise answered by attaching a debugger to a hung job.
+//!
+//! Granularity: a rank's progress is measured in rounds *posted*. A
+//! collective whose every rank posted all its rounds may still have
+//! requests in flight for one final network latency; the diagnostic's
+//! purpose is skew (a rank that has not entered, or is rounds behind),
+//! which this granularity captures exactly. A rank with no records for
+//! a group has not launched the collective at all — it is reported at
+//! round 0, stalled since the group's earliest launch.
+//!
+//! Exposed on the CLI as `repro stalls` (a deliberately skewed demo
+//! run) and asserted in `tests/coll_topology.rs`.
+
+use std::collections::HashMap;
+
+use crate::sim::VNanos;
+
+use super::{EventKind, Record};
+
+/// One in-flight collective at the report instant.
+#[derive(Clone, Debug)]
+pub struct CollStall {
+    /// Communicator context id (world = 0).
+    pub comm: u32,
+    /// First collective sequence number of the call.
+    pub seq: u64,
+    /// Algorithm name ("barrier", "allreduce", ...).
+    pub kind: String,
+    /// Ranks that have launched this collective so far.
+    pub entered: usize,
+    /// Expected participants (the communicator size).
+    pub participants: usize,
+    /// The rank with minimal progress.
+    pub laggard: u32,
+    /// Rounds the laggard has posted (0 = has not entered).
+    pub laggard_round: u32,
+    /// The laggard's total rounds, when known (`None` before it
+    /// launches — per-rank schedules differ under hierarchical plans).
+    pub laggard_total: Option<u32>,
+    /// Virtual time since the laggard last made progress (since the
+    /// collective's first launch anywhere, for a rank that never
+    /// entered).
+    pub stalled_ns: u64,
+}
+
+#[derive(Default, Clone, Copy)]
+struct RankProgress {
+    round: u32,
+    total: Option<u32>,
+    last_t: VNanos,
+    seen: bool,
+}
+
+/// Replay `records` up to virtual instant `at` and report every
+/// collective that is still in flight there, most-stalled first.
+/// `participants` is the communicator size (collectives are
+/// communicator-wide, so a silent rank is a laggard, not a bystander).
+pub fn stall_report(records: &[Record], at: VNanos, participants: usize) -> Vec<CollStall> {
+    struct Group {
+        kind: String,
+        first_launch: VNanos,
+        ranks: HashMap<u32, RankProgress>,
+    }
+    let mut groups: HashMap<(u32, u64), Group> = HashMap::new();
+    for r in records {
+        if r.t > at {
+            continue;
+        }
+        let (comm, seq, round, total) = match r.kind {
+            EventKind::CollScheduleCompiled { comm, seq, rounds, .. } => {
+                (comm, seq, 0, Some(rounds))
+            }
+            EventKind::CollRoundAdvanced { comm, seq, round, total } => {
+                (comm, seq, round, Some(total))
+            }
+            _ => continue,
+        };
+        let g = groups.entry((comm, seq)).or_insert_with(|| Group {
+            kind: r.label.clone(),
+            first_launch: r.t,
+            ranks: HashMap::new(),
+        });
+        g.first_launch = g.first_launch.min(r.t);
+        let p = g.ranks.entry(r.rank).or_default();
+        p.seen = true;
+        p.total = total.or(p.total);
+        if round >= p.round {
+            p.round = round;
+            p.last_t = p.last_t.max(r.t);
+        }
+    }
+
+    let mut out = Vec::new();
+    for ((comm, seq), g) in groups {
+        // Progress of every expected participant (absent = round 0,
+        // stalled since the collective first appeared anywhere).
+        let mut laggard: Option<(u32, RankProgress)> = None;
+        let mut complete = true;
+        for rank in 0..participants as u32 {
+            let p = g.ranks.get(&rank).copied().unwrap_or(RankProgress {
+                last_t: g.first_launch,
+                ..RankProgress::default()
+            });
+            let done = p.seen && p.total == Some(p.round);
+            if done {
+                continue;
+            }
+            complete = false;
+            // Least rounds posted wins; ties go to the longest-stalled.
+            let worse = match &laggard {
+                None => true,
+                Some((_, best)) => {
+                    p.round < best.round
+                        || (p.round == best.round && p.last_t < best.last_t)
+                }
+            };
+            if worse {
+                laggard = Some((rank, p));
+            }
+        }
+        if complete {
+            continue;
+        }
+        let (rank, p) = laggard.expect("an incomplete group has a laggard");
+        out.push(CollStall {
+            comm,
+            seq,
+            kind: g.kind,
+            entered: g.ranks.len(),
+            participants,
+            laggard: rank,
+            laggard_round: p.round,
+            laggard_total: p.total,
+            stalled_ns: at.saturating_sub(p.last_t),
+        });
+    }
+    out.sort_by(|a, b| b.stalled_ns.cmp(&a.stalled_ns).then(a.seq.cmp(&b.seq)));
+    out
+}
+
+/// Render a stall report as the table `repro stalls` prints.
+pub fn format_stall_report(stalls: &[CollStall], at: VNanos) -> String {
+    if stalls.is_empty() {
+        return format!("no collectives in flight at t={} us\n", at / 1_000);
+    }
+    let mut s = format!(
+        "{:<6} {:>5} {:<12} {:>9} {:>8} {:>9} {:>12}\n",
+        "comm", "seq", "kind", "entered", "laggard", "round", "stalled_us"
+    );
+    for st in stalls {
+        let round = match st.laggard_total {
+            Some(t) => format!("{}/{}", st.laggard_round, t),
+            None => format!("{}/?", st.laggard_round),
+        };
+        s.push_str(&format!(
+            "{:<6} {:>5} {:<12} {:>9} {:>8} {:>9} {:>12}\n",
+            st.comm,
+            st.seq,
+            st.kind,
+            format!("{}/{}", st.entered, st.participants),
+            st.laggard,
+            round,
+            st.stalled_ns / 1_000
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: VNanos, rank: u32, kind: EventKind, label: &str) -> Record {
+        Record { t, rank, worker: u32::MAX, kind, label: label.to_string(), task_id: 0 }
+    }
+
+    #[test]
+    fn silent_rank_is_the_laggard() {
+        let recs = vec![
+            rec(
+                0,
+                0,
+                EventKind::CollScheduleCompiled { comm: 0, seq: 0, cached: false, rounds: 2 },
+                "barrier",
+            ),
+            rec(
+                0,
+                0,
+                EventKind::CollRoundAdvanced { comm: 0, seq: 0, round: 1, total: 2 },
+                "barrier",
+            ),
+            rec(
+                0,
+                1,
+                EventKind::CollScheduleCompiled { comm: 0, seq: 0, cached: false, rounds: 2 },
+                "barrier",
+            ),
+            rec(
+                0,
+                1,
+                EventKind::CollRoundAdvanced { comm: 0, seq: 0, round: 1, total: 2 },
+                "barrier",
+            ),
+        ];
+        // Rank 2 never appears: it is the laggard at round 0.
+        let r = stall_report(&recs, 5_000, 3);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].laggard, 2);
+        assert_eq!(r[0].laggard_round, 0);
+        assert_eq!(r[0].entered, 2);
+        assert_eq!(r[0].stalled_ns, 5_000);
+        assert_eq!(r[0].kind, "barrier");
+    }
+
+    #[test]
+    fn completed_collectives_drop_out() {
+        let mut recs = Vec::new();
+        for rank in 0..2 {
+            recs.push(rec(
+                0,
+                rank,
+                EventKind::CollScheduleCompiled { comm: 0, seq: 0, cached: false, rounds: 1 },
+                "gather",
+            ));
+            recs.push(rec(
+                100,
+                rank,
+                EventKind::CollRoundAdvanced { comm: 0, seq: 0, round: 1, total: 1 },
+                "gather",
+            ));
+        }
+        assert!(stall_report(&recs, 10_000, 2).is_empty());
+        // But mid-flight (before the advances) it is reported.
+        let early = stall_report(&recs, 50, 2);
+        assert_eq!(early.len(), 1);
+        assert_eq!(early[0].laggard_round, 0);
+    }
+}

@@ -232,7 +232,7 @@ fn blocking_collectives_drive_through_the_engine() {
     .unwrap();
     let mut per_rank = vec![0u32; n];
     for rec in tracer.snapshot() {
-        if let EventKind::CollRoundAdvanced { round, total } = rec.kind {
+        if let EventKind::CollRoundAdvanced { round, total, .. } = rec.kind {
             assert_eq!(total, 2, "log2(4) dissemination rounds");
             assert!((1..=total).contains(&round));
             assert_eq!(rec.label, "barrier");

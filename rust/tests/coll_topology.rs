@@ -1,0 +1,478 @@
+//! Topology-aware hierarchical collective schedules + persistent
+//! schedule cache (rmpi::topology): flat-vs-hierarchical bit-identity
+//! across delivery and wait modes, per-topology round-count formulas,
+//! cache hit/miss accounting and comm-drop invalidation,
+//! hierarchical-not-slower in virtual time, the collective stall
+//! diagnostic, and the `repro figures` unknown-figure exit code.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use tampi_repro::bench;
+use tampi_repro::progress::DeliveryMode;
+use tampi_repro::rmpi::{ClusterConfig, ThreadLevel, TopologyMode, Universe};
+use tampi_repro::sim::ms;
+use tampi_repro::tampi;
+use tampi_repro::trace::{stall_report, Tracer};
+
+/// Run all six collectives and digest every data result into a bit
+/// vector on rank 0. `style`: "park" = blocking calls on the rank main,
+/// "taskaware" = TAMPI-intercepted calls inside tasks.
+fn collective_digest(
+    nodes: usize,
+    rpn: usize,
+    topo: TopologyMode,
+    delivery: DeliveryMode,
+    style: &'static str,
+) -> Vec<u64> {
+    // One slot per recording rank: ranks finish in nondeterministic
+    // real-time order, so a flat push would scramble the digest.
+    let digest: Arc<Mutex<[Vec<u64>; 2]>> = Arc::new(Mutex::new([Vec::new(), Vec::new()]));
+    let d2 = digest.clone();
+    let cores = if style == "taskaware" { 1 } else { 0 };
+    let mut cfg = ClusterConfig::new(nodes, rpn, cores)
+        .with_topology(topo)
+        .with_delivery_mode(delivery);
+    cfg.deadline = Some(ms(600_000));
+    Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        let r = ctx.rank;
+        let comm = ctx.comm.clone();
+
+        // The six collectives, with data patterns that expose any
+        // misrouting: every element value encodes its origin.
+        let bcast_src: Vec<f64> = (0..4).map(|i| 1.25 * (i + 3) as f64).collect();
+        let mut bcast_buf = if r == 1 { bcast_src.clone() } else { vec![0.0; 4] };
+        let mut reduce_buf = [(r as f64 + 0.5) * 1.125, r as f64 * 0.75];
+        let mut allred_buf = [(r as f64 + 1.0) * 0.375];
+        let gather_mine = [r as u64 * 1000 + 7];
+        let mut gather_all = vec![0u64; n];
+        let a2a_send: Vec<u32> = (0..n).map(|d| (r * 1000 + d) as u32).collect();
+        let mut a2a_recv = vec![0u32; n];
+
+        match style {
+            "park" => {
+                comm.barrier();
+                comm.bcast(&mut bcast_buf, 1);
+                comm.reduce(&mut reduce_buf, 0, |a, b| {
+                    a[0] += b[0];
+                    a[1] += b[1];
+                });
+                comm.allreduce(&mut allred_buf, |a, b| a[0] += b[0]);
+                if r == 1 {
+                    comm.gather(&gather_mine, Some(&mut gather_all), 1);
+                } else {
+                    comm.gather(&gather_mine, None, 1);
+                }
+                comm.alltoall(&a2a_send, &mut a2a_recv);
+            }
+            _ => {
+                let rt = ctx.rt.as_ref().unwrap();
+                let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+                // One task per collective; each taskwait makes the
+                // buffers safe to reuse / read on the rank main.
+                let run_in_task = |body: Box<dyn FnOnce() + Send>| {
+                    rt.task().label("coll").spawn(body);
+                    rt.taskwait();
+                };
+                {
+                    let tm = tm.clone();
+                    run_in_task(Box::new(move || tm.barrier()));
+                }
+                {
+                    let tm = tm.clone();
+                    let buf: Arc<Mutex<Vec<f64>>> =
+                        Arc::new(Mutex::new(std::mem::take(&mut bcast_buf)));
+                    let b2 = buf.clone();
+                    run_in_task(Box::new(move || {
+                        tm.ibcast(&mut b2.lock().unwrap()[..], 1);
+                    }));
+                    bcast_buf = std::mem::take(&mut *buf.lock().unwrap());
+                }
+                {
+                    let tm = tm.clone();
+                    let out = Arc::new(Mutex::new(reduce_buf));
+                    let o2 = out.clone();
+                    run_in_task(Box::new(move || {
+                        // Copy out / copy back: the task pauses inside
+                        // the wait, so no lock is held across it.
+                        let mut v = *o2.lock().unwrap();
+                        tm.comm().reduce_with(
+                            &mut v,
+                            0,
+                            |a, b| {
+                                a[0] += b[0];
+                                a[1] += b[1];
+                            },
+                            tampi_repro::rmpi::collectives::WaitMode::TaskAware(None),
+                        );
+                        *o2.lock().unwrap() = v;
+                    }));
+                    reduce_buf = *out.lock().unwrap();
+                }
+                {
+                    let tm = tm.clone();
+                    let out = Arc::new(Mutex::new(allred_buf));
+                    let o2 = out.clone();
+                    run_in_task(Box::new(move || {
+                        let mut v = *o2.lock().unwrap();
+                        tm.allreduce(&mut v, |a, b| a[0] += b[0]);
+                        *o2.lock().unwrap() = v;
+                    }));
+                    allred_buf = *out.lock().unwrap();
+                }
+                {
+                    let tm = tm.clone();
+                    let all: Arc<Mutex<Vec<u64>>> =
+                        Arc::new(Mutex::new(std::mem::take(&mut gather_all)));
+                    let a2 = all.clone();
+                    run_in_task(Box::new(move || {
+                        if r == 1 {
+                            tm.igather(&gather_mine, Some(&mut a2.lock().unwrap()[..]), 1);
+                        } else {
+                            tm.igather(&gather_mine, None, 1);
+                        }
+                    }));
+                    gather_all = std::mem::take(&mut *all.lock().unwrap());
+                }
+                {
+                    let tm = tm.clone();
+                    let send = a2a_send.clone();
+                    let recv: Arc<Mutex<Vec<u32>>> =
+                        Arc::new(Mutex::new(std::mem::take(&mut a2a_recv)));
+                    let r2 = recv.clone();
+                    run_in_task(Box::new(move || {
+                        tm.ialltoall(&send, &mut r2.lock().unwrap()[..]);
+                    }));
+                    a2a_recv = std::mem::take(&mut *recv.lock().unwrap());
+                }
+            }
+        }
+
+        // Every rank checks placement-sensitive results...
+        assert_eq!(bcast_buf, bcast_src, "bcast payload on rank {r}");
+        for (s, &v) in a2a_recv.iter().enumerate() {
+            assert_eq!(v, (s * 1000 + r) as u32, "alltoall slot {s} on rank {r}");
+        }
+        // ...and rank 0/1 record the bit-exact digests.
+        let mut bits = Vec::new();
+        if r == 0 {
+            bits.extend(reduce_buf.iter().map(|v| v.to_bits()));
+        }
+        bits.push(allred_buf[0].to_bits());
+        if r == 1 {
+            for &g in &gather_all {
+                bits.push(g);
+            }
+        }
+        for &v in &a2a_recv {
+            bits.push(v as u64);
+        }
+        if r <= 1 {
+            d2.lock().unwrap()[r] = bits;
+        }
+    })
+    .unwrap();
+    let slots = digest.lock().unwrap();
+    let out: Vec<u64> = slots.iter().flatten().copied().collect();
+    assert!(!out.is_empty());
+    out
+}
+
+/// Acceptance criterion: all six collectives produce bit-identical
+/// results flat vs hierarchical, across {Park, TaskAware} x
+/// {Direct, Sharded} — on a power-of-two and a non-power-of-two
+/// ranks-per-node shape.
+#[test]
+fn flat_vs_hierarchical_bitidentical_all_six() {
+    for (nodes, rpn) in [(2usize, 4usize), (2, 3)] {
+        let reference =
+            collective_digest(nodes, rpn, TopologyMode::Flat, DeliveryMode::Direct, "park");
+        for topo in [TopologyMode::Flat, TopologyMode::Hierarchical] {
+            for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+                for style in ["park", "taskaware"] {
+                    let got = collective_digest(nodes, rpn, topo, delivery, style);
+                    assert_eq!(
+                        got, reference,
+                        "digest diverged: {nodes}x{rpn} {topo:?}/{delivery:?}/{style}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Round-count formulas of the hierarchical plans at 4 nodes x 4 ranks
+/// (latency regime: barrier/bcast stage through leaders, reduce keeps
+/// the flat binomial tree — the combine-order contract).
+#[test]
+fn round_count_formulas_hierarchical_latency_regime() {
+    let (nodes, rpn) = (4usize, 4usize);
+    let cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(TopologyMode::Hierarchical);
+    Universe::run(cfg, move |ctx| {
+        let r = ctx.rank;
+        let leader = r % rpn == 0;
+
+        // Barrier: member = 1 round (token out, release in); leader =
+        // check-in + log2(nodes) dissemination + release.
+        let cr = ctx.comm.ibarrier();
+        let want = if leader { 1 + 2 + 1 } else { 1 };
+        assert_eq!(cr.rounds_total(), want, "rank {r} barrier rounds");
+        cr.wait();
+
+        // Bcast (root 1, deliberately not node-aligned): root 1 round,
+        // everyone else recv + forward = 2, in both topologies.
+        let mut b = [if r == 1 { 42u64 } else { 0 }];
+        let cr = ctx.comm.ibcast(&mut b, 1);
+        assert_eq!(cr.rounds_total(), if r == 1 { 1 } else { 2 }, "rank {r} bcast");
+        cr.wait();
+        assert_eq!(b[0], 42);
+
+        // Reduce keeps the flat binomial shape: interior ranks (even
+        // virtual rank) 2 rounds, leaves 1 — identical to Flat mode.
+        let mut v = [r as u64];
+        let cr = ctx.comm.ireduce(&mut v, 0, |a, b| a[0] += b[0]);
+        let interior = r % 2 == 0;
+        assert_eq!(cr.rounds_total(), if interior { 2 } else { 1 }, "rank {r} reduce");
+        cr.wait();
+        if r == 0 {
+            assert_eq!(v[0], (0..16u64).sum::<u64>());
+        }
+    })
+    .unwrap();
+}
+
+/// Round-count formulas of the staged gather/alltoall plans in the
+/// message-rate regime (coll_rx_ns > 0 makes fan-in expensive, so the
+/// compiler picks leader staging).
+#[test]
+fn round_count_formulas_staged_message_rate_regime() {
+    let (nodes, rpn) = (4usize, 4usize);
+    let mut cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(TopologyMode::Hierarchical);
+    cfg.net.coll_rx_ns = 400;
+    Universe::run(cfg, move |ctx| {
+        let r = ctx.rank;
+        let n = ctx.size;
+
+        // Gather to root 0: root 1 round; members of the root's node
+        // and staging-node members 1; staging leaders 2.
+        let mine = [r as u64];
+        let cr = if r == 0 {
+            let mut all = vec![0u64; n];
+            let cr = ctx.comm.igather(&mine, Some(&mut all), 0);
+            cr.wait();
+            assert_eq!(all, (0..n as u64).collect::<Vec<_>>());
+            cr
+        } else {
+            let cr = ctx.comm.igather(&mine, None, 0);
+            cr.wait();
+            cr
+        };
+        let staging_leader = r % rpn == 0 && r != 0;
+        assert_eq!(
+            cr.rounds_total(),
+            if staging_leader { 2 } else { 1 },
+            "rank {r} gather rounds"
+        );
+
+        // Alltoall: leaders run the 3-phase staged plan, members 1
+        // round (ship up, receive down).
+        let send: Vec<u32> = (0..n).map(|d| (r * 100 + d) as u32).collect();
+        let mut recv = vec![0u32; n];
+        let cr = ctx.comm.ialltoall(&send, &mut recv);
+        cr.wait();
+        let leader = r % rpn == 0;
+        assert_eq!(cr.rounds_total(), if leader { 3 } else { 1 }, "rank {r} alltoall");
+        for (s, &v) in recv.iter().enumerate() {
+            assert_eq!(v, (s * 100 + r) as u32);
+        }
+    })
+    .unwrap();
+}
+
+/// Persistent-schedule acceptance: repeated same-shape collectives hit
+/// the cache on every call after the first (`hits >= calls - 1` per
+/// rank), and a new shape misses once.
+#[test]
+fn sched_cache_hits_after_first_call() {
+    let n = 2usize;
+    let calls = 5usize;
+    let stats = Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        for i in 0..calls {
+            let mut v = [ctx.rank as f64 + i as f64];
+            let cr = ctx.comm.iallreduce(&mut v, |a, b| a[0] += b[0]);
+            cr.wait();
+        }
+        // A different shape compiles its own plan.
+        let mut w = [0.0f64, 1.0];
+        ctx.comm.allreduce(&mut w, |a, b| {
+            a[0] += b[0];
+            a[1] += b[1];
+        });
+        assert_eq!(ctx.comm.sched_cache_len(), 2, "two shapes cached");
+    })
+    .unwrap();
+    assert_eq!(stats.sched_cache.misses, 2 * n as u64, "one compile per shape per rank");
+    assert_eq!(
+        stats.sched_cache.hits,
+        (n * (calls - 1)) as u64,
+        "every repeat must hit"
+    );
+}
+
+/// Dropping a communicator drops its compiled plans: a fresh dup
+/// recompiles (cache lifetime == communicator lifetime, like MPI
+/// persistent requests).
+#[test]
+fn sched_cache_invalidated_on_comm_drop() {
+    let n = 2usize;
+    let stats = Universe::run(ClusterConfig::new(n, 1, 0), move |ctx| {
+        let d1 = ctx.comm.dup();
+        let mut v = [ctx.rank as f64 + 0.5];
+        d1.allreduce(&mut v, |a, b| a[0] += b[0]);
+        d1.allreduce(&mut v, |a, b| a[0] += b[0]);
+        assert_eq!(d1.sched_cache_len(), 1);
+        drop(d1); // plans die with the communicator
+        let d2 = ctx.comm.dup();
+        assert_eq!(d2.sched_cache_len(), 0, "a fresh dup starts cold");
+        d2.allreduce(&mut v, |a, b| a[0] += b[0]);
+        assert_eq!(d2.sched_cache_len(), 1);
+    })
+    .unwrap();
+    // Per rank: dup1 compiles once + hits once; dup2 compiles again.
+    assert_eq!(stats.sched_cache.misses, 2 * n as u64);
+    assert_eq!(stats.sched_cache.hits, n as u64);
+}
+
+/// The cost-driven compiler may never lose to flat: in both the pure
+/// latency regime (rx = 0) and the message-rate regime (rx = 400),
+/// hierarchical virtual time <= flat for every collective at
+/// ranks_per_node > 1.
+#[test]
+fn hierarchical_not_slower_at_rpn_gt_1() {
+    for rx in [0u64, 400] {
+        for (nodes, rpn) in [(4usize, 2usize), (4, 4)] {
+            for kind in bench::COLL_TOPOLOGY_KINDS {
+                let flat =
+                    bench::coll_topology_vtime(kind, nodes, rpn, 1, TopologyMode::Flat, rx);
+                let hier = bench::coll_topology_vtime(
+                    kind,
+                    nodes,
+                    rpn,
+                    1,
+                    TopologyMode::Hierarchical,
+                    rx,
+                );
+                assert!(
+                    hier <= flat,
+                    "{kind} hierarchical slower at {nodes}x{rpn} rx={rx}: \
+                     hier={hier} ns vs flat={flat} ns"
+                );
+            }
+        }
+    }
+}
+
+/// The staged plans must actually win where the model says they do: at
+/// 4x4 with per-message receiver cost, gather/alltoall/barrier are
+/// strictly faster hierarchical.
+#[test]
+fn hierarchical_wins_in_message_rate_regime() {
+    for kind in ["barrier", "gather", "alltoall"] {
+        let flat = bench::coll_topology_vtime(kind, 4, 4, 1, TopologyMode::Flat, 400);
+        let hier =
+            bench::coll_topology_vtime(kind, 4, 4, 1, TopologyMode::Hierarchical, 400);
+        assert!(
+            hier < flat,
+            "{kind} must win strictly: hier={hier} ns vs flat={flat} ns"
+        );
+    }
+}
+
+/// fig17's schedule-cache table: cold compiles per call without the
+/// cache, one compile + hits with it — and the cache is time-positive.
+#[test]
+fn fig17_cache_rows_account() {
+    let ranks = 4u64; // 2 nodes x 2 ranks
+    let calls = 8usize;
+    let cold = bench::coll_cache_run(calls, false);
+    let warm = bench::coll_cache_run(calls, true);
+    assert_eq!(cold.hits, 0);
+    assert_eq!(cold.misses, ranks * calls as u64);
+    assert_eq!(warm.misses, ranks);
+    assert_eq!(warm.hits, ranks * (calls as u64 - 1));
+    assert!(
+        warm.vtime_us <= cold.vtime_us,
+        "cached reuse must not be slower: {} vs {}",
+        warm.vtime_us,
+        cold.vtime_us
+    );
+}
+
+/// The stall diagnostic blames the rank that entered late, and reports
+/// nothing once the collective completed.
+#[test]
+fn stall_report_blames_the_skewed_rank() {
+    let n = 4usize;
+    let skew = ms(20);
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(n, 1, 0);
+    cfg.tracer = Some(tracer.clone());
+    let entered = Arc::new(AtomicU64::new(0));
+    let e2 = entered.clone();
+    Universe::run(cfg, move |ctx| {
+        if ctx.rank == ctx.size - 1 {
+            ctx.clock.sleep(skew);
+            e2.store(ctx.clock.now(), Ordering::Release);
+        }
+        ctx.comm.barrier();
+    })
+    .unwrap();
+    assert!(entered.load(Ordering::Acquire) >= skew);
+    let records = tracer.snapshot();
+
+    // Mid-skew: the barrier is in flight and rank n-1 (no records yet)
+    // is the laggard, stalled since launch.
+    let mid = stall_report(&records, skew / 2, n);
+    assert_eq!(mid.len(), 1, "exactly the barrier in flight: {mid:?}");
+    assert_eq!(mid[0].kind, "barrier");
+    assert_eq!(mid[0].laggard, (n - 1) as u32);
+    assert_eq!(mid[0].laggard_round, 0);
+    assert_eq!(mid[0].entered, n - 1);
+    assert!(mid[0].stalled_ns >= skew / 2, "stalled {} ns", mid[0].stalled_ns);
+
+    // Well after completion: nothing in flight.
+    assert!(stall_report(&records, skew * 4, n).is_empty());
+}
+
+/// Regression (satellite fix): `repro figures` must exit non-zero with
+/// a clear message on an unknown `--fig`, and must reject `--json` for
+/// figures without a machine-readable schema.
+#[test]
+fn repro_figures_unknown_fig_exits_nonzero() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args(["figures", "--fig", "bogus"])
+        .output()
+        .expect("spawn repro");
+    assert_eq!(out.status.code(), Some(2), "unknown figure must exit 2");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown figure"), "stderr: {err}");
+
+    let out = std::process::Command::new(exe)
+        .args(["figures", "--fig", "9", "--json", "should_not_exist.json"])
+        .output()
+        .expect("spawn repro");
+    assert_eq!(out.status.code(), Some(2), "--json needs a schema'd figure");
+    assert!(!std::path::Path::new("should_not_exist.json").exists());
+}
+
+/// The JSON emitters produce the schema scripts/validate_bench.py pins.
+#[test]
+fn bench_json_shape() {
+    let j = bench::fig15_json(bench::Scale::Quick);
+    assert!(j.starts_with("{\"schema_version\":1,\"fig\":15,\"scale\":\"quick\""));
+    assert!(j.contains("\"series\":\"polling\""));
+    assert!(j.contains("\"latency_ns\":"));
+    assert!(j.trim_end().ends_with('}'));
+}

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Schema check for the BENCH_fig*.json perf artifacts (CI bench job).
+
+Usage: validate_bench.py BENCH_fig15.json [BENCH_fig16.json ...]
+
+Fails (exit 1) on any structural problem: the bench job must not upload
+an artifact the perf-trajectory tooling cannot parse. Stdlib only — the
+CI runner has no third-party packages.
+"""
+import json
+import sys
+
+NUM = (int, float)
+
+# Required keys per figure: name -> (type tuple, nullable).
+ROW_SCHEMAS = {
+    15: {"series": (str,), "poll_us": NUM + (type(None),), "latency_ns": NUM},
+    16: {
+        "series": (str,),
+        "ranks": NUM,
+        "compute_us": NUM + (type(None),),
+        "vtime_ms": NUM,
+        "speedup": NUM,
+    },
+    17: {
+        "collective": (str,),
+        "nodes": NUM,
+        "rpn": NUM,
+        "flat_us": NUM,
+        "hier_us": NUM,
+        "speedup": NUM,
+    },
+}
+
+CACHE_SCHEMA = {
+    "calls": NUM,
+    "cache": (bool,),
+    "vtime_us": NUM,
+    "hits": NUM,
+    "misses": NUM,
+}
+
+
+def check_rows(rows, schema, what, path):
+    if not isinstance(rows, list) or not rows:
+        fail(path, f"{what} must be a non-empty array")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            fail(path, f"{what}[{i}] is not an object")
+        for key, types in schema.items():
+            if key not in row:
+                fail(path, f"{what}[{i}] missing key {key!r}")
+            if not isinstance(row[key], types):
+                fail(path, f"{what}[{i}].{key} has type {type(row[key]).__name__}")
+        extra = set(row) - set(schema)
+        if extra:
+            fail(path, f"{what}[{i}] has unknown keys {sorted(extra)}")
+
+
+def fail(path, msg):
+    print(f"{path}: SCHEMA INVALID: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+    if doc.get("schema_version") != 1:
+        fail(path, f"schema_version {doc.get('schema_version')!r} != 1")
+    fig = doc.get("fig")
+    if fig not in ROW_SCHEMAS:
+        fail(path, f"fig {fig!r} not one of {sorted(ROW_SCHEMAS)}")
+    if doc.get("scale") not in ("quick", "default", "full"):
+        fail(path, f"scale {doc.get('scale')!r} invalid")
+    check_rows(doc.get("rows"), ROW_SCHEMAS[fig], "rows", path)
+    allowed = {"schema_version", "fig", "scale", "rows"}
+    if fig == 17:
+        check_rows(doc.get("cache"), CACHE_SCHEMA, "cache", path)
+        allowed.add("cache")
+    extra = set(doc) - allowed
+    if extra:
+        fail(path, f"unknown top-level keys {sorted(extra)}")
+    print(f"{path}: ok (fig {fig}, {len(doc['rows'])} rows)")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    for path in sys.argv[1:]:
+        validate(path)
+
+
+if __name__ == "__main__":
+    main()
