@@ -1,0 +1,16 @@
+//! cargo bench target regenerating extension Figure 18: the unified
+//! congestion story — an (n-1)->0 p2p incast and the same fan-in
+//! through flat vs leader-staged gather, all priced by the one
+//! ingress-port model, swept over the per-message receiver cost
+//! `rx_ns`. Scale via TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig18_report(scale, None, None);
+    println!("{report}");
+    bench::write_output("fig18_incast.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -509,8 +509,8 @@ pub fn fig16_report(scale: Scale) -> String {
 
 /// Virtual makespan of `reps` back-to-back collectives of one kind on a
 /// `nodes x rpn` cluster under `topo`, with the network model's
-/// per-message receiver cost set to `rx_ns` (the fig17 measurement
-/// point; also the substrate of `tests/coll_topology.rs`'s
+/// per-message receiver-processing term set to `rx_ns` (the fig17
+/// measurement point; also the substrate of `tests/coll_topology.rs`'s
 /// hierarchical-not-slower assertions). Roots are deliberately *not*
 /// node-aligned (rank 1) for bcast/gather so the re-rooted hierarchical
 /// trees are exercised.
@@ -522,10 +522,24 @@ pub fn coll_topology_vtime(
     topo: crate::rmpi::TopologyMode,
     rx_ns: u64,
 ) -> u64 {
+    let net = crate::rmpi::NetworkModel { rx_ns, ..Default::default() };
+    coll_topology_vtime_net(collective, nodes, rpn, reps, topo, net)
+}
+
+/// [`coll_topology_vtime`] under an arbitrary [`crate::rmpi::NetworkModel`]
+/// (fig18 threads the CLI's `--net-rx`/`--eager` overrides through here).
+pub fn coll_topology_vtime_net(
+    collective: &str,
+    nodes: usize,
+    rpn: usize,
+    reps: usize,
+    topo: crate::rmpi::TopologyMode,
+    net: crate::rmpi::NetworkModel,
+) -> u64 {
     use crate::rmpi::{ClusterConfig, Universe};
 
     let mut cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(topo);
-    cfg.net.coll_rx_ns = rx_ns;
+    cfg.net = net;
     cfg.deadline = Some(ms(600_000));
     let collective = collective.to_string();
     let stats = Universe::run(cfg, move |ctx| {
@@ -625,7 +639,7 @@ pub fn coll_cache_run(calls: usize, cache: bool) -> SchedCacheRow {
 
 /// Fig 17 (paper extension): topology-aware hierarchical schedules —
 /// flat vs hierarchical virtual time per collective across a
-/// ranks-per-node sweep (with a message-rate term `coll_rx_ns` = 300 ns
+/// ranks-per-node sweep (with the message-rate term `rx_ns` = 300 ns
 /// so fan-in is visible), plus the persistent-schedule-cache cold vs
 /// cached compile-cost table.
 pub fn fig17(scale: Scale) -> (Vec<TopoRow>, Vec<SchedCacheRow>) {
@@ -681,7 +695,7 @@ pub fn fig17_report(scale: Scale) -> String {
     let (rows, cache) = fig17(scale);
     let mut out = String::from(
         "=== Figure 17: topology-aware hierarchical collective schedules ===\n\
-         (coll_rx_ns = 300: per-message receiver processing; hierarchical = \n\
+         (rx_ns = 300: per-message ingress-port processing; hierarchical = \n\
          cost-driven leader staging, never chosen when flat is cheaper)\n",
     );
     out.push_str(&format!(
@@ -717,6 +731,318 @@ pub fn fig17_report(scale: Scale) -> String {
          schedule cache — hits >= ranks x (calls - 1); see RunStats::sched_cache)\n",
     );
     out
+}
+
+/// Last delivery instant of an (n-1)-to-one p2p incast under one
+/// delivery/wait combo: every rank but 0 sends one 64-byte eager
+/// message to rank 0 at a single virtual instant (1 virtual ms in, so
+/// both wait styles have long posted their receives); the returned
+/// value is the virtual instant the *last* receive completes — i.e.
+/// when rank 0's ingress port has processed the whole wave. `taskaware`
+/// runs the receive side inside a task through TAMPI's blocking mode;
+/// `park` waits on the rank main. The instant is a pure function of
+/// the network model: identical across {Direct, Sharded} x
+/// {park, taskaware} and any worker count (asserted by [`fig18`] and
+/// `tests/net_ports.rs`).
+pub fn p2p_incast_instant(
+    nodes: usize,
+    rpn: usize,
+    rx_ns: u64,
+    delivery: crate::progress::DeliveryMode,
+    taskaware: bool,
+) -> u64 {
+    let net = crate::rmpi::NetworkModel { rx_ns, ..Default::default() };
+    p2p_incast_instant_net(nodes, rpn, net, delivery, taskaware)
+}
+
+/// [`p2p_incast_instant`] under an arbitrary [`crate::rmpi::NetworkModel`]
+/// (fig18 threads the CLI's `--net-rx`/`--eager` overrides through here).
+pub fn p2p_incast_instant_net(
+    nodes: usize,
+    rpn: usize,
+    net: crate::rmpi::NetworkModel,
+    delivery: crate::progress::DeliveryMode,
+    taskaware: bool,
+) -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use crate::rmpi::{ClusterConfig, Request, ThreadLevel, Universe};
+
+    let cores = if taskaware { 1 } else { 0 };
+    let mut cfg = ClusterConfig::new(nodes, rpn, cores).with_delivery_mode(delivery);
+    cfg.net = net;
+    cfg.deadline = Some(ms(600_000));
+    let last = Arc::new(AtomicU64::new(0));
+    let l2 = last.clone();
+    Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        if ctx.rank != 0 {
+            // One instant, one wave: eager sends complete immediately.
+            ctx.clock.sleep(ms(1));
+            ctx.comm.isend(&[7u8; 64], 0, ctx.rank as i32);
+            return;
+        }
+        let last = l2.clone();
+        let clock = ctx.clock.clone();
+        let comm = ctx.comm.clone();
+        // Returns the buffers alongside the requests: the MPI contract
+        // pins them until every receive completes.
+        let body = move || {
+            let mut bufs = vec![[0u8; 64]; n - 1];
+            let reqs: Vec<Request> = bufs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, b)| comm.irecv(&mut b[..], (i + 1) as i32, (i + 1) as i32))
+                .collect();
+            for r in &reqs {
+                let last = last.clone();
+                let c = clock.clone();
+                r.on_complete(move |_| {
+                    last.fetch_max(c.now(), Ordering::AcqRel);
+                });
+            }
+            (bufs, reqs)
+        };
+        if taskaware {
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = crate::tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            rt.task().label("incast-sink").spawn(move || {
+                let (bufs, reqs) = body();
+                tm.waitall(&reqs);
+                drop(bufs);
+            });
+            rt.taskwait();
+        } else {
+            let (bufs, reqs) = body();
+            Request::wait_all(ctx.comm.clock(), &reqs);
+            drop(bufs);
+        }
+    })
+    .expect("p2p incast scenario");
+    let t = last.load(std::sync::atomic::Ordering::Acquire);
+    assert!(t > 0, "incast bookkeeping broken");
+    t
+}
+
+/// One fig18 row: an incast series at one receiver-processing cost.
+#[derive(Clone, Debug)]
+pub struct IncastRow {
+    pub series: String,
+    pub rx_ns: u64,
+    pub vtime_us: f64,
+}
+
+/// Fig 18 (paper extension): the unified congestion story — p2p fan-in
+/// and collective gather priced by the same ingress-port model. Sweeps
+/// `rx_ns` and reports, per value:
+///
+/// * `p2p-incast` — last delivery instant of the raw (n-1)->0 isend
+///   wave: grows linearly with `rx_ns` (the port serializes the wave),
+///   asserted identical across {Direct, Sharded} x {park, taskaware};
+/// * `gather-flat` — the same fan-in through a collective with flat
+///   topology: same linear degradation, same model;
+/// * `gather-hier` — leader staging absorbs the fan-in at node leaders,
+///   flattening the curve (never slower than flat: cost-driven
+///   selection against the same model).
+///
+/// The first figure where p2p and collectives share one congestion
+/// story. `rx_override` (the `--net-rx` CLI knob) replaces the sweep
+/// with a single point; `eager_override` (`--eager`) moves the
+/// rendezvous threshold for every run of the figure.
+pub fn fig18(
+    scale: Scale,
+    rx_override: Option<u64>,
+    eager_override: Option<usize>,
+) -> Vec<IncastRow> {
+    use crate::progress::DeliveryMode;
+    use crate::rmpi::{NetworkModel, TopologyMode};
+
+    let (nodes, rpn): (usize, usize) = match scale {
+        Scale::Quick => (2, 4),
+        Scale::Default => (4, 4),
+        Scale::Full => (8, 8),
+    };
+    let sweep: Vec<u64> = match rx_override {
+        Some(rx) => vec![rx],
+        None => match scale {
+            Scale::Quick => vec![0, 200, 800],
+            Scale::Default => vec![0, 100, 200, 400, 800],
+            Scale::Full => vec![0, 100, 200, 400, 800, 1600],
+        },
+    };
+    let mut rows = Vec::new();
+    let mut prev_p2p = 0u64;
+    for &rx in &sweep {
+        let mut net = NetworkModel { rx_ns: rx, ..Default::default() };
+        if let Some(e) = eager_override {
+            net.eager_threshold = e;
+        }
+        // The tentpole invariance: the wave's last delivery instant is
+        // a pure function of the network model. (Sharded, park) is the
+        // reference; the loop covers the other three combos.
+        let reference = p2p_incast_instant_net(nodes, rpn, net, DeliveryMode::Sharded, false);
+        for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+            for taskaware in [false, true] {
+                if delivery == DeliveryMode::Sharded && !taskaware {
+                    continue; // the reference run itself
+                }
+                let got = p2p_incast_instant_net(nodes, rpn, net, delivery, taskaware);
+                assert_eq!(
+                    got, reference,
+                    "incast instant diverged at rx={rx} ({delivery:?}, taskaware={taskaware})"
+                );
+            }
+        }
+        assert!(reference >= prev_p2p, "p2p incast must degrade monotonically in rx");
+        prev_p2p = reference;
+        // Report the wave's delivery span from its launch instant (the
+        // senders fire 1 virtual ms in; see `p2p_incast_instant`).
+        rows.push(IncastRow {
+            series: "p2p-incast".into(),
+            rx_ns: rx,
+            vtime_us: (reference - ms(1)) as f64 / 1_000.0,
+        });
+        let flat = coll_topology_vtime_net("gather", nodes, rpn, 1, TopologyMode::Flat, net);
+        let hier =
+            coll_topology_vtime_net("gather", nodes, rpn, 1, TopologyMode::Hierarchical, net);
+        assert!(hier <= flat, "hierarchical gather slower at rx={rx}: {hier} vs {flat}");
+        rows.push(IncastRow {
+            series: "gather-flat".into(),
+            rx_ns: rx,
+            vtime_us: flat as f64 / 1_000.0,
+        });
+        rows.push(IncastRow {
+            series: "gather-hier".into(),
+            rx_ns: rx,
+            vtime_us: hier as f64 / 1_000.0,
+        });
+    }
+    rows
+}
+
+/// Render the fig18 report table.
+pub fn fig18_report(
+    scale: Scale,
+    rx_override: Option<u64>,
+    eager_override: Option<usize>,
+) -> String {
+    let rows = fig18(scale, rx_override, eager_override);
+    let mut out = String::from(
+        "=== Figure 18: incast congestion — one port model for p2p and collectives ===\n\
+         (p2p-incast: delivery span of an (n-1)->0 eager wave, measured from its\n\
+         launch instant; identical across {Direct,Sharded} x {park,taskaware}.\n\
+         gather-*: the same fan-in through the collective engine, flat vs\n\
+         leader-staged.)\n",
+    );
+    out.push_str(&format!("{:<12} {:>8} {:>12}\n", "series", "rx_ns", "vtime_us"));
+    for r in &rows {
+        out.push_str(&format!("{:<12} {:>8} {:>12.1}\n", r.series, r.rx_ns, r.vtime_us));
+    }
+    out.push_str(
+        "(flat fan-in degrades linearly with rx_ns; hierarchical leader staging\n\
+         flattens it — selected by the same NetworkModel the engine charges)\n",
+    );
+    out
+}
+
+/// Compiler-estimate vs engine-observation pair for one collective: the
+/// parity contract of the unified network layer. The observed side runs
+/// the blocking collective once on a `nodes x rpn` cluster with CPU
+/// call costs zeroed (`call_cpu_ns`/`sched_*` — the estimate prices the
+/// wire schedule, not caller-side library overhead) and `rx_ns` set;
+/// the estimated side queries
+/// [`crate::rmpi::estimate_critical_path`] with the same shape. The two
+/// must be *equal* (asserted per collective in `tests/net_ports.rs`).
+/// `kind` additionally accepts `"bcast-big"`: a rendezvous-size
+/// broadcast (96 KiB > the 64 KiB eager threshold).
+pub fn coll_parity_pair(
+    kind: &str,
+    nodes: usize,
+    rpn: usize,
+    topo: crate::rmpi::TopologyMode,
+    rx_ns: u64,
+) -> (u64, u64) {
+    use crate::rmpi::{estimate_critical_path, ClusterConfig, NetworkModel, Universe};
+
+    let net = NetworkModel {
+        rx_ns,
+        call_cpu_ns: 0,
+        sched_compile_ns: 0,
+        sched_cache_hit_ns: 0,
+        ..NetworkModel::default()
+    };
+    // Canonical payloads per kind: (engine collective, root, bytes).
+    let (coll, root, bytes) = match kind {
+        "barrier" => ("barrier", 0, 0),
+        "bcast" => ("bcast", 1, 64),
+        "bcast-big" => ("bcast", 1, 96 * 1024),
+        "reduce" => ("reduce", 0, 8),
+        "allreduce" => ("allreduce", 0, 8),
+        "allreduce-comm" => ("allreduce-comm", 0, 8),
+        "gather" => ("gather", 1, 8),
+        "alltoall" => ("alltoall", 0, 4),
+        other => panic!("unknown parity kind {other}"),
+    };
+    let estimated = estimate_critical_path(coll, root, bytes, nodes, rpn, topo, &net);
+
+    let mut cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(topo);
+    cfg.net = net;
+    cfg.deadline = Some(ms(600_000));
+    let kind_owned = kind.to_string();
+    let stats = Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        let r = ctx.rank;
+        match kind_owned.as_str() {
+            "barrier" => ctx.comm.barrier(),
+            "bcast" => {
+                let mut b = [if r == 1 { 9u64 } else { 0 }; 8];
+                ctx.comm.bcast(&mut b, 1);
+                assert_eq!(b[0], 9);
+            }
+            "bcast-big" => {
+                let mut b = vec![if r == 1 { 3u8 } else { 0 }; 96 * 1024];
+                ctx.comm.bcast(&mut b, 1);
+                assert_eq!(b[0], 3);
+            }
+            "reduce" => {
+                let mut v = [r as u64];
+                ctx.comm.reduce(&mut v, 0, |a: &mut [u64], b: &[u64]| a[0] += b[0]);
+                if r == 0 {
+                    assert_eq!(v[0], (0..n as u64).sum::<u64>());
+                }
+            }
+            "allreduce" => {
+                let mut v = [r as u64];
+                ctx.comm.allreduce(&mut v, |a: &mut [u64], b: &[u64]| a[0] += b[0]);
+                assert_eq!(v[0], (0..n as u64).sum::<u64>());
+            }
+            "allreduce-comm" => {
+                let mut v = [r as u64];
+                ctx.comm.allreduce_op(
+                    &mut v,
+                    crate::rmpi::commutative(|a: &mut [u64], b: &[u64]| a[0] += b[0]),
+                );
+                assert_eq!(v[0], (0..n as u64).sum::<u64>());
+            }
+            "gather" => {
+                let mine = [r as u64];
+                if r == 1 {
+                    let mut all = vec![0u64; n];
+                    ctx.comm.gather(&mine, Some(&mut all), 1);
+                } else {
+                    ctx.comm.gather(&mine, None, 1);
+                }
+            }
+            "alltoall" => {
+                let send: Vec<u32> = (0..n).map(|d| (r * 101 + d) as u32).collect();
+                let mut recv = vec![0u32; n];
+                ctx.comm.alltoall(&send, &mut recv);
+            }
+            other => panic!("unknown parity kind {other}"),
+        }
+    })
+    .expect("parity scenario");
+    (estimated, stats.vtime_ns)
 }
 
 // ------------------------------------------------------------------
@@ -810,6 +1136,26 @@ pub fn fig17_json(scale: Scale) -> String {
         scale,
         format!("\"rows\":[{}],\"cache\":[{}]", rows.join(","), cache.join(",")),
     )
+}
+
+/// Fig 18 as JSON: `rows[] = {{series, rx_ns, vtime_us}}`.
+pub fn fig18_json(
+    scale: Scale,
+    rx_override: Option<u64>,
+    eager_override: Option<usize>,
+) -> String {
+    let rows: Vec<String> = fig18(scale, rx_override, eager_override)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"series\":\"{}\",\"rx_ns\":{},\"vtime_us\":{}}}",
+                json_escape(&r.series),
+                r.rx_ns,
+                r.vtime_us
+            )
+        })
+        .collect();
+    json_doc(18, scale, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

@@ -22,7 +22,7 @@
 //! * [`trace`] — execution traces (Fig 10), dependency graphs (Fig 8),
 //!   and the collective stall diagnostic (`trace::stalls`),
 //! * [`bench`] — the figure-regeneration harness (Figs 9-14 plus
-//!   extension Figs 15-17 with machine-readable JSON output for CI).
+//!   extension Figs 15-18 with machine-readable JSON output for CI).
 
 pub mod apps;
 pub mod bench;

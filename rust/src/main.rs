@@ -3,8 +3,8 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension figs 15-17
-//!             into bench_out/; with --json <path> figs 15/16/17 emit
+//!   figures   regenerate paper figures (8-14) + extension figs 15-18
+//!             into bench_out/; with --json <path> figs 15-18 emit
 //!             the machine-readable document instead (CI perf artifact)
 //!   stalls    collective stall diagnostic on a deliberately skewed run
 //!             (which rank's rounds_advanced holds a collective back)
@@ -13,17 +13,25 @@
 //! `gs` and `ifsker` accept `--completion callback|poll` (notification
 //! pipeline), `--delivery sharded|direct` (continuation delivery via
 //! the sharded progress engine vs the inline baseline), `--topology
-//! hier|flat` (node-hierarchical vs flat collective schedules), and
+//! hier|flat` (node-hierarchical vs flat collective schedules),
 //! `--residual-every N` + `--residual blk|nonblk` (periodic residual
 //! allreduce: blocking in-task vs fire-and-forget `iallreduce` riding
-//! the schedule-driven collective engine).
+//! the schedule-driven collective engine), and the network-model
+//! overrides `--net-rx <ns>` (per-message ingress-port processing — the
+//! congestion knob) + `--eager <bytes>` (rendezvous threshold), so
+//! congestion regimes are reachable without recompiling. `figures
+//! --fig 18` takes `--net-rx`/`--eager` too (fig 18 then runs at
+//! exactly that point instead of its sweep); the other figures pin
+//! their network models and reject the knobs.
 //!
 //! Examples:
 //!   repro gs --version interop-nonblk --rows 4096 --cols 4096 \
 //!            --block 256 --iters 50 --nodes 4 --cores 4 --compute model
 //!   repro gs --version interop-blk --delivery direct --completion poll
+//!   repro gs --version interop-nonblk --net-rx 400 --eager 16384
 //!   repro figures --fig 15 --scale quick
 //!   repro figures --fig 17 --scale quick --json BENCH_fig17.json
+//!   repro figures --fig 18 --scale quick --net-rx 800
 //!   repro ifsker --version interop-blk --grid 65536 --nodes 2 --cores 4
 //!   repro stalls --ranks 4 --skew-ms 20
 
@@ -109,6 +117,26 @@ fn topology_of(m: &HashMap<String, String>) -> tampi_repro::rmpi::TopologyMode {
     }
 }
 
+/// Parse a CLI value or exit 2 with a clear message (the unknown-`--fig`
+/// convention: a typo must not abort with a panic backtrace).
+fn parse_or_die<T: std::str::FromStr>(v: &str, knob: &str) -> T {
+    v.parse().unwrap_or_else(|_| {
+        eprintln!("bad --{knob}: {v}");
+        std::process::exit(2);
+    })
+}
+
+/// Apply the `--net-rx <ns>` / `--eager <bytes>` NetworkModel overrides
+/// (shared by `gs`, `ifsker` and `figures`).
+fn apply_net_overrides(m: &HashMap<String, String>, net: &mut tampi_repro::rmpi::NetworkModel) {
+    if let Some(v) = m.get("net-rx") {
+        net.rx_ns = parse_or_die(v, "net-rx");
+    }
+    if let Some(v) = m.get("eager") {
+        net.eager_threshold = parse_or_die(v, "eager");
+    }
+}
+
 fn residual_nonblocking_of(m: &HashMap<String, String>) -> bool {
     // Default matches the library default (GsParams/IfsParams): blocking.
     match m.get("residual").map(String::as_str).unwrap_or("blk") {
@@ -142,6 +170,7 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
+    apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
     let graph = m.get("graph").map(|_| Arc::new(GraphRecorder::new()));
@@ -211,6 +240,7 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.topology = topology_of(&m);
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
+    apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
     p.tracer = tracer.clone();
@@ -253,7 +283,8 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     }
 }
 
-const KNOWN_FIGS: [&str; 11] = ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "all"];
+const KNOWN_FIGS: [&str; 12] =
+    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "all"];
 
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
@@ -266,8 +297,18 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 | all)"
         );
+        std::process::exit(2);
+    }
+    // `--net-rx` pins fig 18's congestion sweep to one point and
+    // `--eager` moves its rendezvous threshold. Every other figure pins
+    // its own network model, so accepting the knobs there would emit
+    // wrong-labeled data — reject instead of silently ignoring.
+    let net_rx: Option<u64> = m.get("net-rx").map(|v| parse_or_die(v, "net-rx"));
+    let net_eager: Option<usize> = m.get("eager").map(|v| parse_or_die(v, "eager"));
+    if (net_rx.is_some() || net_eager.is_some()) && which != "18" {
+        eprintln!("--net-rx/--eager only apply to --fig 18 (other figures pin their models)");
         std::process::exit(2);
     }
     // `--json` replaces the text run: the machine-readable document is
@@ -278,9 +319,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "15" => bench::fig15_json(scale),
             "16" => bench::fig16_json(scale),
             "17" => bench::fig17_json(scale),
+            "18" => bench::fig18_json(scale, net_rx, net_eager),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -326,6 +368,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 let p = bench::write_output("fig17_coll_topology.txt", &report);
                 println!("fig17 -> {}", p.display());
             }
+            "18" => {
+                let report = bench::fig18_report(scale, net_rx, net_eager);
+                println!("{report}");
+                let p = bench::write_output("fig18_incast.txt", &report);
+                println!("fig18 -> {}", p.display());
+            }
             other => {
                 let rows = match other {
                     "9" => bench::fig09(scale),
@@ -343,7 +391,9 @@ fn cmd_figures(m: HashMap<String, String>) {
         println!("(fig {n} took {:.1}s wall)\n", wall.elapsed().as_secs_f64());
     };
     if which == "all" {
-        for f in ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17"] {
+        // Derived from KNOWN_FIGS so a future figure cannot be accepted
+        // by --fig N yet silently dropped from --fig all.
+        for &f in KNOWN_FIGS.iter().filter(|&&f| f != "all") {
             run_fig(f);
         }
     } else {

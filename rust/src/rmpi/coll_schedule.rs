@@ -60,12 +60,17 @@
 //! engine models an asynchronous progress thread (the shape argued for
 //! by arXiv:2112.11978 and arXiv:2405.13807), and charging the debt to
 //! an arbitrary delivering thread would make virtual time depend on the
-//! delivery mode. What *is* charged — structurally, identically on
-//! every delivery mode — is the receiver-side message processing of a
-//! round: a round that posted `k` receives defers the next round's post
-//! by `k x` [`crate::rmpi::NetworkModel::coll_rx_ns`]. This is the
-//! message-rate term that makes fan-in visible (and is what the
-//! topology compiler's leader staging buys back); it defaults to 0.
+//! delivery mode. Receiver-side message processing — the message-rate
+//! term [`crate::rmpi::NetworkModel::rx_ns`] — is *not* charged here:
+//! every send a round posts goes through the ordinary
+//! [`crate::rmpi::net`] delivery path, so its deadline already includes
+//! the destination rank's serialized ingress-port processing, priced by
+//! exactly the same code p2p traffic pays (and the same code the
+//! topology compiler's critical-path estimates replay). Round advances
+//! therefore see fan-in congestion without any schedule-level
+//! bookkeeping, and the deadlines are deterministic (resolved on the
+//! clock thread in arrival/key order), so both delivery modes and both
+//! wait styles observe identical virtual instants.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -206,22 +211,10 @@ impl RoundPost {
 }
 
 /// One round of a schedule: posts its operations and returns the
-/// requests whose completions trigger the next round.
-pub(crate) type RoundFn = Box<dyn FnOnce() -> RoundPost + Send>;
-
-/// An instantiated round: the posting closure plus the receiver-side
-/// processing charge paid (via a deferred clock event) between this
-/// round's completion and the next round's post.
-pub(crate) struct Round {
-    pub run: RoundFn,
-    pub rx_ns: u64,
-}
-
-impl Round {
-    fn new(run: RoundFn, n_recvs: usize, rx_per_msg: u64) -> Round {
-        Round { run, rx_ns: n_recvs as u64 * rx_per_msg }
-    }
-}
+/// requests whose completions trigger the next round. Receiver-side
+/// processing needs no per-round bookkeeping: each posted operation's
+/// deadline already carries its ingress-port charge (see module docs).
+pub(crate) type Round = Box<dyn FnOnce() -> RoundPost + Send>;
 
 /// A compiled, in-flight collective: the remaining rounds plus the final
 /// completion request. Shared between the [`CollRequest`] handle and the
@@ -282,10 +275,11 @@ impl CollSchedule {
     /// Post the next round; attach an advance continuation to its
     /// pending requests; loop through rounds that complete at post time.
     /// Runs on the launching thread for round 0 and afterwards on
-    /// whichever thread delivers the previous round's last completion (a
-    /// shard drain on the clock thread under Sharded delivery) — or on
-    /// the clock thread via [`CollSchedule::defer_advance`] when the
-    /// completed round carried a receiver-processing charge.
+    /// whichever thread delivers the previous round's last completion —
+    /// a completion-deadline callback on the clock thread, or a shard
+    /// drain (also the clock thread) under Sharded delivery. Completion
+    /// instants come from the network layer's port deadlines, so they
+    /// are identical whichever thread advances the schedule.
     fn advance(self: &Arc<Self>) {
         loop {
             let next = self.rounds.lock().unwrap().pop_front();
@@ -297,7 +291,7 @@ impl CollSchedule {
             // virtual time cannot depend on which thread advances the
             // schedule (see module docs).
             let caller_debt = Clock::take_debt();
-            let post = (round.run)();
+            let post = round();
             let _engine_debt = Clock::take_debt();
             Clock::add_debt(caller_debt);
             let n = self.advanced.fetch_add(1, Ordering::AcqRel) + 1;
@@ -313,43 +307,21 @@ impl CollSchedule {
             let pending: Vec<Request> =
                 post.reqs.into_iter().filter(|r| !r.test()).collect();
             if pending.is_empty() {
-                // Round satisfied at post time: charge its receiver
-                // processing (if any) and fall through.
-                if round.rx_ns == 0 {
-                    continue;
-                }
-                self.defer_advance(round.rx_ns);
-                return;
+                // Round satisfied at post time: fall through.
+                continue;
             }
             let remaining = Arc::new(AtomicUsize::new(pending.len()));
-            let rx_ns = round.rx_ns;
             for r in &pending {
                 let sched = self.clone();
                 let remaining = remaining.clone();
                 r.on_complete(move |_| {
                     if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        if rx_ns == 0 {
-                            sched.advance();
-                        } else {
-                            sched.defer_advance(rx_ns);
-                        }
+                        sched.advance();
                     }
                 });
             }
             return;
         }
-    }
-
-    /// Charge a completed round's receiver-side processing: re-enter
-    /// [`CollSchedule::advance`] `rx_ns` of virtual time later, on the
-    /// clock thread. Structural (computed from the plan at
-    /// instantiation), so both delivery modes defer from the same
-    /// completion instant to the same post instant.
-    fn defer_advance(self: &Arc<Self>, rx_ns: u64) {
-        let clock = self.comm.uni.clock.clone();
-        let at = clock.now() + rx_ns;
-        let sched = self.clone();
-        clock.call_at(at, move || sched.advance());
     }
 
     /// All rounds done: release pinned buffers and complete the final
@@ -451,7 +423,6 @@ impl std::fmt::Debug for CollRequest {
 /// Barrier: one round per [`TokenPlan`] round, exchanging 1-byte
 /// tokens on the plan's `(peer, phase)` edges.
 pub(crate) fn instantiate_barrier(comm: &Comm, plan: &TokenPlan, seq: u64) -> Vec<Round> {
-    let rx = comm.uni.net.coll_rx_ns;
     plan.rounds
         .iter()
         .map(|r| {
@@ -460,8 +431,7 @@ pub(crate) fn instantiate_barrier(comm: &Comm, plan: &TokenPlan, seq: u64) -> Ve
                 r.sends.iter().map(|&(to, ph)| (to, coll_tag(seq, ph))).collect();
             let recvs: Vec<(usize, i32)> =
                 r.recvs.iter().map(|&(from, ph)| (from, coll_tag(seq, ph))).collect();
-            let n_recvs = recvs.len();
-            let run: RoundFn = Box::new(move || {
+            let run: Round = Box::new(move || {
                 let mut reqs = Vec::with_capacity(sends.len() + recvs.len());
                 let mut retain: Vec<Box<dyn Any + Send>> = Vec::new();
                 for &(to, tag) in &sends {
@@ -474,7 +444,7 @@ pub(crate) fn instantiate_barrier(comm: &Comm, plan: &TokenPlan, seq: u64) -> Ve
                 }
                 RoundPost { reqs, retain }
             });
-            Round::new(run, n_recvs, rx)
+            run
         })
         .collect()
 }
@@ -488,26 +458,24 @@ pub(crate) fn instantiate_bcast<T: Pod>(
     seq: u64,
 ) -> Vec<Round> {
     let n = comm.size;
-    let mut rounds = Vec::new();
+    let mut rounds: Vec<Round> = Vec::new();
     if n == 1 {
         return rounds;
     }
-    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
     if let Some(parent) = plan.recv_from {
         let comm = comm.clone();
-        let run: RoundFn = Box::new(move || {
+        rounds.push(Box::new(move || {
             // SAFETY: i-collective buffer contract (untouched by the
             // caller until completion); no prior round aliases it.
             let dst = unsafe { buf.slice_mut() };
             RoundPost::bare(vec![comm.irecv_ctx(dst, parent as i32, tag, Ctx::Coll)])
-        });
-        rounds.push(Round::new(run, 1, rx));
+        }));
     }
     {
         let comm = comm.clone();
         let children = plan.send_to.clone();
-        let run: RoundFn = Box::new(move || {
+        rounds.push(Box::new(move || {
             let mut reqs = Vec::with_capacity(children.len());
             for &dst in &children {
                 // SAFETY: the parent's payload landed in the previous
@@ -516,8 +484,7 @@ pub(crate) fn instantiate_bcast<T: Pod>(
                 reqs.push(comm.isend_ctx(src, dst, tag, false, Ctx::Coll));
             }
             RoundPost::bare(reqs)
-        });
-        rounds.push(Round::new(run, 0, rx));
+        }));
     }
     rounds
 }
@@ -533,11 +500,10 @@ pub(crate) fn instantiate_reduce<T: Pod>(
     op: Box<dyn Fn(&mut [T], &[T]) + Send>,
 ) -> Vec<Round> {
     let n = comm.size;
-    let mut rounds = Vec::new();
+    let mut rounds: Vec<Round> = Vec::new();
     if n == 1 {
         return rounds;
     }
-    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
     let children = plan.children.clone();
     let parent = plan.parent;
@@ -546,8 +512,7 @@ pub(crate) fn instantiate_reduce<T: Pod>(
         let comm = comm.clone();
         let temps = temps.clone();
         let children = children.clone();
-        let n_recvs = children.len();
-        let run: RoundFn = Box::new(move || {
+        let run: Round = Box::new(move || {
             let len = buf.len();
             // SAFETY: contract; seed value only (recv overwrites).
             // `None` only for zero-length buffers (legal; empty temps).
@@ -562,11 +527,11 @@ pub(crate) fn instantiate_reduce<T: Pod>(
             }
             RoundPost::bare(reqs)
         });
-        rounds.push(Round::new(run, n_recvs, rx));
+        rounds.push(run);
     }
     {
         let comm = comm.clone();
-        let run: RoundFn = Box::new(move || {
+        let run: Round = Box::new(move || {
             // SAFETY: children's contributions landed in round 0; the
             // caller holds the buffer untouched.
             let acc = unsafe { buf.slice_mut() };
@@ -582,7 +547,7 @@ pub(crate) fn instantiate_reduce<T: Pod>(
             }
             RoundPost::bare(reqs)
         });
-        rounds.push(Round::new(run, 0, rx));
+        rounds.push(run);
     }
     rounds
 }
@@ -598,19 +563,18 @@ pub(crate) fn instantiate_gather<T: Pod>(
     recv: Option<UserBuf<T>>,
     seq: u64,
 ) -> Vec<Round> {
-    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
     let chunk = send.len();
     match plan {
         GatherPlan::Leaf { to } => {
             let comm = comm.clone();
             let to = *to;
-            let run: RoundFn = Box::new(move || {
+            let run: Round = Box::new(move || {
                 // SAFETY: read during launch; isend copies eagerly.
                 let src = unsafe { send.slice() };
                 RoundPost::bare(vec![comm.isend_ctx(src, to, tag, false, Ctx::Coll)])
             });
-            vec![Round::new(run, 0, rx)]
+            vec![run]
         }
         GatherPlan::Leader { members, root, node_base } => {
             // Round 0: stage the node's chunks (own chunk copied at
@@ -618,10 +582,9 @@ pub(crate) fn instantiate_gather<T: Pod>(
             let temps: Arc<Mutex<Vec<Vec<T>>>> = Arc::new(Mutex::new(Vec::new()));
             let (members, root, node_base) = (members.clone(), *root, *node_base);
             let leader = comm.rank;
-            let n_members = members.len();
             let c0 = comm.clone();
             let t0 = temps.clone();
-            let r0: RoundFn = Box::new(move || {
+            let r0: Round = Box::new(move || {
                 let mut g = t0.lock().unwrap();
                 // SAFETY: launch-time read of the caller's send buffer.
                 g.push(unsafe { send.slice() }.to_vec());
@@ -639,7 +602,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
                 RoundPost::bare(reqs)
             });
             let c1 = comm.clone();
-            let r1: RoundFn = Box::new(move || {
+            let r1: Round = Box::new(move || {
                 let g = temps.lock().unwrap();
                 // Assemble the node block in rank order: the leader is
                 // the node's first rank, members ascend after it.
@@ -651,7 +614,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
                 drop(g);
                 RoundPost::bare(vec![c1.isend_ctx(&block, root, tag, false, Ctx::Coll)])
             });
-            vec![Round::new(r0, n_members, rx), Round::new(r1, 0, rx)]
+            vec![r0, r1]
         }
         GatherPlan::Root { direct, blocks } => {
             let recv = recv.expect("root must pass a receive buffer");
@@ -659,10 +622,9 @@ pub(crate) fn instantiate_gather<T: Pod>(
             let comm = comm.clone();
             let root = comm.rank;
             let direct = direct.clone();
-            let n_msgs = direct.len() + blocks.len();
             let blocks: Vec<(usize, usize, usize)> =
                 blocks.iter().map(|b| (b.leader, b.first_rank, b.nranks)).collect();
-            let run: RoundFn = Box::new(move || {
+            let run: Round = Box::new(move || {
                 let mut reqs = Vec::new();
                 // SAFETY: per-rank regions are disjoint by construction;
                 // the send view is read during launch only.
@@ -678,7 +640,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
                 }
                 RoundPost::bare(reqs)
             });
-            vec![Round::new(run, n_msgs, rx)]
+            vec![run]
         }
     }
 }
@@ -710,11 +672,9 @@ pub(crate) fn instantiate_alltoallv_flat<T: Pod>(
     }
     assert!(end <= recv.len(), "alltoallv receive buffer too small");
 
-    let rx = comm.uni.net.coll_rx_ns;
     let tag = coll_tag(seq, 0);
     let comm = comm.clone();
-    let n_recvs = n - 1;
-    let run: RoundFn = Box::new(move || {
+    let run: Round = Box::new(move || {
         let rank = comm.rank;
         // SAFETY: read during launch only; isend copies eagerly.
         let send = unsafe { send.slice() };
@@ -742,7 +702,7 @@ pub(crate) fn instantiate_alltoallv_flat<T: Pod>(
         }
         RoundPost::bare(reqs)
     });
-    vec![Round::new(run, n_recvs, rx)]
+    vec![run]
 }
 
 /// Leader-staged uniform alltoall. Three phases (tag phases 0/1/2):
@@ -762,13 +722,12 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
     let n = comm.size;
     assert_eq!(send.len(), n * chunk);
     assert_eq!(recv.len(), n * chunk);
-    let rx = comm.uni.net.coll_rx_ns;
     let (t_up, t_x, t_down) = (coll_tag(seq, 0), coll_tag(seq, 1), coll_tag(seq, 2));
 
     if !plan.is_leader {
         let leader = plan.nodes_list[plan.my_node][0];
         let comm = comm.clone();
-        let run: RoundFn = Box::new(move || {
+        let run: Round = Box::new(move || {
             // SAFETY: send read at launch; recv held until completion
             // (i-collective contract).
             let s = unsafe { send.slice() };
@@ -778,7 +737,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
                 comm.irecv_ctx(r, leader as i32, t_down, Ctx::Coll),
             ])
         });
-        return vec![Round::new(run, 1, rx)];
+        return vec![run];
     }
 
     // Leader. Staging: `gathered[i]` = member i's full send buffer
@@ -793,7 +752,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
     let c0 = comm.clone();
     let g0 = gathered.clone();
     let m0 = members.clone();
-    let r0: RoundFn = Box::new(move || {
+    let r0: Round = Box::new(move || {
         let mut g = g0.lock().unwrap();
         // SAFETY: launch-time read of the caller's send buffer.
         g.push(unsafe { send.slice() }.to_vec());
@@ -813,7 +772,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
     let g1 = gathered.clone();
     let i1 = inbound.clone();
     let nl1 = nodes_list.clone();
-    let r1: RoundFn = Box::new(move || {
+    let r1: Round = Box::new(move || {
         let g = g1.lock().unwrap();
         let mut reqs = Vec::new();
         // Post the inbound block receives first (deterministic
@@ -852,8 +811,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
     });
 
     let c2 = comm.clone();
-    let n_nodes = nodes_list.len();
-    let r2: RoundFn = Box::new(move || {
+    let r2: Round = Box::new(move || {
         let g = gathered.lock().unwrap();
         let inb = inbound.lock().unwrap();
         let idx_in = |b: usize, r: usize| r - nodes_list[b][0];
@@ -881,9 +839,5 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
         RoundPost::bare(reqs)
     });
 
-    vec![
-        Round::new(r0, rpn - 1, rx),
-        Round::new(r1, n_nodes - 1, rx),
-        Round::new(r2, 0, rx),
-    ]
+    vec![r0, r1, r2]
 }

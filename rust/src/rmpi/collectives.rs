@@ -50,6 +50,63 @@ use super::Pod;
 
 pub use super::coll_schedule::CollRequest;
 
+/// A reduction combiner `op(acc, incoming)`, with an opt-in
+/// commutativity declaration.
+///
+/// Plain closures implement this with `commutative() == false`: the
+/// compiler pins the flat binomial combine order so results are
+/// bit-identical across topology modes, delivery modes and wait styles
+/// (the contract documented in [`super::topology`]). Wrapping the
+/// closure in [`commutative`] declares reordering safe
+/// (commutative + associative, e.g. integer sum/min/max, bitwise ops),
+/// which frees the compiler to re-root the combine tree through node
+/// leaders when the network model says that wins — at the price of a
+/// different (but still deterministic) combine association.
+///
+/// The plain `reduce`/`allreduce` entry points keep their direct
+/// `Fn(&mut [T], &[T])` bounds (unannotated closures infer there); the
+/// `*_op` variants take any [`Combiner`] — that is where a
+/// [`commutative`]-wrapped op goes (annotate its closure's parameter
+/// types: the marker's indirection defeats closure-signature
+/// inference).
+pub trait Combiner<T>: Send + 'static {
+    /// Fold `incoming` into `acc`, element-wise.
+    fn combine(&self, acc: &mut [T], incoming: &[T]);
+
+    /// Whether the op declared reordering safe (default: no).
+    fn commutative(&self) -> bool {
+        false
+    }
+}
+
+impl<T, F: Fn(&mut [T], &[T]) + Send + 'static> Combiner<T> for F {
+    fn combine(&self, acc: &mut [T], incoming: &[T]) {
+        self(acc, incoming)
+    }
+}
+
+/// The commutativity marker (see [`Combiner`]): `commutative(op)`
+/// opts `op` into hierarchical combine-tree re-rooting.
+pub struct Commutative<F>(pub F);
+
+impl<T, F: Fn(&mut [T], &[T]) + Send + 'static> Combiner<T> for Commutative<F> {
+    fn combine(&self, acc: &mut [T], incoming: &[T]) {
+        (self.0)(acc, incoming)
+    }
+
+    fn commutative(&self) -> bool {
+        true
+    }
+}
+
+/// Mark a reduction op as commutative + associative (MPI's
+/// `MPI_Op_create(…, commute = true)`): the ROADMAP's commutative-op
+/// relaxation. Goes through the `*_op` entry points:
+/// `comm.allreduce_op(&mut v, commutative(|a: &mut [u64], b: &[u64]| a[0] += b[0]))`.
+pub fn commutative<F>(f: F) -> Commutative<F> {
+    Commutative(f)
+}
+
 /// How a blocking collective waits for its final request.
 #[derive(Clone, Copy, Default)]
 pub enum WaitMode {
@@ -113,19 +170,39 @@ impl Comm {
         root: usize,
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) -> CollRequest {
-        // Reduce plans are shape-independent (the binomial tree depends
-        // only on size and root), so the key is shapeless: every
-        // payload size shares one cached plan per root.
-        let key = SchedKey { kind: CollKind::Reduce, root, shape: ShapeKey::None };
+        self.ireduce_op(buf, root, op)
+    }
+
+    /// [`Comm::ireduce`] over any [`Combiner`]: wrapping the op in
+    /// [`commutative`] frees the compiler to re-root the combine tree
+    /// hierarchically.
+    pub fn ireduce_op<T: Pod>(
+        &self,
+        buf: &mut [T],
+        root: usize,
+        op: impl Combiner<T>,
+    ) -> CollRequest {
+        // Pinned-order reduce plans are shape-independent (the binomial
+        // tree depends only on size and root), so their key is
+        // shapeless: every payload size shares one cached plan per
+        // root. Commutative ops cache per payload size — re-rooting is
+        // cost-driven, and cost depends on bytes.
+        let key = if op.commutative() {
+            let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
+            SchedKey { kind: CollKind::ReduceComm, root, shape }
+        } else {
+            SchedKey { kind: CollKind::Reduce, root, shape: ShapeKey::None }
+        };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         let CollPlan::Reduce(p) = &*plan else { unreachable!("reduce plan") };
+        let f = Box::new(move |a: &mut [T], b: &[T]| op.combine(a, b));
         CollSchedule::launch(
             self,
             "reduce",
             seq,
             cached,
-            instantiate_reduce(self, p, UserBuf::new(buf), seq, Box::new(op)),
+            instantiate_reduce(self, p, UserBuf::new(buf), seq, f),
         )
     }
 
@@ -136,8 +213,20 @@ impl Comm {
         buf: &mut [T],
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) -> CollRequest {
+        self.iallreduce_op(buf, op)
+    }
+
+    /// [`Comm::iallreduce`] over any [`Combiner`]: a
+    /// [`commutative`]-marked op re-roots the combine half where the
+    /// network model says it wins.
+    pub fn iallreduce_op<T: Pod>(&self, buf: &mut [T], op: impl Combiner<T>) -> CollRequest {
         let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
-        let key = SchedKey { kind: CollKind::Allreduce, root: 0, shape };
+        let kind = if op.commutative() {
+            CollKind::AllreduceComm
+        } else {
+            CollKind::Allreduce
+        };
+        let key = SchedKey { kind, root: 0, shape };
         let (plan, cached) = self.plan_for(key);
         let seq_reduce = self.next_coll_seq();
         let seq_bcast = self.next_coll_seq();
@@ -145,7 +234,8 @@ impl Comm {
             unreachable!("allreduce plan")
         };
         let ub = UserBuf::new(buf);
-        let mut rounds = instantiate_reduce(self, reduce, ub, seq_reduce, Box::new(op));
+        let f = Box::new(move |a: &mut [T], b: &[T]| op.combine(a, b));
+        let mut rounds = instantiate_reduce(self, reduce, ub, seq_reduce, f);
         rounds.extend(instantiate_bcast(self, bcast, ub, seq_bcast));
         CollSchedule::launch(self, "allreduce", seq_reduce, cached, rounds)
     }
@@ -275,14 +365,15 @@ impl Comm {
         self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
-    /// MPI_Reduce with a user combiner `op(acc, incoming)`.
+    /// MPI_Reduce with a user combiner `op(acc, incoming)` (the pinned
+    /// combine order; see [`commutative`] and [`Comm::reduce_op`]).
     pub fn reduce<T: Pod>(
         &self,
         buf: &mut [T],
         root: usize,
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) {
-        self.reduce_with(buf, root, op, WaitMode::Park)
+        self.reduce_op_with(buf, root, op, WaitMode::Park)
     }
 
     pub fn reduce_with<T: Pod>(
@@ -292,7 +383,22 @@ impl Comm {
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
         mode: WaitMode,
     ) {
-        let cr = self.ireduce(buf, root, op);
+        self.reduce_op_with(buf, root, op, mode)
+    }
+
+    /// Blocking reduce over any [`Combiner`].
+    pub fn reduce_op<T: Pod>(&self, buf: &mut [T], root: usize, op: impl Combiner<T>) {
+        self.reduce_op_with(buf, root, op, WaitMode::Park)
+    }
+
+    pub fn reduce_op_with<T: Pod>(
+        &self,
+        buf: &mut [T],
+        root: usize,
+        op: impl Combiner<T>,
+        mode: WaitMode,
+    ) {
+        let cr = self.ireduce_op(buf, root, op);
         self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 
@@ -302,7 +408,7 @@ impl Comm {
         buf: &mut [T],
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) {
-        self.allreduce_with(buf, op, WaitMode::Park)
+        self.allreduce_op_with(buf, op, WaitMode::Park)
     }
 
     pub fn allreduce_with<T: Pod>(
@@ -311,7 +417,22 @@ impl Comm {
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
         mode: WaitMode,
     ) {
-        let cr = self.iallreduce(buf, op);
+        self.allreduce_op_with(buf, op, mode)
+    }
+
+    /// Blocking allreduce over any [`Combiner`] (the [`commutative`]
+    /// entry point).
+    pub fn allreduce_op<T: Pod>(&self, buf: &mut [T], op: impl Combiner<T>) {
+        self.allreduce_op_with(buf, op, WaitMode::Park)
+    }
+
+    pub fn allreduce_op_with<T: Pod>(
+        &self,
+        buf: &mut [T],
+        op: impl Combiner<T>,
+        mode: WaitMode,
+    ) {
+        let cr = self.iallreduce_op(buf, op);
         self.coll_wait(mode, std::slice::from_ref(cr.request()));
     }
 

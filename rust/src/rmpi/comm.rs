@@ -8,7 +8,7 @@ use crate::sim::Clock;
 use crate::trace::Tracer;
 
 use super::match_engine::ContextQueues;
-use super::net::NetworkModel;
+use super::net::{NetworkModel, Ports};
 use super::request::ReqState;
 use super::topology::{compile_plan, CollPlan, SchedCache, SchedKey, TopoCtx, TopologyMode};
 
@@ -16,6 +16,9 @@ use super::topology::{compile_plan, CollPlan, SchedCache, SchedKey, TopoCtx, Top
 pub(crate) struct UniState {
     pub clock: Arc<Clock>,
     pub net: NetworkModel,
+    /// Per-rank ingress ports: every message delivery books its
+    /// deadline here (see [`crate::rmpi::net::ports`]).
+    pub ports: Ports,
     /// rank -> node id.
     pub node_of: Vec<usize>,
     /// How the collective schedule compiler sees the node hierarchy.

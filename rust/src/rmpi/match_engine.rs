@@ -4,8 +4,9 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
-use crate::sim::{Clock, VNanos};
+use crate::sim::Clock;
 
+use super::net::Booking;
 use super::request::{ReqState, Status};
 
 /// Raw destination buffer of a posted receive. The receiver guarantees the
@@ -30,8 +31,10 @@ pub(crate) struct Envelope {
     pub tag: i32,
     /// Eagerly-copied payload.
     pub data: Box<[u8]>,
-    /// Virtual time at which the payload is fully at the receiver.
-    pub arrive_at: VNanos,
+    /// Ingress-port slot of this message: resolves to the delivery
+    /// deadline (arrival + serialized receiver processing, see
+    /// [`crate::rmpi::net::ports`]).
+    pub booking: Booking,
     /// Rendezvous/ssend: the sender's request completes at delivery.
     pub sender_req: Option<Arc<ReqState>>,
 }
@@ -60,15 +63,49 @@ fn matches(psrc: Option<usize>, ptag: Option<i32>, src: usize, tag: i32) -> bool
     psrc.map(|s| s == src).unwrap_or(true) && ptag.map(|t| t == tag).unwrap_or(true)
 }
 
-/// Deliver a matched (envelope, posted-recv) pair: copy now (invisible to
-/// the receiver until completion), complete both requests at `when`.
+/// Complete a matched delivery at the message's port deadline: parks on
+/// the envelope's [`Booking`] until the ingress port has assigned it
+/// (`ready`), then completes both requests at `max(ready, now)` — the
+/// actual delivery instant when the receive was posted after the
+/// message was already processed.
 ///
 /// Completion runs [`ReqState::complete`], which wakes parked waiters
 /// *and* fires any attached continuations (`Request::on_complete`) — on
-/// this thread for already-arrived payloads, or on the clock thread via
-/// `Clock::call_at` for in-flight ones. Both paths deliver at the exact
-/// virtual completion instant, which is what gives TAMPI's callback mode
-/// zero notification latency.
+/// this thread for already-processed payloads, or on the clock thread
+/// via `Clock::call_at` for in-flight ones. Both paths deliver at the
+/// exact virtual completion instant, which is what gives TAMPI's
+/// callback mode zero notification latency. With `rx_ns == 0` the
+/// booking is pre-resolved to the arrival instant, so this is exactly
+/// the pre-port delivery timeline.
+fn complete_at_deadline(
+    clock: &Arc<Clock>,
+    booking: Booking,
+    status: Status,
+    req: Arc<ReqState>,
+    sender: Option<Arc<ReqState>>,
+) {
+    let clock = clock.clone();
+    booking.on_ready(move |ready| {
+        if ready <= clock.now() {
+            req.complete(&clock, Some(status));
+            if let Some(s) = sender {
+                s.complete(&clock, None);
+            }
+        } else {
+            let clock2 = clock.clone();
+            clock.call_at(ready, move || {
+                req.complete(&clock2, Some(status));
+                if let Some(s) = sender {
+                    s.complete(&clock2, None);
+                }
+            });
+        }
+    });
+}
+
+/// Deliver a matched (envelope, posted-recv) pair: copy now (invisible
+/// to the receiver until completion), complete both requests at the
+/// port deadline (see [`complete_at_deadline`]).
 pub(crate) fn deliver(
     clock: &Arc<Clock>,
     env: Envelope,
@@ -91,24 +128,7 @@ pub(crate) fn deliver(
         tag: env.tag,
         bytes: env.data.len(),
     };
-    let when = env.arrive_at;
-    let now = clock.now();
-    if when <= now {
-        posted.req.complete(clock, Some(status));
-        if let Some(s) = env.sender_req {
-            s.complete(clock, None);
-        }
-    } else {
-        let req = posted.req;
-        let sender = env.sender_req;
-        let clock2 = clock.clone();
-        clock.call_at(when, move || {
-            req.complete(&clock2, Some(status));
-            if let Some(s) = sender {
-                s.complete(&clock2, None);
-            }
-        });
-    }
+    complete_at_deadline(clock, env.booking, status, posted.req, env.sender_req);
 }
 
 /// Direct delivery (send fast path): the payload goes straight from the
@@ -120,7 +140,7 @@ pub(crate) fn deliver_direct(
     bytes: &[u8],
     src: usize,
     tag: i32,
-    arrive_at: VNanos,
+    booking: Booking,
     sender_req: Option<Arc<ReqState>>,
     posted: PostedRecv,
 ) {
@@ -135,22 +155,7 @@ pub(crate) fn deliver_direct(
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), posted.buf.ptr, bytes.len());
     }
     let status = Status { source: src as i32, tag, bytes: bytes.len() };
-    let now = clock.now();
-    if arrive_at <= now {
-        posted.req.complete(clock, Some(status));
-        if let Some(s) = sender_req {
-            s.complete(clock, None);
-        }
-    } else {
-        let req = posted.req;
-        let clock2 = clock.clone();
-        clock.call_at(arrive_at, move || {
-            req.complete(&clock2, Some(status));
-            if let Some(s) = sender_req {
-                s.complete(&clock2, None);
-            }
-        });
-    }
+    complete_at_deadline(clock, booking, status, posted.req, sender_req);
 }
 
 impl DstQueues {
@@ -206,7 +211,7 @@ mod tests {
             src,
             tag,
             data: vec![0u8; 4].into_boxed_slice(),
-            arrive_at: 0,
+            booking: Booking::resolved(0),
             sender_req: None,
         }
     }

@@ -22,9 +22,14 @@
 //!   are wrappers waiting on the same schedule.
 //! * **Threading levels**: `Single`..`Multiple` plus the paper's proposed
 //!   `TaskMultiple` (Section 6.3), which [`crate::tampi`] turns on.
-//! * **Interconnect model** ([`net`]): per-message delivery deadline
-//!   `latency(class) + bytes / bandwidth(class)`, class ∈ {intra-node,
-//!   inter-node}, applied in virtual time by clock callbacks.
+//! * **Congestion-aware network subsystem** ([`net`]): per-message
+//!   arrival `latency(class) + bytes / bandwidth(class)`, class ∈
+//!   {intra-node, inter-node}, followed by serialized receiver
+//!   processing on the destination rank's ingress port
+//!   ([`NetworkModel::rx_ns`] per message, deterministic FIFO order) —
+//!   one deadline path shared by p2p and every collective round, and
+//!   replayed identically by the topology compiler's critical-path
+//!   estimates ([`topology::estimate_critical_path`]).
 //!
 //! Ranks are threads of one process under one [`crate::sim::Clock`]; the
 //! cluster shape (nodes × ranks-per-node × cores) is configured in
@@ -41,10 +46,11 @@ pub mod topology;
 pub mod universe;
 
 pub use coll_schedule::CollRequest;
+pub use collectives::{commutative, Combiner, Commutative};
 pub use comm::Comm;
 pub use net::NetworkModel;
 pub use request::{Request, Status};
-pub use topology::TopologyMode;
+pub use topology::{estimate_critical_path, TopologyMode};
 pub use universe::{ClusterConfig, RankCtx, RunStats, SchedCacheStats, Universe};
 
 /// Completion-delivery knob (defined in [`crate::progress`], re-exported

@@ -1,0 +1,54 @@
+//! The unified, congestion-aware network subsystem.
+//!
+//! Before this module existed, delivery time was computed in three
+//! unrelated places: `p2p.rs` inlined `latency + bytes/bw` into each
+//! send, the collective engine charged a structural per-round receiver
+//! cost (`coll_rx_ns` × receives, deferred between rounds), and the
+//! topology compiler re-derived both with private closed-form
+//! estimates. Message *rate* was therefore visible only inside
+//! collective schedules: a 1000-way p2p incast onto one rank cost the
+//! same as a single message, and nothing guaranteed the compiler's
+//! arithmetic agreed with what the engine actually charged.
+//!
+//! This module is now the only place virtual delivery time is computed,
+//! in two layers:
+//!
+//! * [`model`] — the link model ([`NetworkModel`]: per-class latency and
+//!   bandwidth, protocol thresholds, CPU costs) plus the *wire-schedule
+//!   estimator* ([`model::critical_path`]): a deterministic replay of an
+//!   abstract per-rank round schedule through the same port law the live
+//!   engine uses. The topology compiler's flat-vs-hierarchical decision
+//!   is this replay — it has no cost formulas of its own, so
+//!   compiler-estimated and engine-observed critical paths are equal by
+//!   construction (asserted per collective in `tests/net_ports.rs`).
+//! * [`ports`] — the live side: every rank owns one ingress [`Port`]
+//!   that serializes message processing. Each message occupies the port
+//!   for [`NetworkModel::rx_ns`] after it arrives, in a deterministic
+//!   FIFO order — arrival instant first, ties broken by the message key
+//!   `(sender_vtime, src, tag, seq)` — resolved on the clock thread, so
+//!   the resulting virtual instants can never depend on which OS thread
+//!   happened to advance the simulation (the Direct-vs-Sharded and
+//!   park-vs-taskaware invariance the test suite pins).
+//!
+//! Every delivery — p2p eager, p2p rendezvous, and each round of every
+//! collective schedule — books its deadline through the same
+//! [`ports::Ports::book`] path. That is the point: incast congestion is
+//! one phenomenon with one price, wherever the messages come from. This
+//! is the shape "MPI Progress For All" (arXiv:2405.13807) argues for —
+//! completion progress is a per-endpoint resource that serializes — and
+//! it is what makes the paper's overlap results (arXiv:1901.03271)
+//! respond to message rate, not just latency.
+//!
+//! `rx_ns` defaults to 0, which makes the port transparent (pure
+//! latency model): deadlines, event counts and deadlock instants are
+//! bit-identical to the pre-port implementation, so all published
+//! figures reproduce unchanged at the defaults. `coll_rx_ns`, the PR-4
+//! name from when the term was charged only inside collective
+//! schedules, survives as an accessor alias on [`NetworkModel`].
+
+pub mod model;
+pub mod ports;
+
+pub use model::NetworkModel;
+pub(crate) use model::{WireOp, WireRound};
+pub(crate) use ports::{Booking, MsgKey, Ports};

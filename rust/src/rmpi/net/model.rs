@@ -1,0 +1,437 @@
+//! The link model and the wire-schedule critical-path estimator.
+//!
+//! MareNostrum 4's fabric is 100 Gbit/s Intel Omni-Path; intra-node
+//! communication goes through shared memory. Each message costs
+//! `latency(class) + bytes / bandwidth(class)` on the wire, then
+//! [`NetworkModel::rx_ns`] of serialized processing on the receiving
+//! rank's ingress port ([`super::ports`]); rendezvous-size messages
+//! additionally tie the *sender's* completion to the delivery
+//! (synchronous behaviour above the eager threshold, like MPICH).
+//!
+//! [`critical_path`] replays an abstract per-rank round schedule — the
+//! [`WireRound`] IR the topology compiler lowers its candidate plans to
+//! — through this exact model, port law included ([`PortClock`]). It is
+//! the compiler's only cost oracle, which is why compiler-estimated and
+//! engine-observed virtual times agree exactly (`tests/net_ports.rs`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::sim::VNanos;
+
+use super::ports::PortClock;
+
+/// Link classes and protocol thresholds of the simulated cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// One-way latency between ranks on the same node (shared memory).
+    pub intra_latency_ns: u64,
+    /// Shared-memory copy bandwidth, bytes/s.
+    pub intra_bw_bytes_per_s: u64,
+    /// One-way latency across nodes (Omni-Path class fabric).
+    pub inter_latency_ns: u64,
+    /// Network bandwidth, bytes/s.
+    pub inter_bw_bytes_per_s: u64,
+    /// Messages larger than this use the rendezvous protocol: the sender's
+    /// request completes only when the receive is matched and the transfer
+    /// done (plain `send` behaves like `ssend`).
+    pub eager_threshold: usize,
+    /// CPU time one MPI call burns on the calling core (library overhead,
+    /// matching, copies). Charged as virtual-time debt to the caller.
+    pub call_cpu_ns: u64,
+    /// Receiver-side processing per message — the message-rate term.
+    /// Every delivery (p2p and collective alike) occupies the receiving
+    /// rank's ingress port for this long, serialized in deterministic
+    /// FIFO order ([`super::ports`]), so fan-in congestion is visible
+    /// wherever the messages come from. Default 0: the port is
+    /// transparent (pure latency model, pre-port timelines reproduce
+    /// bit-identically). Known as `coll_rx_ns` while it was charged
+    /// only inside collective schedules; see the accessor alias.
+    pub rx_ns: u64,
+    /// CPU cost of compiling a collective schedule (charged to the
+    /// caller on a schedule-cache miss).
+    pub sched_compile_ns: u64,
+    /// CPU cost of a schedule-cache hit (key hash + lookup).
+    pub sched_cache_hit_ns: u64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            intra_latency_ns: 400,                        // shared-memory hop
+            intra_bw_bytes_per_s: 8_000_000_000,          // 8 GB/s memcpy
+            inter_latency_ns: 1_500,                      // Omni-Path ~1.5 us
+            inter_bw_bytes_per_s: 12_500_000_000,         // 100 Gbit/s
+            eager_threshold: 64 * 1024,
+            call_cpu_ns: 400,                             // per-call library cost
+            rx_ns: 0,                                     // pure latency model
+            sched_compile_ns: 1_000,                      // rounds + trees + regions
+            sched_cache_hit_ns: 50,                       // hash + lookup
+        }
+    }
+}
+
+impl NetworkModel {
+    /// A zero-cost network (unit tests of matching logic).
+    pub fn instant() -> Self {
+        NetworkModel {
+            intra_latency_ns: 0,
+            intra_bw_bytes_per_s: u64::MAX,
+            inter_latency_ns: 0,
+            inter_bw_bytes_per_s: u64::MAX,
+            eager_threshold: usize::MAX,
+            call_cpu_ns: 0,
+            rx_ns: 0,
+            sched_compile_ns: 0,
+            sched_cache_hit_ns: 0,
+        }
+    }
+
+    /// Virtual transfer duration of a message of `bytes` over the class.
+    pub fn transfer_ns(&self, bytes: usize, same_node: bool) -> VNanos {
+        let (lat, bw) = if same_node {
+            (self.intra_latency_ns, self.intra_bw_bytes_per_s)
+        } else {
+            (self.inter_latency_ns, self.inter_bw_bytes_per_s)
+        };
+        if bw == u64::MAX {
+            return lat;
+        }
+        lat + (bytes as u128 * 1_000_000_000u128 / bw as u128) as u64
+    }
+
+    /// Whether a message of `bytes` is eager (sender completes at once).
+    pub fn is_eager(&self, bytes: usize) -> bool {
+        bytes <= self.eager_threshold
+    }
+
+    /// Back-compat alias of [`NetworkModel::rx_ns`]: the PR-4 name, from
+    /// when receiver processing was charged only inside collective
+    /// schedules. Same knob, unified meaning.
+    pub fn coll_rx_ns(&self) -> u64 {
+        self.rx_ns
+    }
+
+    /// Back-compat setter alias of [`NetworkModel::rx_ns`].
+    pub fn set_coll_rx_ns(&mut self, v: u64) {
+        self.rx_ns = v;
+    }
+}
+
+// ---------------------------------------------------------------------
+// The wire-schedule IR and its deterministic replay.
+// ---------------------------------------------------------------------
+
+/// One point-to-point operation of a wire round: the peer rank and the
+/// payload size in bytes.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct WireOp {
+    pub peer: usize,
+    pub bytes: usize,
+}
+
+/// One round of an abstract per-rank schedule: the sends and receives a
+/// rank posts together, gating the next round on their completion —
+/// exactly the engine's [`crate::rmpi::coll_schedule`] round contract.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WireRound {
+    pub sends: Vec<WireOp>,
+    pub recvs: Vec<WireOp>,
+}
+
+/// In-flight message of the replay.
+struct Msg {
+    src: usize,
+    rendezvous: bool,
+}
+
+/// Per-rank replay state.
+struct RankState {
+    cur: usize,
+    /// Unresolved requirements of the current round (pending receives
+    /// plus pending rendezvous sends).
+    pending: usize,
+    /// Latest completion instant folded into the current round.
+    done_at: VNanos,
+    finish: Option<VNanos>,
+}
+
+/// Replay `scheds` (one round list per rank, all ranks entering at
+/// t = 0) under `net` and return the critical path: the latest instant
+/// any rank's last round completes. Semantics mirror the live engine
+/// exactly —
+///
+/// * each send arrives `transfer_ns` after its round is posted and then
+///   occupies the destination's ingress port ([`PortClock`]) in
+///   deterministic arrival order (ties by send instant, then source);
+/// * a receive completes at `max(port deadline, its post instant)`;
+/// * eager sends complete at post, rendezvous sends at delivery;
+/// * a round completes at the max of its requirements' completions and
+///   the next round posts at that instant.
+pub(crate) fn critical_path(
+    scheds: &[Vec<WireRound>],
+    node_of: &[usize],
+    net: &NetworkModel,
+) -> u64 {
+    let n = scheds.len();
+    assert_eq!(n, node_of.len());
+    let mut ranks: Vec<RankState> = (0..n)
+        .map(|_| RankState { cur: 0, pending: 0, done_at: 0, finish: None })
+        .collect();
+    let mut ports: Vec<PortClock> = vec![PortClock::default(); n];
+    // Bookings parked at each destination port, in service order:
+    // (arrival, sender_vtime, src, emission seq) — the same order the
+    // live port's `(arrival, MsgKey)` map yields, since within one
+    // collective no two messages share (arrival, sender_vtime, src).
+    let mut parked: Vec<std::collections::BTreeMap<(VNanos, VNanos, usize, u64), Msg>> =
+        (0..n).map(|_| std::collections::BTreeMap::new()).collect();
+    let mut emission = 0u64;
+    // Serviced-but-unmatched messages / posted-but-unserved receives,
+    // FIFO per (src, dst) pair (MPI non-overtaking; within one
+    // collective each pair carries at most one message per round, in
+    // round order).
+    let mut ready_q: HashMap<(usize, usize), VecDeque<(VNanos, Msg)>> = HashMap::new();
+    let mut recv_q: HashMap<(usize, usize), VecDeque<VNanos>> = HashMap::new();
+
+    // Event heap: (time, kind, rank); kind 0 = arrivals due at `rank`'s
+    // port, kind 1 = post `rank`'s next round. Arrival-before-post at
+    // equal instants mirrors the engine (port deadlines with rx > 0 are
+    // strictly later than arrivals, and with rx = 0 the order is
+    // immaterial: completions fold through max()).
+    let mut events: BinaryHeap<Reverse<(VNanos, u8, usize)>> = BinaryHeap::new();
+    for r in 0..n {
+        if scheds[r].is_empty() {
+            ranks[r].finish = Some(0);
+        } else {
+            events.push(Reverse((0, 1, r)));
+        }
+    }
+
+    // Resolve one requirement of rank `r`'s current round at instant
+    // `c`; returns true if the round completed.
+    fn complete_op(
+        ranks: &mut [RankState],
+        events: &mut BinaryHeap<Reverse<(VNanos, u8, usize)>>,
+        scheds: &[Vec<WireRound>],
+        r: usize,
+        c: VNanos,
+    ) {
+        let st = &mut ranks[r];
+        st.done_at = st.done_at.max(c);
+        st.pending -= 1;
+        if st.pending == 0 {
+            st.cur += 1;
+            if st.cur < scheds[r].len() {
+                events.push(Reverse((st.done_at, 1, r)));
+            } else {
+                st.finish = Some(st.done_at);
+            }
+        }
+    }
+
+    // Deliver one serviced message to `dst` (completion at
+    // `max(ready, recv post)`), or park it until the receive posts.
+    #[allow(clippy::too_many_arguments)]
+    fn deliver(
+        ranks: &mut [RankState],
+        events: &mut BinaryHeap<Reverse<(VNanos, u8, usize)>>,
+        scheds: &[Vec<WireRound>],
+        recv_q: &mut HashMap<(usize, usize), VecDeque<VNanos>>,
+        ready_q: &mut HashMap<(usize, usize), VecDeque<(VNanos, Msg)>>,
+        dst: usize,
+        ready: VNanos,
+        msg: Msg,
+    ) {
+        if let Some(post) = recv_q.get_mut(&(msg.src, dst)).and_then(|q| q.pop_front()) {
+            let c = ready.max(post);
+            if msg.rendezvous {
+                complete_op(ranks, events, scheds, msg.src, c);
+            }
+            complete_op(ranks, events, scheds, dst, c);
+        } else {
+            ready_q.entry((msg.src, dst)).or_default().push_back((ready, msg));
+        }
+    }
+
+    while let Some(Reverse((t, kind, r))) = events.pop() {
+        if kind == 0 {
+            // Service every parked booking due at this port, in order.
+            while let Some((&(arrival, _, _, _), _)) = parked[r].first_key_value() {
+                if arrival > t {
+                    break;
+                }
+                let (_, msg) = parked[r].pop_first().unwrap();
+                let ready = ports[r].service(arrival, net.rx_ns);
+                deliver(
+                    &mut ranks,
+                    &mut events,
+                    scheds,
+                    &mut recv_q,
+                    &mut ready_q,
+                    r,
+                    ready,
+                    msg,
+                );
+            }
+            continue;
+        }
+        // Post rank r's round `cur` at instant t.
+        let k = ranks[r].cur;
+        ranks[r].pending = 0;
+        ranks[r].done_at = t;
+        let round = &scheds[r][k];
+        for op in &round.recvs {
+            if let Some((ready, msg)) =
+                ready_q.get_mut(&(op.peer, r)).and_then(|q| q.pop_front())
+            {
+                // Already serviced: completes at max(deadline, post).
+                let c = ready.max(t);
+                ranks[r].done_at = ranks[r].done_at.max(c);
+                if msg.rendezvous {
+                    complete_op(&mut ranks, &mut events, scheds, msg.src, c);
+                }
+            } else {
+                ranks[r].pending += 1;
+                recv_q.entry((op.peer, r)).or_default().push_back(t);
+            }
+        }
+        for op in &round.sends {
+            let same = node_of[r] == node_of[op.peer];
+            let arrival = t + net.transfer_ns(op.bytes, same);
+            let rendezvous = !net.is_eager(op.bytes);
+            if rendezvous {
+                ranks[r].pending += 1;
+            }
+            parked[op.peer].insert((arrival, t, r, emission), Msg { src: r, rendezvous });
+            emission += 1;
+            events.push(Reverse((arrival, 0, op.peer)));
+        }
+        if ranks[r].pending == 0 {
+            let done = ranks[r].done_at;
+            ranks[r].cur += 1;
+            if ranks[r].cur < scheds[r].len() {
+                events.push(Reverse((done, 1, r)));
+            } else {
+                ranks[r].finish = Some(done);
+            }
+        }
+    }
+    ranks.iter().map(|s| s.finish.unwrap_or(0)).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales_with_size_and_class() {
+        let m = NetworkModel::default();
+        let small_intra = m.transfer_ns(8, true);
+        let small_inter = m.transfer_ns(8, false);
+        assert!(small_inter > small_intra);
+        let big_inter = m.transfer_ns(1 << 20, false);
+        assert!(big_inter > small_inter);
+        // 1 MiB at 12.5 GB/s ~ 84 us
+        assert!((80_000..100_000).contains(&big_inter));
+    }
+
+    #[test]
+    fn eager_threshold() {
+        let m = NetworkModel::default();
+        assert!(m.is_eager(1024));
+        assert!(!m.is_eager(1 << 20));
+    }
+
+    #[test]
+    fn instant_is_free() {
+        let m = NetworkModel::instant();
+        assert_eq!(m.transfer_ns(1 << 30, false), 0);
+    }
+
+    #[test]
+    fn coll_rx_ns_aliases_rx_ns() {
+        let mut m = NetworkModel::default();
+        assert_eq!(m.coll_rx_ns(), 0);
+        m.set_coll_rx_ns(300);
+        assert_eq!(m.rx_ns, 300);
+        assert_eq!(m.coll_rx_ns(), 300);
+    }
+
+    fn two_rank_ping(net: &NetworkModel, bytes: usize) -> u64 {
+        let scheds = vec![
+            vec![WireRound { sends: vec![WireOp { peer: 1, bytes }], recvs: vec![] }],
+            vec![WireRound { sends: vec![], recvs: vec![WireOp { peer: 0, bytes }] }],
+        ];
+        critical_path(&scheds, &[0, 1], net)
+    }
+
+    #[test]
+    fn replay_single_message_is_transfer_plus_rx() {
+        let mut net = NetworkModel::default();
+        assert_eq!(two_rank_ping(&net, 8), net.transfer_ns(8, false));
+        net.rx_ns = 400;
+        assert_eq!(two_rank_ping(&net, 8), net.transfer_ns(8, false) + 400);
+    }
+
+    #[test]
+    fn replay_incast_serializes_on_the_port() {
+        // 4 senders, one receiver, same arrival instant: the port
+        // serializes — last deadline = arrival + 4 * rx.
+        let mut net = NetworkModel::default();
+        net.rx_ns = 250;
+        let n = 5usize;
+        let mut scheds = vec![vec![WireRound {
+            sends: vec![],
+            recvs: (1..n).map(|s| WireOp { peer: s, bytes: 8 }).collect(),
+        }]];
+        for _ in 1..n {
+            scheds.push(vec![WireRound {
+                sends: vec![WireOp { peer: 0, bytes: 8 }],
+                recvs: vec![],
+            }]);
+        }
+        let node_of = vec![0; n];
+        let got = critical_path(&scheds, &node_of, &net);
+        assert_eq!(got, net.transfer_ns(8, true) + 4 * 250);
+    }
+
+    #[test]
+    fn replay_rendezvous_ties_sender_to_delivery() {
+        // Above the eager threshold the sender's round only completes
+        // at delivery: a two-round sender schedule reflects it.
+        let net = NetworkModel::default();
+        let big = net.eager_threshold + 1;
+        let deliver = net.transfer_ns(big, false);
+        let scheds = vec![
+            vec![
+                WireRound { sends: vec![WireOp { peer: 1, bytes: big }], recvs: vec![] },
+                // Second round: an eager ping that can only start after
+                // the rendezvous completed.
+                WireRound { sends: vec![WireOp { peer: 1, bytes: 1 }], recvs: vec![] },
+            ],
+            vec![
+                WireRound { sends: vec![], recvs: vec![WireOp { peer: 0, bytes: big }] },
+                WireRound { sends: vec![], recvs: vec![WireOp { peer: 0, bytes: 1 }] },
+            ],
+        ];
+        let got = critical_path(&scheds, &[0, 1], &net);
+        assert_eq!(got, deliver + net.transfer_ns(1, false));
+    }
+
+    #[test]
+    fn replay_round_gating_chains_completions() {
+        // r0 -> r1 -> r2 relay: second hop posts only after the first
+        // completes at r1.
+        let net = NetworkModel::default();
+        let scheds = vec![
+            vec![WireRound { sends: vec![WireOp { peer: 1, bytes: 8 }], recvs: vec![] }],
+            vec![
+                WireRound { sends: vec![], recvs: vec![WireOp { peer: 0, bytes: 8 }] },
+                WireRound { sends: vec![WireOp { peer: 2, bytes: 8 }], recvs: vec![] },
+            ],
+            vec![WireRound { sends: vec![], recvs: vec![WireOp { peer: 1, bytes: 8 }] }],
+        ];
+        let hop = net.transfer_ns(8, false);
+        assert_eq!(critical_path(&scheds, &[0, 1, 2], &net), 2 * hop);
+    }
+}

@@ -1,0 +1,295 @@
+//! Per-rank ingress ports: deterministic serialization of message
+//! processing.
+//!
+//! Every rank owns one [`Port`]. Every message addressed to it — p2p
+//! eager, p2p rendezvous, any collective round — is *booked* at send
+//! time with its arrival instant and a [`MsgKey`]. The port services
+//! bookings one at a time, each occupying it for
+//! [`super::NetworkModel::rx_ns`], in a deterministic FIFO order:
+//! arrival instant first, same-instant ties in `MsgKey` order. The
+//! serialized service instant (`ready`) is the message's delivery
+//! deadline; completion fires at `max(ready, match instant)`.
+//!
+//! ## Why the two-phase resolve
+//!
+//! Bookings race in *real* time (any rank thread may post a send), but
+//! the deadline must be a pure function of *virtual* history. The port
+//! therefore never assigns a deadline at booking time when `rx_ns > 0`:
+//! it parks the booking and schedules a resolve pass on the clock
+//! thread at the arrival instant. Because a message is always booked at
+//! its send instant and arrives strictly later (every link class has
+//! non-zero latency), all bookings that share an arrival instant are
+//! already parked when the clock reaches it — the resolve pass sees the
+//! complete same-instant set and services it in key order, so the
+//! assigned deadlines are independent of thread scheduling, delivery
+//! mode, and worker counts. (A zero-latency [`super::NetworkModel`]
+//! combined with `rx_ns > 0` would void the strictly-later argument;
+//! `NetworkModel::instant()` keeps `rx_ns = 0`.)
+//!
+//! With `rx_ns == 0` the port is transparent: bookings resolve inline
+//! to their arrival instant, no clock event is scheduled, and the
+//! timeline is bit-identical to the pre-port implementation.
+//!
+//! [`PortClock`] — the three-line service law — is shared verbatim with
+//! the topology compiler's critical-path estimator
+//! ([`super::model::critical_path`]), which is what makes
+//! compiler-estimated and engine-observed times equal by construction.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Clock, VNanos};
+
+/// Deterministic identity of one booked message. Orders same-instant
+/// arrivals: the send instant, then source rank, then tag, then the
+/// source's send sequence number (program order for same-thread sends;
+/// concurrent same-`(vtime, src, tag)` sends are unordered in MPI too).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub(crate) struct MsgKey {
+    pub sender_vtime: VNanos,
+    pub src: u32,
+    pub tag: i32,
+    pub seq: u64,
+}
+
+/// The serialization law of one ingress port: each serviced message
+/// occupies the port for `rx_ns` starting no earlier than its arrival
+/// and no earlier than the previous service's end. Shared verbatim by
+/// the live [`Port`] and the compiler's wire-schedule estimator.
+#[derive(Clone, Copy, Default, Debug)]
+pub(crate) struct PortClock {
+    busy_until: VNanos,
+}
+
+impl PortClock {
+    /// Service one message arriving at `arrival`; returns the instant
+    /// its processing is done (the delivery deadline).
+    pub fn service(&mut self, arrival: VNanos, rx_ns: u64) -> VNanos {
+        let ready = arrival.max(self.busy_until) + rx_ns;
+        self.busy_until = ready;
+        ready
+    }
+}
+
+type ReadyFn = Box<dyn FnOnce(VNanos) + Send>;
+
+#[derive(Default)]
+pub(crate) struct SlotState {
+    ready: Option<VNanos>,
+    waiters: Vec<ReadyFn>,
+}
+
+/// Handle to one booked message's port slot. The match engine parks the
+/// completion on it ([`Booking::on_ready`]); the port resolve pass
+/// fires it with the serialized deadline. The transparent-port case
+/// (`rx_ns == 0` — every default configuration) is a plain value, so
+/// the hot send path allocates nothing the pre-port implementation did
+/// not.
+#[derive(Clone)]
+pub(crate) enum Booking {
+    /// Deadline known at booking time (transparent port, unit tests).
+    Resolved(VNanos),
+    /// Awaiting the resolve pass at the arrival instant.
+    Pending(Arc<Mutex<SlotState>>),
+}
+
+impl Booking {
+    fn pending() -> Booking {
+        Booking::Pending(Arc::new(Mutex::new(SlotState::default())))
+    }
+
+    /// A booking whose deadline is already known (transparent-port fast
+    /// path, and unit-test envelopes).
+    pub fn resolved(ready: VNanos) -> Booking {
+        Booking::Resolved(ready)
+    }
+
+    /// Run `f(ready)` once the deadline is known — inline if it already
+    /// is. `f` may run on the clock thread (resolve pass) and must not
+    /// block on sim primitives; scheduling via `Clock::call_at` is safe.
+    pub fn on_ready(&self, f: impl FnOnce(VNanos) + Send + 'static) {
+        let slot = match self {
+            Booking::Resolved(t) => return f(*t),
+            Booking::Pending(slot) => slot,
+        };
+        let mut g = slot.lock().unwrap();
+        match g.ready {
+            Some(t) => {
+                drop(g);
+                f(t);
+            }
+            None => g.waiters.push(Box::new(f)),
+        }
+    }
+
+    fn resolve(&self, t: VNanos) {
+        let Booking::Pending(slot) = self else {
+            unreachable!("resolve on a pre-resolved booking")
+        };
+        let waiters = {
+            let mut g = slot.lock().unwrap();
+            debug_assert!(g.ready.is_none(), "booking resolved twice");
+            g.ready = Some(t);
+            std::mem::take(&mut g.waiters)
+        };
+        for w in waiters {
+            w(t);
+        }
+    }
+}
+
+#[derive(Default)]
+struct PortInner {
+    clock: PortClock,
+    /// Bookings awaiting their resolve pass, in service order.
+    pending: BTreeMap<(VNanos, MsgKey), Booking>,
+}
+
+/// One rank's ingress port (see module docs).
+pub(crate) struct Port {
+    inner: Mutex<PortInner>,
+}
+
+impl Port {
+    fn new() -> Port {
+        Port { inner: Mutex::new(PortInner::default()) }
+    }
+
+    fn book(
+        self: Arc<Self>,
+        clock: &Arc<Clock>,
+        rx_ns: u64,
+        key: MsgKey,
+        arrival: VNanos,
+    ) -> Booking {
+        if rx_ns == 0 {
+            // Transparent port: the pure latency model, bit-identical to
+            // the pre-port timeline (no extra clock events either).
+            return Booking::resolved(arrival);
+        }
+        let b = Booking::pending();
+        self.inner.lock().unwrap().pending.insert((arrival, key), b.clone());
+        let clock2 = clock.clone();
+        clock.call_at(arrival, move || self.resolve_due(&clock2, rx_ns));
+        b
+    }
+
+    /// Resolve every booking whose arrival instant has been reached, in
+    /// service order. Runs on the clock thread only, so assigned
+    /// deadlines are a pure function of virtual history.
+    fn resolve_due(&self, clock: &Clock, rx_ns: u64) {
+        let now = clock.now();
+        let mut due = Vec::new();
+        {
+            let mut g = self.inner.lock().unwrap();
+            while let Some((&(arrival, _), _)) = g.pending.first_key_value() {
+                if arrival > now {
+                    break;
+                }
+                let (_, b) = g.pending.pop_first().unwrap();
+                let ready = g.clock.service(arrival, rx_ns);
+                due.push((b, ready));
+            }
+        }
+        // Fire outside the port lock: waiters may complete requests,
+        // whose continuations may post new sends (which book ports).
+        for (b, ready) in due {
+            b.resolve(ready);
+        }
+    }
+}
+
+/// The universe's port table: one ingress [`Port`] per rank plus the
+/// per-source send sequence counters that finish [`MsgKey`]s.
+pub(crate) struct Ports {
+    rx_ns: u64,
+    ports: Vec<Arc<Port>>,
+    send_seq: Vec<AtomicU64>,
+}
+
+impl Ports {
+    pub fn new(size: usize, net: &super::NetworkModel) -> Ports {
+        // Determinism precondition (see module docs): with rx_ns > 0, a
+        // message must arrive strictly after it was booked, so every
+        // same-instant booking set is complete when its resolve pass
+        // runs. Zero-latency links would void that silently — fail fast
+        // instead.
+        assert!(
+            net.rx_ns == 0 || (net.intra_latency_ns > 0 && net.inter_latency_ns > 0),
+            "rx_ns > 0 requires non-zero link latencies for deterministic port order"
+        );
+        Ports {
+            rx_ns: net.rx_ns,
+            ports: (0..size).map(|_| Arc::new(Port::new())).collect(),
+            send_seq: (0..size).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Next send sequence number of `src` (program order per thread).
+    pub fn next_seq(&self, src: usize) -> u64 {
+        self.send_seq[src].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Book one message on `dst`'s ingress port. `key.sender_vtime`
+    /// must be the current virtual instant and `arrival` the link
+    /// model's arrival instant for it.
+    pub fn book(&self, dst: usize, clock: &Arc<Clock>, key: MsgKey, arrival: VNanos) -> Booking {
+        self.ports[dst].clone().book(clock, self.rx_ns, key, arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(svt: VNanos, src: u32, tag: i32, seq: u64) -> MsgKey {
+        MsgKey { sender_vtime: svt, src, tag, seq }
+    }
+
+    #[test]
+    fn port_clock_serializes_with_gaps() {
+        let mut p = PortClock::default();
+        // Idle port: arrival + rx.
+        assert_eq!(p.service(1000, 400), 1400);
+        // Back-to-back arrival queues behind the previous service.
+        assert_eq!(p.service(1000, 400), 1800);
+        // A later arrival after an idle gap starts fresh.
+        assert_eq!(p.service(5000, 400), 5400);
+        // rx = 0 is transparent even through the same law.
+        let mut q = PortClock::default();
+        assert_eq!(q.service(700, 0), 700);
+        assert_eq!(q.service(700, 0), 700);
+    }
+
+    #[test]
+    fn msg_key_orders_by_vtime_src_tag_seq() {
+        let mut keys = [key(5, 0, 0, 0), key(1, 9, 9, 9), key(1, 2, 0, 0), key(1, 2, 0, 1)];
+        keys.sort();
+        assert_eq!(keys, [key(1, 2, 0, 0), key(1, 2, 0, 1), key(1, 9, 9, 9), key(5, 0, 0, 0)]);
+    }
+
+    #[test]
+    fn resolved_booking_fires_inline() {
+        let b = Booking::resolved(123);
+        let cell = std::sync::Arc::new(Mutex::new(None));
+        let c2 = cell.clone();
+        b.on_ready(move |t| *c2.lock().unwrap() = Some(t));
+        assert_eq!(*cell.lock().unwrap(), Some(123));
+    }
+
+    #[test]
+    fn pending_booking_fires_at_resolve_with_deadline() {
+        let b = Booking::pending();
+        let cell = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let c2 = cell.clone();
+        b.on_ready(move |t| c2.lock().unwrap().push(t));
+        assert!(cell.lock().unwrap().is_empty());
+        b.resolve(777);
+        assert_eq!(cell.lock().unwrap().as_slice(), &[777]);
+        // Late attach sees the resolved deadline inline.
+        let c3 = cell.clone();
+        b.on_ready(move |t| c3.lock().unwrap().push(t + 1));
+        assert_eq!(cell.lock().unwrap().as_slice(), &[777, 778]);
+    }
+}

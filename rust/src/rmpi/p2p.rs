@@ -40,7 +40,19 @@ impl Comm {
         let bytes = as_bytes(buf);
         let same_node = self.uni.same_node(self.rank, dst);
         let net = &self.uni.net;
-        let arrive_at = self.uni.clock.now() + net.transfer_ns(bytes.len(), same_node);
+        // Book the delivery deadline on the destination rank's ingress
+        // port: arrival per the link model, then serialized receiver
+        // processing (`NetworkModel::rx_ns`) in deterministic FIFO
+        // order — the same path every collective round charges through.
+        let sender_vtime = self.uni.clock.now();
+        let arrive_at = sender_vtime + net.transfer_ns(bytes.len(), same_node);
+        let key = super::net::MsgKey {
+            sender_vtime,
+            src: self.rank as u32,
+            tag,
+            seq: self.uni.ports.next_seq(self.rank),
+        };
+        let booking = self.uni.ports.book(dst, &self.uni.clock, key, arrive_at);
         let rendezvous = sync || !net.is_eager(bytes.len());
         // Rendezvous sender requests are owned by (and shard-routed to)
         // the *sending* rank.
@@ -63,7 +75,7 @@ impl Comm {
                 bytes,
                 self.rank,
                 tag,
-                arrive_at,
+                booking,
                 sender_req,
                 posted,
             );
@@ -73,7 +85,7 @@ impl Comm {
             src: self.rank,
             tag,
             data: bytes.to_vec().into_boxed_slice(),
-            arrive_at,
+            booking,
             sender_req,
         };
         q.unexpected.push_back(env);

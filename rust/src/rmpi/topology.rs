@@ -11,20 +11,11 @@
 //!
 //! 1. **Node-hierarchical schedules.** The compiler knows the node
 //!    hierarchy ([`super::universe::ClusterConfig`]'s `ranks_per_node`;
-//!    the intra- vs inter-node link classes of
-//!    [`NetworkModel`]) and emits leader-staged plans — intra-node
-//!    gather/reduce to a node leader, an inter-node tree among leaders,
-//!    intra-node bcast/scatter fan-out — the shape MPICH's collective
-//!    extensions compile (arXiv:2402.12274). Selection is cost-driven:
-//!    for each collective the compiler estimates the critical path of
-//!    the flat and hierarchical shapes under the universe's
-//!    [`NetworkModel`] (link latencies plus the per-message receiver
-//!    processing cost `coll_rx_ns`) and picks the cheaper one, so
-//!    `TopologyMode::Hierarchical` can never lose to `Flat` by more
-//!    than the estimate's error. The estimate uses only values every
-//!    rank agrees on (communicator size, node shape, payload shape),
-//!    so all ranks of one collective always pick the same plan shape —
-//!    a mismatch would deadlock the rounds.
+//!    the intra- vs inter-node link classes of [`NetworkModel`]) and
+//!    emits leader-staged plans — intra-node gather/reduce to a node
+//!    leader, an inter-node tree among leaders, intra-node bcast/scatter
+//!    fan-out — the shape MPICH's collective extensions compile
+//!    (arXiv:2402.12274).
 //! 2. **Persistent schedules.** Plans are cached per communicator in a
 //!    [`SchedCache`] keyed by `(collective kind, root, shape)` — the
 //!    moral equivalent of MPI-4 persistent collectives
@@ -37,7 +28,30 @@
 //!    communicator (or `dup`ing a fresh one) drops/starts its schedule
 //!    store — the MPI persistent-request lifetime.
 //!
-//! ## Reduction bit-identity is a contract
+//! ## Selection has no cost arithmetic of its own
+//!
+//! The flat-vs-hierarchical decision *is* the network model: each
+//! candidate shape is lowered to the [`WireRound`] IR and replayed
+//! through [`super::net::model::critical_path`] — the same link classes
+//! and the same ingress-port serialization law
+//! ([`super::net::ports::PortClock`]) the live engine charges message
+//! by message. There are no closed-form estimates to drift out of sync:
+//! compiler-estimated and engine-observed critical paths are equal (the
+//! parity test in `tests/net_ports.rs` asserts this exactly, per
+//! collective, with and without receiver processing), so
+//! `TopologyMode::Hierarchical` can never lose to `Flat`. The replay
+//! uses only values every rank agrees on (communicator size, node
+//! shape, payload bytes), so all ranks of one collective always pick
+//! the same plan shape — a mismatch would deadlock the rounds.
+//!
+//! The price of exactness is compile cost: selection builds *all-rank*
+//! candidate plans and replays full wire schedules (O(n²) events for
+//! alltoall), repeated by every rank's first cache miss per shape. The
+//! per-communicator [`SchedCache`] amortizes every later call; see the
+//! ROADMAP item on sharing the compiled result cluster-wide before
+//! scaling rank counts further.
+//!
+//! ## Reduction bit-identity is a contract — unless the op opts out
 //!
 //! `reduce`/`allreduce` results must be bit-identical between flat and
 //! hierarchical runs (and across delivery modes and wait styles), so
@@ -49,22 +63,30 @@
 //! intra-node and leader-to-leader edges carry the inter-node traffic.
 //! When the blocks do not align, restructuring the tree would change
 //! the combine association (different floating-point rounding), so the
-//! compiler keeps the flat tree. The hierarchy win for `allreduce`
-//! comes from its broadcast half, which has no combining and may be
-//! re-rooted freely.
+//! compiler keeps the flat tree by default.
+//!
+//! Ops wrapped in [`crate::rmpi::collectives::Commutative`] (the
+//! `commutative()` marker) declare reordering safe, which frees the
+//! compiler to re-root the combine tree hierarchically: members combine
+//! into their node leader, leaders combine along an inter-node binomial
+//! tree (the reverse of the hierarchical broadcast tree). Marked and
+//! unmarked ops cache under distinct keys ([`CollKind::ReduceComm`] /
+//! [`CollKind::AllreduceComm`]), and unmarked ops keep the flat tree in
+//! every topology mode (asserted in tests).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use super::net::NetworkModel;
+use super::net::model::critical_path;
+use super::net::{NetworkModel, WireOp, WireRound};
 
 /// How the schedule compiler sees the cluster.
 ///
 /// Carried by `ClusterConfig::topology` (default `Hierarchical`). Flat
 /// reproduces the PR-3 schedules exactly; Hierarchical enables the
 /// cost-driven node-aware shapes above (degenerating to flat when the
-/// cluster has one node, one rank per node, or the estimate says flat
-/// is cheaper).
+/// cluster has one node, one rank per node, or the wire replay says
+/// flat is cheaper).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum TopologyMode {
     /// Ignore the node boundary (PR-3 behaviour).
@@ -81,7 +103,13 @@ pub(crate) enum CollKind {
     Barrier,
     Bcast,
     Reduce,
+    /// Reduce with a [`commutative`](crate::rmpi::collectives::commutative)
+    /// op: the combine tree may re-root, so plans are shape-dependent
+    /// and cached separately from the pinned-order `Reduce`.
+    ReduceComm,
     Allreduce,
+    /// Allreduce over a commutative op (re-rootable combine half).
+    AllreduceComm,
     Gather,
     Alltoall,
     Alltoallv,
@@ -93,12 +121,14 @@ pub(crate) enum CollKind {
 /// carries no shape at all: its counts are per-rank values the plan
 /// shape must not depend on (see [`compile_plan`]), so every signature
 /// shares the one pairwise plan (and the key stays O(1) — no cloned
-/// count vectors in the cache).
+/// count vectors in the cache). Pinned-order `Reduce` is also
+/// shapeless (its binomial tree depends only on size and root);
+/// `ReduceComm` carries bytes because re-rooting is cost-driven.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub(crate) enum ShapeKey {
-    /// Shapeless (barrier, alltoallv).
+    /// Shapeless (barrier, pinned-order reduce, alltoallv).
     None,
-    /// Byte length of the single buffer (bcast/reduce/allreduce).
+    /// Byte length of the single buffer (bcast/reduce-comm/allreduce).
     Bytes(usize),
     /// Per-rank chunk byte length (gather, uniform alltoall).
     ChunkBytes(usize),
@@ -271,16 +301,10 @@ impl TopoCtx<'_> {
         Some((nodes, rpn))
     }
 
-    fn t_intra(&self, bytes: usize) -> u64 {
-        self.net.transfer_ns(bytes, true)
-    }
-
-    fn t_inter(&self, bytes: usize) -> u64 {
-        self.net.transfer_ns(bytes, false)
-    }
-
-    fn rx(&self) -> u64 {
-        self.net.coll_rx_ns
+    /// Replay a candidate's wire schedules through the network model —
+    /// the compiler's only cost oracle (see module docs).
+    fn cost(&self, scheds: &[Vec<WireRound>]) -> u64 {
+        critical_path(scheds, self.node_of, self.net)
     }
 }
 
@@ -288,19 +312,41 @@ impl TopoCtx<'_> {
 /// plan — which is what makes the cache sound.
 pub(crate) fn compile_plan(key: &SchedKey, ctx: &TopoCtx) -> CollPlan {
     match (key.kind, key.shape) {
-        (CollKind::Barrier, _) => CollPlan::Barrier(compile_barrier(ctx)),
-        (CollKind::Bcast, ShapeKey::Bytes(b)) => {
-            CollPlan::Bcast(compile_bcast(ctx, key.root, b))
+        (CollKind::Barrier, _) => {
+            CollPlan::Barrier(barrier_plans(ctx).swap_remove(ctx.rank))
         }
-        (CollKind::Reduce, _) => CollPlan::Reduce(compile_reduce(ctx, key.root)),
+        (CollKind::Bcast, ShapeKey::Bytes(b)) => CollPlan::Bcast(plan_from_parents(
+            &bcast_parents_selected(ctx, key.root, b),
+            ctx.rank,
+        )),
+        (CollKind::Reduce, _) => {
+            CollPlan::Reduce(flat_reduce_plan(ctx.rank, ctx.size, key.root))
+        }
+        (CollKind::ReduceComm, ShapeKey::Bytes(b)) => {
+            CollPlan::Reduce(reduce_comm_plans(ctx, key.root, b).swap_remove(ctx.rank))
+        }
         (CollKind::Allreduce, ShapeKey::Bytes(b)) => CollPlan::Allreduce {
-            reduce: compile_reduce(ctx, 0),
-            bcast: compile_bcast(ctx, 0, b),
+            reduce: flat_reduce_plan(ctx.rank, ctx.size, 0),
+            bcast: plan_from_parents(&bcast_parents_selected(ctx, 0, b), ctx.rank),
+        },
+        (CollKind::AllreduceComm, ShapeKey::Bytes(b)) => CollPlan::Allreduce {
+            reduce: reduce_comm_plans(ctx, 0, b).swap_remove(ctx.rank),
+            bcast: plan_from_parents(&bcast_parents_selected(ctx, 0, b), ctx.rank),
         },
         (CollKind::Gather, ShapeKey::ChunkBytes(cb)) => {
-            CollPlan::Gather(compile_gather(ctx, key.root, cb))
+            CollPlan::Gather(gather_plans(ctx, key.root, cb).swap_remove(ctx.rank))
         }
-        (CollKind::Alltoall, ShapeKey::ChunkBytes(cb)) => compile_alltoall(ctx, cb),
+        (CollKind::Alltoall, ShapeKey::ChunkBytes(cb)) => match alltoall_shape(ctx, cb) {
+            Some(nodes) => {
+                let my_node = ctx.node_of[ctx.rank];
+                CollPlan::AlltoallHier(AlltoallHier {
+                    is_leader: ctx.rank == nodes[my_node][0],
+                    my_node,
+                    nodes_list: nodes,
+                })
+            }
+            None => CollPlan::AlltoallvFlat,
+        },
         // Alltoallv counts are per-rank values: basing the plan shape on
         // them would let ranks disagree (deadlock), and leaders cannot
         // size staging buffers without a count exchange — the same
@@ -309,6 +355,227 @@ pub(crate) fn compile_plan(key: &SchedKey, ctx: &TopoCtx) -> CollPlan {
         (CollKind::Alltoallv, _) => CollPlan::AlltoallvFlat,
         other => unreachable!("inconsistent schedule key: {other:?}"),
     }
+}
+
+/// Compiler-side critical-path estimate of one blocking collective on a
+/// `nodes x ranks_per_node` cluster, all ranks entering at t = 0: the
+/// virtual instant the last rank's schedule completes. This is the
+/// exact quantity the live engine produces for the same run (with CPU
+/// call costs zeroed — the estimate prices the wire schedule, not
+/// caller-side library overhead), because both go through the identical
+/// selection and the identical port law; `tests/net_ports.rs` pins the
+/// equality per collective. `payload_bytes` is the buffer byte length
+/// (bcast/reduce/allreduce) or the per-rank chunk byte length
+/// (gather/alltoall); ignored for barrier. `reduce-comm` /
+/// `allreduce-comm` estimate the commutative (re-rootable) variants.
+pub fn estimate_critical_path(
+    collective: &str,
+    root: usize,
+    payload_bytes: usize,
+    nodes: usize,
+    ranks_per_node: usize,
+    mode: TopologyMode,
+    net: &NetworkModel,
+) -> u64 {
+    let size = nodes * ranks_per_node;
+    let node_of: Vec<usize> = (0..size).map(|r| r / ranks_per_node).collect();
+    let ctx = TopoCtx { rank: 0, size, node_of: &node_of, mode, net };
+    let b = payload_bytes;
+    let scheds = match collective {
+        "barrier" => token_wire(&barrier_plans(&ctx)),
+        "bcast" => tree_wire(&bcast_parents_selected(&ctx, root, b), b),
+        "reduce" => reduce_wire(&flat_reduce_plans(size, root), b),
+        "reduce-comm" => reduce_wire(&reduce_comm_plans(&ctx, root, b), b),
+        "allreduce" | "allreduce-comm" => {
+            let reduce = if collective == "allreduce" {
+                flat_reduce_plans(size, 0)
+            } else {
+                reduce_comm_plans(&ctx, 0, b)
+            };
+            let mut w = reduce_wire(&reduce, b);
+            for (r, tree) in tree_wire(&bcast_parents_selected(&ctx, 0, b), b)
+                .into_iter()
+                .enumerate()
+            {
+                w[r].extend(tree);
+            }
+            w
+        }
+        "gather" => gather_wire(&gather_plans(&ctx, root, b), b),
+        "alltoall" => match alltoall_shape(&ctx, b) {
+            Some(nodes_list) => alltoall_hier_wire(&nodes_list, size, b),
+            None => alltoall_flat_wire(size, b),
+        },
+        other => panic!("unknown collective {other}"),
+    };
+    ctx.cost(&scheds)
+}
+
+// ---------------------------------------------------------------------
+// Wire lowerings: candidate plans -> the net::model IR. Pure structure
+// (peers and byte counts per round), mirroring the coll_schedule
+// instantiators one-to-one; all timing lives in net::model.
+// ---------------------------------------------------------------------
+
+fn token_wire(plans: &[TokenPlan]) -> Vec<Vec<WireRound>> {
+    plans
+        .iter()
+        .map(|p| {
+            p.rounds
+                .iter()
+                .map(|r| WireRound {
+                    sends: r.sends.iter().map(|&(to, _)| WireOp { peer: to, bytes: 1 }).collect(),
+                    recvs: r
+                        .recvs
+                        .iter()
+                        .map(|&(from, _)| WireOp { peer: from, bytes: 1 })
+                        .collect(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Tree lowering (broadcast shape): a receive round below the root,
+/// then one send round to all children — exactly
+/// [`super::coll_schedule::instantiate_bcast`]'s rounds.
+fn tree_wire(parents: &[Option<usize>], bytes: usize) -> Vec<Vec<WireRound>> {
+    let n = parents.len();
+    (0..n)
+        .map(|r| {
+            if n == 1 {
+                return Vec::new();
+            }
+            let mut rounds = Vec::new();
+            if let Some(p) = parents[r] {
+                rounds.push(WireRound {
+                    sends: vec![],
+                    recvs: vec![WireOp { peer: p, bytes }],
+                });
+            }
+            rounds.push(WireRound {
+                sends: (0..n)
+                    .filter(|&c| parents[c] == Some(r))
+                    .map(|c| WireOp { peer: c, bytes })
+                    .collect(),
+                recvs: vec![],
+            });
+            rounds
+        })
+        .collect()
+}
+
+/// Reduce lowering: child receives, then the combine/forward round —
+/// exactly [`super::coll_schedule::instantiate_reduce`]'s rounds.
+fn reduce_wire(plans: &[ReducePlan], bytes: usize) -> Vec<Vec<WireRound>> {
+    let n = plans.len();
+    plans
+        .iter()
+        .map(|p| {
+            if n == 1 {
+                return Vec::new();
+            }
+            let mut rounds = Vec::new();
+            if !p.children.is_empty() {
+                rounds.push(WireRound {
+                    sends: vec![],
+                    recvs: p.children.iter().map(|&c| WireOp { peer: c, bytes }).collect(),
+                });
+            }
+            rounds.push(WireRound {
+                sends: p.parent.iter().map(|&pa| WireOp { peer: pa, bytes }).collect(),
+                recvs: vec![],
+            });
+            rounds
+        })
+        .collect()
+}
+
+fn gather_wire(plans: &[GatherPlan], cb: usize) -> Vec<Vec<WireRound>> {
+    plans
+        .iter()
+        .map(|p| match p {
+            GatherPlan::Leaf { to } => vec![WireRound {
+                sends: vec![WireOp { peer: *to, bytes: cb }],
+                recvs: vec![],
+            }],
+            GatherPlan::Leader { members, root, .. } => vec![
+                WireRound {
+                    sends: vec![],
+                    recvs: members.iter().map(|&m| WireOp { peer: m, bytes: cb }).collect(),
+                },
+                WireRound {
+                    sends: vec![WireOp { peer: *root, bytes: (members.len() + 1) * cb }],
+                    recvs: vec![],
+                },
+            ],
+            GatherPlan::Root { direct, blocks } => {
+                let mut recvs: Vec<WireOp> =
+                    direct.iter().map(|&r| WireOp { peer: r, bytes: cb }).collect();
+                recvs.extend(
+                    blocks.iter().map(|b| WireOp { peer: b.leader, bytes: b.nranks * cb }),
+                );
+                vec![WireRound { sends: vec![], recvs }]
+            }
+        })
+        .collect()
+}
+
+/// Pairwise uniform alltoall: one round of all-to-all sends/receives
+/// (the self chunk is a local copy) — the flat alltoallv shape.
+fn alltoall_flat_wire(n: usize, cb: usize) -> Vec<Vec<WireRound>> {
+    (0..n)
+        .map(|r| {
+            vec![WireRound {
+                sends: (0..n).filter(|&d| d != r).map(|d| WireOp { peer: d, bytes: cb }).collect(),
+                recvs: (0..n).filter(|&s| s != r).map(|s| WireOp { peer: s, bytes: cb }).collect(),
+            }]
+        })
+        .collect()
+}
+
+/// Leader-staged uniform alltoall — exactly
+/// [`super::coll_schedule::instantiate_alltoall_hier`]'s three phases.
+fn alltoall_hier_wire(nodes_list: &[Vec<usize>], n: usize, cb: usize) -> Vec<Vec<WireRound>> {
+    let l = nodes_list.len();
+    let rpn = nodes_list[0].len();
+    (0..n)
+        .map(|r| {
+            let my_node = r / rpn;
+            let leader = nodes_list[my_node][0];
+            if r != leader {
+                return vec![WireRound {
+                    sends: vec![WireOp { peer: leader, bytes: n * cb }],
+                    recvs: vec![WireOp { peer: leader, bytes: n * cb }],
+                }];
+            }
+            let members: Vec<usize> = nodes_list[my_node][1..].to_vec();
+            let peers: Vec<usize> = (0..l)
+                .filter(|&b| b != my_node)
+                .map(|b| nodes_list[b][0])
+                .collect();
+            vec![
+                WireRound {
+                    sends: vec![],
+                    recvs: members.iter().map(|&m| WireOp { peer: m, bytes: n * cb }).collect(),
+                },
+                WireRound {
+                    sends: peers
+                        .iter()
+                        .map(|&p| WireOp { peer: p, bytes: rpn * rpn * cb })
+                        .collect(),
+                    recvs: peers
+                        .iter()
+                        .map(|&p| WireOp { peer: p, bytes: rpn * rpn * cb })
+                        .collect(),
+                },
+                WireRound {
+                    sends: members.iter().map(|&m| WireOp { peer: m, bytes: n * cb }).collect(),
+                    recvs: vec![],
+                },
+            ]
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -332,59 +599,17 @@ fn flat_barrier(rank: usize, n: usize) -> TokenPlan {
     TokenPlan { rounds }
 }
 
-/// Exact completion time of the flat dissemination barrier under
-/// synchronized entry: per round, a rank's next post waits for the
-/// token from `2^k` below (its own send is eager), plus the round's
-/// receive processing.
-fn flat_barrier_time(ctx: &TopoCtx) -> u64 {
-    let n = ctx.size;
-    let mut t = vec![0u64; n];
-    let mut d = 1usize;
-    while d < n {
-        let prev = t.clone();
-        for (r, tr) in t.iter_mut().enumerate() {
-            let src = (r + n - d) % n;
-            let hop = if ctx.node_of[src] == ctx.node_of[r] {
-                ctx.t_intra(1)
-            } else {
-                ctx.t_inter(1)
-            };
-            *tr = (*tr).max(prev[src] + hop) + ctx.rx();
-        }
-        d <<= 1;
-    }
-    t.into_iter().max().unwrap_or(0)
-}
-
-/// Exact completion time of the leader-staged barrier under
-/// synchronized entry (symmetric across nodes, so a closed recurrence).
-fn hier_barrier_time(ctx: &TopoCtx, l: usize, rpn: usize) -> u64 {
-    let check_in = ctx.t_intra(1) + (rpn as u64 - 1) * ctx.rx();
-    let dissemination = ceil_log2(l) * (ctx.t_inter(1) + ctx.rx());
-    let release = ctx.t_intra(1) + ctx.rx();
-    check_in + dissemination + release
-}
-
-fn compile_barrier(ctx: &TopoCtx) -> TokenPlan {
-    let n = ctx.size;
-    if n == 1 {
-        return TokenPlan { rounds: Vec::new() };
-    }
-    let Some((nodes, rpn)) = ctx.hierarchy() else {
-        return flat_barrier(ctx.rank, n);
-    };
+/// Leader-staged barrier for one rank: members check in with their
+/// leader (phase 0), the leaders run a dissemination barrier among
+/// themselves (phases 1..=log2(L)), then each leader releases its
+/// members (the final phase).
+fn hier_barrier(rank: usize, nodes: &[Vec<usize>], node_of: &[usize]) -> TokenPlan {
     let l = nodes.len();
-    if hier_barrier_time(ctx, l, rpn) >= flat_barrier_time(ctx) {
-        return flat_barrier(ctx.rank, n);
-    }
-    // Hierarchical: members check in with their leader (phase 0), the
-    // leaders run a dissemination barrier among themselves (phases
-    // 1..=log2(L)), then each leader releases its members (phase REL).
-    let my_node = ctx.node_of[ctx.rank];
+    let my_node = node_of[rank];
     let leaders: Vec<usize> = nodes.iter().map(|m| m[0]).collect();
     let leader = leaders[my_node];
     let release = 1 + ceil_log2(l) as u32;
-    if ctx.rank != leader {
+    if rank != leader {
         return TokenPlan {
             rounds: vec![TokenRound {
                 sends: vec![(leader, 0)],
@@ -414,6 +639,30 @@ fn compile_barrier(ctx: &TopoCtx) -> TokenPlan {
         recvs: Vec::new(),
     });
     TokenPlan { rounds }
+}
+
+/// All-rank barrier plans of the selected shape (flat unless the
+/// staged candidate's wire replay is strictly cheaper).
+fn barrier_plans(ctx: &TopoCtx) -> Vec<TokenPlan> {
+    let n = ctx.size;
+    if n == 1 {
+        return vec![TokenPlan { rounds: Vec::new() }];
+    }
+    let flat: Vec<TokenPlan> = (0..n).map(|r| flat_barrier(r, n)).collect();
+    let Some((nodes, _rpn)) = ctx.hierarchy() else {
+        return flat;
+    };
+    let hier: Vec<TokenPlan> = (0..n).map(|r| hier_barrier(r, &nodes, ctx.node_of)).collect();
+    if ctx.cost(&token_wire(&hier)) < ctx.cost(&token_wire(&flat)) {
+        hier
+    } else {
+        flat
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn compile_barrier(ctx: &TopoCtx) -> TokenPlan {
+    barrier_plans(ctx).swap_remove(ctx.rank)
 }
 
 // ---------------------------------------------------------------------
@@ -485,41 +734,6 @@ fn hier_bcast_parents(
         .collect()
 }
 
-/// Exact completion time of a parent-tree broadcast under synchronized
-/// entry: each rank receives one transfer (plus its receive-processing
-/// charge) after its parent, parents forward to all children
-/// concurrently.
-fn tree_time(parents: &[Option<usize>], bytes: usize, ctx: &TopoCtx) -> u64 {
-    let n = parents.len();
-    let mut t: Vec<Option<u64>> = vec![None; n];
-    for start in 0..n {
-        // Walk up to the nearest resolved ancestor, then fill down.
-        let mut chain = Vec::new();
-        let mut r = start;
-        while t[r].is_none() {
-            chain.push(r);
-            match parents[r] {
-                Some(p) => r = p,
-                None => break,
-            }
-        }
-        for &c in chain.iter().rev() {
-            t[c] = Some(match parents[c] {
-                None => 0,
-                Some(p) => {
-                    let hop = if ctx.node_of[p] == ctx.node_of[c] {
-                        ctx.t_intra(bytes)
-                    } else {
-                        ctx.t_inter(bytes)
-                    };
-                    t[p].expect("parent resolved") + hop + ctx.rx()
-                }
-            });
-        }
-    }
-    (0..n).map(|r| t[r].unwrap_or(0)).max().unwrap_or(0)
-}
-
 /// Plan view of a parent array for one rank: receive from the parent,
 /// forward to the children (ascending — sends post concurrently, so
 /// the order carries no semantics).
@@ -530,23 +744,23 @@ fn plan_from_parents(parents: &[Option<usize>], rank: usize) -> TreePlan {
     }
 }
 
-fn compile_bcast(ctx: &TopoCtx, root: usize, bytes: usize) -> TreePlan {
+/// The selected broadcast tree as a parent array: flat unless the
+/// hierarchical tree's wire replay is strictly cheaper at the exact
+/// payload byte size (the shape key carries bytes, not elements).
+fn bcast_parents_selected(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<Option<usize>> {
     let n = ctx.size;
     if n == 1 {
-        return TreePlan { recv_from: None, send_to: Vec::new() };
+        return vec![None];
     }
     let flat = flat_bcast_parents(n, root);
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
-        return plan_from_parents(&flat, ctx.rank);
+        return flat;
     };
-    // Exact critical paths of both candidate trees at the exact payload
-    // byte size (the shape key carries bytes, not elements); ties keep
-    // flat.
     let hier = hier_bcast_parents(n, root, &nodes, ctx.node_of);
-    if tree_time(&hier, bytes, ctx) < tree_time(&flat, bytes, ctx) {
-        plan_from_parents(&hier, ctx.rank)
+    if ctx.cost(&tree_wire(&hier, bytes)) < ctx.cost(&tree_wire(&flat, bytes)) {
+        hier
     } else {
-        plan_from_parents(&flat, ctx.rank)
+        flat
     }
 }
 
@@ -555,111 +769,151 @@ fn compile_bcast(ctx: &TopoCtx, root: usize, bytes: usize) -> TreePlan {
 // ---------------------------------------------------------------------
 
 /// Binomial reduce tree in virtual-rank space. The child order *is* the
-/// combine order, and (see module docs) it is pinned: on blocked
-/// layouts with aligned node blocks this tree is already
+/// combine order, and (see module docs) it is pinned for unmarked ops:
+/// on blocked layouts with aligned node blocks this tree is already
 /// node-hierarchical, and restructuring it otherwise would change the
 /// floating-point association. Identical under both topology modes.
-fn compile_reduce(ctx: &TopoCtx, root: usize) -> ReducePlan {
-    let n = ctx.size;
+fn flat_reduce_plan(rank: usize, n: usize, root: usize) -> ReducePlan {
     if n == 1 {
         return ReducePlan { children: Vec::new(), parent: None };
     }
-    let vr = (ctx.rank + n - root) % n;
+    let vr = (rank + n - root) % n;
     let children = binomial_children(vr, n).into_iter().map(|c| (c + root) % n).collect();
     let parent = binomial_parent(vr).map(|p| (p + root) % n);
     ReducePlan { children, parent }
+}
+
+fn flat_reduce_plans(n: usize, root: usize) -> Vec<ReducePlan> {
+    (0..n).map(|r| flat_reduce_plan(r, n, root)).collect()
+}
+
+/// Reduce plans from an arbitrary parent tree (the commutative
+/// relaxation): children ascending — a deterministic combine order,
+/// valid because the op declared reordering safe.
+fn reduce_plans_from_parents(parents: &[Option<usize>]) -> Vec<ReducePlan> {
+    let n = parents.len();
+    (0..n)
+        .map(|r| ReducePlan {
+            children: (0..n).filter(|&c| parents[c] == Some(r)).collect(),
+            parent: parents[r],
+        })
+        .collect()
+}
+
+/// All-rank reduce plans for a [`commutative`] op: the flat binomial
+/// tree unless re-rooting through node leaders (the reverse of the
+/// hierarchical broadcast tree) is strictly cheaper under the wire
+/// replay.
+///
+/// [`commutative`]: crate::rmpi::collectives::commutative
+fn reduce_comm_plans(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<ReducePlan> {
+    let n = ctx.size;
+    let flat = flat_reduce_plans(n, root);
+    if n == 1 {
+        return flat;
+    }
+    let Some((nodes, _rpn)) = ctx.hierarchy() else {
+        return flat;
+    };
+    let hier = reduce_plans_from_parents(&hier_bcast_parents(n, root, &nodes, ctx.node_of));
+    if ctx.cost(&reduce_wire(&hier, bytes)) < ctx.cost(&reduce_wire(&flat, bytes)) {
+        hier
+    } else {
+        flat
+    }
 }
 
 // ---------------------------------------------------------------------
 // Gather
 // ---------------------------------------------------------------------
 
-fn flat_gather(ctx: &TopoCtx, root: usize) -> GatherPlan {
-    if ctx.rank == root {
-        GatherPlan::Root {
-            direct: (0..ctx.size).filter(|&r| r != root).collect(),
-            blocks: Vec::new(),
-        }
+fn flat_gather_plans(n: usize, root: usize) -> Vec<GatherPlan> {
+    (0..n)
+        .map(|r| {
+            if r == root {
+                GatherPlan::Root {
+                    direct: (0..n).filter(|&x| x != root).collect(),
+                    blocks: Vec::new(),
+                }
+            } else {
+                GatherPlan::Leaf { to: root }
+            }
+        })
+        .collect()
+}
+
+/// All-rank gather plans: flat single-hop fan-in unless leader staging
+/// is strictly cheaper under the wire replay. Flat pays one inter-node
+/// hop but the root's port processes n-1 messages; staging absorbs the
+/// fan-in at node leaders, so the root sees one block per node — worth
+/// it exactly when per-message processing dominates.
+fn gather_plans(ctx: &TopoCtx, root: usize, cb: usize) -> Vec<GatherPlan> {
+    let n = ctx.size;
+    let flat = flat_gather_plans(n, root);
+    let Some((nodes, _rpn)) = ctx.hierarchy() else {
+        return flat;
+    };
+    let root_node = ctx.node_of[root];
+    let staged: Vec<GatherPlan> = (0..n)
+        .map(|r| {
+            let my_node = ctx.node_of[r];
+            if r == root {
+                GatherPlan::Root {
+                    direct: nodes[root_node].iter().copied().filter(|&x| x != root).collect(),
+                    blocks: nodes
+                        .iter()
+                        .enumerate()
+                        .filter(|&(b, _)| b != root_node)
+                        .map(|(_, members)| GatherBlock {
+                            leader: members[0],
+                            first_rank: members[0],
+                            nranks: members.len(),
+                        })
+                        .collect(),
+                }
+            } else if my_node == root_node {
+                GatherPlan::Leaf { to: root }
+            } else if r == nodes[my_node][0] {
+                GatherPlan::Leader {
+                    members: nodes[my_node][1..].to_vec(),
+                    root,
+                    node_base: nodes[my_node][0],
+                }
+            } else {
+                GatherPlan::Leaf { to: nodes[my_node][0] }
+            }
+        })
+        .collect();
+    if ctx.cost(&gather_wire(&staged, cb)) < ctx.cost(&gather_wire(&flat, cb)) {
+        staged
     } else {
-        GatherPlan::Leaf { to: root }
+        flat
     }
 }
 
-fn compile_gather(ctx: &TopoCtx, root: usize, cb: usize) -> GatherPlan {
-    let n = ctx.size;
-    let Some((nodes, rpn)) = ctx.hierarchy() else {
-        return flat_gather(ctx, root);
-    };
-    // Flat: one inter-node hop, but the root processes n-1 messages.
-    // Staged: leaders absorb the fan-in, the root sees one block per
-    // node — worth it exactly when per-message processing dominates.
-    let l = nodes.len();
-    let est_flat = ctx.t_inter(cb) + (n as u64 - 1) * ctx.rx();
-    let est_hier = ctx.t_intra(cb)
-        + (rpn as u64 - 1) * ctx.rx()
-        + ctx.t_inter(cb * rpn)
-        + ((l as u64 - 1) + (rpn as u64 - 1)) * ctx.rx();
-    if est_hier > est_flat {
-        return flat_gather(ctx, root);
-    }
-    let root_node = ctx.node_of[root];
-    let my_node = ctx.node_of[ctx.rank];
-    if ctx.rank == root {
-        let direct = nodes[root_node].iter().copied().filter(|&r| r != root).collect();
-        let blocks = nodes
-            .iter()
-            .enumerate()
-            .filter(|&(b, _)| b != root_node)
-            .map(|(_, members)| GatherBlock {
-                leader: members[0],
-                first_rank: members[0],
-                nranks: members.len(),
-            })
-            .collect();
-        GatherPlan::Root { direct, blocks }
-    } else if my_node == root_node {
-        GatherPlan::Leaf { to: root }
-    } else if ctx.rank == nodes[my_node][0] {
-        GatherPlan::Leader {
-            members: nodes[my_node][1..].to_vec(),
-            root,
-            node_base: nodes[my_node][0],
-        }
-    } else {
-        GatherPlan::Leaf { to: nodes[my_node][0] }
-    }
+#[cfg(test)]
+pub(crate) fn compile_gather(ctx: &TopoCtx, root: usize, cb: usize) -> GatherPlan {
+    gather_plans(ctx, root, cb).swap_remove(ctx.rank)
 }
 
 // ---------------------------------------------------------------------
 // Alltoall
 // ---------------------------------------------------------------------
 
-fn compile_alltoall(ctx: &TopoCtx, cb: usize) -> CollPlan {
+/// `Some(nodes_list)` when the leader-staged uniform alltoall is
+/// strictly cheaper than pairwise under the wire replay. Flat: every
+/// rank's port processes n-1 incoming messages in one round. Staged:
+/// three rounds with inflated payloads but O(rpn + nodes) messages per
+/// port.
+fn alltoall_shape(ctx: &TopoCtx, cb: usize) -> Option<Vec<Vec<usize>>> {
     let n = ctx.size;
-    let Some((nodes, rpn)) = ctx.hierarchy() else {
-        return CollPlan::AlltoallvFlat;
-    };
-    // Flat: every rank processes n-1 incoming messages in one round.
-    // Staged: three rounds (members -> leader, leader <-> leader node
-    // blocks, leader -> members) with inflated payloads but O(rpn +
-    // nodes) messages per processor.
-    let l = nodes.len();
-    let est_flat = ctx.t_inter(cb) + (n as u64 - 1) * ctx.rx();
-    let est_hier = ctx.t_intra(n * cb)
-        + (rpn as u64 - 1) * ctx.rx()
-        + ctx.t_inter(rpn * rpn * cb)
-        + (l as u64 - 1) * ctx.rx()
-        + ctx.t_intra(n * cb)
-        + (rpn as u64 - 1) * ctx.rx();
-    if est_hier > est_flat {
-        return CollPlan::AlltoallvFlat;
+    let (nodes, _rpn) = ctx.hierarchy()?;
+    let hier = alltoall_hier_wire(&nodes, n, cb);
+    if ctx.cost(&hier) < ctx.cost(&alltoall_flat_wire(n, cb)) {
+        Some(nodes)
+    } else {
+        None
     }
-    let my_node = ctx.node_of[ctx.rank];
-    CollPlan::AlltoallHier(AlltoallHier {
-        is_leader: ctx.rank == nodes[my_node][0],
-        my_node,
-        nodes_list: nodes,
-    })
 }
 
 #[cfg(test)]
@@ -720,14 +974,55 @@ mod tests {
 
     #[test]
     fn reduce_plan_identical_across_modes() {
-        let net = NetworkModel::default();
+        // The pinned-order (unmarked-op) reduce never re-roots: the
+        // combine order is a bit-identity contract.
         let node_of = blocked(2, 4);
         for r in 0..8 {
-            let f = compile_reduce(&ctx(r, &node_of, TopologyMode::Flat, &net), 0);
-            let h = compile_reduce(&ctx(r, &node_of, TopologyMode::Hierarchical, &net), 0);
+            let f = flat_reduce_plan(r, node_of.len(), 0);
+            let key = SchedKey { kind: CollKind::Reduce, root: 0, shape: ShapeKey::None };
+            let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
+            let c = ctx(r, &node_of, TopologyMode::Hierarchical, &net);
+            let CollPlan::Reduce(h) = compile_plan(&key, &c) else {
+                panic!("reduce plan")
+            };
             assert_eq!(f.children, h.children, "combine order is a contract (rank {r})");
             assert_eq!(f.parent, h.parent);
         }
+    }
+
+    #[test]
+    fn commutative_reduce_reroots_when_cheaper() {
+        // Non-power-of-two ranks-per-node (2 nodes x 6): the flat
+        // binomial tree is not node-aligned and chains member partials
+        // through serial intra hops, so with per-message processing the
+        // leader-rooted tree is strictly cheaper and a commutative op
+        // is allowed to take it.
+        let node_of = blocked(2, 6);
+        let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
+        let c = ctx(0, &node_of, TopologyMode::Hierarchical, &net);
+        let comm = reduce_comm_plans(&c, 0, 8);
+        let flat = flat_reduce_plans(node_of.len(), 0);
+        let rerooted = (0..node_of.len())
+            .any(|r| comm[r].parent != flat[r].parent || comm[r].children != flat[r].children);
+        assert!(rerooted, "commutative reduce must re-root in the fan-in regime");
+        // Every node-1 member hangs off its leader in the re-rooted
+        // tree (flat binomial gives 7 the parent 6 too, but 8's flat
+        // parent is 0 — the re-rooted tree pulls it under leader 6).
+        assert_eq!(comm[7].parent, Some(6), "member 7 -> leader 6");
+        assert_eq!(comm[8].parent, Some(6), "member 8 -> leader 6");
+        // The estimate agrees the re-rooted tree is not slower.
+        let est_comm = estimate_critical_path(
+            "reduce-comm",
+            0,
+            8,
+            2,
+            6,
+            TopologyMode::Hierarchical,
+            &net,
+        );
+        let est_flat =
+            estimate_critical_path("reduce", 0, 8, 2, 6, TopologyMode::Hierarchical, &net);
+        assert!(est_comm <= est_flat, "comm {est_comm} vs flat {est_flat}");
     }
 
     #[test]
@@ -735,7 +1030,7 @@ mod tests {
         let mut net = NetworkModel::default();
         let node_of = blocked(4, 8);
         // Free receiver processing: flat single-hop wins (8-byte chunk).
-        net.coll_rx_ns = 0;
+        net.rx_ns = 0;
         match compile_gather(&ctx(0, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
             GatherPlan::Root { blocks, direct } => {
                 assert!(blocks.is_empty());
@@ -743,8 +1038,9 @@ mod tests {
             }
             _ => panic!("rank 0 must be the root"),
         }
-        // Costly fan-in: the staged plan wins.
-        net.coll_rx_ns = 400;
+        // Costly fan-in: the staged plan wins. Set through the
+        // back-compat alias on purpose — same knob.
+        net.set_coll_rx_ns(400);
         match compile_gather(&ctx(0, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
             GatherPlan::Root { blocks, direct } => {
                 assert_eq!(blocks.len(), 3);
@@ -753,7 +1049,6 @@ mod tests {
             _ => panic!("rank 0 must be the root"),
         }
         // Non-root-node leaders stage; their members send to them.
-        net.coll_rx_ns = 400;
         match compile_gather(&ctx(8, &node_of, TopologyMode::Hierarchical, &net), 0, 8) {
             GatherPlan::Leader { members, root, node_base } => {
                 assert_eq!(members, (9..16).collect::<Vec<_>>());
@@ -783,5 +1078,13 @@ mod tests {
         });
         assert!(!hit);
         assert_eq!(cache.len(), 2);
+        // Commutative variants cache under their own kind.
+        let key3 =
+            SchedKey { kind: CollKind::AllreduceComm, root: 0, shape: ShapeKey::Bytes(32) };
+        let (_, hit) = cache.get_or_compile(&key3, || {
+            CollPlan::Reduce(ReducePlan { children: vec![], parent: None })
+        });
+        assert!(!hit);
+        assert_eq!(cache.len(), 3);
     }
 }

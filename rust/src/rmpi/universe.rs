@@ -234,6 +234,7 @@ impl Universe {
         let uni = Arc::new(UniState {
             clock: clock.clone(),
             net: cfg.net,
+            ports: crate::rmpi::net::Ports::new(size, &cfg.net),
             node_of,
             topology: cfg.topology,
             sched_cache_on: cfg.sched_cache,

@@ -389,17 +389,25 @@ impl Tampi {
         self.comm.barrier_with(wm);
     }
 
-    /// Task-aware `MPI_Allreduce`.
+    /// Task-aware `MPI_Allreduce`. (For an op marked with
+    /// [`crate::rmpi::commutative`], use [`Tampi::allreduce_op`].)
     pub fn allreduce<T: Pod>(
         &self,
         buf: &mut [T],
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) {
+        self.allreduce_op(buf, op)
+    }
+
+    /// [`Tampi::allreduce`] over any [`crate::rmpi::Combiner`]: a
+    /// [`crate::rmpi::commutative`]-marked op re-roots its combine tree
+    /// through the topology compiler here too.
+    pub fn allreduce_op<T: Pod>(&self, buf: &mut [T], op: impl crate::rmpi::Combiner<T>) {
         if !self.enabled || !self.in_task() {
-            return self.comm.allreduce(buf, op);
+            return self.comm.allreduce_op(buf, op);
         }
         let wm = crate::rmpi::collectives::WaitMode::TaskAware(Some(self.state.mode));
-        self.comm.allreduce_with(buf, op, wm);
+        self.comm.allreduce_op_with(buf, op, wm);
     }
 
     // ----- non-blocking collectives (Section 6.1 interception extended
@@ -436,10 +444,15 @@ impl Tampi {
         buf: &mut [T],
         op: impl Fn(&mut [T], &[T]) + Send + 'static,
     ) {
+        self.iallreduce_op(buf, op)
+    }
+
+    /// [`Tampi::iallreduce`] over any [`crate::rmpi::Combiner`].
+    pub fn iallreduce_op<T: Pod>(&self, buf: &mut [T], op: impl crate::rmpi::Combiner<T>) {
         if !self.enabled || !self.in_task() {
-            return self.comm.allreduce(buf, op);
+            return self.comm.allreduce_op(buf, op);
         }
-        let cr = self.comm.iallreduce(buf, op);
+        let cr = self.comm.iallreduce_op(buf, op);
         self.iwait(cr.request());
     }
 

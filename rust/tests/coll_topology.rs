@@ -243,13 +243,13 @@ fn round_count_formulas_hierarchical_latency_regime() {
 }
 
 /// Round-count formulas of the staged gather/alltoall plans in the
-/// message-rate regime (coll_rx_ns > 0 makes fan-in expensive, so the
-/// compiler picks leader staging).
+/// message-rate regime (rx_ns > 0 makes ingress-port fan-in expensive,
+/// so the compiler picks leader staging).
 #[test]
 fn round_count_formulas_staged_message_rate_regime() {
     let (nodes, rpn) = (4usize, 4usize);
     let mut cfg = ClusterConfig::new(nodes, rpn, 0).with_topology(TopologyMode::Hierarchical);
-    cfg.net.coll_rx_ns = 400;
+    cfg.net.rx_ns = 400;
     Universe::run(cfg, move |ctx| {
         let r = ctx.rank;
         let n = ctx.size;

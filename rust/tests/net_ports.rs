@@ -1,0 +1,180 @@
+//! The unified congestion-aware network layer (rmpi::net): p2p incast
+//! deadline determinism across delivery modes, wait styles and worker
+//! counts; exact compiler/engine critical-path parity per collective;
+//! `coll_rx_ns` alias back-compat and default-transparency of the
+//! ingress ports; and the commutative-op combine-tree relaxation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tampi_repro::bench;
+use tampi_repro::progress::DeliveryMode;
+use tampi_repro::rmpi::{
+    commutative, ClusterConfig, NetworkModel, ThreadLevel, TopologyMode, Universe,
+};
+use tampi_repro::sim::ms;
+use tampi_repro::tampi;
+
+/// The tentpole invariance: an (n-1)->0 incast's last delivery instant
+/// is a pure function of the network model — identical across
+/// {Direct, Sharded} x {park, taskaware}. With rx = 400 on a 2x2
+/// cluster the exact value is pinned by the port law: the intra sender
+/// arrives at +408 (64 B over shared memory) and is serviced at +808;
+/// the two inter senders arrive together at +1505 and serialize to
+/// +1905 and +2305 (ties broken src-ascending).
+#[test]
+fn p2p_incast_instant_deterministic_and_exact() {
+    let expect = ms(1) + 2_305;
+    for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+        for taskaware in [false, true] {
+            let got = bench::p2p_incast_instant(2, 2, 400, delivery, taskaware);
+            assert_eq!(
+                got, expect,
+                "incast instant diverged ({delivery:?}, taskaware={taskaware})"
+            );
+        }
+    }
+}
+
+/// At the default `rx_ns = 0` the port is transparent: no serialization,
+/// the incast's last delivery instant is exactly the launch instant
+/// plus the slowest link transfer — the pre-port timeline (this is what
+/// keeps all published figures bit-identical at the defaults).
+#[test]
+fn default_rx_keeps_ports_transparent() {
+    let net = NetworkModel::default();
+    let expect = ms(1) + net.transfer_ns(64, false);
+    for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+        assert_eq!(bench::p2p_incast_instant(2, 4, 0, delivery, false), expect);
+    }
+    // And the alias still reads/writes the unified knob.
+    let mut m = NetworkModel::default();
+    assert_eq!(m.coll_rx_ns(), m.rx_ns);
+    m.set_coll_rx_ns(250);
+    assert_eq!((m.rx_ns, m.coll_rx_ns()), (250, 250));
+}
+
+/// Worker-count invariance: the same incast received by one task per
+/// message, raced over 1, 2 and 4 workers under both delivery modes —
+/// the completion instants come from the clock-thread port resolve, so
+/// the last delivery instant cannot move.
+#[test]
+fn incast_instants_invariant_across_worker_counts() {
+    let run = |cores: usize, delivery: DeliveryMode| -> u64 {
+        let (nodes, rpn, rx) = (2usize, 2usize, 400u64);
+        let mut cfg = ClusterConfig::new(nodes, rpn, cores).with_delivery_mode(delivery);
+        cfg.net.rx_ns = rx;
+        cfg.deadline = Some(ms(600_000));
+        let last = Arc::new(AtomicU64::new(0));
+        let l2 = last.clone();
+        Universe::run(cfg, move |ctx| {
+            let n = ctx.size;
+            if ctx.rank != 0 {
+                ctx.clock.sleep(ms(1));
+                ctx.comm.isend(&[5u8; 64], 0, ctx.rank as i32);
+                return;
+            }
+            let rt = ctx.rt.as_ref().unwrap();
+            let tm = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            for i in 1..n {
+                let tm = tm.clone();
+                let last = l2.clone();
+                rt.task().label(format!("sink{i}")).spawn(move || {
+                    let mut b = [0u8; 64];
+                    let req = tm.comm().irecv(&mut b, i as i32, i as i32);
+                    let c = tm.comm().clock().clone();
+                    req.on_complete(move |_| {
+                        last.fetch_max(c.now(), Ordering::AcqRel);
+                    });
+                    tm.wait(&req);
+                });
+            }
+            rt.taskwait();
+        })
+        .expect("incast worker sweep");
+        last.load(Ordering::Acquire)
+    };
+    let reference = run(1, DeliveryMode::Sharded);
+    assert_eq!(reference, ms(1) + 2_305, "see p2p_incast_instant_deterministic_and_exact");
+    for cores in [1usize, 2, 4] {
+        for delivery in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+            let got = run(cores, delivery);
+            assert_eq!(got, reference, "instants moved at cores={cores} {delivery:?}");
+        }
+    }
+}
+
+/// The acceptance criterion of the unified layer: the topology
+/// compiler's critical-path estimate — a wire-schedule replay through
+/// the same `NetworkModel`/port code the engine charges — equals the
+/// engine-observed virtual time exactly, for every collective, in both
+/// topology modes, with and without receiver processing. (`bcast-big`
+/// additionally exercises the rendezvous protocol; `allreduce-comm`
+/// the re-rooted combine tree.)
+#[test]
+fn compiler_engine_critical_path_parity() {
+    let kinds = [
+        "barrier",
+        "bcast",
+        "bcast-big",
+        "reduce",
+        "allreduce",
+        "allreduce-comm",
+        "gather",
+        "alltoall",
+    ];
+    for (nodes, rpn, topo, rx) in [
+        (2usize, 4usize, TopologyMode::Flat, 0u64),
+        (2, 4, TopologyMode::Flat, 400),
+        (2, 4, TopologyMode::Hierarchical, 0),
+        (2, 4, TopologyMode::Hierarchical, 400),
+        // Non-power-of-two ranks-per-node staging shapes.
+        (4, 3, TopologyMode::Hierarchical, 400),
+    ] {
+        for kind in kinds {
+            let (estimated, observed) = bench::coll_parity_pair(kind, nodes, rpn, topo, rx);
+            assert_eq!(
+                estimated, observed,
+                "compiler/engine divergence: {kind} {nodes}x{rpn} {topo:?} rx={rx}"
+            );
+        }
+    }
+}
+
+/// The commutative-op relaxation: marking an (exact, integer) sum as
+/// commutative re-roots the combine tree where the model says it wins —
+/// never slower, same result. Unmarked ops keep the flat binomial tree
+/// (that contract is asserted in rmpi::topology's unit tests).
+#[test]
+fn commutative_allreduce_exact_and_not_slower() {
+    let run = |comm_op: bool| -> (u64, u64) {
+        let mut cfg = ClusterConfig::new(2, 6, 0).with_topology(TopologyMode::Hierarchical);
+        cfg.net.rx_ns = 400;
+        cfg.deadline = Some(ms(600_000));
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = sum.clone();
+        let stats = Universe::run(cfg, move |ctx| {
+            let mut v = [(ctx.rank as u64 + 1) * 13];
+            if comm_op {
+                ctx.comm
+                    .allreduce_op(&mut v, commutative(|a: &mut [u64], b: &[u64]| a[0] += b[0]));
+            } else {
+                ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+            }
+            if ctx.rank == 0 {
+                s2.store(v[0], Ordering::Release);
+            }
+        })
+        .expect("commutative allreduce scenario");
+        (sum.load(Ordering::Acquire), stats.vtime_ns)
+    };
+    let (sum_flat, t_flat) = run(false);
+    let (sum_comm, t_comm) = run(true);
+    let expect: u64 = (1..=12u64).map(|r| r * 13).sum();
+    assert_eq!(sum_flat, expect);
+    assert_eq!(sum_comm, expect, "re-rooted combine must be exact for integer sums");
+    assert!(
+        t_comm <= t_flat,
+        "commutative re-rooting must not lose: {t_comm} vs {t_flat} ns"
+    );
+}

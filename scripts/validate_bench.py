@@ -30,6 +30,7 @@ ROW_SCHEMAS = {
         "hier_us": NUM,
         "speedup": NUM,
     },
+    18: {"series": (str,), "rx_ns": NUM, "vtime_us": NUM},
 }
 
 CACHE_SCHEMA = {
