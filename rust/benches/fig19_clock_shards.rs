@@ -1,0 +1,18 @@
+//! cargo bench target regenerating extension Figure 19: the parallel
+//! discrete-event core — host wall-time of one deterministic
+//! Gauss-Seidel run as the simulation clock is sharded over 1/2/4/8
+//! lanes under conservative lookahead. Every multi-lane run is asserted
+//! bit-identical to the 1-lane run (checksum, virtual makespan, task
+//! and pause counts, schedule-cache traffic). Scale via
+//! TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig19_report(scale);
+    println!("{report}");
+    bench::write_output("fig19_clock_shards.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -122,6 +122,10 @@ pub struct GsParams {
     /// halo compute and is harvested after the final taskwait (fig16's
     /// overlap).
     pub residual_nonblocking: bool,
+    /// Clock lanes the simulated nodes are sharded over (default 1 —
+    /// the classic single-heap engine; results are bit-identical across
+    /// values). See [`crate::rmpi::ClusterConfig::clock_shards`].
+    pub clock_shards: usize,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
     pub deadline: Option<VNanos>,
@@ -154,6 +158,7 @@ impl GsParams {
             topology: crate::rmpi::TopologyMode::default(),
             residual_every: 0,
             residual_nonblocking: false,
+            clock_shards: 1,
             tracer: None,
             graph: None,
             deadline: None,
@@ -282,6 +287,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     cc.tracer = p.tracer.clone();
     cc.graph = p.graph.clone();
     cc.deadline = p.deadline;
+    cc.clock_shards = p.clock_shards;
     let p2 = p.clone();
     let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
         GsVersion::PureMpi => pure_mpi(ctx, &p2, counters),

@@ -93,6 +93,10 @@ pub struct IfsParams {
     /// `iallreduce` whose engine-driven request overlaps later steps
     /// (see [`crate::apps::gauss_seidel::GsParams::residual_nonblocking`]).
     pub residual_nonblocking: bool,
+    /// Clock lanes the simulated nodes are sharded over (default 1 —
+    /// the classic single-heap engine; results are bit-identical across
+    /// values). See [`crate::rmpi::ClusterConfig::clock_shards`].
+    pub clock_shards: usize,
     pub tracer: Option<Arc<Tracer>>,
     pub deadline: Option<VNanos>,
 }
@@ -121,6 +125,7 @@ impl IfsParams {
             topology: crate::rmpi::TopologyMode::default(),
             residual_every: 0,
             residual_nonblocking: false,
+            clock_shards: 1,
             tracer: None,
             deadline: None,
         }
@@ -198,6 +203,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     cc.topology = p.topology;
     cc.tracer = p.tracer.clone();
     cc.deadline = p.deadline;
+    cc.clock_shards = p.clock_shards;
     let p2 = p.clone();
     let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
         IfsVersion::PureMpi => pure(ctx, &p2, counters),

@@ -1054,19 +1054,25 @@ fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn json_doc(fig: u32, scale: Scale, body: String) -> String {
+/// Wrap one figure's rows in the common document envelope.
+/// `elapsed_host_ns` is the host wall-time the emitter spent producing
+/// the rows (the CI perf-trajectory denominator; satellite of fig19's
+/// simulator-throughput story).
+fn json_doc(fig: u32, scale: Scale, elapsed_host_ns: u64, body: String) -> String {
     let scale = match scale {
         Scale::Quick => "quick",
         Scale::Default => "default",
         Scale::Full => "full",
     };
     format!(
-        "{{\"schema_version\":1,\"fig\":{fig},\"scale\":\"{scale}\",{body}}}\n"
+        "{{\"schema_version\":1,\"fig\":{fig},\"scale\":\"{scale}\",\
+         \"elapsed_host_ns\":{elapsed_host_ns},{body}}}\n"
     )
 }
 
 /// Fig 15 as JSON: `rows[] = {{series, poll_us|null, latency_ns}}`.
 pub fn fig15_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
     let rows: Vec<String> = fig15(scale)
         .into_iter()
         .map(|(series, pi, lat)| {
@@ -1079,12 +1085,14 @@ pub fn fig15_json(scale: Scale) -> String {
             )
         })
         .collect();
-    json_doc(15, scale, format!("\"rows\":[{}]", rows.join(",")))
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(15, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Fig 16 as JSON: `rows[] = {{series, ranks, compute_us|null, vtime_ms,
 /// speedup}}`.
 pub fn fig16_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
     let rows: Vec<String> = fig16(scale)
         .into_iter()
         .map(|(series, ranks, c_us, vtime_ms, speedup)| {
@@ -1100,12 +1108,14 @@ pub fn fig16_json(scale: Scale) -> String {
             )
         })
         .collect();
-    json_doc(16, scale, format!("\"rows\":[{}]", rows.join(",")))
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(16, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Fig 17 as JSON: the topology sweep in `rows[]`, the cache table in
 /// `cache[]`.
 pub fn fig17_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
     let (rows, cache) = fig17(scale);
     let rows: Vec<String> = rows
         .into_iter()
@@ -1131,9 +1141,11 @@ pub fn fig17_json(scale: Scale) -> String {
             )
         })
         .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
     json_doc(
         17,
         scale,
+        elapsed,
         format!("\"rows\":[{}],\"cache\":[{}]", rows.join(","), cache.join(",")),
     )
 }
@@ -1144,6 +1156,7 @@ pub fn fig18_json(
     rx_override: Option<u64>,
     eager_override: Option<usize>,
 ) -> String {
+    let wall = std::time::Instant::now();
     let rows: Vec<String> = fig18(scale, rx_override, eager_override)
         .into_iter()
         .map(|r| {
@@ -1155,7 +1168,159 @@ pub fn fig18_json(
             )
         })
         .collect();
-    json_doc(18, scale, format!("\"rows\":[{}]", rows.join(",")))
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(18, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// One fig19 row: the same deterministic run with the clock sharded
+/// over `shards` lanes.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub nodes: usize,
+    pub shards: usize,
+    /// Virtual makespan — asserted identical across shard counts.
+    pub vtime_ms: f64,
+    /// Host wall-time of the run (the quantity fig19 sweeps).
+    pub host_ms: f64,
+    /// Clock events fired (identical work across shard counts up to
+    /// per-lane deadline flags).
+    pub clock_events: u64,
+    /// Events pushed across lanes (0 at 1 shard).
+    pub cross_shard_events: u64,
+    /// Simulator throughput: clock events per host millisecond.
+    pub events_per_host_ms: f64,
+    /// Host wall-time speed-up vs the 1-lane run of the same shape.
+    pub speedup_vs_1: f64,
+}
+
+/// Fig 19 (paper extension): the parallel discrete-event core — host
+/// wall-time of one fixed Gauss-Seidel run as the clock is sharded over
+/// 1/2/4/8 lanes (clamped to the node count). Every multi-lane run is
+/// asserted bit-identical to the 1-lane run in its full deterministic
+/// projection — checksum, virtual makespan, task and pause counts,
+/// schedule-cache traffic — so the sweep measures host parallelism,
+/// never semantic drift. (Host wall-times are machine-dependent and
+/// noisy at `Quick` scale; the CI job only warns on regressions, see
+/// `scripts/bench_delta.py`.)
+pub fn fig19(scale: Scale) -> Vec<ShardRow> {
+    let (rows_g, block, iters, nodes, cpn): (usize, usize, usize, usize, usize) = match scale {
+        Scale::Quick => (512, 128, 8, 4, 2),
+        Scale::Default => (2048, 256, 16, 8, 4),
+        Scale::Full => (4096, 512, 32, 16, 8),
+    };
+    let mut out = Vec::new();
+    // (checksum bits, vtime, tasks, pauses, cache, host_ns) of the
+    // 1-lane reference.
+    let mut base: Option<(u64, u64, u64, u64, crate::rmpi::SchedCacheStats, u64)> = None;
+    for shards in [1usize, 2, 4, 8] {
+        if shards > nodes {
+            break;
+        }
+        let mut p = GsParams::new(
+            rows_g,
+            rows_g,
+            block,
+            iters,
+            nodes,
+            cpn,
+            GsVersion::InteropNonBlk,
+        );
+        p.compute = Compute::Model;
+        p.clock_shards = shards;
+        p.deadline = Some(ms(600_000));
+        let run = gauss_seidel::run(&p).expect("fig19 run");
+        let s = &run.stats;
+        let host_ns = s.elapsed_host_ns.max(1);
+        match &base {
+            None => {
+                base = Some((
+                    run.checksum.to_bits(),
+                    s.vtime_ns,
+                    s.tasks,
+                    s.pauses,
+                    s.sched_cache,
+                    host_ns,
+                ));
+            }
+            Some((ck, vt, tasks, pauses, cache, _)) => {
+                // The tentpole guarantee: sharding changes host timing
+                // only. Any divergence here is an engine bug, not noise.
+                assert_eq!(run.checksum.to_bits(), *ck, "fig19: checksum diverged at {shards} lanes");
+                assert_eq!(s.vtime_ns, *vt, "fig19: vtime diverged at {shards} lanes");
+                assert_eq!(s.tasks, *tasks, "fig19: task count diverged at {shards} lanes");
+                assert_eq!(s.pauses, *pauses, "fig19: pause count diverged at {shards} lanes");
+                assert_eq!(s.sched_cache, *cache, "fig19: cache traffic diverged at {shards} lanes");
+            }
+        }
+        let base_host = base.as_ref().unwrap().5;
+        out.push(ShardRow {
+            nodes,
+            shards,
+            vtime_ms: s.vtime_ns as f64 / 1e6,
+            host_ms: host_ns as f64 / 1e6,
+            clock_events: s.clock_events,
+            cross_shard_events: s.cross_shard_events,
+            events_per_host_ms: s.clock_events as f64 / (host_ns as f64 / 1e6),
+            speedup_vs_1: base_host as f64 / host_ns as f64,
+        });
+    }
+    out
+}
+
+/// Render the fig19 report table.
+pub fn fig19_report(scale: Scale) -> String {
+    let rows = fig19(scale);
+    let mut out = String::from(
+        "=== Figure 19: sharded simulation clock — host wall-time vs lanes ===\n\
+         (one deterministic Gauss-Seidel run; every row asserted bit-identical\n\
+         to the 1-lane run: checksum, vtime, tasks, pauses, cache traffic)\n",
+    );
+    out.push_str(&format!(
+        "{:<6} {:>7} {:>10} {:>9} {:>12} {:>12} {:>13} {:>8}\n",
+        "nodes", "shards", "vtime_ms", "host_ms", "clock_evts", "cross_shard", "evts/host_ms", "speedup"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<6} {:>7} {:>10.2} {:>9.1} {:>12} {:>12} {:>13.0} {:>8.2}\n",
+            r.nodes,
+            r.shards,
+            r.vtime_ms,
+            r.host_ms,
+            r.clock_events,
+            r.cross_shard_events,
+            r.events_per_host_ms,
+            r.speedup_vs_1
+        ));
+    }
+    out.push_str(
+        "(lanes advance concurrently under conservative lookahead = the\n\
+         inter-node wire latency; merged event order is scheduling-independent)\n",
+    );
+    out
+}
+
+/// Fig 19 as JSON: `rows[] = {{nodes, shards, vtime_ms, host_ms,
+/// clock_events, cross_shard_events, speedup_vs_1}}`.
+pub fn fig19_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
+    let rows: Vec<String> = fig19(scale)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"nodes\":{},\"shards\":{},\"vtime_ms\":{},\"host_ms\":{},\
+                 \"clock_events\":{},\"cross_shard_events\":{},\"speedup_vs_1\":{}}}",
+                r.nodes,
+                r.shards,
+                r.vtime_ms,
+                r.host_ms,
+                r.clock_events,
+                r.cross_shard_events,
+                r.speedup_vs_1
+            )
+        })
+        .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(19, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

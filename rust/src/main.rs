@@ -3,8 +3,8 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension figs 15-18
-//!             into bench_out/; with --json <path> figs 15-18 emit
+//!   figures   regenerate paper figures (8-14) + extension figs 15-19
+//!             into bench_out/; with --json <path> figs 15-19 emit
 //!             the machine-readable document instead (CI perf artifact)
 //!   stalls    collective stall diagnostic on a deliberately skewed run
 //!             (which rank's rounds_advanced holds a collective back)
@@ -19,7 +19,9 @@
 //! the schedule-driven collective engine), and the network-model
 //! overrides `--net-rx <ns>` (per-message ingress-port processing — the
 //! congestion knob) + `--eager <bytes>` (rendezvous threshold), so
-//! congestion regimes are reachable without recompiling. `figures
+//! congestion regimes are reachable without recompiling. Both also take
+//! `--clock-shards N` (parallel simulation lanes; results bit-identical
+//! to 1 — see `crate::sim`). `figures
 //! --fig 18` takes `--net-rx`/`--eager` too (fig 18 then runs at
 //! exactly that point instead of its sweep); the other figures pin
 //! their network models and reject the knobs.
@@ -169,6 +171,7 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.topology = topology_of(&m);
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
+    p.clock_shards = get(&m, "clock-shards", 1usize);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
@@ -240,6 +243,7 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.topology = topology_of(&m);
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
+    p.clock_shards = get(&m, "clock-shards", 1usize);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
@@ -283,8 +287,8 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     }
 }
 
-const KNOWN_FIGS: [&str; 12] =
-    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "all"];
+const KNOWN_FIGS: [&str; 13] =
+    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "all"];
 
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
@@ -297,7 +301,7 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 | all)"
         );
         std::process::exit(2);
     }
@@ -320,9 +324,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "16" => bench::fig16_json(scale),
             "17" => bench::fig17_json(scale),
             "18" => bench::fig18_json(scale, net_rx, net_eager),
+            "19" => bench::fig19_json(scale),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17|18), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18|19), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -373,6 +378,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 println!("{report}");
                 let p = bench::write_output("fig18_incast.txt", &report);
                 println!("fig18 -> {}", p.display());
+            }
+            "19" => {
+                let report = bench::fig19_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig19_clock_shards.txt", &report);
+                println!("fig19 -> {}", p.display());
             }
             other => {
                 let rows = match other {

@@ -163,8 +163,15 @@ impl PollingRegistry {
 /// work — so idle phases cost no clock events and an application with no
 /// progress mechanism still deadlocks detectably (Section 5).
 pub(crate) fn leader_main(rt_weak: Weak<Rt>) {
+    let mut bound = false;
     loop {
         let Some(rt) = rt_weak.upgrade() else { return };
+        if !bound {
+            // Bind to the rank's lane so sleeps/parks debit the counter
+            // `Runtime::new` credited on registration.
+            crate::sim::Clock::bind_lane(rt.cfg.clock_lane);
+            bound = true;
+        }
         if rt.is_shutdown() {
             rt.clock.deregister_thread();
             return;

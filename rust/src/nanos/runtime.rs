@@ -100,6 +100,10 @@ pub struct RuntimeConfig {
     pub costs: RuntimeCosts,
     /// How TAMPI on this runtime is notified of MPI completions.
     pub completion_mode: CompletionMode,
+    /// Clock lane this rank's threads (workers + leader) run under
+    /// (0 on a single-lane clock; set by the universe from its
+    /// node-to-shard partition).
+    pub clock_lane: usize,
 }
 
 impl RuntimeConfig {
@@ -115,6 +119,7 @@ impl RuntimeConfig {
             graph: None,
             costs: RuntimeCosts::zero(),
             completion_mode: CompletionMode::default(),
+            clock_lane: 0,
         }
     }
 }
@@ -199,8 +204,9 @@ impl Runtime {
             let idx = rt.sched.register_initial_worker();
             worker::spawn_worker(rt.clone(), idx);
         }
-        // Polling leader.
-        rt.clock.register_thread();
+        // Polling leader (registered on this rank's clock lane — the
+        // creating thread may run on a different lane, or none).
+        rt.clock.register_thread_on(rt.cfg.clock_lane);
         let weak = Arc::downgrade(&rt);
         std::thread::Builder::new()
             .name(format!("{}-leader", rt.cfg.label))

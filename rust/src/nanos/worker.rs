@@ -49,7 +49,10 @@ pub(crate) fn detach_thread() {
 pub(crate) fn spawn_worker(rt: Arc<Rt>, index: usize) {
     let stack = rt.cfg.worker_stack;
     let name = format!("{}-w{}", rt.cfg.label, index);
-    rt.clock.register_thread();
+    // Register on the rank's lane: substitute workers may be spawned from
+    // threads bound elsewhere, but the credit must land where the new
+    // worker will debit it.
+    rt.clock.register_thread_on(rt.cfg.clock_lane);
     let rt2 = rt.clone();
     std::thread::Builder::new()
         .name(name)
@@ -59,6 +62,7 @@ pub(crate) fn spawn_worker(rt: Arc<Rt>, index: usize) {
 }
 
 fn worker_main(rt: Arc<Rt>, index: usize) {
+    crate::sim::Clock::bind_lane(rt.cfg.clock_lane);
     WORKER_ID.with(|w| *w.borrow_mut() = index);
     CURRENT.with(|c| *c.borrow_mut() = Some((rt.clone(), None)));
     loop {

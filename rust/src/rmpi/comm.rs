@@ -21,6 +21,10 @@ pub(crate) struct UniState {
     pub ports: Ports,
     /// rank -> node id.
     pub node_of: Vec<usize>,
+    /// rank -> clock lane (all zeros on a single-lane clock). Nodes are
+    /// partitioned into contiguous lane blocks, so cross-lane traffic
+    /// is always inter-node (the lookahead precondition).
+    pub lane_of: Vec<usize>,
     /// How the collective schedule compiler sees the node hierarchy.
     pub topology: TopologyMode,
     /// Whether compiled schedules persist in per-communicator caches
@@ -210,6 +214,7 @@ impl Comm {
     /// thread completes it.
     pub(crate) fn mk_req_state(&self) -> Arc<ReqState> {
         let s = Arc::new(ReqState::default());
+        s.set_lane(self.uni.lane_of[self.rank]);
         if let Some(shard) = self.uni.progress.shard_for(self.rank) {
             s.route_through(shard);
         }

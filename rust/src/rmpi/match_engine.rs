@@ -77,6 +77,15 @@ fn matches(psrc: Option<usize>, ptag: Option<i32>, src: usize, tag: i32) -> bool
 /// callback mode zero notification latency. With `rx_ns == 0` the
 /// booking is pre-resolved to the arrival instant, so this is exactly
 /// the pre-port delivery timeline.
+/// On a sharded clock the two completions are routed to their owning
+/// ranks' lanes (`ReqState::lane`), so the wakes stay intra-lane: the
+/// receive completes on the receiver's lane, and a rendezvous sender
+/// completion is pushed into the sender's lane as a cross-shard event —
+/// the zero-latency feedback path whose in-flight window is covered by
+/// a clock feedback obligation (registered at send time in
+/// `Comm::isend_ctx`, released here once the event is in the sender
+/// lane's heap). With a single lane both route inline/at-`ready` on the
+/// one lane, exactly the classic timeline.
 fn complete_at_deadline(
     clock: &Arc<Clock>,
     booking: Booking,
@@ -86,19 +95,44 @@ fn complete_at_deadline(
 ) {
     let clock = clock.clone();
     booking.on_ready(move |ready| {
-        if ready <= clock.now() {
-            req.complete(&clock, Some(status));
-            if let Some(s) = sender {
-                s.complete(&clock, None);
+        // The virtual completion instant: the port deadline, or the
+        // match instant when the receive was posted after the message
+        // was already processed (the caller's lane is then the
+        // receiver's own lane, so `now()` is the match instant).
+        let t_c = ready.max(clock.now());
+        let recv_lane = req.lane();
+        match sender {
+            None => {
+                let c = clock.clone();
+                clock.run_at_on(recv_lane, t_c, move || {
+                    req.complete(&c, Some(status));
+                });
             }
-        } else {
-            let clock2 = clock.clone();
-            clock.call_at(ready, move || {
-                req.complete(&clock2, Some(status));
-                if let Some(s) = sender {
-                    s.complete(&clock2, None);
+            Some(s) if s.lane() == recv_lane => {
+                // Co-located (or unrouted) pair: one event, both
+                // completions at the same instant — the classic shape.
+                let c = clock.clone();
+                clock.run_at_on(recv_lane, t_c, move || {
+                    req.complete(&c, Some(status));
+                    s.complete(&c, None);
+                });
+            }
+            Some(s) => {
+                let send_lane = s.lane();
+                let c = clock.clone();
+                clock.run_at_on(recv_lane, t_c, move || {
+                    req.complete(&c, Some(status));
+                });
+                let c2 = clock.clone();
+                clock.run_at_on(send_lane, t_c, move || {
+                    s.complete(&c2, None);
+                });
+                // The sender-lane event is in its heap: the feedback
+                // obligation registered at send time can be released.
+                if let (Some(r), Some(sn)) = (recv_lane, send_lane) {
+                    clock.end_feedback(r, sn);
                 }
-            });
+            }
         }
     });
 }

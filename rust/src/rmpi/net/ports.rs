@@ -159,6 +159,7 @@ impl Port {
     fn book(
         self: Arc<Self>,
         clock: &Arc<Clock>,
+        lane: usize,
         rx_ns: u64,
         key: MsgKey,
         arrival: VNanos,
@@ -171,7 +172,12 @@ impl Port {
         let b = Booking::pending();
         self.inner.lock().unwrap().pending.insert((arrival, key), b.clone());
         let clock2 = clock.clone();
-        clock.call_at(arrival, move || self.resolve_due(&clock2, rx_ns));
+        // The resolve pass runs on the *destination* rank's clock lane:
+        // its `now()` is then the port owner's virtual time, and the
+        // conservative horizon guarantees every same-instant booking
+        // (cross-lane ones arrive >= send + lookahead) is already
+        // parked when the pass fires.
+        clock.call_at_on(lane, arrival, move || self.resolve_due(&clock2, rx_ns));
         b
     }
 
@@ -206,10 +212,12 @@ pub(crate) struct Ports {
     rx_ns: u64,
     ports: Vec<Arc<Port>>,
     send_seq: Vec<AtomicU64>,
+    /// rank -> clock lane (all zeros on a single-lane clock).
+    lane_of: Vec<usize>,
 }
 
 impl Ports {
-    pub fn new(size: usize, net: &super::NetworkModel) -> Ports {
+    pub fn new(size: usize, net: &super::NetworkModel, lane_of: Vec<usize>) -> Ports {
         // Determinism precondition (see module docs): with rx_ns > 0, a
         // message must arrive strictly after it was booked, so every
         // same-instant booking set is complete when its resolve pass
@@ -219,10 +227,12 @@ impl Ports {
             net.rx_ns == 0 || (net.intra_latency_ns > 0 && net.inter_latency_ns > 0),
             "rx_ns > 0 requires non-zero link latencies for deterministic port order"
         );
+        assert_eq!(lane_of.len(), size, "lane map must cover every rank");
         Ports {
             rx_ns: net.rx_ns,
             ports: (0..size).map(|_| Arc::new(Port::new())).collect(),
             send_seq: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            lane_of,
         }
     }
 
@@ -235,7 +245,9 @@ impl Ports {
     /// must be the current virtual instant and `arrival` the link
     /// model's arrival instant for it.
     pub fn book(&self, dst: usize, clock: &Arc<Clock>, key: MsgKey, arrival: VNanos) -> Booking {
-        self.ports[dst].clone().book(clock, self.rx_ns, key, arrival)
+        self.ports[dst]
+            .clone()
+            .book(clock, self.lane_of[dst], self.rx_ns, key, arrival)
     }
 }
 

@@ -57,6 +57,18 @@ impl Comm {
         // Rendezvous sender requests are owned by (and shard-routed to)
         // the *sending* rank.
         let sender_req: Option<Arc<ReqState>> = if rendezvous {
+            // Cross-lane rendezvous: the sender completion is
+            // zero-latency feedback from the receiver's lane back to
+            // ours at the delivery instant — register the clock
+            // obligation covering it now, while this (active) thread
+            // still pins our lane's lower bound. Released in
+            // `match_engine::complete_at_deadline` once the completion
+            // event is in our lane's heap.
+            let send_lane = self.uni.lane_of[self.rank];
+            let recv_lane = self.uni.lane_of[dst];
+            if send_lane != recv_lane {
+                self.uni.clock.begin_feedback(recv_lane, send_lane);
+            }
             Some(self.mk_req_state())
         } else {
             None

@@ -12,11 +12,14 @@
 //!   operation completes. TAMPI's callback pipeline
 //!   ([`crate::nanos::CompletionMode::Callback`]) is built on this.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::progress::Shard;
 use crate::sim::{Clock, WaitQueue};
+
+/// Sentinel for "no clock lane stamped" (bare requests, unit tests).
+const NO_LANE: usize = usize::MAX;
 
 /// Completion status of a receive (source/tag/len of the matched message).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -30,11 +33,16 @@ pub struct Status {
 /// [`Status`].
 pub(crate) type Continuation = Box<dyn FnOnce(Status) + Send>;
 
-#[derive(Default)]
 pub(crate) struct ReqState {
     completed: AtomicBool,
     waiters: WaitQueue,
     status: Mutex<Status>,
+    /// Clock lane of the request's *owning* rank (the rank whose thread
+    /// may park on it), stamped once at creation by
+    /// [`crate::rmpi::Comm`]. Completions are routed to this lane so
+    /// that every wake stays intra-lane on a sharded clock. `NO_LANE`
+    /// (bare requests, unit tests) means "whatever lane completes it".
+    lane: AtomicUsize,
     /// Continuations to fire at completion time. Race-free protocol:
     /// `attach` pushes only while holding this lock *and* observing
     /// `completed == false`; `complete` stores `completed = true` before
@@ -50,7 +58,33 @@ pub(crate) struct ReqState {
     shard: Mutex<Option<Arc<Shard>>>,
 }
 
+impl Default for ReqState {
+    fn default() -> Self {
+        ReqState {
+            completed: AtomicBool::new(false),
+            waiters: WaitQueue::new(),
+            status: Mutex::new(Status::default()),
+            lane: AtomicUsize::new(NO_LANE),
+            on_complete: Mutex::new(Vec::new()),
+            shard: Mutex::new(None),
+        }
+    }
+}
+
 impl ReqState {
+    /// Stamp the owning rank's clock lane (once, at creation).
+    pub(crate) fn set_lane(&self, lane: usize) {
+        self.lane.store(lane, Ordering::Release);
+    }
+
+    /// Clock lane of the owning rank, if stamped.
+    pub(crate) fn lane(&self) -> Option<usize> {
+        match self.lane.load(Ordering::Acquire) {
+            NO_LANE => None,
+            l => Some(l),
+        }
+    }
+
     /// Mark the operation complete: publish the status, wake parked
     /// waiters, and fire attached continuations. Called from the thread
     /// that delivers the completion — a rank main, a worker, or the clock

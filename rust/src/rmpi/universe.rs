@@ -53,6 +53,13 @@ pub struct ClusterConfig {
     /// (default `true`; `false` recompiles every call — the cold
     /// baseline of fig17's cache sweep).
     pub sched_cache: bool,
+    /// Clock lanes the simulated nodes are sharded over (default 1 —
+    /// the classic single-heap engine). Nodes are partitioned into
+    /// contiguous blocks, one lane per block, synchronized by
+    /// conservative lookahead (`NetworkModel::inter_latency_ns`);
+    /// results are bit-identical to 1 lane at equal seeds. Clamped to
+    /// the node count. See [`crate::sim`].
+    pub clock_shards: usize,
 }
 
 impl ClusterConfig {
@@ -73,7 +80,14 @@ impl ClusterConfig {
             delivery_mode: DeliveryMode::default(),
             topology: TopologyMode::default(),
             sched_cache: true,
+            clock_shards: 1,
         }
+    }
+
+    /// Builder-style clock-shard override (bench/test convenience).
+    pub fn with_clock_shards(mut self, shards: usize) -> Self {
+        self.clock_shards = shards;
+        self
     }
 
     /// Builder-style completion-mode override (bench/test convenience).
@@ -151,6 +165,16 @@ pub struct RunStats {
     /// same-shape collective should show `hits >= calls - 1` per rank
     /// (the MPI persistent-collective win; see `rmpi::topology`).
     pub sched_cache: SchedCacheStats,
+    /// Clock events fired across all lanes (simulator throughput).
+    pub clock_events: u64,
+    /// Same-instant clock batches fired across all lanes.
+    pub clock_batches: u64,
+    /// Events pushed into a clock lane other than the pusher's own
+    /// (0 on a single-lane clock).
+    pub cross_shard_events: u64,
+    /// Host wall-clock time of the run in ns (setup through clock
+    /// teardown) — the denominator of simulator throughput.
+    pub elapsed_host_ns: u64,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
 }
@@ -224,18 +248,26 @@ impl Universe {
     {
         let size = cfg.size();
         assert!(size > 0, "empty cluster");
-        let (clock, clock_handle) = Clock::start();
+        let host_start = std::time::Instant::now();
+        // Shard the clock over contiguous node blocks: cross-lane traffic
+        // is then always inter-node, so the conservative lookahead is the
+        // inter-node wire latency (see `crate::sim` module docs).
+        let shards = cfg.clock_shards.clamp(1, cfg.nodes);
+        let (clock, clock_handles) = Clock::start_sharded(shards, cfg.net.inter_latency_ns);
         clock.set_panic_on_deadlock(false);
         // Keep the clock pinned during setup: workers park before any rank
         // thread registers, which must not read as quiescence/deadlock.
         let setup_hold = clock.hold();
 
         let node_of: Vec<usize> = (0..size).map(|r| r / cfg.ranks_per_node).collect();
+        let lane_of: Vec<usize> =
+            (0..size).map(|r| node_of[r] * shards / cfg.nodes).collect();
         let uni = Arc::new(UniState {
             clock: clock.clone(),
             net: cfg.net,
-            ports: crate::rmpi::net::Ports::new(size, &cfg.net),
+            ports: crate::rmpi::net::Ports::new(size, &cfg.net, lane_of.clone()),
             node_of,
+            lane_of: lane_of.clone(),
             topology: cfg.topology,
             sched_cache_on: cfg.sched_cache,
             sched_hits: AtomicU64::new(0),
@@ -262,6 +294,7 @@ impl Universe {
                     rc.poll_interval = cfg.poll_interval;
                     rc.label = format!("r{r}");
                     rc.rank = r as u32;
+                    rc.clock_lane = lane_of[r];
                     rc.worker_stack = cfg.worker_stack;
                     rc.costs = cfg.costs;
                     rc.completion_mode = cfg.completion_mode;
@@ -280,10 +313,15 @@ impl Universe {
         let f = Arc::new(f);
 
         if let Some(dl) = cfg.deadline {
-            let t = timed_out.clone();
-            clock.call_at(dl, move || {
-                t.store(true, Ordering::Release);
-            });
+            // One flag event per lane: whichever lane's virtual time hits
+            // the deadline first trips the (real-time-polled) flag, even
+            // when the livelock is confined to a single lane.
+            for lane in 0..clock.num_lanes() {
+                let t = timed_out.clone();
+                clock.call_at_on(lane, dl, move || {
+                    t.store(true, Ordering::Release);
+                });
+            }
         }
 
         let mut handles = Vec::with_capacity(size);
@@ -301,12 +339,17 @@ impl Universe {
             let finish_vtime = finish_vtime.clone();
             let clock2 = clock.clone();
             let counters2 = counters.clone();
-            clock.register_thread(); // activity credit for the new thread
+            let lane = lane_of[rank];
+            // Activity credit for the new thread, on the lane it will run
+            // under (the credit and the thread's debits must hit the same
+            // lane's counter).
+            clock.register_thread_on(lane);
             let panics2 = panics.clone();
             let h = std::thread::Builder::new()
                 .name(format!("rank{rank}"))
                 .stack_size(cfg.rank_stack)
                 .spawn(move || {
+                    Clock::bind_lane(lane);
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         if let Some(rt) = &ctx.rt {
                             rt.attach();
@@ -368,7 +411,7 @@ impl Universe {
                 if done.load(Ordering::Acquire) == size {
                     break Ok(());
                 }
-                break Err(RunError::Deadlock { vtime_ns: clock.now() });
+                break Err(RunError::Deadlock { vtime_ns: clock.max_now() });
             }
             std::thread::sleep(Duration::from_micros(500));
         };
@@ -382,7 +425,9 @@ impl Universe {
                     rt.shutdown();
                 }
                 clock.stop();
-                clock_handle.join().expect("clock thread panicked");
+                for h in clock_handles {
+                    h.join().expect("clock thread panicked");
+                }
                 // Sample counters only after the clock thread exited:
                 // its stop-drain may fire final-instant shard drains
                 // (observer continuations only — every task settled
@@ -408,6 +453,7 @@ impl Universe {
                 }
                 let counters = counters.0.lock().unwrap().clone();
                 let pstats = uni.progress.stats();
+                let cc = clock.counters();
                 Ok(RunStats {
                     vtime_ns: finish_vtime.load(Ordering::Acquire),
                     tasks,
@@ -424,6 +470,10 @@ impl Universe {
                         hits: uni.sched_hits.load(Ordering::Relaxed),
                         misses: uni.sched_misses.load(Ordering::Relaxed),
                     },
+                    clock_events: cc.events,
+                    clock_batches: cc.batches,
+                    cross_shard_events: cc.cross_lane,
+                    elapsed_host_ns: host_start.elapsed().as_nanos() as u64,
                     counters,
                 })
             }

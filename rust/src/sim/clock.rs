@@ -1,16 +1,81 @@
-//! The virtual clock: quiescence-driven discrete-event time.
+//! The virtual clock: quiescence-driven discrete-event time, sharded
+//! into per-lane event heaps synchronized by conservative lookahead.
+//!
+//! ## One lane (the classic engine)
+//!
+//! With a single lane ([`Clock::start`]) this is the original engine:
+//! one event heap, one driver thread, and the quiescence rule — the
+//! driver fires the earliest pending batch only when every registered
+//! thread is passive (`active == 0`).
+//!
+//! ## Many lanes (conservative PDES)
+//!
+//! [`Clock::start_sharded`] splits the heap into `n` *lanes* (one per
+//! group of simulated nodes), each with its own heap, quiescence
+//! counter, and driver thread. Lanes synchronize with classic
+//! conservative lookahead (Chandy–Misra–Bryant): every lane publishes a
+//! *lower bound* `lb` — a promise that it will never create another
+//! event before `lb` — and a quiescent lane may fire its head batch at
+//! time `t` only when, for every other lane `s`,
+//!
+//! ```text
+//! t < lb[s] + L          (L = lookahead: min cross-lane delivery latency)
+//! ```
+//!
+//! The inequality is strict: an event from `s` may land exactly at
+//! `lb[s] + L`, and same-instant cross-lane arrivals must already be in
+//! the heap (or parked on their port) before the instant fires — that is
+//! what keeps port resolve passes complete and deadline assignment a
+//! pure function of virtual history (see `rmpi::net::ports`).
+//!
+//! `lb` maintenance is the safety core:
+//! * a push into a lane *lowers* its `lb` under the lane lock, so a
+//!   pending early event is never hidden from peers;
+//! * the driver *raises* `lb` only while holding the lock at
+//!   `active == 0` (to the heap head, or `u64::MAX` when empty) — at
+//!   that point no thread of the lane can create earlier work;
+//! * while a batch at `t` fires, `lb` stays at `t` (the firing actions
+//!   may push same-instant follow-ups).
+//!
+//! **Feedback obligations.** One event class is faster than the wire:
+//! a rendezvous *sender* completion is zero-latency feedback from the
+//! receiver's lane back to the sender's lane at the delivery instant.
+//! Each such in-flight send registers an obligation
+//! ([`Clock::begin_feedback`]); while `obligations[from → to] > 0`,
+//! lane `to` drops the `+ L` term for lane `from` and bounds itself by
+//! `lb[from]` alone. The obligation is released only after the
+//! completion event is pushed into the sender's heap (where the head
+//! accounts for it).
+//!
+//! **Invariant: wakes are intra-lane.** [`Clock::wake`] credits the
+//! lane the token parked on; all completion events are routed to the
+//! owning rank's lane precisely so that every wake happens on the lane
+//! of the woken thread. Cross-lane communication goes through events
+//! ([`Clock::call_at_on`]) only.
+//!
+//! Deadlock: a lane that is quiescent with an empty heap verifies the
+//! whole cluster by locking every lane in index order — with all locks
+//! held, no push or wake can be in flight, so "all lanes passive, all
+//! heaps empty, none firing, threads registered" is a true global
+//! deadlock (the paper's Section 5 scenario).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::VNanos;
 
 thread_local! {
     /// Accrued virtual CPU cost not yet turned into a clock event.
     static DEBT: std::cell::Cell<VNanos> = const { std::cell::Cell::new(0) };
+    /// Clock lane the current thread belongs to (0 unless bound).
+    static LANE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+    /// Reusable one-shot token for `work_exact` (hot-path alloc saver).
+    static WORK_TOKEN: std::cell::RefCell<Option<Arc<Token>>> =
+        const { std::cell::RefCell::new(None) };
 }
 
 /// One-shot wake token a thread parks on.
@@ -27,6 +92,9 @@ struct TokState {
     woken: bool,
     /// True while the owning thread has decremented `active` and parked.
     passive: bool,
+    /// Lane whose `active` count the parked thread came off of (valid
+    /// while `passive`); the waker credits this lane back.
+    lane: usize,
 }
 
 impl Token {
@@ -41,21 +109,24 @@ impl Default for Token {
     }
 }
 
-/// RAII guard from [`Clock::hold`]: releases its activity credit on drop.
+/// RAII guard from [`Clock::hold`]: releases its activity credit (one
+/// per lane) on drop.
 pub struct ClockHold {
     clock: Arc<Clock>,
 }
 
 impl Drop for ClockHold {
     fn drop(&mut self) {
-        self.clock.enter_passive();
+        for lane in 0..self.clock.lanes.len() {
+            self.clock.enter_passive(lane);
+        }
     }
 }
 
 enum Action {
     Wake(Arc<Token>),
-    /// Runs on the clock thread at quiescence; must not block on sim
-    /// primitives.  Used for network delivery completions.
+    /// Runs on the lane's driver thread at quiescence; must not block on
+    /// sim primitives.  Used for network delivery completions.
     Call(Box<dyn FnOnce() + Send>),
 }
 
@@ -82,31 +153,32 @@ impl Ord for EventEntry {
     }
 }
 
-struct ClockState {
+struct LaneState {
     events: BinaryHeap<Reverse<EventEntry>>,
     seq: u64,
     stopped: bool,
 }
 
-/// Virtual clock shared by every thread of a simulated cluster.
-pub struct Clock {
-    state: Mutex<ClockState>,
+/// One shard of virtual time: its own heap, quiescence counter, and
+/// published lower bound.
+struct Lane {
+    state: Mutex<LaneState>,
     tick_cv: Condvar,
     now: AtomicU64,
-    /// Threads currently running or runnable (see module docs).
+    /// Threads of this lane currently running or runnable.
     active: AtomicUsize,
-    /// Threads registered with the clock (diagnostics only).
-    registered: AtomicUsize,
-    /// Set when quiescence is reached with no pending events.
-    deadlocked: AtomicBool,
-    panic_on_deadlock: AtomicBool,
+    /// Published promise: this lane will never create an event before
+    /// `lb`. Lowered under the lane lock by pushes; raised only by the
+    /// driver at quiescence. `u64::MAX` = idle with nothing scheduled.
+    lb: AtomicU64,
+    /// True while the driver fires a batch (its actions may still push).
+    firing: AtomicBool,
 }
 
-impl Clock {
-    /// Create the clock and start its driver thread.
-    pub fn start() -> (Arc<Clock>, JoinHandle<()>) {
-        let clock = Arc::new(Clock {
-            state: Mutex::new(ClockState {
+impl Lane {
+    fn new() -> Lane {
+        Lane {
+            state: Mutex::new(LaneState {
                 events: BinaryHeap::new(),
                 seq: 0,
                 stopped: false,
@@ -114,21 +186,130 @@ impl Clock {
             tick_cv: Condvar::new(),
             now: AtomicU64::new(0),
             active: AtomicUsize::new(0),
+            lb: AtomicU64::new(0),
+            firing: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Clock throughput counters (see `RunStats` plumbing in `rmpi`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClockCounters {
+    /// Events fired across all lanes.
+    pub events: u64,
+    /// Same-instant batches fired across all lanes.
+    pub batches: u64,
+    /// Events pushed into a lane other than the pusher's own.
+    pub cross_lane: u64,
+    /// `work`/`sleep` advances that reused the thread-local token
+    /// instead of allocating a fresh one.
+    pub work_tokens_reused: u64,
+}
+
+/// Virtual clock shared by every thread of a simulated cluster.
+pub struct Clock {
+    lanes: Vec<Lane>,
+    /// Conservative lookahead in ns: minimum cross-lane delivery
+    /// latency (0 with a single lane, where it is never consulted).
+    lookahead: VNanos,
+    /// Threads registered with the clock (diagnostics + deadlock gate).
+    registered: AtomicUsize,
+    /// Set when quiescence is reached with no pending events.
+    deadlocked: AtomicBool,
+    panic_on_deadlock: AtomicBool,
+    /// Feedback-obligation matrix, `[from_lane * n + to_lane]`: while
+    /// an entry is non-zero, lane `to` bounds itself by `lb[from]`
+    /// without the `+ lookahead` term (see module docs).
+    obligations: Vec<AtomicU64>,
+    n_events: AtomicU64,
+    n_batches: AtomicU64,
+    n_cross: AtomicU64,
+    n_token_reuse: AtomicU64,
+}
+
+impl Clock {
+    /// Create a single-lane clock and start its driver thread (the
+    /// classic engine; every existing caller goes through here).
+    pub fn start() -> (Arc<Clock>, JoinHandle<()>) {
+        let (clock, mut handles) = Self::start_sharded(1, 0);
+        (clock, handles.pop().expect("one driver"))
+    }
+
+    /// Create a clock with `lanes` shards of virtual time and start one
+    /// driver thread per lane. `lookahead` is the minimum cross-lane
+    /// delivery latency in virtual ns and must be non-zero when
+    /// `lanes > 1` (a zero-latency network cannot be sharded
+    /// conservatively).
+    pub fn start_sharded(lanes: usize, lookahead: VNanos) -> (Arc<Clock>, Vec<JoinHandle<()>>) {
+        assert!(lanes >= 1, "need at least one clock lane");
+        assert!(
+            lanes == 1 || lookahead > 0,
+            "clock sharding requires a non-zero lookahead (min cross-lane latency)"
+        );
+        let clock = Arc::new(Clock {
+            lanes: (0..lanes).map(|_| Lane::new()).collect(),
+            lookahead,
             registered: AtomicUsize::new(0),
             deadlocked: AtomicBool::new(false),
             panic_on_deadlock: AtomicBool::new(true),
+            obligations: (0..lanes * lanes).map(|_| AtomicU64::new(0)).collect(),
+            n_events: AtomicU64::new(0),
+            n_batches: AtomicU64::new(0),
+            n_cross: AtomicU64::new(0),
+            n_token_reuse: AtomicU64::new(0),
         });
-        let c = clock.clone();
-        let handle = std::thread::Builder::new()
-            .name("sim-clock".into())
-            .spawn(move || c.run())
-            .expect("spawn clock thread");
-        (clock, handle)
+        let handles = (0..lanes)
+            .map(|i| {
+                let c = clock.clone();
+                let name = if lanes == 1 {
+                    "sim-clock".to_string()
+                } else {
+                    format!("sim-clock-{i}")
+                };
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || c.run(i))
+                    .expect("spawn clock thread")
+            })
+            .collect();
+        (clock, handles)
     }
 
-    /// Current virtual time in ns.
+    /// Number of clock lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Bind the calling thread to a clock lane. Every simulated thread
+    /// of a multi-lane clock must bind before touching the clock; lane
+    /// 0 is the default for unbound threads (and the only lane of a
+    /// single-lane clock).
+    pub fn bind_lane(lane: usize) {
+        LANE.with(|l| l.set(lane));
+    }
+
+    /// Lane the calling thread is bound to.
+    pub fn current_lane() -> usize {
+        LANE.with(|l| l.get())
+    }
+
+    fn lane_of_caller(&self) -> usize {
+        Self::current_lane().min(self.lanes.len() - 1)
+    }
+
+    /// Current virtual time of the calling thread's lane, in ns.
     pub fn now(&self) -> VNanos {
-        self.now.load(Ordering::Acquire)
+        self.lanes[self.lane_of_caller()].now.load(Ordering::Acquire)
+    }
+
+    /// Maximum virtual time over all lanes (orchestrator diagnostics;
+    /// equals [`Clock::now`] on a single-lane clock).
+    pub fn max_now(&self) -> VNanos {
+        self.lanes
+            .iter()
+            .map(|l| l.now.load(Ordering::Acquire))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Whether a global deadlock was detected.
@@ -141,44 +322,73 @@ impl Clock {
         self.panic_on_deadlock.store(panic, Ordering::Release);
     }
 
-    /// A thread joins the simulation (it is active from now on).
+    /// Snapshot of the clock throughput counters.
+    pub fn counters(&self) -> ClockCounters {
+        ClockCounters {
+            events: self.n_events.load(Ordering::Relaxed),
+            batches: self.n_batches.load(Ordering::Relaxed),
+            cross_lane: self.n_cross.load(Ordering::Relaxed),
+            work_tokens_reused: self.n_token_reuse.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A thread joins the simulation on the caller's lane.
     pub fn register_thread(&self) {
+        self.register_thread_on(Self::current_lane());
+    }
+
+    /// A thread joins the simulation on `lane` (it is active from now
+    /// on). Used by spawners that pre-register a child thread before it
+    /// binds its own lane; the child must [`Clock::bind_lane`] to the
+    /// same lane. Must not be called while the lane could be quiescent
+    /// (the spawner is itself active on some lane, or holds
+    /// [`Clock::hold`]).
+    pub fn register_thread_on(&self, lane: usize) {
         self.registered.fetch_add(1, Ordering::AcqRel);
-        self.active.fetch_add(1, Ordering::AcqRel);
+        self.lanes[lane.min(self.lanes.len() - 1)]
+            .active
+            .fetch_add(1, Ordering::AcqRel);
     }
 
     /// A thread leaves the simulation for good.
     pub fn deregister_thread(&self) {
         self.registered.fetch_sub(1, Ordering::AcqRel);
-        self.enter_passive();
+        self.enter_passive(self.lane_of_caller());
     }
 
-    /// Keep the clock from advancing (and from declaring deadlock) while
-    /// an orchestrating thread is still wiring the simulation up: workers
-    /// may already be parked before any registered thread exists, which
-    /// would otherwise look like quiescence.
+    /// Keep every lane from advancing (and from declaring deadlock)
+    /// while an orchestrating thread is still wiring the simulation up:
+    /// workers may already be parked before any registered thread
+    /// exists, which would otherwise look like quiescence.
     pub fn hold(self: &Arc<Self>) -> ClockHold {
-        self.active.fetch_add(1, Ordering::AcqRel);
+        for lane in &self.lanes {
+            lane.active.fetch_add(1, Ordering::AcqRel);
+        }
         ClockHold { clock: self.clone() }
     }
 
-    /// Stop the clock thread (call after all sim threads exited/parked).
+    /// Stop every lane driver (call after all sim threads exited/parked).
     pub fn stop(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.stopped = true;
-        self.tick_cv.notify_all();
-    }
-
-    fn enter_passive(&self) {
-        if self.active.fetch_sub(1, Ordering::AcqRel) == 1 {
-            // Possibly quiescent: nudge the clock thread. Lock + notify so
-            // the wake-up cannot be missed between its check and wait.
-            let _g = self.state.lock().unwrap();
-            self.tick_cv.notify_all();
+        for lane in &self.lanes {
+            let mut st = lane.state.lock().unwrap();
+            st.stopped = true;
+            lane.tick_cv.notify_all();
         }
     }
 
-    /// Wake a token (activity transfer: the waker credits the wakee).
+    fn enter_passive(&self, lane_idx: usize) {
+        let lane = &self.lanes[lane_idx];
+        if lane.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Possibly quiescent: nudge the lane driver. Lock + notify so
+            // the wake-up cannot be missed between its check and wait.
+            let _g = lane.state.lock().unwrap();
+            lane.tick_cv.notify_all();
+        }
+    }
+
+    /// Wake a token (activity transfer: the waker credits the wakee's
+    /// lane). Wakes must be intra-lane on a multi-lane clock — route
+    /// cross-lane completions through [`Clock::call_at_on`] instead.
     pub fn wake(&self, token: &Token) {
         let mut st = token.state.lock().unwrap();
         if st.woken {
@@ -186,48 +396,190 @@ impl Clock {
         }
         st.woken = true;
         if st.passive {
-            self.active.fetch_add(1, Ordering::AcqRel);
+            self.lanes[st.lane.min(self.lanes.len() - 1)]
+                .active
+                .fetch_add(1, Ordering::AcqRel);
         }
         token.cv.notify_one();
     }
 
     /// Park until the token is woken. The caller must be an active,
-    /// registered sim thread.
+    /// registered sim thread on its bound lane.
     pub fn passive_wait(&self, token: &Token) {
+        let lane = self.lane_of_caller();
         let mut st = token.state.lock().unwrap();
         if st.woken {
             return; // fast path: never went passive, no accounting
         }
         st.passive = true;
+        st.lane = lane;
         drop(st);
-        self.enter_passive();
+        self.enter_passive(lane);
         let mut st = token.state.lock().unwrap();
         while !st.woken {
             st = token.cv.wait(st).unwrap();
         }
         st.passive = false;
-        // The waker incremented `active` on our behalf.
+        // The waker incremented our lane's `active` on our behalf.
     }
 
-    /// Schedule `token` to be woken at absolute virtual time `at`.
+    /// Schedule `token` to be woken at absolute virtual time `at` (on
+    /// the caller's lane).
     pub fn schedule_wake(&self, at: VNanos, token: Arc<Token>) {
-        self.push_event(at, Action::Wake(token));
+        self.push_event_on(self.lane_of_caller(), at, Action::Wake(token));
     }
 
-    /// Schedule `f` to run on the clock thread at virtual time `at`.
-    /// `f` must not block on sim primitives (it may call [`Clock::wake`]).
+    /// Schedule `f` to run on the caller's lane driver at virtual time
+    /// `at`. `f` must not block on sim primitives (it may call
+    /// [`Clock::wake`]).
     pub fn call_at(&self, at: VNanos, f: impl FnOnce() + Send + 'static) {
-        self.push_event(at, Action::Call(Box::new(f)));
+        self.push_event_on(self.lane_of_caller(), at, Action::Call(Box::new(f)));
     }
 
-    fn push_event(&self, at: VNanos, action: Action) {
-        let mut st = self.state.lock().unwrap();
+    /// Schedule `f` to run on `lane`'s driver at virtual time `at` (the
+    /// cross-shard mailbox: deliveries land on the owning rank's lane).
+    pub fn call_at_on(&self, lane: usize, at: VNanos, f: impl FnOnce() + Send + 'static) {
+        self.push_event_on(lane, at, Action::Call(Box::new(f)));
+    }
+
+    /// Run `f` at virtual time `at` on `lane` (caller's lane if `None`):
+    /// inline when the caller is already on that lane and `at` has
+    /// passed, else as a scheduled event. The completion-delivery shape
+    /// of `rmpi::match_engine`.
+    pub fn run_at_on(&self, lane: Option<usize>, at: VNanos, f: impl FnOnce() + Send + 'static) {
+        let cur = self.lane_of_caller();
+        let target = lane.unwrap_or(cur).min(self.lanes.len() - 1);
+        if target == cur && at <= self.now() {
+            f();
+        } else {
+            self.push_event_on(target, at, Action::Call(Box::new(f)));
+        }
+    }
+
+    /// Register an in-flight zero-latency feedback path from lane
+    /// `from` into lane `to` (a rendezvous sender completion): until
+    /// released, lane `to` bounds itself by `lb[from]` without the
+    /// lookahead term. Call while the sender's thread is still active
+    /// on lane `to`.
+    pub fn begin_feedback(&self, from: usize, to: usize) {
+        let n = self.lanes.len();
+        if n == 1 || from == to {
+            return;
+        }
+        self.obligations[from * n + to].fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Release a feedback obligation. Call only after the completion
+    /// event was pushed into lane `to`'s heap (the head then accounts
+    /// for it).
+    pub fn end_feedback(&self, from: usize, to: usize) {
+        let n = self.lanes.len();
+        if n == 1 || from == to {
+            return;
+        }
+        let prev = self.obligations[from * n + to].fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "feedback obligation released without begin");
+        // The bound for `to` just rose from lb[from] to lb[from] + L:
+        // its driver may now be able to advance.
+        let lane = &self.lanes[to];
+        let _g = lane.state.lock().unwrap();
+        lane.tick_cv.notify_all();
+    }
+
+    fn push_event_on(&self, lane_idx: usize, at: VNanos, action: Action) {
+        let lane_idx = lane_idx.min(self.lanes.len() - 1);
+        if lane_idx != Self::current_lane() {
+            self.n_cross.fetch_add(1, Ordering::Relaxed);
+        }
+        let lane = &self.lanes[lane_idx];
+        let mut st = lane.state.lock().unwrap();
         let seq = st.seq;
         st.seq += 1;
-        let at = at.max(self.now());
+        let at = at.max(lane.now.load(Ordering::Acquire));
+        let earlier_head = st.events.peek().map_or(true, |Reverse(h)| at < h.at);
         st.events.push(Reverse(EventEntry { at, seq, action }));
-        // A new event may unblock a quiescent clock.
-        self.tick_cv.notify_all();
+        // Safety-critical lb maintenance: a pending event must never sit
+        // below the lane's published lower bound (peers advance to
+        // lb + lookahead). All lb writes happen under the lane lock.
+        if at < lane.lb.load(Ordering::Acquire) {
+            lane.lb.store(at, Ordering::Release);
+        }
+        // Only notify when the driver may actually be waiting: it waits
+        // either quiescent (for any event / horizon change) or not at
+        // all while threads are active — in which case a push that does
+        // not improve the head cannot unblock anything.
+        let quiescent = lane.active.load(Ordering::Acquire) == 0;
+        if quiescent || earlier_head {
+            lane.tick_cv.notify_all();
+        }
+    }
+
+    /// May this lane fire its head batch at `t` without risking an
+    /// earlier cross-lane arrival? (Strict bound; see module docs.)
+    fn horizon_allows(&self, me: usize, t: VNanos) -> bool {
+        let n = self.lanes.len();
+        for s in 0..n {
+            if s == me {
+                continue;
+            }
+            let lb = self.lanes[s].lb.load(Ordering::Acquire);
+            let bound = if self.obligations[s * n + me].load(Ordering::Acquire) > 0 {
+                // Zero-latency feedback pending: `s` may push at exactly
+                // its own position, never below it, so `t == lb[s]` is
+                // safe (a same-instant arrival lands in a later batch at
+                // the same instant, as in the single-lane engine) —
+                // and non-strict here keeps mutually-obligated lanes
+                // with equal heads from deadlocking on each other.
+                lb.saturating_add(1)
+            } else {
+                lb.saturating_add(self.lookahead)
+            };
+            if t >= bound {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Nudge every other lane driver: this lane's published bound rose.
+    fn notify_peers(&self, me: usize) {
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if i == me {
+                continue;
+            }
+            let _g = lane.state.lock().unwrap();
+            lane.tick_cv.notify_all();
+        }
+    }
+
+    /// Global deadlock test: lock every lane in index order (pushes and
+    /// wakes are then excluded — every waker is an active thread or a
+    /// firing driver) and verify total quiescence.
+    fn check_global_deadlock(&self) -> bool {
+        let guards: Vec<_> = self.lanes.iter().map(|l| l.state.lock().unwrap()).collect();
+        for (lane, g) in self.lanes.iter().zip(guards.iter()) {
+            if lane.firing.load(Ordering::Acquire)
+                || lane.active.load(Ordering::Acquire) != 0
+                || !g.events.is_empty()
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn declare_deadlock(&self) {
+        self.deadlocked.store(true, Ordering::Release);
+        if self.panic_on_deadlock.load(Ordering::Acquire) {
+            panic!(
+                "sim::Clock deadlock: {} registered threads are all \
+                 passive with no pending events (t={} ns). This is \
+                 the Section-5 scenario: blocking operations inside \
+                 tasks with no progress mechanism.",
+                self.registered.load(Ordering::Acquire),
+                self.max_now()
+            );
+        }
     }
 
     /// Record `ns` of virtual CPU cost for the calling thread without
@@ -264,7 +616,28 @@ impl Clock {
         if d == 0 {
             return;
         }
-        let token = Token::new();
+        // Hot path: one `work` per task body / debt flush. Reuse a
+        // thread-local token instead of allocating a fresh Arc<Token>
+        // per advance; the token is strictly thread-owned (scheduled,
+        // consumed by the driver's wake, then reset here).
+        let token = WORK_TOKEN.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            match &*slot {
+                Some(tok) => {
+                    let mut st = tok.state.lock().unwrap();
+                    debug_assert!(!st.passive, "work token reused while parked");
+                    st.woken = false;
+                    drop(st);
+                    self.n_token_reuse.fetch_add(1, Ordering::Relaxed);
+                    tok.clone()
+                }
+                None => {
+                    let tok = Token::new();
+                    *slot = Some(tok.clone());
+                    tok
+                }
+            }
+        });
         self.schedule_wake(self.now() + d, token.clone());
         self.passive_wait(&token);
     }
@@ -274,9 +647,12 @@ impl Clock {
         self.work(d);
     }
 
-    /// Clock driver loop.
-    fn run(&self) {
-        let mut st = self.state.lock().unwrap();
+    /// Driver loop of one lane.
+    fn run(&self, idx: usize) {
+        Self::bind_lane(idx);
+        let multi = self.lanes.len() > 1;
+        let lane = &self.lanes[idx];
+        let mut st = lane.state.lock().unwrap();
         loop {
             if st.stopped {
                 // Fire actions already due at the current instant before
@@ -284,7 +660,7 @@ impl Clock {
                 // final instant): `stop` may race the last quiescence
                 // pass, and a straggler continuation must not be lost.
                 // Future-time events are still discarded, as before.
-                let now = self.now();
+                let now = lane.now.load(Ordering::Acquire);
                 let mut due = Vec::new();
                 while let Some(Reverse(e)) = st.events.peek() {
                     if e.at > now {
@@ -296,57 +672,116 @@ impl Clock {
                     return;
                 }
                 drop(st);
+                self.n_events.fetch_add(due.len() as u64, Ordering::Relaxed);
+                self.n_batches.fetch_add(1, Ordering::Relaxed);
                 for e in due {
                     match e.action {
                         Action::Wake(tok) => self.wake(&tok),
                         Action::Call(f) => f(),
                     }
                 }
-                st = self.state.lock().unwrap();
+                st = lane.state.lock().unwrap();
                 continue;
             }
-            if self.active.load(Ordering::Acquire) == 0 {
-                // Quiescent. Fire the earliest batch or report deadlock.
+            if lane.active.load(Ordering::Acquire) == 0 {
+                // Quiescent: publish the tightest sound bound, then fire
+                // the earliest batch if the cross-lane horizon allows.
                 if let Some(Reverse(head)) = st.events.peek() {
                     let t = head.at;
-                    self.now.store(t, Ordering::Release);
-                    let mut batch = Vec::new();
-                    while let Some(Reverse(e)) = st.events.peek() {
-                        if e.at > t {
-                            break;
+                    let prev_lb = lane.lb.load(Ordering::Acquire);
+                    if t > prev_lb {
+                        // Safe to raise: no thread of this lane can run
+                        // before the head fires (active == 0 under lock).
+                        lane.lb.store(t, Ordering::Release);
+                    }
+                    if !multi || self.horizon_allows(idx, t) {
+                        lane.now.store(t, Ordering::Release);
+                        // lb stays at t while the batch fires: its
+                        // actions may push same-instant follow-ups.
+                        lane.firing.store(true, Ordering::Release);
+                        let mut batch = Vec::new();
+                        while let Some(Reverse(e)) = st.events.peek() {
+                            if e.at > t {
+                                break;
+                            }
+                            batch.push(st.events.pop().unwrap().0);
                         }
-                        batch.push(st.events.pop().unwrap().0);
+                        drop(st);
+                        self.n_events.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                        self.n_batches.fetch_add(1, Ordering::Relaxed);
+                        for e in batch {
+                            match e.action {
+                                Action::Wake(tok) => self.wake(&tok),
+                                Action::Call(f) => f(),
+                            }
+                        }
+                        lane.firing.store(false, Ordering::Release);
+                        st = lane.state.lock().unwrap();
+                        continue;
                     }
-                    drop(st);
-                    for e in batch {
-                        match e.action {
-                            Action::Wake(tok) => self.wake(&tok),
-                            Action::Call(f) => f(),
+                    if multi && t > prev_lb {
+                        // Blocked on a peer's bound, but our own bound
+                        // rose: let peers re-check their horizons, then
+                        // re-evaluate (a push may have landed meanwhile).
+                        drop(st);
+                        self.notify_peers(idx);
+                        st = lane.state.lock().unwrap();
+                        continue;
+                    }
+                    // Horizon-blocked with nothing new to publish: wait
+                    // (peers notify on lb raises; timeout as backstop).
+                } else {
+                    let prev_lb = lane.lb.load(Ordering::Acquire);
+                    if prev_lb != u64::MAX {
+                        lane.lb.store(u64::MAX, Ordering::Release);
+                        if multi {
+                            drop(st);
+                            self.notify_peers(idx);
+                            st = lane.state.lock().unwrap();
+                            continue;
                         }
                     }
-                    st = self.state.lock().unwrap();
-                    continue;
-                } else if self.registered.load(Ordering::Acquire) > 0 {
-                    // Threads exist, none can run, nothing scheduled.
-                    self.deadlocked.store(true, Ordering::Release);
-                    if self.panic_on_deadlock.load(Ordering::Acquire) {
-                        panic!(
-                            "sim::Clock deadlock: {} registered threads are all \
-                             passive with no pending events (t={} ns). This is \
-                             the Section-5 scenario: blocking operations inside \
-                             tasks with no progress mechanism.",
-                            self.registered.load(Ordering::Acquire),
-                            self.now()
-                        );
+                    if self.registered.load(Ordering::Acquire) > 0 {
+                        let dead = if multi {
+                            // Verify across all lanes without holding our
+                            // own lock (index-order locking inside).
+                            drop(st);
+                            let dead = self.check_global_deadlock();
+                            st = lane.state.lock().unwrap();
+                            dead
+                        } else {
+                            // Single lane: quiescent + empty is global.
+                            true
+                        };
+                        if dead && !st.stopped {
+                            self.declare_deadlock();
+                            // Halt quietly: leave threads parked, wait
+                            // for stop().
+                            while !st.stopped {
+                                st = if multi {
+                                    lane.tick_cv
+                                        .wait_timeout(st, Duration::from_millis(1))
+                                        .unwrap()
+                                        .0
+                                } else {
+                                    lane.tick_cv.wait(st).unwrap()
+                                };
+                            }
+                            continue; // stop-drain at loop top (heap empty -> return)
+                        }
                     }
-                    // Halt quietly: leave threads parked, wait for stop().
-                    while !st.stopped {
-                        st = self.tick_cv.wait(st).unwrap();
-                    }
-                    return;
                 }
             }
-            st = self.tick_cv.wait(st).unwrap();
+            st = if multi {
+                // Timeout backstop: peer lb raises notify us, but a
+                // missed edge must not hang the lane forever.
+                lane.tick_cv
+                    .wait_timeout(st, Duration::from_millis(1))
+                    .unwrap()
+                    .0
+            } else {
+                lane.tick_cv.wait(st).unwrap()
+            };
         }
     }
 }

@@ -1,33 +1,58 @@
-//! Virtual-time execution substrate.
+//! Virtual-time execution substrate: a two-level discrete-event core.
 //!
-//! The reproduction host has a single physical core, so wall-clock speedup
+//! The reproduction host has few physical cores, so wall-clock speedup
 //! of a threaded runtime is meaningless.  Instead, the whole stack runs
-//! under *virtual time*: threads are real OS threads (the `nanos` runtime
-//! really parks workers, really hands cores over on task pause/resume),
-//! but every blocking point goes through [`Clock`], which only advances
-//! the virtual clock when **all registered threads are passive**
-//! (quiescence).  Virtual "work" ([`Clock::work`]) parks the thread until
-//! the clock has advanced past its duration, so 3 000+ virtual cores
-//! multiplex onto one physical core while producing the same timelines a
-//! real cluster would.
+//! under *virtual time*: threads are real OS threads (the `nanos`
+//! runtime really parks workers, really hands cores over on task
+//! pause/resume), but every blocking point goes through [`Clock`], so
+//! 3 000+ virtual cores multiplex onto a handful of physical cores
+//! while producing the same timelines a real cluster would.
+//!
+//! The clock is organized in two levels:
+//!
+//! **Level 1 — per-shard quiescence.** Virtual time is sharded into
+//! *lanes* (one per group of simulated nodes; a single lane by
+//! default). Each lane has its own event heap, driver thread, and
+//! `active` counter, and only advances when **all of its registered
+//! threads are passive** (quiescence).  Virtual "work"
+//! ([`Clock::work`]) parks the thread until its lane has advanced past
+//! the work's duration.
+//!
+//! **Level 2 — cross-shard conservative lookahead.** Lanes synchronize
+//! pessimistically (classic conservative PDES): each lane publishes a
+//! lower bound `lb` on any event it may still create, and a quiescent
+//! lane fires its head batch at `t` only while `t < lb[other] + L` for
+//! every other lane, where the lookahead `L` is the minimum cross-lane
+//! delivery latency of the network model.  Cross-lane events (port
+//! resolutions, completion deliveries) are deposited into the owning
+//! lane's heap with the same `(at, seq)` tie-break used within a lane,
+//! so the merged order is independent of host scheduling and the run is
+//! bit-identical to the single-lane engine at equal seeds.  See
+//! [`clock`] for the full protocol (lb maintenance, zero-latency
+//! feedback obligations, strictness of the bound).
 //!
 //! Invariants:
-//! * `active` counts threads that are running or runnable.  It is
-//!   decremented by a thread just before it parks on a [`Token`] and
-//!   re-incremented *by the waker* on its behalf (activity transfer), so
-//!   the count can never spuriously reach zero while a wake-up is in
-//!   flight.
-//! * The clock thread advances time only at `active == 0`, firing the
-//!   earliest pending event batch.  `active == 0` is stable: no thread
-//!   can become active except through the clock thread or a waker (and
-//!   all wakers are themselves active threads).
-//! * Quiescence with no pending events is a global deadlock; the clock
-//!   reports it (this reproduces Section 5 of the paper faithfully).
+//! * `active` (per lane) counts threads that are running or runnable.
+//!   It is decremented by a thread just before it parks on a [`Token`]
+//!   and re-incremented *by the waker* on its behalf (activity
+//!   transfer), so the count can never spuriously reach zero while a
+//!   wake-up is in flight.
+//! * Wakes are intra-lane: every completion is routed to the lane of
+//!   the thread it may wake ([`Clock::call_at_on`]), so no lane's
+//!   quiescence can be broken from the outside except through its own
+//!   event heap.
+//! * A lane's driver advances time only at `active == 0`, firing the
+//!   earliest pending event batch its horizon allows.  `active == 0`
+//!   is stable: no thread can become active except through the lane's
+//!   driver or an intra-lane waker.
+//! * Quiescence with no pending events across **all** lanes is a global
+//!   deadlock; the clock reports it (this reproduces Section 5 of the
+//!   paper faithfully).
 
 pub mod clock;
 pub mod sync;
 
-pub use clock::{Clock, Token};
+pub use clock::{Clock, ClockCounters, Token};
 pub use sync::WaitQueue;
 
 /// Nanoseconds of virtual time.

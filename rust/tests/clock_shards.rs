@@ -1,0 +1,186 @@
+//! Determinism contract of the sharded simulation clock: at equal
+//! seeds/parameters, a run is bit-identical to itself (seed replay) and
+//! to the same run on any lane count (1 vs 2 vs 4). The projection
+//! compared here is the deterministic slice of [`RunStats`] — virtual
+//! makespan, task/pause counts, schedule-cache traffic, user counters
+//! (checksums/residuals travel as counter bits) — plus, for the trace
+//! test, the normalized trace record multiset. Host-race-shaped fields
+//! (worker counts, steals, delivery/clock batch counters, host wall
+//! time) are deliberately excluded: they describe *how fast* the host
+//! simulated, never *what* was simulated.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use tampi_repro::apps::gauss_seidel::{self, GsParams, GsVersion};
+use tampi_repro::apps::ifsker::{self, IfsParams, IfsVersion};
+use tampi_repro::apps::Compute;
+use tampi_repro::rmpi::{ClusterConfig, RunStats, SchedCacheStats, Universe};
+use tampi_repro::sim::ms;
+use tampi_repro::trace::{EventKind, Tracer};
+
+/// The deterministic projection of one run's statistics.
+#[derive(Debug, PartialEq)]
+struct Projection {
+    vtime_ns: u64,
+    tasks: u64,
+    pauses: u64,
+    sched_cache: SchedCacheStats,
+    counters: BTreeMap<String, u64>,
+}
+
+fn project(stats: &RunStats) -> Projection {
+    Projection {
+        vtime_ns: stats.vtime_ns,
+        tasks: stats.tasks,
+        pauses: stats.pauses,
+        sched_cache: stats.sched_cache,
+        counters: stats.counters.iter().map(|(k, &v)| (k.clone(), v)).collect(),
+    }
+}
+
+fn gs_params(shards: usize) -> GsParams {
+    let mut p = GsParams::new(256, 256, 64, 6, 4, 2, GsVersion::InteropNonBlk);
+    p.compute = Compute::Model;
+    p.residual_every = 2; // exercise the collective engine too
+    p.clock_shards = shards;
+    p.deadline = Some(ms(600_000));
+    p
+}
+
+#[test]
+fn gs_seed_replay_is_bit_identical() {
+    let a = gauss_seidel::run(&gs_params(1)).expect("gs replay run A");
+    let b = gauss_seidel::run(&gs_params(1)).expect("gs replay run B");
+    assert_eq!(a.checksum.to_bits(), b.checksum.to_bits());
+    assert_eq!(a.residual.to_bits(), b.residual.to_bits());
+    assert_eq!(project(&a.stats), project(&b.stats));
+}
+
+#[test]
+fn gs_sharded_matches_single_lane_bit_for_bit() {
+    let base = gauss_seidel::run(&gs_params(1)).expect("gs 1-lane run");
+    for shards in [2usize, 4] {
+        let run = gauss_seidel::run(&gs_params(shards))
+            .unwrap_or_else(|e| panic!("gs {shards}-lane run failed: {e}"));
+        assert_eq!(
+            run.checksum.to_bits(),
+            base.checksum.to_bits(),
+            "checksum diverged at {shards} lanes"
+        );
+        assert_eq!(
+            run.residual.to_bits(),
+            base.residual.to_bits(),
+            "residual diverged at {shards} lanes"
+        );
+        assert_eq!(
+            project(&run.stats),
+            project(&base.stats),
+            "stats projection diverged at {shards} lanes"
+        );
+        assert!(
+            run.stats.cross_shard_events > 0,
+            "halo traffic must cross lanes at {shards} lanes"
+        );
+    }
+}
+
+#[test]
+fn ifsker_sharded_matches_single_lane_bit_for_bit() {
+    let mk = |shards: usize| {
+        let mut p = IfsParams::new(4096, 2, 4, 4, 2, IfsVersion::InteropNonBlk);
+        p.compute = Compute::Model;
+        p.clock_shards = shards;
+        p.deadline = Some(ms(600_000));
+        p
+    };
+    let base = ifsker::run(&mk(1)).expect("ifsker 1-lane run");
+    for shards in [2usize, 4] {
+        let run = ifsker::run(&mk(shards))
+            .unwrap_or_else(|e| panic!("ifsker {shards}-lane run failed: {e}"));
+        assert_eq!(
+            run.checksum.to_bits(),
+            base.checksum.to_bits(),
+            "checksum diverged at {shards} lanes"
+        );
+        assert_eq!(
+            project(&run.stats),
+            project(&base.stats),
+            "stats projection diverged at {shards} lanes"
+        );
+        assert!(run.stats.cross_shard_events > 0, "transpositions must cross lanes");
+    }
+}
+
+/// Normalized trace: every record projected to its deterministic slice
+/// (virtual instant, rank, kind, label, task id — the worker column is
+/// a host scheduling artifact) and sorted. [`EventKind::BatchDelivered`]
+/// records are skipped: batch shapes are host-race-dependent by design
+/// (see `RunStats::delivery_batches`).
+fn normalize(records: &[tampi_repro::trace::Record]) -> Vec<(u64, u32, String, String, u64)> {
+    let mut v: Vec<_> = records
+        .iter()
+        .filter(|r| !matches!(r.kind, EventKind::BatchDelivered { .. }))
+        .map(|r| (r.t, r.rank, format!("{:?}", r.kind), r.label.clone(), r.task_id))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Pure-MPI scenario (no task runtime): skewed rank mains doing halo
+/// p2p plus a barrier and an allreduce per step, traced. The trace a
+/// sharded clock produces must equal the single-lane one.
+fn traced_run(shards: usize) -> (Vec<(u64, u32, String, String, u64)>, u64) {
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(4, 2, 0).with_clock_shards(shards);
+    cfg.tracer = Some(tracer.clone());
+    cfg.deadline = Some(ms(600_000));
+    let stats = Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        for step in 0..3u64 {
+            // Deterministic skew so lanes genuinely run apart.
+            ctx.clock.sleep(tampi_repro::sim::us(10 * (ctx.rank as u64 + 1)));
+            let right = (ctx.rank + 1) % n;
+            let left = (ctx.rank + n - 1) % n;
+            let tag = step as i32;
+            let mut inbox = [0u64];
+            let r = ctx.comm.irecv(&mut inbox, left as i32, tag);
+            ctx.comm.send(&[ctx.rank as u64 + step], right, tag);
+            ctx.comm.wait(&r);
+            assert_eq!(inbox[0], left as u64 + step);
+            ctx.comm.barrier();
+            let mut v = [ctx.rank as f64 + step as f64];
+            ctx.comm.allreduce(&mut v, |a, b| a[0] += b[0]);
+        }
+    })
+    .expect("traced scenario");
+    (normalize(&tracer.snapshot()), stats.vtime_ns)
+}
+
+#[test]
+fn trace_sequence_identical_across_lane_counts() {
+    let (base_trace, base_vtime) = traced_run(1);
+    assert!(!base_trace.is_empty(), "scenario must produce trace records");
+    for shards in [2usize, 4] {
+        let (trace, vtime) = traced_run(shards);
+        assert_eq!(vtime, base_vtime, "vtime diverged at {shards} lanes");
+        assert_eq!(trace, base_trace, "trace diverged at {shards} lanes");
+    }
+    // Seed replay of the traced scenario itself.
+    let (again, vtime) = traced_run(1);
+    assert_eq!(vtime, base_vtime);
+    assert_eq!(again, base_trace);
+}
+
+#[test]
+fn shard_count_is_clamped_to_nodes() {
+    // 2 nodes, 8 requested lanes: must clamp, run, and stay identical.
+    let mut a = gs_params(1);
+    a.nodes = 2;
+    let mut b = gs_params(8);
+    b.nodes = 2;
+    let ra = gauss_seidel::run(&a).expect("2-node 1-lane run");
+    let rb = gauss_seidel::run(&b).expect("2-node clamped-lane run");
+    assert_eq!(ra.checksum.to_bits(), rb.checksum.to_bits());
+    assert_eq!(project(&ra.stats), project(&rb.stats));
+}

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Warn-only host wall-time delta between two BENCH_fig*.json documents.
+
+Usage: bench_delta.py CURRENT.json [BASELINE.json]
+
+Compares the `elapsed_host_ns` of the current emitter run against the
+baseline (typically the artifact committed/downloaded from the previous
+run) and prints a single summary line. Always exits 0: CI runners have
+noisy, heterogeneous hosts, so a wall-time regression is a signal to
+read, never a gate. A missing or unreadable baseline is reported and
+skipped — the first run of a new figure has nothing to compare against.
+Stdlib only.
+"""
+import json
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return
+    cur_path = sys.argv[1]
+    base_path = sys.argv[2] if len(sys.argv) > 2 else None
+    try:
+        cur = load(cur_path)
+    except (OSError, ValueError) as e:
+        print(f"bench-delta: cannot read current {cur_path}: {e}")
+        return
+    cur_ns = cur.get("elapsed_host_ns")
+    if not isinstance(cur_ns, (int, float)) or cur_ns <= 0:
+        print(f"bench-delta: {cur_path} has no usable elapsed_host_ns")
+        return
+    fig = cur.get("fig", "?")
+    if base_path is None:
+        print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms (no baseline given)")
+        return
+    try:
+        base = load(base_path)
+    except (OSError, ValueError) as e:
+        print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms "
+              f"(baseline {base_path} unavailable: {e})")
+        return
+    base_ns = base.get("elapsed_host_ns")
+    if not isinstance(base_ns, (int, float)) or base_ns <= 0:
+        print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms "
+              f"(baseline has no usable elapsed_host_ns)")
+        return
+    delta = (cur_ns - base_ns) / base_ns * 100.0
+    tag = "WARN slower" if delta > 10.0 else ("faster" if delta < -10.0 else "steady")
+    print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms vs {base_ns / 1e6:.1f} ms "
+          f"baseline ({delta:+.1f}%, {tag})")
+
+
+if __name__ == "__main__":
+    main()

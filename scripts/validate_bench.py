@@ -31,6 +31,15 @@ ROW_SCHEMAS = {
         "speedup": NUM,
     },
     18: {"series": (str,), "rx_ns": NUM, "vtime_us": NUM},
+    19: {
+        "nodes": NUM,
+        "shards": NUM,
+        "vtime_ms": NUM,
+        "host_ms": NUM,
+        "clock_events": NUM,
+        "cross_shard_events": NUM,
+        "speedup_vs_1": NUM,
+    },
 }
 
 CACHE_SCHEMA = {
@@ -75,8 +84,12 @@ def validate(path):
         fail(path, f"fig {fig!r} not one of {sorted(ROW_SCHEMAS)}")
     if doc.get("scale") not in ("quick", "default", "full"):
         fail(path, f"scale {doc.get('scale')!r} invalid")
+    # Host wall-time of the emitter run (the perf-trajectory
+    # denominator; every figure emits it since fig19 landed).
+    if not isinstance(doc.get("elapsed_host_ns"), NUM):
+        fail(path, f"elapsed_host_ns {doc.get('elapsed_host_ns')!r} is not a number")
     check_rows(doc.get("rows"), ROW_SCHEMAS[fig], "rows", path)
-    allowed = {"schema_version", "fig", "scale", "rows"}
+    allowed = {"schema_version", "fig", "scale", "rows", "elapsed_host_ns"}
     if fig == 17:
         check_rows(doc.get("cache"), CACHE_SCHEMA, "cache", path)
         allowed.add("cache")
