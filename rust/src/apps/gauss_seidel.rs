@@ -128,6 +128,9 @@ pub struct GsParams {
     pub clock_shards: usize,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
+    /// Typed span sink (Perfetto export / overlap profiler). Attaching
+    /// one never changes results — see [`crate::obs`].
+    pub spans: Option<Arc<crate::obs::SpanSink>>,
     pub deadline: Option<VNanos>,
 }
 
@@ -161,6 +164,7 @@ impl GsParams {
             clock_shards: 1,
             tracer: None,
             graph: None,
+            spans: None,
             deadline: None,
         }
     }
@@ -286,6 +290,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     cc.topology = p.topology;
     cc.tracer = p.tracer.clone();
     cc.graph = p.graph.clone();
+    cc.spans = p.spans.clone();
     cc.deadline = p.deadline;
     cc.clock_shards = p.clock_shards;
     let p2 = p.clone();

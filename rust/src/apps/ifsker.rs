@@ -98,6 +98,9 @@ pub struct IfsParams {
     /// values). See [`crate::rmpi::ClusterConfig::clock_shards`].
     pub clock_shards: usize,
     pub tracer: Option<Arc<Tracer>>,
+    /// Typed span sink (Perfetto export / overlap profiler). Attaching
+    /// one never changes results — see [`crate::obs`].
+    pub spans: Option<Arc<crate::obs::SpanSink>>,
     pub deadline: Option<VNanos>,
 }
 
@@ -127,6 +130,7 @@ impl IfsParams {
             residual_nonblocking: false,
             clock_shards: 1,
             tracer: None,
+            spans: None,
             deadline: None,
         }
     }
@@ -202,6 +206,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     cc.delivery_mode = p.delivery_mode;
     cc.topology = p.topology;
     cc.tracer = p.tracer.clone();
+    cc.spans = p.spans.clone();
     cc.deadline = p.deadline;
     cc.clock_shards = p.clock_shards;
     let p2 = p.clone();

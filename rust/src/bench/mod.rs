@@ -409,6 +409,16 @@ pub fn coll_overlap(
 /// a synthetic compute sweep plus Gauss-Seidel residual-monitoring rows
 /// (`gs-residual-*`, blocking vs fire-and-forget residual allreduce).
 pub fn fig16(scale: Scale) -> Vec<(String, usize, f64, f64, f64)> {
+    fig16_with_overlap(scale).0
+}
+
+/// [`fig16`] plus the overlap-profiler summary of its Gauss-Seidel
+/// residual runs: `(rows, (blocking, nonblocking))` overlap fractions
+/// (share of in-flight-communication time hidden under compute — see
+/// [`crate::obs::overlap`]). Stamped into `BENCH_fig16.json` so the CI
+/// trajectory tracks *why* the non-blocking residual is faster, not
+/// just that it is.
+pub fn fig16_with_overlap(scale: Scale) -> (Vec<(String, usize, f64, f64, f64)>, (f64, f64)) {
     use crate::sim::us;
 
     let (ranks, iters, compute_list): (usize, usize, Vec<u64>) = match scale {
@@ -448,7 +458,7 @@ pub fn fig16(scale: Scale) -> Vec<(String, usize, f64, f64, f64)> {
         Scale::Quick => (256usize, 6usize, 2usize),
         _ => (512, 10, 2),
     };
-    let mk = |nonblocking: bool| {
+    let mk = |nonblocking: bool, sink: &Arc<crate::obs::SpanSink>| {
         let mut p = GsParams::new(rows_g, rows_g, rows_g / 4, iters_g, nodes, 2,
             GsVersion::InteropNonBlk);
         // Native numerics: the bit-identity assertion below compares real
@@ -456,11 +466,18 @@ pub fn fig16(scale: Scale) -> Vec<(String, usize, f64, f64, f64)> {
         p.compute = Compute::Native;
         p.residual_every = 1;
         p.residual_nonblocking = nonblocking;
+        p.spans = Some(sink.clone());
         p.deadline = Some(ms(600_000));
         p
     };
-    let blk = gauss_seidel::run(&mk(false)).expect("fig16 gs blocking residual");
-    let nblk = gauss_seidel::run(&mk(true)).expect("fig16 gs non-blocking residual");
+    let overlap_of = |sink: &crate::obs::SpanSink| {
+        let per = crate::obs::overlap::overlap_by_rank(&sink.snapshot());
+        crate::obs::overlap::overlap_summary(&per).overlap_frac()
+    };
+    let sink_blk = crate::obs::SpanSink::new(1 << 20);
+    let sink_nblk = crate::obs::SpanSink::new(1 << 20);
+    let blk = gauss_seidel::run(&mk(false, &sink_blk)).expect("fig16 gs blocking residual");
+    let nblk = gauss_seidel::run(&mk(true, &sink_nblk)).expect("fig16 gs non-blocking residual");
     assert_eq!(
         blk.residual.to_bits(),
         nblk.residual.to_bits(),
@@ -480,12 +497,12 @@ pub fn fig16(scale: Scale) -> Vec<(String, usize, f64, f64, f64)> {
         nblk.vtime_ns as f64 / 1e6,
         blk.vtime_ns as f64 / nblk.vtime_ns.max(1) as f64,
     ));
-    rows
+    (rows, (overlap_of(&sink_blk), overlap_of(&sink_nblk)))
 }
 
 /// Render the fig16 report table.
 pub fn fig16_report(scale: Scale) -> String {
-    let rows = fig16(scale);
+    let (rows, (ov_blk, ov_nblk)) = fig16_with_overlap(scale);
     let mut out = String::from(
         "=== Figure 16: blocking vs non-blocking collectives (schedule engine overlap) ===\n",
     );
@@ -504,6 +521,11 @@ pub fn fig16_report(scale: Scale) -> String {
         "(blocking: allreduce latency adds to every iteration; iallreduce: the\n\
          schedule-driven collective progresses on the engine while compute runs)\n",
     );
+    out.push_str(&format!(
+        "gs residual overlap fraction (comm time hidden under compute): \
+         blocking {:.3}, iallreduce {:.3}\n",
+        ov_blk, ov_nblk
+    ));
     out
 }
 
@@ -1090,10 +1112,12 @@ pub fn fig15_json(scale: Scale) -> String {
 }
 
 /// Fig 16 as JSON: `rows[] = {{series, ranks, compute_us|null, vtime_ms,
-/// speedup}}`.
+/// speedup}}` plus `overlap = {{blocking, nonblocking}}` (the overlap-
+/// profiler summary of the gs residual runs).
 pub fn fig16_json(scale: Scale) -> String {
     let wall = std::time::Instant::now();
-    let rows: Vec<String> = fig16(scale)
+    let (raw_rows, (ov_blk, ov_nblk)) = fig16_with_overlap(scale);
+    let rows: Vec<String> = raw_rows
         .into_iter()
         .map(|(series, ranks, c_us, vtime_ms, speedup)| {
             let c = if c_us.is_nan() { "null".to_string() } else { format!("{c_us}") };
@@ -1109,7 +1133,17 @@ pub fn fig16_json(scale: Scale) -> String {
         })
         .collect();
     let elapsed = wall.elapsed().as_nanos() as u64;
-    json_doc(16, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+    json_doc(
+        16,
+        scale,
+        elapsed,
+        format!(
+            "\"rows\":[{}],\"overlap\":{{\"blocking\":{},\"nonblocking\":{}}}",
+            rows.join(","),
+            ov_blk,
+            ov_nblk
+        ),
+    )
 }
 
 /// Fig 17 as JSON: the topology sweep in `rows[]`, the cache table in
@@ -1321,6 +1355,153 @@ pub fn fig19_json(scale: Scale) -> String {
         .collect();
     let elapsed = wall.elapsed().as_nanos() as u64;
     json_doc(19, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// One fig20 row: the overlap-profiler summary of one app run.
+#[derive(Clone, Debug)]
+pub struct OverlapRow {
+    /// Application: `gs` or `ifsker`.
+    pub app: String,
+    /// Version under test (`interop-blk` / `interop-nonblk`).
+    pub series: String,
+    pub ranks: usize,
+    pub vtime_ms: f64,
+    /// Fraction of the rank-summed timeline spent executing tasks.
+    pub busy_frac: f64,
+    /// Fraction of the timeline with communication in flight.
+    pub comm_frac: f64,
+    /// The headline: fraction of in-flight-communication time hidden
+    /// under compute (`overlap / comm`, see [`crate::obs::overlap`]).
+    pub overlap_frac: f64,
+}
+
+/// Fig 20 (paper extension): the overlap profiler — per-run
+/// busy/comm/overlapped fractions of blocking vs non-blocking TAMPI on
+/// both apps. This turns the paper's qualitative claim (Sections 4–6:
+/// task-aware MPI "naturally overlaps computation and communication")
+/// into one measured number per version, and asserts its direction:
+/// the non-blocking gs run must hide strictly more of its
+/// communication than the blocking one (ifsker: at least as much).
+pub fn fig20(scale: Scale) -> Vec<OverlapRow> {
+    let (rows_g, iters, nodes, cpn) = match scale {
+        Scale::Quick => (256usize, 6usize, 2usize, 2usize),
+        Scale::Default => (512, 10, 2, 4),
+        Scale::Full => (1024, 16, 4, 8),
+    };
+    // One profiled run: fresh sink, run, integrate. The sink must not
+    // overflow — a truncated timeline would silently understate comm.
+    let profile = |sink: &Arc<crate::obs::SpanSink>, vtime_ns: u64| {
+        assert_eq!(sink.dropped(), 0, "fig20: span sink overflowed");
+        let per = crate::obs::overlap::overlap_by_rank(&sink.snapshot());
+        let sum = crate::obs::overlap::overlap_summary(&per);
+        (
+            vtime_ns as f64 / 1e6,
+            sum.busy_frac(),
+            sum.comm_frac(),
+            sum.overlap_frac(),
+        )
+    };
+    let gs = |version: GsVersion| {
+        let sink = crate::obs::SpanSink::new(1 << 20);
+        let mut p = GsParams::new(rows_g, rows_g, rows_g / 4, iters, nodes, cpn, version);
+        p.compute = Compute::Model;
+        p.spans = Some(sink.clone());
+        p.deadline = Some(ms(600_000));
+        let run = gauss_seidel::run(&p).expect("fig20 gs");
+        profile(&sink, run.vtime_ns)
+    };
+    let ifs = |version: IfsVersion| {
+        let sink = crate::obs::SpanSink::new(1 << 20);
+        let mut p = IfsParams::new(4 * nodes * cpn * nodes * cpn, 4, iters, nodes, cpn, version);
+        p.compute = Compute::Model;
+        p.spans = Some(sink.clone());
+        p.deadline = Some(ms(600_000));
+        let run = ifsker::run(&p).expect("fig20 ifsker");
+        profile(&sink, run.vtime_ns)
+    };
+    let mut out = Vec::new();
+    let mut push = |app: &str, series: &str, ranks: usize, r: (f64, f64, f64, f64)| {
+        out.push(OverlapRow {
+            app: app.to_string(),
+            series: series.to_string(),
+            ranks,
+            vtime_ms: r.0,
+            busy_frac: r.1,
+            comm_frac: r.2,
+            overlap_frac: r.3,
+        });
+    };
+    let gs_blk = gs(GsVersion::InteropBlk);
+    let gs_nblk = gs(GsVersion::InteropNonBlk);
+    assert!(
+        gs_nblk.3 > gs_blk.3,
+        "fig20: non-blocking gs must overlap strictly more than blocking \
+         (blk {:.4}, nonblk {:.4})",
+        gs_blk.3,
+        gs_nblk.3
+    );
+    push("gs", "interop-blk", nodes, gs_blk);
+    push("gs", "interop-nonblk", nodes, gs_nblk);
+    let ifs_blk = ifs(IfsVersion::InteropBlk);
+    let ifs_nblk = ifs(IfsVersion::InteropNonBlk);
+    assert!(
+        ifs_nblk.3 >= ifs_blk.3,
+        "fig20: non-blocking ifsker must overlap at least as much as blocking \
+         (blk {:.4}, nonblk {:.4})",
+        ifs_blk.3,
+        ifs_nblk.3
+    );
+    push("ifsker", "interop-blk", nodes * cpn, ifs_blk);
+    push("ifsker", "interop-nonblk", nodes * cpn, ifs_nblk);
+    out
+}
+
+/// Render the fig20 report table.
+pub fn fig20_report(scale: Scale) -> String {
+    let rows = fig20(scale);
+    let mut out = String::from(
+        "=== Figure 20: comm/compute overlap profile — blocking vs non-blocking TAMPI ===\n",
+    );
+    out.push_str(&format!(
+        "{:<8} {:<16} {:>6} {:>10} {:>10} {:>10} {:>12}\n",
+        "app", "series", "ranks", "vtime_ms", "busy_frac", "comm_frac", "overlap_frac"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<8} {:<16} {:>6} {:>10.3} {:>10.3} {:>10.3} {:>12.3}\n",
+            r.app, r.series, r.ranks, r.vtime_ms, r.busy_frac, r.comm_frac, r.overlap_frac
+        ));
+    }
+    out.push_str(
+        "(overlap_frac = share of in-flight-communication time spent computing;\n\
+         blocking tasks pause inside each call, non-blocking requests ride\n\
+         alongside other tasks' compute — Sections 4-6 of the paper, measured)\n",
+    );
+    out
+}
+
+/// Fig 20 as JSON: `rows[] = {{app, series, ranks, vtime_ms, busy_frac,
+/// comm_frac, overlap_frac}}`.
+pub fn fig20_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
+    let rows: Vec<String> = fig20(scale)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"app\":\"{}\",\"series\":\"{}\",\"ranks\":{},\"vtime_ms\":{},\
+                 \"busy_frac\":{},\"comm_frac\":{},\"overlap_frac\":{}}}",
+                json_escape(&r.app),
+                json_escape(&r.series),
+                r.ranks,
+                r.vtime_ms,
+                r.busy_frac,
+                r.comm_frac,
+                r.overlap_frac
+            )
+        })
+        .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(20, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

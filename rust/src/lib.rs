@@ -21,12 +21,17 @@
 //!   versions, Section 7.1) and IFSKer (Section 7.2),
 //! * [`trace`] — execution traces (Fig 10), dependency graphs (Fig 8),
 //!   and the collective stall diagnostic (`trace::stalls`),
+//! * [`obs`] — the observability layer: typed spans in per-thread ring
+//!   buffers, a Perfetto `trace_event` exporter, a metrics registry
+//!   (counters/gauges/log2 histograms on `RunStats::metrics`), and the
+//!   fig20 computation/communication overlap profiler,
 //! * [`bench`] — the figure-regeneration harness (Figs 9-14 plus
-//!   extension Figs 15-18 with machine-readable JSON output for CI).
+//!   extension Figs 15-20 with machine-readable JSON output for CI).
 
 pub mod apps;
 pub mod bench;
 pub mod nanos;
+pub mod obs;
 pub mod progress;
 pub mod rmpi;
 pub mod runtime;

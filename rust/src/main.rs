@@ -3,8 +3,8 @@
 //! Subcommands:
 //!   gs        run one Gauss-Seidel experiment (Section 7.1)
 //!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension figs 15-19
-//!             into bench_out/; with --json <path> figs 15-19 emit
+//!   figures   regenerate paper figures (8-14) + extension figs 15-20
+//!             into bench_out/; with --json <path> figs 15-20 emit
 //!             the machine-readable document instead (CI perf artifact)
 //!   stalls    collective stall diagnostic on a deliberately skewed run
 //!             (which rank's rounds_advanced holds a collective back)
@@ -21,7 +21,10 @@
 //! congestion knob) + `--eager <bytes>` (rendezvous threshold), so
 //! congestion regimes are reachable without recompiling. Both also take
 //! `--clock-shards N` (parallel simulation lanes; results bit-identical
-//! to 1 — see `crate::sim`). `figures
+//! to 1 — see `crate::sim`) and `--trace <path>` with `--trace-format
+//! csv|gantt|perfetto` (`csv` keeps the classic CSV dump + printed
+//! Gantt; `perfetto` records typed spans — see `crate::obs` — and
+//! writes a Chrome/Perfetto `trace_event` JSON). `figures
 //! --fig 18` takes `--net-rx`/`--eager` too (fig 18 then runs at
 //! exactly that point instead of its sweep); the other figures pin
 //! their network models and reject the knobs.
@@ -139,6 +142,65 @@ fn apply_net_overrides(m: &HashMap<String, String>, net: &mut tampi_repro::rmpi:
     }
 }
 
+/// Output format of `--trace <path>` (shared by `gs` and `ifsker`).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum TraceFormat {
+    /// CSV event dump + printed ASCII Gantt (the classic behavior).
+    Csv,
+    /// ASCII Gantt chart written to the file (and printed).
+    Gantt,
+    /// Chrome/Perfetto `trace_event` JSON from the typed span recorder.
+    Perfetto,
+}
+
+fn trace_format_of(m: &HashMap<String, String>) -> TraceFormat {
+    match m.get("trace-format").map(String::as_str).unwrap_or("csv") {
+        "csv" => TraceFormat::Csv,
+        "gantt" => TraceFormat::Gantt,
+        "perfetto" => TraceFormat::Perfetto,
+        other => {
+            eprintln!("unknown --trace-format {other} (csv|gantt|perfetto)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Write the captured trace to `--trace <path>` in the selected format.
+/// One helper for the `gs` and `ifsker` arms, which used to duplicate
+/// the write + Gantt-print block.
+fn dump_trace(
+    m: &HashMap<String, String>,
+    fmt: TraceFormat,
+    tracer: &Option<Arc<Tracer>>,
+    spans: &Option<Arc<tampi_repro::obs::SpanSink>>,
+) {
+    let Some(path) = m.get("trace") else { return };
+    match fmt {
+        TraceFormat::Csv => {
+            let t = tracer.as_ref().expect("csv trace needs a tracer");
+            std::fs::write(path, t.to_csv()).expect("write trace");
+            println!("  trace -> {path}");
+            println!("{}", tampi_repro::trace::render_gantt(&t.snapshot(), 100));
+        }
+        TraceFormat::Gantt => {
+            let t = tracer.as_ref().expect("gantt trace needs a tracer");
+            let chart = tampi_repro::trace::render_gantt(&t.snapshot(), 100);
+            std::fs::write(path, &chart).expect("write trace");
+            println!("  trace -> {path}");
+            println!("{chart}");
+        }
+        TraceFormat::Perfetto => {
+            let s = spans.as_ref().expect("perfetto trace needs a span sink");
+            let json = tampi_repro::obs::perfetto::export(&s.snapshot(), s.dropped());
+            std::fs::write(path, &json).expect("write trace");
+            println!(
+                "  trace -> {path} (perfetto, {} dropped spans)",
+                s.dropped()
+            );
+        }
+    }
+}
+
 fn residual_nonblocking_of(m: &HashMap<String, String>) -> bool {
     // Default matches the library default (GsParams/IfsParams): blocking.
     match m.get("residual").map(String::as_str).unwrap_or("blk") {
@@ -175,9 +237,14 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
-    let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
+    let fmt = trace_format_of(&m);
+    let tracer = (m.get("trace").is_some() && fmt != TraceFormat::Perfetto)
+        .then(|| Arc::new(Tracer::new()));
+    let spans = (m.get("trace").is_some() && fmt == TraceFormat::Perfetto)
+        .then(|| tampi_repro::obs::SpanSink::new(1 << 20));
     let graph = m.get("graph").map(|_| Arc::new(GraphRecorder::new()));
     p.tracer = tracer.clone();
+    p.spans = spans.clone();
     p.graph = graph.clone();
 
     let wall = Instant::now();
@@ -213,11 +280,7 @@ fn cmd_gs(m: HashMap<String, String>) {
             std::process::exit(1);
         }
     }
-    if let (Some(t), Some(path)) = (&tracer, m.get("trace")) {
-        std::fs::write(path, t.to_csv()).expect("write trace");
-        println!("  trace -> {path}");
-        println!("{}", tampi_repro::trace::render_gantt(&t.snapshot(), 100));
-    }
+    dump_trace(&m, fmt, &tracer, &spans);
     if let (Some(g), Some(path)) = (&graph, m.get("graph")) {
         std::fs::write(path, g.to_dot("sentinel")).expect("write dot");
         println!("  graph -> {path} ({} edges)", g.edge_count());
@@ -246,8 +309,13 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.clock_shards = get(&m, "clock-shards", 1usize);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
-    let tracer = m.get("trace").map(|_| Arc::new(Tracer::new()));
+    let fmt = trace_format_of(&m);
+    let tracer = (m.get("trace").is_some() && fmt != TraceFormat::Perfetto)
+        .then(|| Arc::new(Tracer::new()));
+    let spans = (m.get("trace").is_some() && fmt == TraceFormat::Perfetto)
+        .then(|| tampi_repro::obs::SpanSink::new(1 << 20));
     p.tracer = tracer.clone();
+    p.spans = spans.clone();
     let wall = Instant::now();
     match ifsker::run(&p) {
         Ok(out) => {
@@ -280,15 +348,11 @@ fn cmd_ifsker(m: HashMap<String, String>) {
             std::process::exit(1);
         }
     }
-    if let (Some(t), Some(path)) = (&tracer, m.get("trace")) {
-        std::fs::write(path, t.to_csv()).expect("write trace");
-        println!("  trace -> {path}");
-        println!("{}", tampi_repro::trace::render_gantt(&t.snapshot(), 100));
-    }
+    dump_trace(&m, fmt, &tracer, &spans);
 }
 
-const KNOWN_FIGS: [&str; 13] =
-    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "all"];
+const KNOWN_FIGS: [&str; 14] =
+    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "all"];
 
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
@@ -301,7 +365,7 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 | all)"
         );
         std::process::exit(2);
     }
@@ -325,9 +389,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "17" => bench::fig17_json(scale),
             "18" => bench::fig18_json(scale, net_rx, net_eager),
             "19" => bench::fig19_json(scale),
+            "20" => bench::fig20_json(scale),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17|18|19), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -384,6 +449,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 println!("{report}");
                 let p = bench::write_output("fig19_clock_shards.txt", &report);
                 println!("fig19 -> {}", p.display());
+            }
+            "20" => {
+                let report = bench::fig20_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig20_overlap.txt", &report);
+                println!("fig20 -> {}", p.display());
             }
             other => {
                 let rows = match other {

@@ -109,6 +109,7 @@ pub fn block_current_task(ctx: &BlockingContext) {
     }
     rt.n_pauses.fetch_add(1, Ordering::Relaxed);
     rt.trace(EventKind::TaskBlock, worker::worker_id(), &ctx.task_label, ctx.task_id);
+    let pause_t0 = rt.cfg.obs.as_ref().map(|_| rt.clock.now());
     // Context-switch costs are charged in ONE clock event after the core
     // grant (pause side as debt): same total virtual time, but half the
     // real thread parks per round trip (§Perf opt-1).
@@ -117,6 +118,20 @@ pub fn block_current_task(ctx: &BlockingContext) {
     rt.clock.passive_wait(&ctx.token);
     rt.clock.work(rt.cfg.costs.resume_ns);
     rt.trace(EventKind::TaskUnblock, worker::worker_id(), &ctx.task_label, ctx.task_id);
+    if let (Some(obs), Some(t0)) = (rt.cfg.obs.as_ref(), pause_t0) {
+        let t1 = rt.clock.now();
+        let wid = worker::worker_id();
+        let worker = if wid == usize::MAX { u32::MAX } else { wid as u32 };
+        obs.pause_ns.record(t1.saturating_sub(t0));
+        obs.record(crate::obs::Span::interval(
+            crate::obs::Track::Worker { rank: rt.cfg.rank, worker },
+            crate::obs::SpanKind::TaskPause,
+            t0,
+            t1,
+            "pause",
+            ctx.task_id,
+        ));
+    }
 }
 
 /// Mark the task associated with `ctx` resumable (Section 4.1). Callable

@@ -96,6 +96,10 @@ pub struct RuntimeConfig {
     pub max_workers: usize,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
+    /// Observability bundle (spans + metrics). Set by the universe;
+    /// `None` for standalone runtimes. Emission sites only read
+    /// `Clock::now()` — recording never perturbs virtual time.
+    pub obs: Option<Arc<crate::obs::RunObs>>,
     /// Modeled runtime operation costs (virtual ns).
     pub costs: RuntimeCosts,
     /// How TAMPI on this runtime is notified of MPI completions.
@@ -117,6 +121,7 @@ impl RuntimeConfig {
             max_workers: cores + 16 * 1024,
             tracer: None,
             graph: None,
+            obs: None,
             costs: RuntimeCosts::zero(),
             completion_mode: CompletionMode::default(),
             clock_lane: 0,

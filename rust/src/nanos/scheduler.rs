@@ -243,7 +243,7 @@ impl Scheduler {
     /// the injector, then steal from the back of other locals — probing
     /// the slot's last successful victim first, falling back to a
     /// round-robin scan (adaptive steal order).
-    fn try_pop(&self, wslot: usize) -> Option<Item> {
+    fn try_pop(&self, wslot: usize, rt: &Arc<Rt>) -> Option<Item> {
         if let Some(item) = self.locals[wslot].lock().unwrap().pop_front() {
             self.ready_len.fetch_sub(1, Ordering::AcqRel);
             return Some(item);
@@ -255,7 +255,7 @@ impl Scheduler {
         let n = self.locals.len();
         let remembered = self.last_victim[wslot].load(Ordering::Relaxed);
         if remembered < n && remembered != wslot {
-            if let Some(item) = self.steal_from(remembered) {
+            if let Some(item) = self.steal_from(remembered, rt) {
                 return Some(item);
             }
         }
@@ -264,7 +264,7 @@ impl Scheduler {
             if victim == remembered {
                 continue; // already probed above
             }
-            if let Some(item) = self.steal_from(victim) {
+            if let Some(item) = self.steal_from(victim, rt) {
                 self.last_victim[wslot].store(victim, Ordering::Relaxed);
                 return Some(item);
             }
@@ -273,11 +273,22 @@ impl Scheduler {
     }
 
     /// One steal probe against `victim`'s deque; counts misses.
-    fn steal_from(&self, victim: usize) -> Option<Item> {
+    fn steal_from(&self, victim: usize, rt: &Arc<Rt>) -> Option<Item> {
         match self.locals[victim].lock().unwrap().pop_back() {
             Some(item) => {
                 self.ready_len.fetch_sub(1, Ordering::AcqRel);
                 self.steals.fetch_add(1, Ordering::Relaxed);
+                if let Some(obs) = rt.cfg.obs.as_ref() {
+                    let wid = worker::worker_id();
+                    let w = if wid == usize::MAX { u32::MAX } else { wid as u32 };
+                    obs.record(crate::obs::Span::point(
+                        crate::obs::Track::Worker { rank: rt.cfg.rank, worker: w },
+                        crate::obs::SpanKind::Steal,
+                        rt.clock.now(),
+                        "steal",
+                        victim as u64,
+                    ));
+                }
                 Some(item)
             }
             None => {
@@ -345,7 +356,7 @@ impl Scheduler {
             if g.free_cores > 0 && self.ready_count() > 0 {
                 g.free_cores -= 1;
                 drop(g);
-                if let Some(item) = self.try_pop(wslot) {
+                if let Some(item) = self.try_pop(wslot, rt) {
                     return Some(item);
                 }
                 // Raced with other workers for the last items: hand the

@@ -94,6 +94,7 @@ fn run_task(rt: &Arc<Rt>, task: &Arc<TaskInner>) {
     CURRENT.with(|c| c.borrow_mut().as_mut().unwrap().1 = Some(task.clone()));
     crate::sim::Clock::add_debt(rt.cfg.costs.task_exec_ns);
     rt.trace(EventKind::TaskStart, worker_id(), &task.label, task.id);
+    let span_t0 = rt.cfg.obs.as_ref().map(|_| rt.clock.now());
     // Contain task panics: record, then release dependencies anyway so the
     // failure surfaces at taskwait instead of hanging the simulation.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
@@ -108,6 +109,18 @@ fn run_task(rt: &Arc<Rt>, task: &Arc<TaskInner>) {
     rt.trace(EventKind::TaskEnd, worker_id(), &task.label, task.id);
     // Settle this task's modeled overheads while still holding the core.
     rt.clock.flush_debt();
+    if let (Some(obs), Some(t0)) = (rt.cfg.obs.as_ref(), span_t0) {
+        let wid = worker_id();
+        let worker = if wid == usize::MAX { u32::MAX } else { wid as u32 };
+        obs.record(crate::obs::Span::interval(
+            crate::obs::Track::Worker { rank: rt.cfg.rank, worker },
+            crate::obs::SpanKind::TaskExec,
+            t0,
+            rt.clock.now(),
+            "task",
+            task.id,
+        ));
+    }
     CURRENT.with(|c| c.borrow_mut().as_mut().unwrap().1 = None);
     task.body_finished();
 }

@@ -1,0 +1,255 @@
+//! Virtual-time metrics registry: counters, gauges (with high-water
+//! marks), and log2-bucket histograms.
+//!
+//! All instruments are lock-free relaxed atomics on the record path;
+//! the registry's name maps are only touched at registration time, so
+//! hot sites hold their `Arc<...>` handles directly (see
+//! [`crate::obs::RunObs`]). Values are virtual nanoseconds or plain
+//! counts — never host time — so snapshots of deterministic quantities
+//! (completion latency, port queueing, pause durations) are identical
+//! across host runs, shard counts, and delivery modes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge that also tracks its high-water mark (the snapshot
+/// reports the hwm — for a simulation that ends quiescent, the last
+/// value is almost always 0 and the peak is the interesting number).
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    hwm: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.hwm.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> u64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2 buckets: bucket `i` holds values `v` with
+/// `floor(log2(v)) + 1 == i` (bucket 0 holds `v == 0`), i.e. bucket
+/// upper bounds 0, 1, 3, 7, ..., 2^63-1 — enough for any `u64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Log2-bucket histogram with exact count/sum/min/max.
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Hist {
+    /// Bucket index for a value: 0 for 0, else `floor(log2(v)) + 1`.
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let n = b.load(Ordering::Relaxed);
+                    (n > 0).then_some((i as u32, n))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram: exact moments plus the
+/// non-empty `(bucket index, count)` pairs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Name-keyed instrument registry. Registration (`counter`/`gauge`/
+/// `histogram`) is get-or-create and may take a lock; recording through
+/// the returned handles never does.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<&'static str, Arc<Hist>>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        self.counters.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Hist> {
+        self.hists.lock().unwrap().entry(name).or_default().clone()
+    }
+
+    /// Copy every instrument (gauges report their high-water mark).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.high_water()))
+                .collect(),
+            hists: self
+                .hists
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a whole [`Registry`]; rides on
+/// `rmpi::RunStats::metrics`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    /// High-water marks.
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        assert_eq!(Hist::bucket_of(2), 2);
+        assert_eq!(Hist::bucket_of(3), 2);
+        assert_eq!(Hist::bucket_of(4), 3);
+        assert_eq!(Hist::bucket_of(1024), 11);
+        assert_eq!(Hist::bucket_of(u64::MAX), 64);
+    }
+
+    #[test]
+    fn hist_moments_and_snapshot() {
+        let h = Hist::default();
+        for v in [0u64, 1, 3, 3, 1024] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1031);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 1024);
+        assert_eq!(s.buckets, vec![(0, 1), (1, 1), (2, 2), (11, 1)]);
+        assert!((s.mean() - 206.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_reuses_instruments() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").add(2);
+        r.gauge("g").set(7);
+        r.gauge("g").set(3);
+        let s = r.snapshot();
+        assert_eq!(s.counters["a"], 3);
+        assert_eq!(s.gauges["g"], 7, "gauge snapshot reports the high-water mark");
+    }
+}

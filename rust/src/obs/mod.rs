@@ -1,0 +1,398 @@
+//! Observability: typed spans, a metrics registry, and the overlap
+//! profiler for the task-aware runtime.
+//!
+//! The paper's headline claim (Sections 4–6) is that TAMPI "naturally
+//! overlaps computation and communication phases". This subsystem makes
+//! that claim *measurable* instead of inferable: every interesting
+//! interval of a simulated run — task execution and task pause
+//! (Section 4's pause/resume protocol), MPI operation lifetime from
+//! post to completion (Section 5's blocking and Section 6's
+//! non-blocking modes), collective schedule rounds, ingress-port busy
+//! intervals, clock-lane lookahead waits, steal attempts — is deposited
+//! as a typed [`Span`] into a per-thread bounded ring buffer.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Tracing must not perturb virtual time.** Every emission site
+//!    only *reads* `Clock::now()`; none adds debt, schedules events, or
+//!    blocks on sim primitives. A run with a [`SpanSink`] attached is
+//!    bit-identical (checksum, vtime, counters) to the same run without
+//!    one — asserted in `rust/tests/obs_spans.rs`.
+//! 2. **Deposits never block.** Each thread owns its own ring
+//!    ([`ThreadRing`]) registered once in the sink; the deposit path is
+//!    a `try_lock` that can only ever contend with a snapshot reader
+//!    (never with another depositor), and on contention the span is
+//!    counted as dropped rather than waited for. Rings are bounded:
+//!    when full the *oldest* span is evicted and counted.
+//! 3. **Always-on metrics.** The [`metrics::Registry`] (counters,
+//!    gauges, log2-bucket histograms) costs a handful of relaxed
+//!    atomics per event and is therefore attached to every run,
+//!    independent of span recording; its snapshot rides on
+//!    `RunStats::metrics`.
+//!
+//! Consumers: [`perfetto::export`] renders a merged snapshot as a
+//! Chrome/Perfetto `trace_event` JSON document (one track per
+//! (rank, worker), per ingress port, per collective engine, and per
+//! clock lane, with flow events linking send→matching-recv and
+//! round→round); [`overlap::overlap_by_rank`] integrates the span
+//! timeline into per-rank busy/comm/overlapped fractions — the fig20
+//! quantification of the paper's central claim.
+
+pub mod metrics;
+pub mod overlap;
+pub mod perfetto;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::VNanos;
+
+use metrics::{Counter, Gauge, Hist, Registry};
+
+/// What a span measures. The variants map onto the paper's phases:
+/// `TaskExec`/`TaskPause` are Section 4's task lifecycle, `MpiCall` is
+/// the in-task window of a (blocking) call, `MpiReq` is the full
+/// post→completion lifetime of a request (Section 6's non-blocking
+/// window), `CollRound` one advance of a compiled collective schedule,
+/// `PortBusy` one message's receiver-processing interval on an ingress
+/// port, `LaneWait` a clock lane stalled on a peer's conservative
+/// lookahead bound, `Send`/`Deliver` the point endpoints of a message
+/// flow, and `Steal` a successful work-steal.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum SpanKind {
+    TaskExec,
+    TaskPause,
+    MpiCall,
+    MpiReq,
+    Send,
+    Deliver,
+    CollRound,
+    PortBusy,
+    LaneWait,
+    Steal,
+}
+
+impl SpanKind {
+    /// Stable category string (Perfetto `cat`, validator keys).
+    pub fn cat(self) -> &'static str {
+        match self {
+            SpanKind::TaskExec => "task",
+            SpanKind::TaskPause => "pause",
+            SpanKind::MpiCall => "mpi",
+            SpanKind::MpiReq => "req",
+            SpanKind::Send => "send",
+            SpanKind::Deliver => "deliver",
+            SpanKind::CollRound => "coll",
+            SpanKind::PortBusy => "port",
+            SpanKind::LaneWait => "lane",
+            SpanKind::Steal => "steal",
+        }
+    }
+}
+
+/// Timeline a span belongs to. Exported as one Perfetto track each:
+/// workers (and the off-worker "main" lane, `worker == u32::MAX`) per
+/// rank, the rank's ingress port, its collective engine, its in-flight
+/// MPI requests, and the simulation clock's lanes.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Track {
+    Worker { rank: u32, worker: u32 },
+    Port { rank: u32 },
+    Coll { rank: u32 },
+    Reqs { rank: u32 },
+    Lane { lane: u32 },
+}
+
+impl Track {
+    /// Rank that owns the track (`None` for clock lanes).
+    pub fn rank(self) -> Option<u32> {
+        match self {
+            Track::Worker { rank, .. }
+            | Track::Port { rank }
+            | Track::Coll { rank }
+            | Track::Reqs { rank } => Some(rank),
+            Track::Lane { .. } => None,
+        }
+    }
+}
+
+/// One recorded interval (or point, when `t0 == t1`) in virtual time.
+/// `flow_in`/`flow_out` (0 = none) carry deterministic flow ids — see
+/// [`fid`] — that the exporter turns into Perfetto flow arrows:
+/// `flow_out` on the producing span matches `flow_in` on the consuming
+/// one (send → matching recv delivery, collective round k → k+1).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub track: Track,
+    pub kind: SpanKind,
+    pub t0: VNanos,
+    pub t1: VNanos,
+    /// Static label (task labels are not copied here; `id` carries the
+    /// task/request identity instead, keeping `Span: Copy`).
+    pub label: &'static str,
+    /// Task id, request id, or round number — kind-dependent.
+    pub id: u64,
+    pub flow_in: u64,
+    pub flow_out: u64,
+}
+
+impl Span {
+    /// Interval span with no flows.
+    pub fn interval(track: Track, kind: SpanKind, t0: VNanos, t1: VNanos, label: &'static str, id: u64) -> Span {
+        Span { track, kind, t0, t1: t1.max(t0), label, id, flow_in: 0, flow_out: 0 }
+    }
+
+    /// Point span (instant event in the export).
+    pub fn point(track: Track, kind: SpanKind, t: VNanos, label: &'static str, id: u64) -> Span {
+        Span::interval(track, kind, t, t, label, id)
+    }
+
+    pub fn with_flow_out(mut self, f: u64) -> Span {
+        self.flow_out = f;
+        self
+    }
+
+    pub fn with_flow_in(mut self, f: u64) -> Span {
+        self.flow_in = f;
+        self
+    }
+}
+
+/// Deterministic 64-bit flow id over the parts that identify a message
+/// or round (FNV-1a; never 0, so 0 can mean "no flow"). Both endpoints
+/// of a flow derive the same id independently — the sender from its
+/// `MsgKey`, the receiver's delivery from the same key — with no id
+/// threading through the engine.
+pub fn fid(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h | 1
+}
+
+/// One thread's bounded span buffer. Deposits are wait-free from the
+/// owning thread's point of view: `try_lock` only ever contends with a
+/// snapshot reader, and a contended deposit is dropped (counted), not
+/// blocked on. When full, the oldest span is evicted (counted).
+pub struct ThreadRing {
+    buf: Mutex<VecDeque<Span>>,
+    dropped: AtomicU64,
+}
+
+impl ThreadRing {
+    fn new(capacity: usize) -> ThreadRing {
+        ThreadRing {
+            buf: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, span: Span, capacity: usize) {
+        match self.buf.try_lock() {
+            Ok(mut buf) => {
+                if buf.len() >= capacity {
+                    buf.pop_front();
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                buf.push_back(span);
+            }
+            // Snapshot in progress on this ring: never wait on the
+            // deposit path (the depositor may be the clock driver).
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Unique id per sink so a thread-local ring cached for one sink is
+/// never reused for another (e.g. two runs in one test process).
+static SINK_IDS: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (sink id, this thread's ring in that sink) — registered on the
+    /// first deposit, reused for every later one.
+    static THREAD_RING: std::cell::RefCell<Option<(u64, Arc<ThreadRing>)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The per-run span collector: a registry of per-thread rings plus the
+/// shared drop counter. Cheap to clone (`Arc`), safe to deposit into
+/// from any thread (workers, rank mains, clock drivers).
+pub struct SpanSink {
+    id: u64,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    /// Spans lost to ring eviction or deposit contention, summed over
+    /// all rings at snapshot time plus this sink-level count.
+    extra_dropped: AtomicU64,
+}
+
+impl SpanSink {
+    /// A sink whose per-thread rings hold up to `capacity` spans each.
+    pub fn new(capacity: usize) -> Arc<SpanSink> {
+        Arc::new(SpanSink {
+            id: SINK_IDS.fetch_add(1, Ordering::Relaxed),
+            capacity: capacity.max(16),
+            rings: Mutex::new(Vec::new()),
+            extra_dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Deposit one span into the calling thread's ring (registering the
+    /// ring on first use). Never blocks; never touches virtual time.
+    pub fn record(self: &Arc<Self>, span: Span) {
+        THREAD_RING.with(|cell| {
+            let mut cell = cell.borrow_mut();
+            let ring = match &*cell {
+                Some((id, ring)) if *id == self.id => ring.clone(),
+                _ => {
+                    let ring = Arc::new(ThreadRing::new(self.capacity));
+                    self.rings.lock().unwrap().push(ring.clone());
+                    *cell = Some((self.id, ring.clone()));
+                    ring
+                }
+            };
+            ring.push(span, self.capacity);
+        });
+    }
+
+    /// Merge every thread's ring into one list sorted by
+    /// `(t0, t1, track, kind, id)` — a deterministic order for any
+    /// fixed span *set* (the set itself can legitimately differ across
+    /// runs for host-scheduling-dependent kinds like `Steal`).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let rings = self.rings.lock().unwrap();
+        let mut out = Vec::new();
+        for ring in rings.iter() {
+            let buf = ring.buf.lock().unwrap();
+            out.extend(buf.iter().copied());
+        }
+        out.sort_by_key(|s| (s.t0, s.t1, s.track, s.kind, s.id));
+        out
+    }
+
+    /// Total spans dropped so far (ring eviction + deposit contention).
+    pub fn dropped(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        rings
+            .iter()
+            .map(|r| r.dropped.load(Ordering::Relaxed))
+            .sum::<u64>()
+            + self.extra_dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-run observability bundle: the optional span sink plus the
+/// always-on metrics registry with its hot instruments pre-resolved
+/// (so emission sites never touch the registry's name maps).
+pub struct RunObs {
+    pub spans: Option<Arc<SpanSink>>,
+    pub metrics: Arc<Registry>,
+    /// Request completion → task resumption latency (virtual ns), the
+    /// fig15 quantity as a distribution.
+    pub completion_latency_ns: Arc<Hist>,
+    /// Port queueing delay: how long a message waited behind earlier
+    /// arrivals before its `rx_ns` service began.
+    pub port_queue_ns: Arc<Hist>,
+    /// Task pause duration (block → unblock, Section 4).
+    pub pause_ns: Arc<Hist>,
+    /// Spans deposited through this bundle.
+    pub spans_recorded: Arc<Counter>,
+    /// High-water mark of messages parked on any single ingress port.
+    pub port_backlog: Arc<Gauge>,
+}
+
+impl RunObs {
+    pub fn new(spans: Option<Arc<SpanSink>>) -> Arc<RunObs> {
+        let metrics = Registry::new();
+        let completion_latency_ns = metrics.histogram("completion_latency_ns");
+        let port_queue_ns = metrics.histogram("port_queue_ns");
+        let pause_ns = metrics.histogram("pause_ns");
+        let spans_recorded = metrics.counter("spans_recorded");
+        let port_backlog = metrics.gauge("port_backlog");
+        Arc::new(RunObs {
+            spans,
+            metrics,
+            completion_latency_ns,
+            port_queue_ns,
+            pause_ns,
+            spans_recorded,
+            port_backlog,
+        })
+    }
+
+    /// Whether span recording is on (metrics always are).
+    pub fn enabled(&self) -> bool {
+        self.spans.is_some()
+    }
+
+    /// Deposit a span if recording is on. The no-sink path is one
+    /// branch — cheap enough to leave unconditionally in hot code.
+    pub fn record(&self, span: Span) {
+        if let Some(sink) = &self.spans {
+            self.spans_recorded.inc();
+            sink.record(span);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_beyond_capacity() {
+        let sink = SpanSink::new(16);
+        let tr = Track::Worker { rank: 0, worker: 0 };
+        for i in 0..40u64 {
+            sink.record(Span::interval(tr, SpanKind::TaskExec, i, i + 1, "task", i));
+        }
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 16);
+        assert_eq!(sink.dropped(), 24);
+        // The survivors are the newest 16, still in time order.
+        assert_eq!(snap.first().unwrap().id, 24);
+        assert_eq!(snap.last().unwrap().id, 39);
+    }
+
+    #[test]
+    fn snapshot_merges_threads() {
+        let sink = SpanSink::new(1024);
+        let tr = Track::Worker { rank: 0, worker: 1 };
+        let s2 = sink.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..10u64 {
+                s2.record(Span::point(tr, SpanKind::Steal, 100 + i, "steal", i));
+            }
+        });
+        for i in 0..10u64 {
+            sink.record(Span::interval(
+                Track::Worker { rank: 0, worker: 0 },
+                SpanKind::TaskExec,
+                i,
+                i + 5,
+                "task",
+                i,
+            ));
+        }
+        h.join().unwrap();
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 20);
+        assert_eq!(sink.dropped(), 0);
+        assert!(snap.windows(2).all(|w| w[0].t0 <= w[1].t0), "snapshot not sorted");
+    }
+
+    #[test]
+    fn fid_is_stable_and_nonzero() {
+        let a = fid(&[1, 2, 3]);
+        assert_eq!(a, fid(&[1, 2, 3]));
+        assert_ne!(a, fid(&[3, 2, 1]));
+        assert_ne!(fid(&[]), 0);
+    }
+}

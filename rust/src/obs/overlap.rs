@@ -1,0 +1,255 @@
+//! The overlap profiler: integrate a span timeline into per-rank
+//! busy / communication / overlapped time, quantifying the paper's
+//! central claim — that task-aware MPI "naturally overlaps computation
+//! and communication phases" — as a single fraction per rank.
+//!
+//! Definitions (all in virtual ns, per rank):
+//!
+//! * **busy** — union over tasks of (that task's `TaskExec` interval
+//!   minus its own `TaskPause` intervals). Subtracting per *task* (not
+//!   per worker lane) is what makes this correct under Section 4's
+//!   pause/resume protocol: while task A is paused its core runs task
+//!   B, whose exec interval covers the same wall of virtual time — the
+//!   rank stays busy through B even though A is blocked.
+//! * **comm** — union of every in-flight communication interval the
+//!   rank owns: request lifetimes (`MpiReq`, post → completion),
+//!   collective schedule rounds (`CollRound`), and ingress-port service
+//!   intervals (`PortBusy`).
+//! * **overlapped** — `busy ∩ comm`: virtual time where the rank was
+//!   computing *while* communication it owns was in flight.
+//!
+//! The headline number is `overlapped / comm` — 0 for a rank that
+//! always stops to communicate, →1 for one whose communication hides
+//! entirely behind compute. Blocking task-aware mode loses pause /
+//! resume bookkeeping and scheduling gaps inside every comm window;
+//! the non-blocking mode (Section 6) does not, which is exactly what
+//! fig20 measures.
+
+use std::collections::BTreeMap;
+
+use super::{Span, SpanKind};
+
+/// Per-rank integration result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankOverlap {
+    pub rank: u32,
+    /// Virtual span of the rank's timeline (max t1 − min t0).
+    pub span_ns: u64,
+    pub busy_ns: u64,
+    pub comm_ns: u64,
+    pub overlap_ns: u64,
+}
+
+impl RankOverlap {
+    pub fn busy_frac(&self) -> f64 {
+        frac(self.busy_ns, self.span_ns)
+    }
+
+    pub fn comm_frac(&self) -> f64 {
+        frac(self.comm_ns, self.span_ns)
+    }
+
+    /// The headline: fraction of in-flight-communication time the rank
+    /// spent computing.
+    pub fn overlap_frac(&self) -> f64 {
+        frac(self.overlap_ns, self.comm_ns)
+    }
+}
+
+fn frac(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Integrate a merged span snapshot into per-rank overlap accounting.
+/// Clock-lane spans (no owning rank) are ignored.
+pub fn overlap_by_rank(spans: &[Span]) -> Vec<RankOverlap> {
+    // Per rank: task id -> (exec intervals, pause intervals); comm list.
+    struct Acc {
+        tasks: BTreeMap<u64, (Vec<(u64, u64)>, Vec<(u64, u64)>)>,
+        comm: Vec<(u64, u64)>,
+        t_min: u64,
+        t_max: u64,
+    }
+    let mut ranks: BTreeMap<u32, Acc> = BTreeMap::new();
+    for s in spans {
+        let Some(rank) = s.track.rank() else { continue };
+        let acc = ranks.entry(rank).or_insert_with(|| Acc {
+            tasks: BTreeMap::new(),
+            comm: Vec::new(),
+            t_min: u64::MAX,
+            t_max: 0,
+        });
+        acc.t_min = acc.t_min.min(s.t0);
+        acc.t_max = acc.t_max.max(s.t1);
+        match s.kind {
+            SpanKind::TaskExec => acc.tasks.entry(s.id).or_default().0.push((s.t0, s.t1)),
+            SpanKind::TaskPause => acc.tasks.entry(s.id).or_default().1.push((s.t0, s.t1)),
+            SpanKind::MpiReq | SpanKind::CollRound | SpanKind::PortBusy => {
+                acc.comm.push((s.t0, s.t1))
+            }
+            _ => {}
+        }
+    }
+    ranks
+        .into_iter()
+        .map(|(rank, acc)| {
+            let mut busy = Vec::new();
+            for (_, (exec, pause)) in acc.tasks {
+                busy.extend(subtract(normalize(exec), normalize(pause)));
+            }
+            let busy = normalize(busy);
+            let comm = normalize(acc.comm);
+            let overlap = intersect(&busy, &comm);
+            RankOverlap {
+                rank,
+                span_ns: acc.t_max.saturating_sub(acc.t_min),
+                busy_ns: total(&busy),
+                comm_ns: total(&comm),
+                overlap_ns: total(&overlap),
+            }
+        })
+        .collect()
+}
+
+/// Cluster-level summary: totals over all ranks.
+pub fn overlap_summary(per_rank: &[RankOverlap]) -> RankOverlap {
+    let mut out = RankOverlap { rank: u32::MAX, span_ns: 0, busy_ns: 0, comm_ns: 0, overlap_ns: 0 };
+    for r in per_rank {
+        out.span_ns += r.span_ns;
+        out.busy_ns += r.busy_ns;
+        out.comm_ns += r.comm_ns;
+        out.overlap_ns += r.overlap_ns;
+    }
+    out
+}
+
+/// Sort + merge overlapping/adjacent intervals; drops empty ones.
+fn normalize(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.retain(|&(a, b)| b > a);
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+    for (a, b) in v {
+        match out.last_mut() {
+            Some((_, pb)) if a <= *pb => *pb = (*pb).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// `a − b`, both normalized.
+fn subtract(a: Vec<(u64, u64)>, b: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    let mut out = Vec::with_capacity(a.len());
+    let mut bi = 0;
+    for (mut lo, hi) in a {
+        while lo < hi {
+            // Skip b-intervals entirely before lo.
+            while bi < b.len() && b[bi].1 <= lo {
+                bi += 1;
+            }
+            match b.get(bi) {
+                Some(&(blo, bhi)) if blo < hi => {
+                    if blo > lo {
+                        out.push((lo, blo));
+                    }
+                    lo = bhi.max(lo);
+                }
+                _ => {
+                    out.push((lo, hi));
+                    break;
+                }
+            }
+        }
+        // `bi` may point at an interval that also clips the next `a`
+        // entry; step back one so the skip loop re-evaluates it.
+        bi = bi.saturating_sub(1);
+    }
+    normalize(out)
+}
+
+/// `a ∩ b`, both normalized.
+fn intersect(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let (mut i, mut j) = (0, 0);
+    let mut out = Vec::new();
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+fn total(v: &[(u64, u64)]) -> u64 {
+    v.iter().map(|&(a, b)| b - a).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Span, SpanKind, Track};
+    use super::*;
+
+    #[test]
+    fn interval_algebra() {
+        let a = normalize(vec![(0, 10), (5, 12), (20, 30), (12, 13)]);
+        assert_eq!(a, vec![(0, 13), (20, 30)]);
+        assert_eq!(subtract(a.clone(), vec![(4, 6), (25, 40)]), vec![(0, 4), (6, 13), (20, 25)]);
+        assert_eq!(intersect(&a, &[(4, 6), (25, 40)]), vec![(4, 6), (25, 30)]);
+        assert_eq!(total(&a), 23);
+    }
+
+    #[test]
+    fn subtract_interval_spanning_two_sources() {
+        // One b-interval clips the tail of a[0] AND the head of a[1].
+        let a = vec![(0, 10), (20, 30)];
+        let b = vec![(8, 22)];
+        assert_eq!(subtract(a, b), vec![(0, 8), (22, 30)]);
+    }
+
+    #[test]
+    fn pause_of_one_task_does_not_erase_anothers_exec() {
+        let w = |worker| Track::Worker { rank: 0, worker };
+        let spans = [
+            // Task 1 runs [0,100] but is paused [10,90] (blocking recv).
+            Span::interval(w(0), SpanKind::TaskExec, 0, 100, "task", 1),
+            Span::interval(w(0), SpanKind::TaskPause, 10, 90, "pause", 1),
+            // Task 2 computes [10,90] on the freed core.
+            Span::interval(w(1), SpanKind::TaskExec, 10, 90, "task", 2),
+            // The recv request is in flight [5,95].
+            Span::interval(Track::Reqs { rank: 0 }, SpanKind::MpiReq, 5, 95, "req", 7),
+        ];
+        let per = overlap_by_rank(&spans);
+        assert_eq!(per.len(), 1);
+        let r = per[0];
+        assert_eq!(r.busy_ns, 100, "busy = [0,10)+[10,90)+[90,100]");
+        assert_eq!(r.comm_ns, 90);
+        assert_eq!(r.overlap_ns, 90);
+        assert!((r.overlap_frac() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_comm_means_zero_overlap_fraction() {
+        let spans = [Span::interval(
+            Track::Worker { rank: 3, worker: 0 },
+            SpanKind::TaskExec,
+            0,
+            50,
+            "task",
+            1,
+        )];
+        let r = overlap_by_rank(&spans)[0];
+        assert_eq!(r.comm_ns, 0);
+        assert_eq!(r.overlap_frac(), 0.0);
+        assert_eq!(r.busy_ns, 50);
+    }
+}

@@ -1,0 +1,216 @@
+//! Chrome/Perfetto `trace_event` JSON exporter.
+//!
+//! Renders a merged span snapshot (see [`super::SpanSink::snapshot`])
+//! as a JSON document loadable by <https://ui.perfetto.dev> or
+//! `chrome://tracing`: one *process* per rank (plus one for the
+//! simulation clock) and one *thread track* per worker (including the
+//! off-worker "main" lane), per ingress port, per collective engine,
+//! per request timeline, and per clock lane. Interval spans become `X`
+//! complete events, point spans become `i` instants, request lifetimes
+//! become `b`/`e` async pairs (they legitimately overlap on a rank's
+//! request track), and `flow_in`/`flow_out` ids become `s`→`f` flow
+//! arrows — send → matching recv delivery, collective round → round.
+//!
+//! Timestamps are virtual time: `ts`/`dur` are microseconds with ns
+//! resolution (the trace_event unit), so the timeline reads directly
+//! in simulated time. Events are globally sorted by instant, which
+//! makes `ts` non-decreasing within every track — the property
+//! `scripts/validate_trace.py` checks.
+
+use std::fmt::Write as _;
+
+use super::{Span, SpanKind, Track};
+
+/// pid used for the simulation clock's lane tracks (ranks use their
+/// own index; real rank counts stay far below this).
+const CLOCK_PID: u32 = 1_000_000;
+
+fn pid_tid(track: Track) -> (u32, u32) {
+    match track {
+        Track::Worker { rank, worker } => {
+            (rank, if worker == u32::MAX { 0 } else { worker.saturating_add(1) })
+        }
+        Track::Port { rank } => (rank, 900),
+        Track::Coll { rank } => (rank, 910),
+        Track::Reqs { rank } => (rank, 920),
+        Track::Lane { lane } => (CLOCK_PID, lane),
+    }
+}
+
+fn thread_name(track: Track) -> String {
+    match track {
+        Track::Worker { worker, .. } if worker == u32::MAX => "main".to_string(),
+        Track::Worker { worker, .. } => format!("worker {worker}"),
+        Track::Port { .. } => "ingress port".to_string(),
+        Track::Coll { .. } => "collectives".to_string(),
+        Track::Reqs { .. } => "mpi requests".to_string(),
+        Track::Lane { lane } => format!("lane {lane}"),
+    }
+}
+
+/// µs with ns resolution, as the literal JSON number text.
+fn us(t_ns: u64) -> String {
+    format!("{:.3}", t_ns as f64 / 1000.0)
+}
+
+/// Export a merged snapshot plus its dropped-span count as a complete
+/// Chrome/Perfetto JSON document.
+pub fn export(spans: &[Span], dropped: u64) -> String {
+    // (sort instant ns, phase rank, rendered event) — phase rank keeps
+    // metadata first and orders same-instant begin/end sanely.
+    let mut events: Vec<(u64, u8, String)> = Vec::with_capacity(spans.len() * 2 + 16);
+
+    // Track metadata: name every process and thread we will emit onto.
+    let mut seen_tracks: Vec<Track> = spans.iter().map(|s| s.track).collect();
+    seen_tracks.sort_unstable();
+    seen_tracks.dedup();
+    let mut seen_pids: Vec<u32> = Vec::new();
+    for &track in &seen_tracks {
+        let (pid, tid) = pid_tid(track);
+        if !seen_pids.contains(&pid) {
+            seen_pids.push(pid);
+            let pname = if pid == CLOCK_PID {
+                "sim clock".to_string()
+            } else {
+                format!("rank {pid}")
+            };
+            events.push((
+                0,
+                0,
+                format!(
+                    "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"name\":\"{pname}\"}}}}"
+                ),
+            ));
+        }
+        events.push((
+            0,
+            0,
+            format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                thread_name(track)
+            ),
+        ));
+    }
+
+    for s in spans {
+        let (pid, tid) = pid_tid(s.track);
+        let cat = s.kind.cat();
+        let common = format!(
+            "\"cat\":\"{cat}\",\"name\":\"{}\",\"pid\":{pid},\"tid\":{tid}",
+            s.label
+        );
+        let args = format!("\"args\":{{\"id\":{}}}", s.id);
+        match s.kind {
+            // Request lifetimes overlap on their rank's track: async pair.
+            SpanKind::MpiReq => {
+                events.push((
+                    s.t0,
+                    1,
+                    format!(
+                        "{{\"ph\":\"b\",{common},\"id\":{},\"ts\":{},{args}}}",
+                        s.id,
+                        us(s.t0)
+                    ),
+                ));
+                events.push((
+                    s.t1,
+                    6,
+                    format!("{{\"ph\":\"e\",{common},\"id\":{},\"ts\":{}}}", s.id, us(s.t1)),
+                ));
+            }
+            _ if s.t1 == s.t0 => {
+                events.push((
+                    s.t0,
+                    3,
+                    format!("{{\"ph\":\"i\",{common},\"s\":\"t\",\"ts\":{},{args}}}", us(s.t0)),
+                ));
+            }
+            _ => {
+                events.push((
+                    s.t0,
+                    2,
+                    format!(
+                        "{{\"ph\":\"X\",{common},\"ts\":{},\"dur\":{},{args}}}",
+                        us(s.t0),
+                        us(s.t1 - s.t0)
+                    ),
+                ));
+            }
+        }
+        if s.flow_out != 0 {
+            // Producer end: anchor at the span's end (its start for
+            // points) so round→round arrows leave the finished round.
+            let ts = if s.t1 == s.t0 { s.t0 } else { s.t1 };
+            events.push((
+                ts,
+                4,
+                format!(
+                    "{{\"ph\":\"s\",\"cat\":\"flow\",\"name\":\"flow\",\"id\":{},\
+                     \"pid\":{pid},\"tid\":{tid},\"ts\":{}}}",
+                    s.flow_out,
+                    us(ts)
+                ),
+            ));
+        }
+        if s.flow_in != 0 {
+            events.push((
+                s.t0,
+                5,
+                format!(
+                    "{{\"ph\":\"f\",\"bp\":\"e\",\"cat\":\"flow\",\"name\":\"flow\",\
+                     \"id\":{},\"pid\":{pid},\"tid\":{tid},\"ts\":{}}}",
+                    s.flow_in,
+                    us(s.t0)
+                ),
+            ));
+        }
+    }
+
+    events.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    let mut out = String::with_capacity(events.len() * 96 + 128);
+    out.push_str("{\"displayTimeUnit\":\"ns\",\"otherData\":{\"dropped_spans\":");
+    let _ = write!(out, "{dropped}");
+    out.push_str("},\"traceEvents\":[\n");
+    for (i, (_, _, e)) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(e);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fid, Span, SpanKind, Track};
+    use super::*;
+
+    #[test]
+    fn export_shape_and_flows() {
+        let f = fid(&[1, 2, 3]);
+        let spans = [
+            Span::interval(Track::Worker { rank: 0, worker: 0 }, SpanKind::TaskExec, 0, 2000, "task", 1),
+            Span::point(Track::Worker { rank: 0, worker: 0 }, SpanKind::Send, 500, "isend", 0)
+                .with_flow_out(f),
+            Span::point(Track::Port { rank: 1 }, SpanKind::Deliver, 1500, "deliver", 0)
+                .with_flow_in(f),
+            Span::interval(Track::Reqs { rank: 1 }, SpanKind::MpiReq, 100, 1500, "recv", 9),
+            Span::interval(Track::Lane { lane: 0 }, SpanKind::LaneWait, 0, 400, "lane-wait", 0),
+        ];
+        let json = export(&spans, 3);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"dropped_spans\":3"));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"sim clock\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"b\""));
+        assert!(json.contains("\"ph\":\"e\""));
+        assert!(json.contains(&format!("\"ph\":\"s\",\"cat\":\"flow\",\"name\":\"flow\",\"id\":{f}")));
+        assert!(json.contains("\"ph\":\"f\",\"bp\":\"e\""));
+        // X at t0=0 lasts 2 µs.
+        assert!(json.contains("\"ts\":0.000,\"dur\":2.000"));
+    }
+}

@@ -233,6 +233,9 @@ pub(crate) struct CollSchedule {
     retain: Mutex<Vec<Box<dyn Any + Send>>>,
     total: u32,
     advanced: AtomicU32,
+    /// Virtual instant of the previous round advance (launch instant for
+    /// round 1) — the left edge of each `CollRound` span.
+    last_advance_ns: std::sync::atomic::AtomicU64,
     /// Final completion request (created through the rank's [`Comm`], so
     /// its continuations route through the rank's shard like any other
     /// request's).
@@ -260,7 +263,10 @@ impl CollSchedule {
             rounds: Mutex::new(rounds.into()),
             retain: Mutex::new(Vec::new()),
             advanced: AtomicU32::new(0),
-            req: Request(comm.mk_req_state()),
+            last_advance_ns: std::sync::atomic::AtomicU64::new(
+                comm.uni.clock.now(),
+            ),
+            req: Request(comm.mk_req_state("coll")),
         });
         sched.trace(EventKind::CollScheduleCompiled {
             comm: sched.comm_id,
@@ -301,6 +307,39 @@ impl CollSchedule {
                 round: n,
                 total: self.total,
             });
+            let obs = &self.comm.uni.obs;
+            if obs.enabled() {
+                // One span per round on the rank's collective track,
+                // chained round→round by flow ids (the 0xC011 tag keeps
+                // round flows disjoint from message-key flows).
+                let t = self.comm.uni.clock.now();
+                let prev = self.last_advance_ns.swap(t, Ordering::AcqRel);
+                let mut span = crate::obs::Span::interval(
+                    crate::obs::Track::Coll { rank: self.comm.rank as u32 },
+                    crate::obs::SpanKind::CollRound,
+                    prev,
+                    t,
+                    self.kind,
+                    n as u64,
+                );
+                if n < self.total {
+                    span = span.with_flow_out(crate::obs::fid(&[
+                        0xC011,
+                        self.comm_id as u64,
+                        self.seq,
+                        n as u64,
+                    ]));
+                }
+                if n > 1 {
+                    span = span.with_flow_in(crate::obs::fid(&[
+                        0xC011,
+                        self.comm_id as u64,
+                        self.seq,
+                        (n - 1) as u64,
+                    ]));
+                }
+                obs.record(span);
+            }
             if !post.retain.is_empty() {
                 self.retain.lock().unwrap().extend(post.retain);
             }

@@ -44,6 +44,10 @@ pub(crate) struct UniState {
     /// Cluster tracer (annotation records from the collective engine's
     /// round advances are stamped here).
     pub tracer: Option<Arc<Tracer>>,
+    /// Observability bundle: metrics always, spans when the run asked
+    /// for them. Emission sites only read `Clock::now()` — recording
+    /// never perturbs virtual time.
+    pub obs: Arc<crate::obs::RunObs>,
 }
 
 impl UniState {
@@ -212,12 +216,21 @@ impl Comm {
     /// collective-internal alike) goes through here, so a wildcard-source
     /// receive is always delivered on its poster's shard no matter which
     /// thread completes it.
-    pub(crate) fn mk_req_state(&self) -> Arc<ReqState> {
+    pub(crate) fn mk_req_state(&self, label: &'static str) -> Arc<ReqState> {
         let s = Arc::new(ReqState::default());
         s.set_lane(self.uni.lane_of[self.rank]);
         if let Some(shard) = self.uni.progress.shard_for(self.rank) {
             s.route_through(shard);
         }
+        // Always stamped: the completion-latency histogram is part of
+        // every run's metrics; the span itself is dropped by `RunObs`
+        // when no sink is attached.
+        s.set_obs(
+            self.uni.obs.clone(),
+            self.rank as u32,
+            self.uni.clock.now(),
+            label,
+        );
         s
     }
 

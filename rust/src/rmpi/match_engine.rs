@@ -37,6 +37,9 @@ pub(crate) struct Envelope {
     pub booking: Booking,
     /// Rendezvous/ssend: the sender's request completes at delivery.
     pub sender_req: Option<Arc<ReqState>>,
+    /// Flow id tying this message's delivery back to its send point in
+    /// the exported trace (0 = no flow; see [`crate::obs::fid`]).
+    pub flow: u64,
 }
 
 #[derive(Default)]
@@ -92,6 +95,7 @@ fn complete_at_deadline(
     status: Status,
     req: Arc<ReqState>,
     sender: Option<Arc<ReqState>>,
+    flow: u64,
 ) {
     let clock = clock.clone();
     booking.on_ready(move |ready| {
@@ -100,6 +104,25 @@ fn complete_at_deadline(
         // was already processed (the caller's lane is then the
         // receiver's own lane, so `now()` is the match instant).
         let t_c = ready.max(clock.now());
+        // Delivery point on the receiver's port track, closing the
+        // send→recv flow arrow. Emitted before the completions below
+        // (same virtual instant; emission only reads time).
+        if flow != 0 {
+            if let Some((obs, rank)) = req.obs_stamp() {
+                if obs.enabled() {
+                    obs.record(
+                        crate::obs::Span::point(
+                            crate::obs::Track::Port { rank },
+                            crate::obs::SpanKind::Deliver,
+                            t_c,
+                            "deliver",
+                            flow,
+                        )
+                        .with_flow_in(flow),
+                    );
+                }
+            }
+        }
         let recv_lane = req.lane();
         match sender {
             None => {
@@ -162,7 +185,7 @@ pub(crate) fn deliver(
         tag: env.tag,
         bytes: env.data.len(),
     };
-    complete_at_deadline(clock, env.booking, status, posted.req, env.sender_req);
+    complete_at_deadline(clock, env.booking, status, posted.req, env.sender_req, env.flow);
 }
 
 /// Direct delivery (send fast path): the payload goes straight from the
@@ -177,6 +200,7 @@ pub(crate) fn deliver_direct(
     booking: Booking,
     sender_req: Option<Arc<ReqState>>,
     posted: PostedRecv,
+    flow: u64,
 ) {
     assert!(
         bytes.len() <= posted.buf.len,
@@ -189,7 +213,7 @@ pub(crate) fn deliver_direct(
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), posted.buf.ptr, bytes.len());
     }
     let status = Status { source: src as i32, tag, bytes: bytes.len() };
-    complete_at_deadline(clock, booking, status, posted.req, sender_req);
+    complete_at_deadline(clock, booking, status, posted.req, sender_req, flow);
 }
 
 impl DstQueues {
@@ -247,6 +271,7 @@ mod tests {
             data: vec![0u8; 4].into_boxed_slice(),
             booking: Booking::resolved(0),
             sender_req: None,
+            flow: 0,
         }
     }
 

@@ -149,11 +149,16 @@ struct PortInner {
 /// One rank's ingress port (see module docs).
 pub(crate) struct Port {
     inner: Mutex<PortInner>,
+    /// Owning rank (span track identity).
+    rank: u32,
+    /// Observability bundle: `PortBusy` service spans when a sink is
+    /// attached, queueing-delay histogram + backlog gauge always.
+    obs: Arc<crate::obs::RunObs>,
 }
 
 impl Port {
-    fn new() -> Port {
-        Port { inner: Mutex::new(PortInner::default()) }
+    fn new(rank: u32, obs: Arc<crate::obs::RunObs>) -> Port {
+        Port { inner: Mutex::new(PortInner::default()), rank, obs }
     }
 
     fn book(
@@ -170,7 +175,11 @@ impl Port {
             return Booking::resolved(arrival);
         }
         let b = Booking::pending();
-        self.inner.lock().unwrap().pending.insert((arrival, key), b.clone());
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.pending.insert((arrival, key), b.clone());
+            self.obs.port_backlog.set(g.pending.len() as u64);
+        }
         let clock2 = clock.clone();
         // The resolve pass runs on the *destination* rank's clock lane:
         // its `now()` is then the port owner's virtual time, and the
@@ -193,8 +202,21 @@ impl Port {
                 if arrival > now {
                     break;
                 }
-                let (_, b) = g.pending.pop_first().unwrap();
+                let ((arrival, key), b) = g.pending.pop_first().unwrap();
                 let ready = g.clock.service(arrival, rx_ns);
+                // Queueing delay: how long the message waited behind
+                // earlier arrivals before its service began.
+                self.obs.port_queue_ns.record((ready - rx_ns).saturating_sub(arrival));
+                if self.obs.enabled() {
+                    self.obs.record(crate::obs::Span::interval(
+                        crate::obs::Track::Port { rank: self.rank },
+                        crate::obs::SpanKind::PortBusy,
+                        ready - rx_ns,
+                        ready,
+                        "rx",
+                        key.seq,
+                    ));
+                }
                 due.push((b, ready));
             }
         }
@@ -217,7 +239,12 @@ pub(crate) struct Ports {
 }
 
 impl Ports {
-    pub fn new(size: usize, net: &super::NetworkModel, lane_of: Vec<usize>) -> Ports {
+    pub fn new(
+        size: usize,
+        net: &super::NetworkModel,
+        lane_of: Vec<usize>,
+        obs: Arc<crate::obs::RunObs>,
+    ) -> Ports {
         // Determinism precondition (see module docs): with rx_ns > 0, a
         // message must arrive strictly after it was booked, so every
         // same-instant booking set is complete when its resolve pass
@@ -230,7 +257,9 @@ impl Ports {
         assert_eq!(lane_of.len(), size, "lane map must cover every rank");
         Ports {
             rx_ns: net.rx_ns,
-            ports: (0..size).map(|_| Arc::new(Port::new())).collect(),
+            ports: (0..size)
+                .map(|r| Arc::new(Port::new(r as u32, obs.clone())))
+                .collect(),
             send_seq: (0..size).map(|_| AtomicU64::new(0)).collect(),
             lane_of,
         }

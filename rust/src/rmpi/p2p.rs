@@ -53,6 +53,28 @@ impl Comm {
             seq: self.uni.ports.next_seq(self.rank),
         };
         let booking = self.uni.ports.book(dst, &self.uni.clock, key, arrive_at);
+        // Flow id derived from the message key: the send point carries it
+        // as `flow_out`, the matching delivery on the receiver's port
+        // closes it as `flow_in` (the send→recv arrow in Perfetto).
+        let flow = if self.uni.obs.enabled() {
+            crate::obs::fid(&[key.sender_vtime, key.src as u64, key.tag as u64, key.seq])
+        } else {
+            0
+        };
+        if flow != 0 {
+            let wid = crate::nanos::worker::worker_id();
+            let w = if wid == usize::MAX { u32::MAX } else { wid as u32 };
+            self.uni.obs.record(
+                crate::obs::Span::point(
+                    crate::obs::Track::Worker { rank: self.rank as u32, worker: w },
+                    crate::obs::SpanKind::Send,
+                    sender_vtime,
+                    "isend",
+                    key.seq,
+                )
+                .with_flow_out(flow),
+            );
+        }
         let rendezvous = sync || !net.is_eager(bytes.len());
         // Rendezvous sender requests are owned by (and shard-routed to)
         // the *sending* rank.
@@ -69,7 +91,7 @@ impl Comm {
             if send_lane != recv_lane {
                 self.uni.clock.begin_feedback(recv_lane, send_lane);
             }
-            Some(self.mk_req_state())
+            Some(self.mk_req_state("send"))
         } else {
             None
         };
@@ -90,6 +112,7 @@ impl Comm {
                 booking,
                 sender_req,
                 posted,
+                flow,
             );
             return req;
         }
@@ -99,6 +122,7 @@ impl Comm {
             data: bytes.to_vec().into_boxed_slice(),
             booking,
             sender_req,
+            flow,
         };
         q.unexpected.push_back(env);
         drop(q);
@@ -115,7 +139,7 @@ impl Comm {
         crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
         // Owned by the posting rank: completions (wherever they are
         // delivered from) route to this rank's shard.
-        let req = Request(self.mk_req_state());
+        let req = Request(self.mk_req_state("recv"));
         let bytes = as_bytes_mut(buf);
         let posted = PostedRecv {
             src: if src == ANY_SOURCE {

@@ -56,6 +56,10 @@ pub(crate) struct ReqState {
     /// requests, `DeliveryMode::Direct`) fires continuations inline at
     /// the completion point.
     shard: Mutex<Option<Arc<Shard>>>,
+    /// Observability stamp (obs bundle, owning rank, post instant, label),
+    /// set once at creation by [`crate::rmpi::Comm`] when spans are on.
+    /// `complete` turns it into one `MpiReq` lifetime span.
+    obs: Mutex<Option<(Arc<crate::obs::RunObs>, u32, u64, &'static str)>>,
 }
 
 impl Default for ReqState {
@@ -67,6 +71,7 @@ impl Default for ReqState {
             lane: AtomicUsize::new(NO_LANE),
             on_complete: Mutex::new(Vec::new()),
             shard: Mutex::new(None),
+            obs: Mutex::new(None),
         }
     }
 }
@@ -90,9 +95,43 @@ impl ReqState {
     /// that delivers the completion — a rank main, a worker, or the clock
     /// thread for deferred network deliveries (`Clock::call_at` in
     /// `match_engine::deliver`/`deliver_direct`).
+    /// Stamp the observability bundle for one request-lifetime span
+    /// (once, at creation): owning rank, post instant, span label.
+    pub(crate) fn set_obs(
+        &self,
+        obs: Arc<crate::obs::RunObs>,
+        rank: u32,
+        born: u64,
+        label: &'static str,
+    ) {
+        *self.obs.lock().unwrap() = Some((obs, rank, born, label));
+    }
+
+    /// Peek the observability bundle + owning rank (for delivery-point
+    /// spans emitted by the match engine) without consuming the stamp.
+    pub(crate) fn obs_stamp(&self) -> Option<(Arc<crate::obs::RunObs>, u32)> {
+        self.obs.lock().unwrap().as_ref().map(|(o, r, _, _)| (o.clone(), *r))
+    }
+
     pub(crate) fn complete(&self, clock: &Clock, status: Option<Status>) {
         if let Some(s) = status {
             *self.status.lock().unwrap() = s;
+        }
+        if let Some((obs, rank, born, label)) = self.obs.lock().unwrap().take() {
+            // Unique id: the exporter pairs `b`/`e` async events by id,
+            // so same-instant requests must not collide.
+            static REQ_SPAN_ID: AtomicUsize = AtomicUsize::new(1);
+            let id = REQ_SPAN_ID.fetch_add(1, Ordering::Relaxed) as u64;
+            let now = clock.now();
+            obs.completion_latency_ns.record(now.saturating_sub(born));
+            obs.record(crate::obs::Span::interval(
+                crate::obs::Track::Reqs { rank },
+                crate::obs::SpanKind::MpiReq,
+                born,
+                now,
+                label,
+                id,
+            ));
         }
         self.completed.store(true, Ordering::Release);
         self.waiters.notify_all(clock);

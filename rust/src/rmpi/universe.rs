@@ -60,6 +60,11 @@ pub struct ClusterConfig {
     /// results are bit-identical to 1 lane at equal seeds. Clamped to
     /// the node count. See [`crate::sim`].
     pub clock_shards: usize,
+    /// Span sink for the observability layer (default `None` — no span
+    /// recording; the metrics registry runs regardless). Attaching one
+    /// never changes results: emission sites only read virtual time.
+    /// See [`crate::obs`].
+    pub spans: Option<Arc<crate::obs::SpanSink>>,
 }
 
 impl ClusterConfig {
@@ -81,7 +86,14 @@ impl ClusterConfig {
             topology: TopologyMode::default(),
             sched_cache: true,
             clock_shards: 1,
+            spans: None,
         }
+    }
+
+    /// Builder-style span-sink attachment (bench/test convenience).
+    pub fn with_spans(mut self, sink: Arc<crate::obs::SpanSink>) -> Self {
+        self.spans = Some(sink);
+        self
     }
 
     /// Builder-style clock-shard override (bench/test convenience).
@@ -177,6 +189,10 @@ pub struct RunStats {
     pub elapsed_host_ns: u64,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
+    /// Snapshot of the run's metrics registry: counters, gauges, and
+    /// log2-bucket histograms (completion latency, port queueing delay,
+    /// pause duration). Always populated; see [`crate::obs::metrics`].
+    pub metrics: crate::obs::metrics::MetricsSnapshot,
 }
 
 /// Cluster-wide schedule-cache counters (see
@@ -262,10 +278,16 @@ impl Universe {
         let node_of: Vec<usize> = (0..size).map(|r| r / cfg.ranks_per_node).collect();
         let lane_of: Vec<usize> =
             (0..size).map(|r| node_of[r] * shards / cfg.nodes).collect();
+        let obs = crate::obs::RunObs::new(cfg.spans.clone());
+        if obs.enabled() {
+            // Clock-lane lookahead-wait spans (only worth the driver-loop
+            // bookkeeping when a sink is attached).
+            clock.set_obs(obs.clone());
+        }
         let uni = Arc::new(UniState {
             clock: clock.clone(),
             net: cfg.net,
-            ports: crate::rmpi::net::Ports::new(size, &cfg.net, lane_of.clone()),
+            ports: crate::rmpi::net::Ports::new(size, &cfg.net, lane_of.clone(), obs.clone()),
             node_of,
             lane_of: lane_of.clone(),
             topology: cfg.topology,
@@ -276,6 +298,7 @@ impl Universe {
             dup_map: Mutex::new(HashMap::new()),
             progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
             tracer: cfg.tracer.clone(),
+            obs: obs.clone(),
         });
         {
             // World communicator owns contexts 0 (p2p) and 1 (collectives).
@@ -300,6 +323,7 @@ impl Universe {
                     rc.completion_mode = cfg.completion_mode;
                     rc.tracer = cfg.tracer.clone();
                     rc.graph = cfg.graph.clone();
+                    rc.obs = Some(obs.clone());
                     Some(Runtime::new(clock.clone(), rc))
                 }
             })
@@ -475,6 +499,7 @@ impl Universe {
                     cross_shard_events: cc.cross_lane,
                     elapsed_host_ns: host_start.elapsed().as_nanos() as u64,
                     counters,
+                    metrics: obs.metrics.snapshot(),
                 })
             }
             Err(e) => {

@@ -225,6 +225,12 @@ pub struct Clock {
     n_batches: AtomicU64,
     n_cross: AtomicU64,
     n_token_reuse: AtomicU64,
+    /// Observability hook (set by the Universe when span recording is
+    /// on): lane drivers emit a `LaneWait` span for every stretch they
+    /// spend horizon-blocked on a peer's conservative-lookahead bound.
+    /// Read only on the cold blocked→fire edge; never consulted on the
+    /// hot firing path, and emission never touches virtual time.
+    obs: Mutex<Option<Arc<crate::obs::RunObs>>>,
 }
 
 impl Clock {
@@ -257,6 +263,7 @@ impl Clock {
             n_batches: AtomicU64::new(0),
             n_cross: AtomicU64::new(0),
             n_token_reuse: AtomicU64::new(0),
+            obs: Mutex::new(None),
         });
         let handles = (0..lanes)
             .map(|i| {
@@ -320,6 +327,12 @@ impl Clock {
     /// Configure deadlock behaviour: panic (default) or set a flag and halt.
     pub fn set_panic_on_deadlock(&self, panic: bool) {
         self.panic_on_deadlock.store(panic, Ordering::Release);
+    }
+
+    /// Attach the run's observability bundle; from now on, lane
+    /// drivers record `LaneWait` spans for horizon-blocked stretches.
+    pub fn set_obs(&self, obs: Arc<crate::obs::RunObs>) {
+        *self.obs.lock().unwrap() = Some(obs);
     }
 
     /// Snapshot of the clock throughput counters.
@@ -652,6 +665,10 @@ impl Clock {
         Self::bind_lane(idx);
         let multi = self.lanes.len() > 1;
         let lane = &self.lanes[idx];
+        // Virtual instant at which this lane first found itself
+        // horizon-blocked on a peer's bound (None = not blocked). The
+        // matching LaneWait span is emitted when the head finally fires.
+        let mut blocked_since: Option<VNanos> = None;
         let mut st = lane.state.lock().unwrap();
         loop {
             if st.stopped {
@@ -695,6 +712,22 @@ impl Clock {
                         lane.lb.store(t, Ordering::Release);
                     }
                     if !multi || self.horizon_allows(idx, t) {
+                        if let Some(since) = blocked_since.take() {
+                            // Cold edge: this batch was held back by a
+                            // peer's lookahead bound. Record the stall
+                            // (reads time only — no debt, no events).
+                            let obs = self.obs.lock().unwrap().clone();
+                            if let Some(obs) = obs {
+                                obs.record(crate::obs::Span::interval(
+                                    crate::obs::Track::Lane { lane: idx as u32 },
+                                    crate::obs::SpanKind::LaneWait,
+                                    since,
+                                    t,
+                                    "lane-wait",
+                                    idx as u64,
+                                ));
+                            }
+                        }
                         lane.now.store(t, Ordering::Release);
                         // lb stays at t while the batch fires: its
                         // actions may push same-instant follow-ups.
@@ -719,6 +752,10 @@ impl Clock {
                         st = lane.state.lock().unwrap();
                         continue;
                     }
+                    // Horizon-blocked: remember when the stall began
+                    // (first detection only; the span closes when the
+                    // head finally fires).
+                    blocked_since.get_or_insert(lane.now.load(Ordering::Acquire));
                     if multi && t > prev_lb {
                         // Blocked on a peer's bound, but our own bound
                         // rose: let peers re-check their horizons, then

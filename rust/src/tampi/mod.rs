@@ -329,12 +329,14 @@ impl Tampi {
             return self.comm.recv(buf, src, tag);
         }
         self.trace_mpi(true, "recv");
+        let t0 = self.mpi_span_begin();
         let r = self.comm.irecv(buf, src, tag);
         if !r.test() {
             self.block_on(vec![r.clone()]);
         } else {
             self.state.n_immediate.fetch_add(1, Ordering::Relaxed);
         }
+        self.mpi_span_end(t0, "recv");
         self.trace_mpi(false, "recv");
         r.status()
     }
@@ -345,8 +347,10 @@ impl Tampi {
             return self.comm.send(buf, dst, tag);
         }
         self.trace_mpi(true, "send");
+        let t0 = self.mpi_span_begin();
         let r = self.comm.isend(buf, dst, tag);
         self.block_on(vec![r]);
+        self.mpi_span_end(t0, "send");
         self.trace_mpi(false, "send");
     }
 
@@ -356,8 +360,10 @@ impl Tampi {
             return self.comm.ssend(buf, dst, tag);
         }
         self.trace_mpi(true, "ssend");
+        let t0 = self.mpi_span_begin();
         let r = self.comm.issend(buf, dst, tag);
         self.block_on(vec![r]);
+        self.mpi_span_end(t0, "ssend");
         self.trace_mpi(false, "ssend");
     }
 
@@ -553,6 +559,33 @@ impl Tampi {
             if start { EventKind::MpiStart } else { EventKind::MpiEnd },
             what,
         );
+    }
+
+    /// Start of an intercepted blocking call's in-task window (span
+    /// bookkeeping only; `None` when span recording is off).
+    fn mpi_span_begin(&self) -> Option<u64> {
+        if self.comm.uni.obs.enabled() {
+            Some(self.comm.uni.clock.now())
+        } else {
+            None
+        }
+    }
+
+    /// End of the window opened by [`Tampi::mpi_span_begin`]: one
+    /// `MpiCall` interval on the calling worker's track.
+    fn mpi_span_end(&self, t0: Option<u64>, what: &'static str) {
+        let Some(t0) = t0 else { return };
+        let wid = crate::nanos::worker::worker_id();
+        let w = if wid == usize::MAX { u32::MAX } else { wid as u32 };
+        let id = crate::nanos::worker::current().map_or(0, |(_, task)| task.id);
+        self.comm.uni.obs.record(crate::obs::Span::interval(
+            crate::obs::Track::Worker { rank: self.comm.rank as u32, worker: w },
+            crate::obs::SpanKind::MpiCall,
+            t0,
+            self.comm.uni.clock.now(),
+            what,
+            id,
+        ));
     }
 }
 

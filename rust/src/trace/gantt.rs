@@ -33,8 +33,19 @@ pub fn render_gantt(records: &[Record], width: usize) -> String {
     if records.is_empty() {
         return String::from("(empty trace)\n");
     }
+    let width = width.max(1);
     let t0 = records.iter().map(|r| r.t).min().unwrap();
-    let t1 = records.iter().map(|r| r.t).max().unwrap().max(t0 + 1);
+    let t1 = records.iter().map(|r| r.t).max().unwrap();
+    if t1 == t0 {
+        // All records share one instant: there is no span to bucket, and
+        // the old `max(t0 + 1)` fallback smeared a fake 1 ns span across
+        // every column. Emit a labeled degenerate chart instead.
+        return format!(
+            "(degenerate trace: {} records at a single instant, t = {} ns)\n",
+            records.len(),
+            t0
+        );
+    }
     let span = (t1 - t0) as f64;
 
     // Build per-lane interval lists by replaying events in time order.
@@ -107,7 +118,7 @@ pub fn busy_fraction(records: &[Record]) -> BTreeMap<u32, f64> {
         return BTreeMap::new();
     }
     let t0 = records.iter().map(|r| r.t).min().unwrap();
-    let t1 = records.iter().map(|r| r.t).max().unwrap().max(t0 + 1);
+    let t1 = records.iter().map(|r| r.t).max().unwrap();
     let mut by_lane: BTreeMap<(u32, u32), Vec<&Record>> = BTreeMap::new();
     for r in records {
         // Annotation records (possibly off-worker) are not lanes; a

@@ -1,0 +1,147 @@
+//! Unit tests for the trace renderers on fixed synthetic records:
+//! `render_gantt` (lane-state precedence, bucket boundaries, degenerate
+//! snapshots) and `GraphRecorder::to_dot` (determinism, highlighting,
+//! duplicate-edge fusion). The end-to-end tracing tests live in
+//! `trace_graph.rs`; these pin the rendering rules themselves.
+
+use tampi_repro::trace::{busy_fraction, render_gantt, EventKind, GraphRecorder, Record};
+
+fn rec(t: u64, rank: u32, worker: u32, kind: EventKind, task_id: u64) -> Record {
+    Record { t, rank, worker, kind, label: String::new(), task_id }
+}
+
+#[test]
+fn empty_trace_renders_labeled_chart() {
+    assert_eq!(render_gantt(&[], 100), "(empty trace)\n");
+    assert!(busy_fraction(&[]).is_empty());
+}
+
+#[test]
+fn single_instant_trace_is_labeled_degenerate() {
+    // Every record at one instant: there is no span to bucket. The old
+    // renderer smeared a fake 1 ns span across all columns.
+    let recs = vec![
+        rec(500, 0, 0, EventKind::TaskStart, 1),
+        rec(500, 0, 0, EventKind::TaskEnd, 1),
+        rec(500, 1, 0, EventKind::TaskStart, 2),
+    ];
+    let chart = render_gantt(&recs, 100);
+    assert!(
+        chart.starts_with("(degenerate trace: 3 records"),
+        "unexpected chart: {chart}"
+    );
+    assert!(chart.contains("t = 500 ns"), "{chart}");
+    // busy_fraction degrades to all-zero fractions, no panic.
+    for (&rank, &f) in &busy_fraction(&recs) {
+        assert_eq!(f, 0.0, "rank {rank}");
+    }
+}
+
+#[test]
+fn lane_state_precedence_picks_dominant_state_per_bucket() {
+    // One lane over exactly 1000 ns, 10 buckets of 100 ns:
+    //   Task 0..540, MPI 540..600, Task 600..900, Paused 900..960,
+    //   Task 960..1000.
+    // Bucket 5 (500..600): Task holds 40 ns, MPI 60 ns -> 'M'.
+    // Bucket 9 (900..1000): Paused holds 60 ns, Task 40 ns -> 'b'.
+    let recs = vec![
+        rec(0, 0, 0, EventKind::TaskStart, 1),
+        rec(540, 0, 0, EventKind::MpiStart, 1),
+        rec(600, 0, 0, EventKind::MpiEnd, 1),
+        rec(900, 0, 0, EventKind::TaskBlock, 1),
+        rec(960, 0, 0, EventKind::TaskUnblock, 1),
+        rec(1000, 0, 0, EventKind::TaskEnd, 1),
+    ];
+    let chart = render_gantt(&recs, 10);
+    assert!(chart.contains("r00w00 |#####M###b|"), "unexpected chart:\n{chart}");
+}
+
+#[test]
+fn bucket_boundaries_do_not_bleed() {
+    // Task ends exactly on the bucket-5 boundary (t=500 of 0..1000):
+    // bucket 5 must stay idle. The trailing Phase record pins the span
+    // end without contributing occupancy.
+    let recs = vec![
+        rec(0, 0, 0, EventKind::TaskStart, 1),
+        rec(500, 0, 0, EventKind::TaskEnd, 1),
+        rec(1000, 0, 0, EventKind::Phase, 0),
+    ];
+    let chart = render_gantt(&recs, 10);
+    assert!(chart.contains("r00w00 |#####.....|"), "unexpected chart:\n{chart}");
+}
+
+#[test]
+fn annotation_records_do_not_create_lanes() {
+    // Annotation kinds may be stamped from non-worker threads (sentinel
+    // worker id); they must not fabricate a lane or a rank entry.
+    let recs = vec![
+        rec(0, 0, 0, EventKind::TaskStart, 1),
+        rec(1000, 0, 0, EventKind::TaskEnd, 1),
+        rec(500, 3, u32::MAX, EventKind::CompletionDelivered, 7),
+    ];
+    let chart = render_gantt(&recs, 10);
+    assert_eq!(
+        chart.lines().filter(|l| l.starts_with('r')).count(),
+        1,
+        "annotation created a lane:\n{chart}"
+    );
+    let busy = busy_fraction(&recs);
+    assert_eq!(busy.len(), 1);
+    assert!((busy[&0] - 1.0).abs() < 1e-9, "lane is fully busy: {busy:?}");
+}
+
+#[test]
+fn gantt_output_is_deterministic() {
+    let recs = vec![
+        rec(0, 1, 0, EventKind::TaskStart, 1),
+        rec(300, 1, 0, EventKind::TaskBlock, 1),
+        rec(700, 1, 0, EventKind::TaskUnblock, 1),
+        rec(1000, 1, 0, EventKind::TaskEnd, 1),
+        rec(0, 0, 1, EventKind::TaskStart, 2),
+        rec(1000, 0, 1, EventKind::TaskEnd, 2),
+    ];
+    let a = render_gantt(&recs, 20);
+    let b = render_gantt(&recs, 20);
+    assert_eq!(a, b);
+    // Lanes are sorted by (rank, worker).
+    let lanes: Vec<&str> = a.lines().filter(|l| l.starts_with('r')).collect();
+    assert!(lanes[0].starts_with("r00w01"), "{a}");
+    assert!(lanes[1].starts_with("r01w00"), "{a}");
+}
+
+#[test]
+fn dot_highlights_matching_edges_and_fuses_duplicates() {
+    let g = GraphRecorder::new();
+    g.add_node(1, "send(0,0)", 0);
+    g.add_node(2, "recv(h0)", 0);
+    g.add_node(3, "gs[0](0,0)", 1);
+    g.add_edge(1, 2, "r0sentinel");
+    g.add_edge(1, 2, "r0sentinel"); // duplicate: must be fused
+    g.add_edge(2, 3, "r1b0");
+    let dot = g.to_dot("sentinel");
+    assert_eq!(
+        dot.matches("t1 -> t2").count(),
+        1,
+        "duplicate edges must fuse:\n{dot}"
+    );
+    assert!(dot.contains("t1 -> t2 [color=red,penwidth=2];"), "{dot}");
+    assert!(dot.contains("t2 -> t3;"), "non-matching edge stays plain:\n{dot}");
+    assert!(dot.contains("cluster_rank0") && dot.contains("cluster_rank1"));
+    // No highlight pattern -> no red edges.
+    assert!(!g.to_dot("").contains("color=red"));
+}
+
+#[test]
+fn dot_output_is_deterministic() {
+    let mk = || {
+        let g = GraphRecorder::new();
+        for id in 0..6u64 {
+            g.add_node(id, &format!("t{id}"), (id % 2) as u32);
+        }
+        for id in 0..5u64 {
+            g.add_edge(id, id + 1, "obj");
+        }
+        g.to_dot("obj")
+    };
+    assert_eq!(mk(), mk());
+}

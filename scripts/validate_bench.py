@@ -40,7 +40,19 @@ ROW_SCHEMAS = {
         "cross_shard_events": NUM,
         "speedup_vs_1": NUM,
     },
+    20: {
+        "app": (str,),
+        "series": (str,),
+        "ranks": NUM,
+        "vtime_ms": NUM,
+        "busy_frac": NUM,
+        "comm_frac": NUM,
+        "overlap_frac": NUM,
+    },
 }
+
+# fig16's overlap-profiler stamp: {"blocking": f, "nonblocking": f}.
+OVERLAP_SCHEMA = {"blocking": NUM, "nonblocking": NUM}
 
 CACHE_SCHEMA = {
     "calls": NUM,
@@ -93,6 +105,9 @@ def validate(path):
     if fig == 17:
         check_rows(doc.get("cache"), CACHE_SCHEMA, "cache", path)
         allowed.add("cache")
+    if fig == 16:
+        check_rows([doc.get("overlap")], OVERLAP_SCHEMA, "overlap", path)
+        allowed.add("overlap")
     extra = set(doc) - allowed
     if extra:
         fail(path, f"unknown top-level keys {sorted(extra)}")

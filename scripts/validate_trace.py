@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Structural check for Perfetto traces emitted by `repro ... --trace-format perfetto`.
+
+Usage: validate_trace.py trace.json [trace2.json ...]
+
+Fails (exit 1) if the document is not a well-formed Chrome/Perfetto
+`trace_event` JSON, if any track's timestamps go backwards, if spans
+were dropped by the recorder, if any required span category is absent
+(the CI smoke run must exercise every instrumented subsystem), or if no
+cross-rank flow arrow (send -> matching recv) is present. Stdlib only —
+the CI runner has no third-party packages.
+"""
+import json
+import sys
+
+# Span categories the smoke run must produce at least one of: task
+# execution, MPI request lifetimes, ingress-port service, collective
+# rounds, and clock-lane lookahead waits (see rust/src/obs/mod.rs).
+REQUIRED_CATS = {"task", "req", "port", "coll", "lane"}
+
+PHASES = {"M", "X", "i", "b", "e", "s", "f"}
+
+
+def fail(path, msg):
+    print(f"{path}: TRACE INVALID: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        fail(path, "top level is not an object")
+    dropped = doc.get("otherData", {}).get("dropped_spans")
+    if not isinstance(dropped, int):
+        fail(path, "otherData.dropped_spans missing")
+    if dropped != 0:
+        fail(path, f"{dropped} spans dropped (ring overflow or contention)")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents must be a non-empty array")
+
+    last_ts = {}  # (pid, tid) -> last seen ts
+    cats = set()
+    flow_src = {}  # flow id -> set of pids that emitted "s"
+    flow_dst = {}  # flow id -> set of pids that emitted "f"
+    async_open = {}  # (pid, id) -> open "b" count
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(path, f"traceEvents[{i}] is not an object")
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            fail(path, f"traceEvents[{i}] has unknown ph {ph!r}")
+        if not isinstance(ev.get("pid"), int) or not isinstance(ev.get("tid"), int):
+            fail(path, f"traceEvents[{i}] missing integer pid/tid")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(path, f"traceEvents[{i}] has bad ts {ts!r}")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            fail(path, f"traceEvents[{i}] missing name")
+        if not isinstance(ev.get("cat"), str) or not ev["cat"]:
+            fail(path, f"traceEvents[{i}] missing cat")
+        track = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(track, 0.0):
+            fail(path, f"traceEvents[{i}] ts {ts} goes backwards on track {track}")
+        last_ts[track] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(path, f"traceEvents[{i}] X event has bad dur {dur!r}")
+            cats.add(ev["cat"])
+        elif ph in ("i", "b"):
+            cats.add(ev["cat"])
+        if ph in ("b", "e"):
+            key = (ev["pid"], ev.get("id"))
+            async_open[key] = async_open.get(key, 0) + (1 if ph == "b" else -1)
+        if ph == "s":
+            flow_src.setdefault(ev.get("id"), set()).add(ev["pid"])
+        if ph == "f":
+            flow_dst.setdefault(ev.get("id"), set()).add(ev["pid"])
+
+    missing = REQUIRED_CATS - cats
+    if missing:
+        fail(path, f"no spans in required categories {sorted(missing)}")
+    unbalanced = {k: v for k, v in async_open.items() if v != 0}
+    if unbalanced:
+        fail(path, f"{len(unbalanced)} async (b/e) spans unbalanced, e.g. "
+                   f"{sorted(unbalanced)[:3]}")
+    if not flow_src or not flow_dst:
+        fail(path, "no flow events (s/f) at all")
+    cross = [
+        fid for fid, dsts in flow_dst.items()
+        if any(d not in flow_src.get(fid, set()) for d in dsts)
+        and fid in flow_src
+    ]
+    if not cross:
+        fail(path, "no cross-rank flow arrow (s on one pid, f on another)")
+    print(f"{path}: ok ({len(events)} events, {len(last_ts)} tracks, "
+          f"{sorted(cats)} cats, {len(cross)} cross-rank flows)")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    for path in sys.argv[1:]:
+        validate(path)
+
+
+if __name__ == "__main__":
+    main()
