@@ -1,0 +1,17 @@
+//! cargo bench target regenerating extension Figure 21: cold-communicator
+//! plan-compile cost over rank counts — per-rank-compile baseline vs the
+//! cluster-wide plan compilation service vs its closed-form fast paths
+//! (host compile work and replay-event counts; the compiled plans and
+//! all virtual-time results are bit-identical across strategies). Scale
+//! via TAMPI_BENCH_SCALE={quick,default,full}.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig21_report(scale);
+    println!("{report}");
+    bench::write_output("fig21_plan_compile.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

@@ -627,7 +627,10 @@ pub struct TopoRow {
 }
 
 /// One fig17 schedule-cache row: `calls` repeated same-shape
-/// `iallreduce` with the persistent cache on or off.
+/// `iallreduce` with the persistent cache on or off, plus the
+/// plan-store traffic behind it (cluster-plan compiles are O(1) per
+/// `SchedKey` with the cache on; the cache-off baseline bypasses the
+/// store and recompiles per call).
 #[derive(Clone, Copy, Debug)]
 pub struct SchedCacheRow {
     pub calls: usize,
@@ -635,6 +638,8 @@ pub struct SchedCacheRow {
     pub vtime_us: f64,
     pub hits: u64,
     pub misses: u64,
+    pub plan_store_hits: u64,
+    pub plan_store_misses: u64,
 }
 
 /// Run `calls` same-shape blocking allreduces and report the cache
@@ -656,6 +661,8 @@ pub fn coll_cache_run(calls: usize, cache: bool) -> SchedCacheRow {
         vtime_us: stats.vtime_ns as f64 / 1_000.0,
         hits: stats.sched_cache.hits,
         misses: stats.sched_cache.misses,
+        plan_store_hits: stats.plan_store.hits,
+        plan_store_misses: stats.plan_store.misses,
     }
 }
 
@@ -734,8 +741,8 @@ pub fn fig17_report(scale: Scale) -> String {
         "\n=== persistent schedule cache: cold vs cached compile cost ===\n",
     );
     out.push_str(&format!(
-        "{:<18} {:>6} {:>10} {:>6} {:>8}\n",
-        "series", "calls", "vtime_us", "hits", "misses"
+        "{:<18} {:>6} {:>10} {:>6} {:>8} {:>9} {:>9}\n",
+        "series", "calls", "vtime_us", "hits", "misses", "ps_hits", "ps_miss"
     ));
     for c in &cache {
         let series = match (c.cache, c.calls) {
@@ -744,13 +751,16 @@ pub fn fig17_report(scale: Scale) -> String {
             (true, _) => "cached-reuse",
         };
         out.push_str(&format!(
-            "{:<18} {:>6} {:>10.1} {:>6} {:>8}\n",
-            series, c.calls, c.vtime_us, c.hits, c.misses
+            "{:<18} {:>6} {:>10.1} {:>6} {:>8} {:>9} {:>9}\n",
+            series, c.calls, c.vtime_us, c.hits, c.misses, c.plan_store_hits,
+            c.plan_store_misses
         ));
     }
     out.push_str(
         "(cached-reuse: every call after the first hits the per-communicator\n\
-         schedule cache — hits >= ranks x (calls - 1); see RunStats::sched_cache)\n",
+         plan index — hits >= ranks x (calls - 1); ps_miss: cluster-plan\n\
+         compiles through the universe PlanStore, O(1) per schedule key;\n\
+         see RunStats::sched_cache / RunStats::plan_store)\n",
     );
     out
 }
@@ -1170,8 +1180,10 @@ pub fn fig17_json(scale: Scale) -> String {
         .into_iter()
         .map(|c| {
             format!(
-                "{{\"calls\":{},\"cache\":{},\"vtime_us\":{},\"hits\":{},\"misses\":{}}}",
-                c.calls, c.cache, c.vtime_us, c.hits, c.misses
+                "{{\"calls\":{},\"cache\":{},\"vtime_us\":{},\"hits\":{},\"misses\":{},\
+                 \"plan_store_hits\":{},\"plan_store_misses\":{}}}",
+                c.calls, c.cache, c.vtime_us, c.hits, c.misses, c.plan_store_hits,
+                c.plan_store_misses
             )
         })
         .collect();
@@ -1502,6 +1514,200 @@ pub fn fig20_json(scale: Scale) -> String {
         .collect();
     let elapsed = wall.elapsed().as_nanos() as u64;
     json_doc(20, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// One fig21 plan-compilation row: host-side compile work for one cold
+/// communicator of `ranks` ranks under one compile strategy.
+#[derive(Clone, Debug)]
+pub struct PlanCompileRow {
+    pub collective: &'static str,
+    pub nodes: usize,
+    pub rpn: usize,
+    pub ranks: usize,
+    pub strategy: &'static str,
+    /// Compiler invocations (per-rank: one per rank; service: one).
+    pub compiles: u64,
+    /// Event-heap pops across all candidate critical-path replays.
+    pub replay_events: u64,
+    pub memo_hits: u64,
+    pub closed_form_hits: u64,
+    pub host_us: f64,
+}
+
+/// Compile the cold-communicator alltoall plan for a `nodes x rpn`
+/// blocked cluster under one strategy and report the work it took.
+///
+/// The strategies retrace the service's tiers: `per-rank` is the
+/// pre-service baseline (every rank runs the full compiler — no store,
+/// no memo, no closed forms), `cluster` compiles once for all ranks
+/// with the tier-2 replay memo attached, `closed-form` adds the tier-3
+/// fast paths. All three produce bit-identical plans; only the host
+/// work differs.
+fn plan_compile_probe(nodes: usize, rpn: usize, strategy: &'static str) -> PlanCompileRow {
+    use crate::rmpi::topology::{
+        compile_cluster_plans, compile_plan, CollKind, CompileStats, ReplayMemo, SchedKey,
+        ShapeKey, TopoCtx,
+    };
+    use crate::rmpi::{NetworkModel, TopologyMode};
+
+    let ranks = nodes * rpn;
+    let node_of: Vec<usize> = (0..ranks).map(|r| r / rpn).collect();
+    // Congested receiver ports so the flat-vs-hier comparison exercises
+    // the full event-driven replay (rx-free replays are near-trivial).
+    let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
+    let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(4 * 1024) };
+    let stats = CompileStats::default();
+    let memo = ReplayMemo::default();
+
+    let t0 = std::time::Instant::now();
+    let compiles = match strategy {
+        "per-rank" => {
+            for rank in 0..ranks {
+                let mut ctx =
+                    TopoCtx::service(rank, ranks, &node_of, TopologyMode::Hierarchical, &net);
+                ctx.stats = Some(&stats);
+                ctx.closed_form = false;
+                std::hint::black_box(compile_plan(&key, &ctx));
+            }
+            ranks as u64
+        }
+        "cluster" => {
+            let mut ctx = TopoCtx::service(0, ranks, &node_of, TopologyMode::Hierarchical, &net);
+            ctx.stats = Some(&stats);
+            ctx.memo = Some(&memo);
+            ctx.closed_form = false;
+            std::hint::black_box(compile_cluster_plans(&key, &ctx));
+            1
+        }
+        _ => {
+            // closed-form: `TopoCtx::service` already has tier 3 on.
+            let mut ctx = TopoCtx::service(0, ranks, &node_of, TopologyMode::Hierarchical, &net);
+            ctx.stats = Some(&stats);
+            ctx.memo = Some(&memo);
+            std::hint::black_box(compile_cluster_plans(&key, &ctx));
+            1
+        }
+    };
+    PlanCompileRow {
+        collective: "alltoall",
+        nodes,
+        rpn,
+        ranks,
+        strategy,
+        compiles,
+        replay_events: stats.replay_events(),
+        memo_hits: stats.memo_hits(),
+        closed_form_hits: stats.closed_form_hits(),
+        host_us: t0.elapsed().as_nanos() as f64 / 1_000.0,
+    }
+}
+
+/// Fig 21 (repro extension): cold-communicator plan-compile cost over
+/// rank counts, per-rank-compile vs cluster-wide vs closed-form — the
+/// plan compilation service's host-side win, with virtual time held
+/// bit-identical across strategies by construction.
+pub fn fig21(scale: Scale) -> Vec<PlanCompileRow> {
+    let shapes: &[(usize, usize)] = match scale {
+        Scale::Quick => &[(4, 4), (8, 8)],
+        Scale::Default => &[(4, 4), (8, 8), (16, 8)],
+        Scale::Full => &[(4, 4), (8, 8), (16, 8), (16, 16)],
+    };
+    let mut rows = Vec::new();
+    for &(nodes, rpn) in shapes {
+        let per_rank = plan_compile_probe(nodes, rpn, "per-rank");
+        let cluster = plan_compile_probe(nodes, rpn, "cluster");
+        let closed = plan_compile_probe(nodes, rpn, "closed-form");
+        // The service's whole point, checked in-harness: one compile
+        // replaces `ranks` of them, dropping cold-start replay events
+        // by at least the rank count (acceptance gate at >= 64 ranks),
+        // and closed forms never add replays on a regular shape.
+        let ranks = nodes * rpn;
+        if ranks >= 64 {
+            assert!(
+                per_rank.replay_events >= cluster.replay_events + ranks as u64,
+                "cluster-wide compile must save >= {} replay events (per-rank {}, cluster {})",
+                ranks,
+                per_rank.replay_events,
+                cluster.replay_events
+            );
+        }
+        assert!(closed.replay_events <= cluster.replay_events);
+        rows.push(per_rank);
+        rows.push(cluster);
+        rows.push(closed);
+    }
+    rows
+}
+
+pub fn fig21_report(scale: Scale) -> String {
+    let rows = fig21(scale);
+    let mut out = String::from(
+        "=== Figure 21: cold-communicator plan-compile cost — per-rank vs cluster-wide vs closed-form ===\n",
+    );
+    out.push_str(&format!(
+        "{:<10} {:>5} {:>4} {:>6} {:<12} {:>9} {:>14} {:>10} {:>12} {:>10}\n",
+        "collective",
+        "nodes",
+        "rpn",
+        "ranks",
+        "strategy",
+        "compiles",
+        "replay_events",
+        "memo_hits",
+        "closed_hits",
+        "host_us"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<10} {:>5} {:>4} {:>6} {:<12} {:>9} {:>14} {:>10} {:>12} {:>10.1}\n",
+            r.collective,
+            r.nodes,
+            r.rpn,
+            r.ranks,
+            r.strategy,
+            r.compiles,
+            r.replay_events,
+            r.memo_hits,
+            r.closed_form_hits,
+            r.host_us
+        ));
+    }
+    out.push_str(
+        "(per-rank: pre-service baseline, every rank runs the full compiler;\n\
+         cluster: one compile serves every rank through the universe\n\
+         PlanStore, candidate replays memoized; closed-form: tier-3 exact\n\
+         fast paths replace event-driven replays on regular shapes — host\n\
+         cost only, the compiled plans are bit-identical across strategies)\n",
+    );
+    out
+}
+
+/// Fig 21 as JSON: `rows[] = {{collective, nodes, rpn, ranks, strategy,
+/// compiles, replay_events, memo_hits, closed_form_hits, host_us}}`.
+pub fn fig21_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
+    let rows: Vec<String> = fig21(scale)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"collective\":\"{}\",\"nodes\":{},\"rpn\":{},\"ranks\":{},\
+                 \"strategy\":\"{}\",\"compiles\":{},\"replay_events\":{},\
+                 \"memo_hits\":{},\"closed_form_hits\":{},\"host_us\":{}}}",
+                json_escape(r.collective),
+                r.nodes,
+                r.rpn,
+                r.ranks,
+                json_escape(r.strategy),
+                r.compiles,
+                r.replay_events,
+                r.memo_hits,
+                r.closed_form_hits,
+                r.host_us
+            )
+        })
+        .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(21, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

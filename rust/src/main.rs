@@ -351,8 +351,8 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     dump_trace(&m, fmt, &tracer, &spans);
 }
 
-const KNOWN_FIGS: [&str; 14] =
-    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "all"];
+const KNOWN_FIGS: [&str; 15] =
+    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "all"];
 
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
@@ -365,7 +365,7 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 21 | all)"
         );
         std::process::exit(2);
     }
@@ -390,9 +390,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "18" => bench::fig18_json(scale, net_rx, net_eager),
             "19" => bench::fig19_json(scale),
             "20" => bench::fig20_json(scale),
+            "21" => bench::fig21_json(scale),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20|21), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -455,6 +456,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 println!("{report}");
                 let p = bench::write_output("fig20_overlap.txt", &report);
                 println!("fig20 -> {}", p.display());
+            }
+            "21" => {
+                let report = bench::fig21_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig21_plan_compile.txt", &report);
+                println!("fig21 -> {}", p.display());
             }
             other => {
                 let rows = match other {

@@ -28,9 +28,12 @@
 //! ## Compile once, instantiate per call
 //!
 //! Plans carry no buffers — just peers, phases and regions — so they
-//! persist in the communicator's schedule cache
+//! persist in the communicator's plan index
 //! ([`super::topology::SchedCache`], the MPI persistent-collective
-//! analogue) and each call only *instantiates* the plan against the
+//! analogue); the index entries are per-rank views of cluster plans
+//! compiled once per universe by the plan compilation service
+//! ([`super::topology::PlanStore`] — see `topology`'s three-tier
+//! story), and each call only *instantiates* the plan against the
 //! caller's buffers and a fresh sequence number. Each launch is traced
 //! as [`EventKind::CollScheduleCompiled`] `{ cached }`, each round
 //! advance as [`EventKind::CollRoundAdvanced`]; both carry the

@@ -10,7 +10,10 @@ use crate::trace::Tracer;
 use super::match_engine::ContextQueues;
 use super::net::{NetworkModel, Ports};
 use super::request::ReqState;
-use super::topology::{compile_plan, CollPlan, SchedCache, SchedKey, TopoCtx, TopologyMode};
+use super::topology::{
+    compile_cluster_plans, compile_plan, CollPlan, PlanStore, SchedCache, SchedKey, TopoCtx,
+    TopologyMode,
+};
 
 /// Shared cluster state (one per [`super::Universe`]).
 pub(crate) struct UniState {
@@ -34,6 +37,10 @@ pub(crate) struct UniState {
     /// [`super::RunStats::sched_cache`]).
     pub sched_hits: AtomicU64,
     pub sched_misses: AtomicU64,
+    /// Universe-level plan compilation service: cluster plans compiled
+    /// once per `SchedKey` and shared by every congruent communicator
+    /// (surfaced as [`super::RunStats::plan_store`]).
+    pub plan_store: PlanStore,
     /// Match contexts; a communicator owns two (p2p + collectives).
     pub contexts: Mutex<Vec<Arc<ContextQueues>>>,
     /// (parent ctx, dup seq) -> allocated context pair.
@@ -155,28 +162,48 @@ impl Comm {
             ctx_coll: self.uni.context(c),
             coll_seq: Arc::new(AtomicU64::new(0)),
             dup_seq: Arc::new(AtomicU64::new(0)),
-            // A fresh schedule store: cached plans die with their
-            // communicator, and a dup never sees the parent's plans.
+            // A fresh per-comm plan index: the dup's index dies with it.
+            // The compiled cluster plans themselves live in the
+            // universe [`PlanStore`], so a congruent dup resolves its
+            // index misses without recompiling (and without counting
+            // compile misses — see `plan_for`).
             sched_cache: Arc::new(SchedCache::default()),
         }
     }
 
     /// Look up (or compile) the plan for one collective call: the
-    /// persistent-collective fast path. A hit charges
-    /// [`NetworkModel::sched_cache_hit_ns`] of caller CPU, a miss
-    /// charges `sched_compile_ns` and stores the plan; both bump the
-    /// cluster-wide counters surfaced as
-    /// [`super::RunStats::sched_cache`].
+    /// persistent-collective fast path, now backed by the cluster-wide
+    /// [`PlanStore`]. A per-comm index hit charges
+    /// [`NetworkModel::sched_cache_hit_ns`] of caller CPU; an index
+    /// miss consults the store and takes this rank's view of the
+    /// (possibly already compiled) cluster plan. The per-call hit/miss
+    /// accounting keys off the cluster plan's per-rank first-touch bit,
+    /// which is deterministic per rank program order: a rank's first
+    /// view is exactly the call that would have compiled before the
+    /// service existed (same `sched_compile_ns` virtual-time debt, same
+    /// miss count), while later views — a congruent dup — are hits.
+    /// With the cache off the store is bypassed entirely (a recompile
+    /// per call — the fig17 cold baseline).
     pub(crate) fn plan_for(&self, key: SchedKey) -> (Arc<CollPlan>, bool) {
-        let ctx = TopoCtx {
-            rank: self.rank,
-            size: self.size,
-            node_of: &self.uni.node_of,
-            mode: self.uni.topology,
-            net: &self.uni.net,
-        };
+        let store = &self.uni.plan_store;
+        let mut ctx = TopoCtx::service(
+            self.rank,
+            self.size,
+            &self.uni.node_of,
+            self.uni.topology,
+            &self.uni.net,
+        );
+        ctx.memo = Some(&store.memo);
+        ctx.stats = Some(&store.stats);
         let (plan, cached) = if self.uni.sched_cache_on {
-            self.sched_cache.get_or_compile(&key, || compile_plan(&key, &ctx))
+            let mut first_touch = false;
+            let (plan, index_hit) = self.sched_cache.get_or_compile(&key, || {
+                let (cluster, _) =
+                    store.get_or_compile(key, || compile_cluster_plans(&key, &ctx));
+                first_touch = cluster.first_touch(self.rank);
+                cluster.view(self.rank)
+            });
+            (plan, index_hit || !first_touch)
         } else {
             (Arc::new(compile_plan(&key, &ctx)), false)
         };

@@ -51,7 +51,7 @@ pub use comm::Comm;
 pub use net::NetworkModel;
 pub use request::{Request, Status};
 pub use topology::{estimate_critical_path, TopologyMode};
-pub use universe::{ClusterConfig, RankCtx, RunStats, SchedCacheStats, Universe};
+pub use universe::{ClusterConfig, PlanStoreStats, RankCtx, RunStats, SchedCacheStats, Universe};
 
 /// Completion-delivery knob (defined in [`crate::progress`], re-exported
 /// here next to [`ClusterConfig`], which carries it).

@@ -116,6 +116,31 @@ impl NetworkModel {
     pub fn set_coll_rx_ns(&mut self, v: u64) {
         self.rx_ns = v;
     }
+
+    /// Order-sensitive FNV-1a digest over every field that can change a
+    /// compiled plan or its critical path. Part of the cluster-wide
+    /// plan-store key ([`crate::rmpi::topology::PlanStore`]): two
+    /// communicators share compiled plans only when their network
+    /// models fingerprint identically.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        mix(self.intra_latency_ns);
+        mix(self.intra_bw_bytes_per_s);
+        mix(self.inter_latency_ns);
+        mix(self.inter_bw_bytes_per_s);
+        mix(self.eager_threshold as u64);
+        mix(self.call_cpu_ns);
+        mix(self.rx_ns);
+        mix(self.sched_compile_ns);
+        mix(self.sched_cache_hit_ns);
+        h
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -173,6 +198,20 @@ pub(crate) fn critical_path(
     node_of: &[usize],
     net: &NetworkModel,
 ) -> u64 {
+    critical_path_counted(scheds, node_of, net).0
+}
+
+/// [`critical_path`] plus the number of replay events processed (heap
+/// pops: arrival services and round posts). The event count is the
+/// host-side cost of one exact estimate — the quantity the plan
+/// compilation service's memo and closed-form tiers exist to remove
+/// (fig21 reports it per compile strategy).
+pub(crate) fn critical_path_counted(
+    scheds: &[Vec<WireRound>],
+    node_of: &[usize],
+    net: &NetworkModel,
+) -> (u64, u64) {
+    let mut replay_events = 0u64;
     let n = scheds.len();
     assert_eq!(n, node_of.len());
     let mut ranks: Vec<RankState> = (0..n)
@@ -254,6 +293,7 @@ pub(crate) fn critical_path(
     }
 
     while let Some(Reverse((t, kind, r))) = events.pop() {
+        replay_events += 1;
         if kind == 0 {
             // Service every parked booking due at this port, in order.
             while let Some((&(arrival, _, _, _), _)) = parked[r].first_key_value() {
@@ -316,7 +356,7 @@ pub(crate) fn critical_path(
             }
         }
     }
-    ranks.iter().map(|s| s.finish.unwrap_or(0)).max().unwrap_or(0)
+    (ranks.iter().map(|s| s.finish.unwrap_or(0)).max().unwrap_or(0), replay_events)
 }
 
 #[cfg(test)]

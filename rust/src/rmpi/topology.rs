@@ -31,25 +31,59 @@
 //! ## Selection has no cost arithmetic of its own
 //!
 //! The flat-vs-hierarchical decision *is* the network model: each
-//! candidate shape is lowered to the [`WireRound`] IR and replayed
-//! through [`super::net::model::critical_path`] — the same link classes
-//! and the same ingress-port serialization law
-//! ([`super::net::ports::PortClock`]) the live engine charges message
-//! by message. There are no closed-form estimates to drift out of sync:
-//! compiler-estimated and engine-observed critical paths are equal (the
-//! parity test in `tests/net_ports.rs` asserts this exactly, per
-//! collective, with and without receiver processing), so
-//! `TopologyMode::Hierarchical` can never lose to `Flat`. The replay
-//! uses only values every rank agrees on (communicator size, node
-//! shape, payload bytes), so all ranks of one collective always pick
-//! the same plan shape — a mismatch would deadlock the rounds.
+//! candidate shape is priced by the exact critical path of its
+//! [`WireRound`] lowering under the same link classes and the same
+//! ingress-port serialization law ([`super::net::ports::PortClock`])
+//! the live engine charges message by message. Compiler-estimated and
+//! engine-observed critical paths are equal (the parity test in
+//! `tests/net_ports.rs` asserts this exactly, per collective, with and
+//! without receiver processing), so `TopologyMode::Hierarchical` can
+//! never lose to `Flat`. The pricing uses only values every rank
+//! agrees on (communicator size, node shape, payload bytes), so all
+//! ranks of one collective always pick the same plan shape — a
+//! mismatch would deadlock the rounds.
 //!
-//! The price of exactness is compile cost: selection builds *all-rank*
-//! candidate plans and replays full wire schedules (O(n²) events for
-//! alltoall), repeated by every rank's first cache miss per shape. The
-//! per-communicator [`SchedCache`] amortizes every later call; see the
-//! ROADMAP item on sharing the compiled result cluster-wide before
-//! scaling rank counts further.
+//! ## The plan compilation service: three tiers of not repeating work
+//!
+//! Exactness used to be priced naively: every rank's first cache miss
+//! built *all-rank* candidate plans and replayed full wire schedules
+//! through [`super::net::model::critical_path`] — O(n²) events for an
+//! alltoall, O(n³) aggregate on a cold communicator. The compile path
+//! is now a service with three tiers, cheapest first:
+//!
+//! 1. **Cluster-wide [`PlanStore`]** (one per universe, on
+//!    [`super::comm::UniState`]): compiled *cluster plans* — the
+//!    all-rank plan vector one compile already produces — are stored
+//!    once under `(comm shape signature, NetworkModel fingerprint,
+//!    TopologyMode, SchedKey)` and every rank takes a cheap per-rank
+//!    view (an `Arc` role slice). n identical compiles become one:
+//!    concurrent first calls coalesce on the store's slot lock, and
+//!    dup'd communicators of the same shape share the same entries.
+//!    The per-communicator [`SchedCache`] survives as a thin per-comm
+//!    index into the store, preserving drop semantics (a dropped
+//!    communicator drops its index; the store keeps the plan for the
+//!    next congruent communicator) and the per-call
+//!    [`crate::rmpi::RunStats::sched_cache`] accounting.
+//! 2. **Memoized replays** ([`ReplayMemo`], owned by the store): inside
+//!    and across compiles, candidate wire schedules are keyed by a
+//!    structural digest and replayed once — the flat-vs-hier comparison
+//!    of an allreduce shares its tree replays with the bcast of the
+//!    same payload, and repeated cache-off compiles (the fig17 cold
+//!    baseline) stop re-replaying identical candidates.
+//! 3. **Closed forms for regular shapes**: tree and reduce lowerings
+//!    have exact linear-time evaluations (each port's arrivals are
+//!    known once its subtree is priced — no event heap), and the
+//!    uniform-blocked layouts the hierarchy compiler emits admit O(1)
+//!    formulas for gather fan-in, the leader-staged barrier, and both
+//!    alltoall shapes. Every closed form is *asserted equal to the
+//!    event-driven replay* in debug builds (and by the equality-matrix
+//!    tests), so the parity contract above still gates correctness;
+//!    irregular shapes simply fall back to tier 2.
+//!
+//! fig21 (`repro figures --fig 21`) sweeps a cold alltoall compile over
+//! rank counts for the three strategies (per-rank replay, cluster-wide,
+//! closed-form) in host time and replay events;
+//! [`crate::rmpi::RunStats::plan_store`] carries the per-run counters.
 //!
 //! ## Reduction bit-identity is a contract — unless the op opts out
 //!
@@ -75,10 +109,13 @@
 //! every topology mode (asserted in tests).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
-use super::net::model::critical_path;
+use super::net::model::{critical_path, critical_path_counted};
+use super::net::ports::PortClock;
 use super::net::{NetworkModel, WireOp, WireRound};
+use crate::obs::metrics::{Counter, Hist, Registry};
 
 /// How the schedule compiler sees the cluster.
 ///
@@ -87,7 +124,7 @@ use super::net::{NetworkModel, WireOp, WireRound};
 /// cost-driven node-aware shapes above (degenerating to flat when the
 /// cluster has one node, one rank per node, or the wire replay says
 /// flat is cheaper).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum TopologyMode {
     /// Ignore the node boundary (PR-3 behaviour).
     Flat,
@@ -212,47 +249,326 @@ pub(crate) enum CollPlan {
     AlltoallHier(AlltoallHier),
 }
 
-/// Per-communicator persistent schedule store (MPI persistent-request
-/// analogue). Shared by clones of one rank's communicator handle;
-/// `Comm::dup` starts a fresh one and dropping the communicator drops
-/// its plans.
+/// Per-communicator plan index (MPI persistent-request analogue).
+/// Shared by clones of one rank's communicator handle; `Comm::dup`
+/// starts a fresh index and dropping the communicator drops it. Since
+/// the plan compilation service, entries are per-rank views into the
+/// universe-level [`PlanStore`], so an index miss is usually satisfied
+/// without compiling — the per-call hit/miss accounting lives in
+/// `Comm::plan_for`, not here.
 #[derive(Default)]
 pub(crate) struct SchedCache {
     map: Mutex<HashMap<SchedKey, Arc<CollPlan>>>,
 }
 
 impl SchedCache {
-    /// Look the key up, compiling (and storing) on a miss. Returns the
-    /// plan and whether this was a cache hit.
+    /// Look the key up, resolving (and storing) on a miss. Returns the
+    /// plan and whether this was an index hit. The resolver runs
+    /// *outside* the map lock so concurrent collectives on sibling
+    /// communicators never serialize behind a compile; if two calls
+    /// race the same key, the first insert wins and the loser's
+    /// (store-shared, hence identical) plan is dropped.
     pub fn get_or_compile(
         &self,
         key: &SchedKey,
-        compile: impl FnOnce() -> CollPlan,
+        compile: impl FnOnce() -> Arc<CollPlan>,
     ) -> (Arc<CollPlan>, bool) {
-        let mut g = self.map.lock().unwrap();
-        if let Some(p) = g.get(key) {
+        if let Some(p) = self.map.lock().unwrap().get(key) {
             return (p.clone(), true);
         }
-        let p = Arc::new(compile());
-        g.insert(*key, p.clone());
-        (p, false)
+        let p = compile();
+        let mut g = self.map.lock().unwrap();
+        (g.entry(*key).or_insert(p).clone(), false)
     }
 
-    /// Distinct plans currently cached.
+    /// Distinct plans currently indexed.
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The cluster-wide plan compilation service (tier 1 of the module
+// docs): compile a SchedKey once per universe, not once per rank.
+// ---------------------------------------------------------------------
+
+/// Full identity of one compiled cluster plan. `shape_sig`/`net_sig`/
+/// `mode` pin everything a compile reads besides the [`SchedKey`]: the
+/// communicator shape (size + node map) and the network model. Today
+/// every communicator in a universe shares one shape and one model, so
+/// these fields are constant per store — they are part of the key so
+/// congruence stays explicit when multi-job universes arrive.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct PlanKey {
+    shape_sig: u64,
+    net_sig: u64,
+    mode: TopologyMode,
+    sched: SchedKey,
+}
+
+/// Order-sensitive FNV-1a digest of a communicator shape (size plus the
+/// node of every rank) — the `comm shape` component of [`PlanKey`].
+fn shape_signature(node_of: &[usize]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    mix(node_of.len() as u64);
+    for &nd in node_of {
+        mix(nd as u64);
+    }
+    h
+}
+
+/// One compiled all-rank plan vector with per-rank `Arc` views. The
+/// `touched` bits make the per-call `RunStats::sched_cache` accounting
+/// deterministic: each rank's *first* view of a cluster plan counts as
+/// its compile miss (exactly the call that would have compiled before
+/// the service existed — same virtual-time debt, same counters), and
+/// every later view (a dup'd congruent communicator) is a hit.
+pub(crate) struct ClusterPlan {
+    views: Vec<Arc<CollPlan>>,
+    touched: Vec<AtomicBool>,
+}
+
+impl ClusterPlan {
+    fn new(plans: Vec<CollPlan>) -> ClusterPlan {
+        let touched = (0..plans.len()).map(|_| AtomicBool::new(false)).collect();
+        ClusterPlan { views: plans.into_iter().map(Arc::new).collect(), touched }
+    }
+
+    /// This rank's role slice of the cluster plan.
+    pub fn view(&self, rank: usize) -> Arc<CollPlan> {
+        self.views[rank].clone()
+    }
+
+    /// True exactly once per rank (per-rank program order, so the
+    /// answer never depends on host-thread races across ranks).
+    pub fn first_touch(&self, rank: usize) -> bool {
+        !self.touched[rank].swap(true, Ordering::Relaxed)
+    }
+}
+
+/// Host-side compile instrumentation shared by every compile through
+/// one store: replay heap events, memo hits, closed-form hits. Counts
+/// are host-scoped diagnostics (concurrent compiles interleave), never
+/// inputs to virtual time.
+#[derive(Default)]
+pub(crate) struct CompileStats {
+    pub replay_events: AtomicU64,
+    pub memo_hits: AtomicU64,
+    pub closed_form_hits: AtomicU64,
+}
+
+impl CompileStats {
+    pub fn replay_events(&self) -> u64 {
+        self.replay_events.load(Ordering::Relaxed)
+    }
+
+    pub fn memo_hits(&self) -> u64 {
+        self.memo_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn closed_form_hits(&self) -> u64 {
+        self.closed_form_hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Tier-2 memo: candidate wire schedules keyed by a structural digest,
+/// each replayed through [`critical_path`] at most once per store. The
+/// digest covers only schedule structure (round/peer/byte lists), so a
+/// memo must never be shared across node maps or network models — the
+/// owning [`PlanStore`] is keyed by both, and standalone probes own
+/// their own.
+#[derive(Default)]
+pub(crate) struct ReplayMemo {
+    map: Mutex<HashMap<(u64, u64), u64>>,
+}
+
+impl ReplayMemo {
+    fn get(&self, key: (u64, u64)) -> Option<u64> {
+        self.map.lock().unwrap().get(&key).copied()
+    }
+
+    fn put(&self, key: (u64, u64), v: u64) {
+        self.map.lock().unwrap().insert(key, v);
+    }
+
+    /// Distinct schedules replayed so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+/// Double-lane structural digest of a wire schedule (two independent
+/// 64-bit mixes ≈ one 128-bit key: collisions would silently corrupt
+/// plan selection, so a single 64-bit FNV over thousands of schedules
+/// is not enough margin).
+fn sched_sig(scheds: &[Vec<WireRound>]) -> (u64, u64) {
+    let mut h1 = 0xcbf2_9ce4_8422_2325u64;
+    let mut h2 = 0x9e37_79b9_7f4a_7c15u64;
+    let mut mix = |v: u64| {
+        h1 = (h1 ^ v).wrapping_mul(0x100_0000_01b3);
+        h2 = (h2 ^ v.rotate_left(29)).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h2 ^= h2 >> 31;
+    };
+    mix(scheds.len() as u64);
+    for rounds in scheds {
+        mix(0xa5a5);
+        mix(rounds.len() as u64);
+        for r in rounds {
+            mix(r.sends.len() as u64);
+            for op in &r.sends {
+                mix(op.peer as u64);
+                mix(op.bytes as u64);
+            }
+            mix(r.recvs.len() as u64);
+            for op in &r.recvs {
+                mix(op.peer as u64);
+                mix(op.bytes as u64);
+            }
+        }
+    }
+    (h1, h2)
+}
+
+/// Universe-level plan compilation service (one per
+/// [`super::comm::UniState`]): cluster plans compiled exactly once per
+/// [`PlanKey`], with the tier-2 replay memo and compile instrumentation
+/// riding along. Lookups coalesce: concurrent first calls for one key
+/// block on the slot's `OnceLock` and exactly one runs the compiler, so
+/// cold-communicator compile work is O(1) compiles per `SchedKey`
+/// cluster-wide. `hits`/`misses` land in the owning registry as
+/// `plan_store_hits`/`plan_store_misses`; compile wall time lands in
+/// the `plan_compile_ns` histogram (host nanoseconds — diagnostics,
+/// never virtual time).
+pub(crate) struct PlanStore {
+    shape_sig: u64,
+    net_sig: u64,
+    mode: TopologyMode,
+    slots: Mutex<HashMap<PlanKey, Arc<OnceLock<Arc<ClusterPlan>>>>>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    compile_ns: Arc<Hist>,
+    pub stats: CompileStats,
+    pub memo: ReplayMemo,
+}
+
+impl PlanStore {
+    pub fn new(
+        node_of: &[usize],
+        net: &NetworkModel,
+        mode: TopologyMode,
+        metrics: &Registry,
+    ) -> PlanStore {
+        PlanStore {
+            shape_sig: shape_signature(node_of),
+            net_sig: net.fingerprint(),
+            mode,
+            slots: Mutex::new(HashMap::new()),
+            hits: metrics.counter("plan_store_hits"),
+            misses: metrics.counter("plan_store_misses"),
+            compile_ns: metrics.histogram("plan_compile_ns"),
+            stats: CompileStats::default(),
+            memo: ReplayMemo::default(),
+        }
+    }
+
+    /// Standalone store backed by a throwaway registry (bench probes,
+    /// tests).
+    #[allow(dead_code)]
+    pub fn standalone(node_of: &[usize], net: &NetworkModel, mode: TopologyMode) -> PlanStore {
+        PlanStore::new(node_of, net, mode, &Registry::new())
+    }
+
+    /// The cluster plan for `sched`, compiling at most once per key
+    /// store-wide. Returns the plan and whether this lookup found it
+    /// already compiled (a store hit).
+    pub fn get_or_compile(
+        &self,
+        sched: SchedKey,
+        compile: impl FnOnce() -> Vec<CollPlan>,
+    ) -> (Arc<ClusterPlan>, bool) {
+        let key = PlanKey {
+            shape_sig: self.shape_sig,
+            net_sig: self.net_sig,
+            mode: self.mode,
+            sched,
+        };
+        let slot = self.slots.lock().unwrap().entry(key).or_default().clone();
+        let mut compiled = false;
+        let plan = slot
+            .get_or_init(|| {
+                let t0 = std::time::Instant::now();
+                let p = Arc::new(ClusterPlan::new(compile()));
+                self.compile_ns.record(t0.elapsed().as_nanos() as u64);
+                compiled = true;
+                p
+            })
+            .clone();
+        if compiled {
+            self.misses.inc();
+        } else {
+            self.hits.inc();
+        }
+        (plan, !compiled)
+    }
+
+    /// Distinct cluster plans compiled.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Store lookups satisfied by an already-compiled plan.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Store lookups that ran the compiler (one per distinct key).
+    pub fn miss_count(&self) -> u64 {
+        self.misses.get()
     }
 }
 
 /// Everything the compiler may depend on. All fields are identical on
 /// every rank except `rank` itself, and plan-shape decisions never use
 /// `rank` (only roles derived from it), so all ranks agree on shapes.
+///
+/// `memo`, `stats`, and `closed_form` configure the cost tiers (module
+/// docs): none of them can change a cost *value* — the memo caches
+/// exact replays and the closed forms are asserted equal to them — only
+/// how much host work computing it takes.
 pub(crate) struct TopoCtx<'a> {
     pub rank: usize,
     pub size: usize,
     pub node_of: &'a [usize],
     pub mode: TopologyMode,
     pub net: &'a NetworkModel,
+    /// Tier-2 replay memo (None: every replay runs).
+    pub memo: Option<&'a ReplayMemo>,
+    /// Compile instrumentation sink (None: uncounted).
+    pub stats: Option<&'a CompileStats>,
+    /// Whether tier-3 closed forms may replace event-driven replays.
+    /// `false` forces the replay path — the fig21 baseline tiers.
+    pub closed_form: bool,
+}
+
+impl<'a> TopoCtx<'a> {
+    /// A context wired for service use: closed forms on, no shared
+    /// memo/instrumentation. `Comm::plan_for` attaches the universe
+    /// store's memo and stats on top of this.
+    pub fn service(
+        rank: usize,
+        size: usize,
+        node_of: &'a [usize],
+        mode: TopologyMode,
+        net: &'a NetworkModel,
+    ) -> TopoCtx<'a> {
+        TopoCtx { rank, size, node_of, mode, net, memo: None, stats: None, closed_form: true }
+    }
 }
 
 /// ceil(log2(n)) for n >= 1.
@@ -302,59 +618,461 @@ impl TopoCtx<'_> {
     }
 
     /// Replay a candidate's wire schedules through the network model —
-    /// the compiler's only cost oracle (see module docs).
+    /// the compiler's cost oracle of record (see module docs), memoized
+    /// by structural digest when the context carries a [`ReplayMemo`].
     fn cost(&self, scheds: &[Vec<WireRound>]) -> u64 {
-        critical_path(scheds, self.node_of, self.net)
+        if let Some(memo) = self.memo {
+            let key = sched_sig(scheds);
+            if let Some(v) = memo.get(key) {
+                if let Some(s) = self.stats {
+                    s.memo_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                return v;
+            }
+            let v = self.replay(scheds);
+            memo.put(key, v);
+            return v;
+        }
+        self.replay(scheds)
+    }
+
+    /// The uncached exact replay, with heap events charged to `stats`.
+    fn replay(&self, scheds: &[Vec<WireRound>]) -> u64 {
+        let (v, events) = critical_path_counted(scheds, self.node_of, self.net);
+        if let Some(s) = self.stats {
+            s.replay_events.fetch_add(events, Ordering::Relaxed);
+        }
+        v
+    }
+
+    fn note_closed_form(&self) {
+        if let Some(s) = self.stats {
+            s.closed_form_hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cost of a tree (broadcast-shaped) lowering at `bytes`. Closed
+    /// form: every port receives exactly one message, so completion is
+    /// a per-edge DP from the root — exact for any tree, any node map,
+    /// both protocols (asserted against the replay in debug builds).
+    fn cost_tree(&self, parents: &[Option<usize>], bytes: usize) -> u64 {
+        if self.closed_form {
+            let v = closed_tree_cost(parents, bytes, self.node_of, self.net);
+            self.note_closed_form();
+            debug_assert_eq!(
+                v,
+                critical_path(&tree_wire(parents, bytes), self.node_of, self.net),
+                "closed-form tree cost must equal the event-driven replay"
+            );
+            return v;
+        }
+        self.cost(&tree_wire(parents, bytes))
+    }
+
+    /// Cost of a reduce (fan-in) lowering at `bytes`. Closed form:
+    /// messages flow child->parent only, so each port's arrivals are
+    /// known once its subtree is priced — a bottom-up DP applying the
+    /// identical `PortClock` law in the identical service order.
+    fn cost_reduce(&self, plans: &[ReducePlan], bytes: usize) -> u64 {
+        if self.closed_form {
+            let v = closed_reduce_cost(plans, bytes, self.node_of, self.net);
+            self.note_closed_form();
+            debug_assert_eq!(
+                v,
+                critical_path(&reduce_wire(plans, bytes), self.node_of, self.net),
+                "closed-form reduce cost must equal the event-driven replay"
+            );
+            return v;
+        }
+        self.cost(&reduce_wire(plans, bytes))
+    }
+
+    /// Cost of the flat dissemination barrier: node boundaries cut
+    /// through the rotating partner pattern asymmetrically, so there is
+    /// no closed form — this is the one lowering that always replays
+    /// (tier 2).
+    fn cost_tokens_flat(&self, plans: &[TokenPlan]) -> u64 {
+        self.cost(&token_wire(plans))
+    }
+
+    /// Cost of the leader-staged barrier. Closed form (uniform blocked
+    /// layout guaranteed by [`TopoCtx::hierarchy`]): three phase sums.
+    fn cost_tokens_hier(&self, plans: &[TokenPlan], l: usize, rpn: usize) -> u64 {
+        if self.closed_form {
+            let v = closed_hier_barrier_cost(l, rpn, self.net);
+            self.note_closed_form();
+            debug_assert_eq!(
+                v,
+                critical_path(&token_wire(plans), self.node_of, self.net),
+                "closed-form hier-barrier cost must equal the event-driven replay"
+            );
+            return v;
+        }
+        self.cost(&token_wire(plans))
+    }
+
+    /// Cost of a gather lowering at chunk size `cb`. Closed form: every
+    /// port's arrival set is known a priori (leaf sends post at 0,
+    /// leaders forward at their fan-in completion), so leader and root
+    /// ports are priced by a sorted port-law loop — exact for flat and
+    /// staged plans on any node map.
+    fn cost_gather(&self, plans: &[GatherPlan], cb: usize) -> u64 {
+        if self.closed_form {
+            let v = closed_gather_cost(plans, cb, self.node_of, self.net);
+            self.note_closed_form();
+            debug_assert_eq!(
+                v,
+                critical_path(&gather_wire(plans, cb), self.node_of, self.net),
+                "closed-form gather cost must equal the event-driven replay"
+            );
+            return v;
+        }
+        self.cost(&gather_wire(plans, cb))
+    }
+
+    /// Cost of the pairwise uniform alltoall at chunk size `cb`. Closed
+    /// form (uniform blocked layouts only — the O(n²)-event schedule
+    /// collapses to two same-instant arrival batches per port);
+    /// irregular maps fall back to the replay.
+    fn cost_alltoall_flat(&self, cb: usize) -> u64 {
+        if self.closed_form {
+            if let Some((l, rpn)) = uniform_blocked(self.node_of) {
+                let v = closed_alltoall_flat_cost(l, rpn, cb, self.net);
+                self.note_closed_form();
+                debug_assert_eq!(
+                    v,
+                    critical_path(&alltoall_flat_wire(self.size, cb), self.node_of, self.net),
+                    "closed-form flat-alltoall cost must equal the event-driven replay"
+                );
+                return v;
+            }
+        }
+        self.cost(&alltoall_flat_wire(self.size, cb))
+    }
+
+    /// Cost of the leader-staged uniform alltoall. Closed form (uniform
+    /// blocked layout guaranteed by [`TopoCtx::hierarchy`]): three
+    /// phase sums over same-instant arrival batches.
+    fn cost_alltoall_hier(&self, nodes_list: &[Vec<usize>], cb: usize) -> u64 {
+        if self.closed_form {
+            let l = nodes_list.len();
+            let rpn = nodes_list[0].len();
+            let v = closed_alltoall_hier_cost(l, rpn, cb, self.net);
+            self.note_closed_form();
+            debug_assert_eq!(
+                v,
+                critical_path(
+                    &alltoall_hier_wire(nodes_list, self.size, cb),
+                    self.node_of,
+                    self.net
+                ),
+                "closed-form hier-alltoall cost must equal the event-driven replay"
+            );
+            return v;
+        }
+        self.cost(&alltoall_hier_wire(nodes_list, self.size, cb))
     }
 }
 
-/// Compile the plan for `key` on `ctx.rank`. Pure: same inputs, same
-/// plan — which is what makes the cache sound.
-pub(crate) fn compile_plan(key: &SchedKey, ctx: &TopoCtx) -> CollPlan {
+// ---------------------------------------------------------------------
+// Tier-3 closed forms. Each computes the *exact* critical path of one
+// lowering family without the event heap, by exploiting what the family
+// guarantees about port arrival sets. Soundness argument per function;
+// every caller debug-asserts equality with `critical_path` (and the
+// closed_form_matches_replay test sweeps them against irregular maps,
+// both protocols, and rx ∈ {0, 400}).
+// ---------------------------------------------------------------------
+
+/// `Some((nodes, ranks_per_node))` when `node_of` is the uniform
+/// blocked layout (rank r on node r / rpn). Unlike
+/// [`TopoCtx::hierarchy`] this accepts one node or one rank per node —
+/// it gates closed forms, not plan shapes.
+fn uniform_blocked(node_of: &[usize]) -> Option<(usize, usize)> {
+    let n = node_of.len();
+    if n == 0 {
+        return None;
+    }
+    let l = *node_of.last().unwrap() + 1;
+    if n % l != 0 {
+        return None;
+    }
+    let rpn = n / l;
+    for (r, &nd) in node_of.iter().enumerate() {
+        if nd != r / rpn {
+            return None;
+        }
+    }
+    Some((l, rpn))
+}
+
+/// Exact tree (broadcast) critical path. Each rank receives exactly one
+/// message, so no port ever queues: a child's receive completes at
+/// `parent_done + transfer + rx`, its sends post there, and the
+/// critical path is the max completion. Rendezvous senders finish at
+/// their last delivery, which is bounded by the max child completion,
+/// so the recv side dominates for both protocols.
+fn closed_tree_cost(
+    parents: &[Option<usize>],
+    bytes: usize,
+    node_of: &[usize],
+    net: &NetworkModel,
+) -> u64 {
+    let n = parents.len();
+    if n <= 1 {
+        return 0;
+    }
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut root = 0;
+    for (r, p) in parents.iter().enumerate() {
+        match p {
+            Some(p) => children[*p].push(r),
+            None => root = r,
+        }
+    }
+    let mut done = vec![0u64; n];
+    let mut crit = 0;
+    let mut stack = vec![root];
+    while let Some(r) = stack.pop() {
+        for &c in &children[r] {
+            done[c] = done[r] + net.transfer_ns(bytes, node_of[r] == node_of[c]) + net.rx_ns;
+            crit = crit.max(done[c]);
+            stack.push(c);
+        }
+    }
+    crit
+}
+
+/// Exact reduce (fan-in) critical path. Each port receives only from
+/// its children, whose send instants are known once their subtrees are
+/// priced; serving the arrivals in the replay's order — `(arrival,
+/// sender post instant, src)`; the emission tie-break can never be
+/// reached with one message per child — through the identical
+/// [`PortClock`] law reproduces the heap exactly, bottom-up.
+fn closed_reduce_cost(
+    plans: &[ReducePlan],
+    bytes: usize,
+    node_of: &[usize],
+    net: &NetworkModel,
+) -> u64 {
+    let n = plans.len();
+    if n <= 1 {
+        return 0;
+    }
+    let mut root = 0;
+    for (r, p) in plans.iter().enumerate() {
+        if p.parent.is_none() {
+            root = r;
+        }
+    }
+    // Parents-first order; iterate reversed for children-first.
+    let mut order = Vec::with_capacity(n);
+    let mut stack = vec![root];
+    while let Some(r) = stack.pop() {
+        order.push(r);
+        stack.extend(plans[r].children.iter().copied());
+    }
+    let mut recv_done = vec![0u64; n];
+    for &r in order.iter().rev() {
+        if plans[r].children.is_empty() {
+            continue;
+        }
+        let mut arrivals: Vec<(u64, u64, usize)> = plans[r]
+            .children
+            .iter()
+            .map(|&c| {
+                let t = recv_done[c] + net.transfer_ns(bytes, node_of[c] == node_of[r]);
+                (t, recv_done[c], c)
+            })
+            .collect();
+        arrivals.sort_unstable();
+        let mut port = PortClock::default();
+        let mut done = 0;
+        for (arrival, _, _) in arrivals {
+            done = port.service(arrival, net.rx_ns);
+        }
+        recv_done[r] = done;
+    }
+    recv_done[root]
+}
+
+/// Exact gather critical path (flat or leader-staged, any node map).
+/// Leaf sends post at 0; a leader's block forwards at its fan-in
+/// completion; the root port serves direct chunks and blocks in
+/// `(arrival, sender post instant, src)` order. All fan-in ports serve
+/// disjoint sender sets, so each is an independent port-law loop.
+fn closed_gather_cost(
+    plans: &[GatherPlan],
+    cb: usize,
+    node_of: &[usize],
+    net: &NetworkModel,
+) -> u64 {
+    let mut root = 0;
+    let mut leader_done: HashMap<usize, u64> = HashMap::new();
+    for (r, p) in plans.iter().enumerate() {
+        match p {
+            GatherPlan::Root { .. } => root = r,
+            GatherPlan::Leader { members, .. } => {
+                let mut arrivals: Vec<(u64, u64, usize)> = members
+                    .iter()
+                    .map(|&m| (net.transfer_ns(cb, node_of[m] == node_of[r]), 0, m))
+                    .collect();
+                arrivals.sort_unstable();
+                let mut port = PortClock::default();
+                let mut done = 0;
+                for (arrival, _, _) in arrivals {
+                    done = port.service(arrival, net.rx_ns);
+                }
+                leader_done.insert(r, done);
+            }
+            GatherPlan::Leaf { .. } => {}
+        }
+    }
+    let GatherPlan::Root { direct, blocks } = &plans[root] else {
+        return 0;
+    };
+    let mut arrivals: Vec<(u64, u64, usize)> = direct
+        .iter()
+        .map(|&s| (net.transfer_ns(cb, node_of[s] == node_of[root]), 0, s))
+        .collect();
+    for b in blocks {
+        let posted = leader_done[&b.leader];
+        let t = posted + net.transfer_ns(b.nranks * cb, node_of[b.leader] == node_of[root]);
+        arrivals.push((t, posted, b.leader));
+    }
+    arrivals.sort_unstable();
+    let mut port = PortClock::default();
+    let mut done = 0;
+    for (arrival, _, _) in arrivals {
+        done = port.service(arrival, net.rx_ns);
+    }
+    done
+}
+
+/// Exact leader-staged barrier critical path on the uniform blocked
+/// layout ([`hier_barrier`]'s three phases). Check-in tokens arrive at
+/// every leader port together at `intra(1)`; each dissemination round
+/// delivers one token to an idle-again port (`inter(1) > 0` separates
+/// the rounds); the release token reaches idle member ports.
+fn closed_hier_barrier_cost(l: usize, rpn: usize, net: &NetworkModel) -> u64 {
+    let check_in = net.transfer_ns(1, true) + (rpn as u64 - 1) * net.rx_ns;
+    let dissem = check_in + ceil_log2(l) * (net.transfer_ns(1, false) + net.rx_ns);
+    dissem + net.transfer_ns(1, true) + net.rx_ns
+}
+
+/// Exact pairwise uniform-alltoall critical path on the uniform blocked
+/// layout. Every port sees two same-instant arrival batches — `rpn - 1`
+/// intra chunks and `n - rpn` inter chunks — served batch by batch in
+/// arrival order under the port law; by symmetry every rank's last
+/// delivery is bounded by its own port's last ready instant, covering
+/// rendezvous too.
+fn closed_alltoall_flat_cost(l: usize, rpn: usize, cb: usize, net: &NetworkModel) -> u64 {
+    let n = l * rpn;
+    if n <= 1 {
+        return 0;
+    }
+    let batches = {
+        let intra = (net.transfer_ns(cb, true), (rpn - 1) as u64);
+        let inter = (net.transfer_ns(cb, false), (n - rpn) as u64);
+        if intra.0 <= inter.0 {
+            [intra, inter]
+        } else {
+            [inter, intra]
+        }
+    };
+    let mut busy = 0u64;
+    for (arrival, count) in batches {
+        if count > 0 {
+            busy = busy.max(arrival) + count * net.rx_ns;
+        }
+    }
+    busy
+}
+
+/// Exact leader-staged uniform-alltoall critical path
+/// ([`alltoall_hier_wire`]'s three phases on the uniform blocked
+/// layout): member chunks fan into the leader port together, the
+/// leader exchange lands `l - 1` same-instant blocks per leader port,
+/// and the return chunks reach otherwise-idle member ports.
+fn closed_alltoall_hier_cost(l: usize, rpn: usize, cb: usize, net: &NetworkModel) -> u64 {
+    let n = l * rpn;
+    let fan_in = net.transfer_ns(n * cb, true) + (rpn as u64 - 1) * net.rx_ns;
+    let exchange = fan_in + net.transfer_ns(rpn * rpn * cb, false) + (l as u64 - 1) * net.rx_ns;
+    exchange + net.transfer_ns(n * cb, true) + net.rx_ns
+}
+
+/// Compile the *cluster plan* for `key`: every rank's role slice at
+/// once. This is the unit the [`PlanStore`] caches — selection already
+/// builds all-rank candidates, so producing all views costs one
+/// selection, not n. Pure: same inputs, same plans — which is what
+/// makes the store sound.
+pub(crate) fn compile_cluster_plans(key: &SchedKey, ctx: &TopoCtx) -> Vec<CollPlan> {
+    let n = ctx.size;
     match (key.kind, key.shape) {
         (CollKind::Barrier, _) => {
-            CollPlan::Barrier(barrier_plans(ctx).swap_remove(ctx.rank))
+            barrier_plans(ctx).into_iter().map(CollPlan::Barrier).collect()
         }
-        (CollKind::Bcast, ShapeKey::Bytes(b)) => CollPlan::Bcast(plan_from_parents(
-            &bcast_parents_selected(ctx, key.root, b),
-            ctx.rank,
-        )),
-        (CollKind::Reduce, _) => {
-            CollPlan::Reduce(flat_reduce_plan(ctx.rank, ctx.size, key.root))
+        (CollKind::Bcast, ShapeKey::Bytes(b)) => {
+            let parents = bcast_parents_selected(ctx, key.root, b);
+            (0..n).map(|r| CollPlan::Bcast(plan_from_parents(&parents, r))).collect()
         }
-        (CollKind::ReduceComm, ShapeKey::Bytes(b)) => {
-            CollPlan::Reduce(reduce_comm_plans(ctx, key.root, b).swap_remove(ctx.rank))
+        (CollKind::Reduce, _) => (0..n)
+            .map(|r| CollPlan::Reduce(flat_reduce_plan(r, n, key.root)))
+            .collect(),
+        (CollKind::ReduceComm, ShapeKey::Bytes(b)) => reduce_comm_plans(ctx, key.root, b)
+            .into_iter()
+            .map(CollPlan::Reduce)
+            .collect(),
+        (CollKind::Allreduce, ShapeKey::Bytes(b)) => {
+            let parents = bcast_parents_selected(ctx, 0, b);
+            (0..n)
+                .map(|r| CollPlan::Allreduce {
+                    reduce: flat_reduce_plan(r, n, 0),
+                    bcast: plan_from_parents(&parents, r),
+                })
+                .collect()
         }
-        (CollKind::Allreduce, ShapeKey::Bytes(b)) => CollPlan::Allreduce {
-            reduce: flat_reduce_plan(ctx.rank, ctx.size, 0),
-            bcast: plan_from_parents(&bcast_parents_selected(ctx, 0, b), ctx.rank),
-        },
-        (CollKind::AllreduceComm, ShapeKey::Bytes(b)) => CollPlan::Allreduce {
-            reduce: reduce_comm_plans(ctx, 0, b).swap_remove(ctx.rank),
-            bcast: plan_from_parents(&bcast_parents_selected(ctx, 0, b), ctx.rank),
-        },
+        (CollKind::AllreduceComm, ShapeKey::Bytes(b)) => {
+            let parents = bcast_parents_selected(ctx, 0, b);
+            reduce_comm_plans(ctx, 0, b)
+                .into_iter()
+                .enumerate()
+                .map(|(r, reduce)| CollPlan::Allreduce {
+                    reduce,
+                    bcast: plan_from_parents(&parents, r),
+                })
+                .collect()
+        }
         (CollKind::Gather, ShapeKey::ChunkBytes(cb)) => {
-            CollPlan::Gather(gather_plans(ctx, key.root, cb).swap_remove(ctx.rank))
+            gather_plans(ctx, key.root, cb).into_iter().map(CollPlan::Gather).collect()
         }
         (CollKind::Alltoall, ShapeKey::ChunkBytes(cb)) => match alltoall_shape(ctx, cb) {
-            Some(nodes) => {
-                let my_node = ctx.node_of[ctx.rank];
-                CollPlan::AlltoallHier(AlltoallHier {
-                    is_leader: ctx.rank == nodes[my_node][0],
-                    my_node,
-                    nodes_list: nodes,
+            Some(nodes) => (0..n)
+                .map(|r| {
+                    let my_node = ctx.node_of[r];
+                    CollPlan::AlltoallHier(AlltoallHier {
+                        is_leader: r == nodes[my_node][0],
+                        my_node,
+                        nodes_list: nodes.clone(),
+                    })
                 })
-            }
-            None => CollPlan::AlltoallvFlat,
+                .collect(),
+            None => (0..n).map(|_| CollPlan::AlltoallvFlat).collect(),
         },
         // Alltoallv counts are per-rank values: basing the plan shape on
         // them would let ranks disagree (deadlock), and leaders cannot
         // size staging buffers without a count exchange — the same
         // reason real MPI ships hierarchical alltoall but not
         // alltoallv. Always pairwise.
-        (CollKind::Alltoallv, _) => CollPlan::AlltoallvFlat,
+        (CollKind::Alltoallv, _) => (0..n).map(|_| CollPlan::AlltoallvFlat).collect(),
         other => unreachable!("inconsistent schedule key: {other:?}"),
     }
+}
+
+/// Compile the plan for `key` on `ctx.rank` alone — the store-less
+/// path (cache off, fig21's per-rank baseline): full selection, one
+/// view kept.
+pub(crate) fn compile_plan(key: &SchedKey, ctx: &TopoCtx) -> CollPlan {
+    compile_cluster_plans(key, ctx).swap_remove(ctx.rank)
 }
 
 /// Compiler-side critical-path estimate of one blocking collective on a
@@ -379,13 +1097,29 @@ pub fn estimate_critical_path(
 ) -> u64 {
     let size = nodes * ranks_per_node;
     let node_of: Vec<usize> = (0..size).map(|r| r / ranks_per_node).collect();
-    let ctx = TopoCtx { rank: 0, size, node_of: &node_of, mode, net };
+    let ctx = TopoCtx::service(0, size, &node_of, mode, net);
     let b = payload_bytes;
-    let scheds = match collective {
-        "barrier" => token_wire(&barrier_plans(&ctx)),
-        "bcast" => tree_wire(&bcast_parents_selected(&ctx, root, b), b),
-        "reduce" => reduce_wire(&flat_reduce_plans(size, root), b),
-        "reduce-comm" => reduce_wire(&reduce_comm_plans(&ctx, root, b), b),
+    // Selection already priced the chosen candidate exactly whenever a
+    // flat-vs-hier comparison ran; reuse that cost. When nothing was
+    // priced (no hierarchy), price the selected — invariably flat —
+    // shape through the same tiered oracle.
+    match collective {
+        "barrier" => {
+            let (plans, cost) = barrier_select(&ctx);
+            cost.unwrap_or_else(|| ctx.cost_tokens_flat(&plans))
+        }
+        "bcast" => {
+            let (parents, cost) = bcast_select(&ctx, root, b);
+            cost.unwrap_or_else(|| ctx.cost_tree(&parents, b))
+        }
+        "reduce" => ctx.cost_reduce(&flat_reduce_plans(size, root), b),
+        "reduce-comm" => {
+            let (plans, cost) = reduce_comm_select(&ctx, root, b);
+            cost.unwrap_or_else(|| ctx.cost_reduce(&plans, b))
+        }
+        // The two allreduce phases share ports (a rank's bcast receive
+        // queues behind its late reduce fan-in), so the concatenated
+        // schedule has no per-phase closed form: always replay it.
         "allreduce" | "allreduce-comm" => {
             let reduce = if collective == "allreduce" {
                 flat_reduce_plans(size, 0)
@@ -399,16 +1133,18 @@ pub fn estimate_critical_path(
             {
                 w[r].extend(tree);
             }
-            w
+            ctx.cost(&w)
         }
-        "gather" => gather_wire(&gather_plans(&ctx, root, b), b),
-        "alltoall" => match alltoall_shape(&ctx, b) {
-            Some(nodes_list) => alltoall_hier_wire(&nodes_list, size, b),
-            None => alltoall_flat_wire(size, b),
-        },
+        "gather" => {
+            let (plans, cost) = gather_select(&ctx, root, b);
+            cost.unwrap_or_else(|| ctx.cost_gather(&plans, b))
+        }
+        "alltoall" => {
+            let (_, cost) = alltoall_select(&ctx, b);
+            cost.unwrap_or_else(|| ctx.cost_alltoall_flat(b))
+        }
         other => panic!("unknown collective {other}"),
-    };
-    ctx.cost(&scheds)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -642,22 +1378,30 @@ fn hier_barrier(rank: usize, nodes: &[Vec<usize>], node_of: &[usize]) -> TokenPl
 }
 
 /// All-rank barrier plans of the selected shape (flat unless the
-/// staged candidate's wire replay is strictly cheaper).
-fn barrier_plans(ctx: &TopoCtx) -> Vec<TokenPlan> {
+/// staged candidate is strictly cheaper), plus the selected shape's
+/// exact cost when a comparison priced it (None: no hierarchy, nothing
+/// was priced).
+fn barrier_select(ctx: &TopoCtx) -> (Vec<TokenPlan>, Option<u64>) {
     let n = ctx.size;
     if n == 1 {
-        return vec![TokenPlan { rounds: Vec::new() }];
+        return (vec![TokenPlan { rounds: Vec::new() }], Some(0));
     }
     let flat: Vec<TokenPlan> = (0..n).map(|r| flat_barrier(r, n)).collect();
-    let Some((nodes, _rpn)) = ctx.hierarchy() else {
-        return flat;
+    let Some((nodes, rpn)) = ctx.hierarchy() else {
+        return (flat, None);
     };
     let hier: Vec<TokenPlan> = (0..n).map(|r| hier_barrier(r, &nodes, ctx.node_of)).collect();
-    if ctx.cost(&token_wire(&hier)) < ctx.cost(&token_wire(&flat)) {
-        hier
+    let ch = ctx.cost_tokens_hier(&hier, nodes.len(), rpn);
+    let cf = ctx.cost_tokens_flat(&flat);
+    if ch < cf {
+        (hier, Some(ch))
     } else {
-        flat
+        (flat, Some(cf))
     }
+}
+
+fn barrier_plans(ctx: &TopoCtx) -> Vec<TokenPlan> {
+    barrier_select(ctx).0
 }
 
 #[cfg(test)]
@@ -744,24 +1488,31 @@ fn plan_from_parents(parents: &[Option<usize>], rank: usize) -> TreePlan {
     }
 }
 
-/// The selected broadcast tree as a parent array: flat unless the
-/// hierarchical tree's wire replay is strictly cheaper at the exact
-/// payload byte size (the shape key carries bytes, not elements).
-fn bcast_parents_selected(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<Option<usize>> {
+/// The selected broadcast tree as a parent array (with the selected
+/// tree's exact cost when a comparison priced it): flat unless the
+/// hierarchical tree is strictly cheaper at the exact payload byte
+/// size (the shape key carries bytes, not elements).
+fn bcast_select(ctx: &TopoCtx, root: usize, bytes: usize) -> (Vec<Option<usize>>, Option<u64>) {
     let n = ctx.size;
     if n == 1 {
-        return vec![None];
+        return (vec![None], Some(0));
     }
     let flat = flat_bcast_parents(n, root);
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
-        return flat;
+        return (flat, None);
     };
     let hier = hier_bcast_parents(n, root, &nodes, ctx.node_of);
-    if ctx.cost(&tree_wire(&hier, bytes)) < ctx.cost(&tree_wire(&flat, bytes)) {
-        hier
+    let ch = ctx.cost_tree(&hier, bytes);
+    let cf = ctx.cost_tree(&flat, bytes);
+    if ch < cf {
+        (hier, Some(ch))
     } else {
-        flat
+        (flat, Some(cf))
     }
+}
+
+fn bcast_parents_selected(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<Option<usize>> {
+    bcast_select(ctx, root, bytes).0
 }
 
 // ---------------------------------------------------------------------
@@ -806,21 +1557,31 @@ fn reduce_plans_from_parents(parents: &[Option<usize>]) -> Vec<ReducePlan> {
 /// replay.
 ///
 /// [`commutative`]: crate::rmpi::collectives::commutative
-fn reduce_comm_plans(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<ReducePlan> {
+fn reduce_comm_select(
+    ctx: &TopoCtx,
+    root: usize,
+    bytes: usize,
+) -> (Vec<ReducePlan>, Option<u64>) {
     let n = ctx.size;
     let flat = flat_reduce_plans(n, root);
     if n == 1 {
-        return flat;
+        return (flat, Some(0));
     }
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
-        return flat;
+        return (flat, None);
     };
     let hier = reduce_plans_from_parents(&hier_bcast_parents(n, root, &nodes, ctx.node_of));
-    if ctx.cost(&reduce_wire(&hier, bytes)) < ctx.cost(&reduce_wire(&flat, bytes)) {
-        hier
+    let ch = ctx.cost_reduce(&hier, bytes);
+    let cf = ctx.cost_reduce(&flat, bytes);
+    if ch < cf {
+        (hier, Some(ch))
     } else {
-        flat
+        (flat, Some(cf))
     }
+}
+
+fn reduce_comm_plans(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<ReducePlan> {
+    reduce_comm_select(ctx, root, bytes).0
 }
 
 // ---------------------------------------------------------------------
@@ -847,11 +1608,11 @@ fn flat_gather_plans(n: usize, root: usize) -> Vec<GatherPlan> {
 /// hop but the root's port processes n-1 messages; staging absorbs the
 /// fan-in at node leaders, so the root sees one block per node — worth
 /// it exactly when per-message processing dominates.
-fn gather_plans(ctx: &TopoCtx, root: usize, cb: usize) -> Vec<GatherPlan> {
+fn gather_select(ctx: &TopoCtx, root: usize, cb: usize) -> (Vec<GatherPlan>, Option<u64>) {
     let n = ctx.size;
     let flat = flat_gather_plans(n, root);
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
-        return flat;
+        return (flat, None);
     };
     let root_node = ctx.node_of[root];
     let staged: Vec<GatherPlan> = (0..n)
@@ -884,11 +1645,17 @@ fn gather_plans(ctx: &TopoCtx, root: usize, cb: usize) -> Vec<GatherPlan> {
             }
         })
         .collect();
-    if ctx.cost(&gather_wire(&staged, cb)) < ctx.cost(&gather_wire(&flat, cb)) {
-        staged
+    let ch = ctx.cost_gather(&staged, cb);
+    let cf = ctx.cost_gather(&flat, cb);
+    if ch < cf {
+        (staged, Some(ch))
     } else {
-        flat
+        (flat, Some(cf))
     }
+}
+
+fn gather_plans(ctx: &TopoCtx, root: usize, cb: usize) -> Vec<GatherPlan> {
+    gather_select(ctx, root, cb).0
 }
 
 #[cfg(test)]
@@ -905,15 +1672,21 @@ pub(crate) fn compile_gather(ctx: &TopoCtx, root: usize, cb: usize) -> GatherPla
 /// rank's port processes n-1 incoming messages in one round. Staged:
 /// three rounds with inflated payloads but O(rpn + nodes) messages per
 /// port.
-fn alltoall_shape(ctx: &TopoCtx, cb: usize) -> Option<Vec<Vec<usize>>> {
-    let n = ctx.size;
-    let (nodes, _rpn) = ctx.hierarchy()?;
-    let hier = alltoall_hier_wire(&nodes, n, cb);
-    if ctx.cost(&hier) < ctx.cost(&alltoall_flat_wire(n, cb)) {
-        Some(nodes)
+fn alltoall_select(ctx: &TopoCtx, cb: usize) -> (Option<Vec<Vec<usize>>>, Option<u64>) {
+    let Some((nodes, _rpn)) = ctx.hierarchy() else {
+        return (None, None);
+    };
+    let ch = ctx.cost_alltoall_hier(&nodes, cb);
+    let cf = ctx.cost_alltoall_flat(cb);
+    if ch < cf {
+        (Some(nodes), Some(ch))
     } else {
-        None
+        (None, Some(cf))
     }
+}
+
+fn alltoall_shape(ctx: &TopoCtx, cb: usize) -> Option<Vec<Vec<usize>>> {
+    alltoall_select(ctx, cb).0
 }
 
 #[cfg(test)]
@@ -926,7 +1699,7 @@ mod tests {
         mode: TopologyMode,
         net: &'a NetworkModel,
     ) -> TopoCtx<'a> {
-        TopoCtx { rank, size: node_of.len(), node_of, mode, net }
+        TopoCtx::service(rank, node_of.len(), node_of, mode, net)
     }
 
     fn blocked(nodes: usize, rpn: usize) -> Vec<usize> {
@@ -1066,15 +1839,15 @@ mod tests {
     fn sched_cache_hits_and_misses() {
         let cache = SchedCache::default();
         let key = SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None };
-        let (_, hit) =
-            cache.get_or_compile(&key, || CollPlan::Barrier(TokenPlan { rounds: vec![] }));
+        let (_, hit) = cache
+            .get_or_compile(&key, || Arc::new(CollPlan::Barrier(TokenPlan { rounds: vec![] })));
         assert!(!hit);
         let (_, hit) = cache.get_or_compile(&key, || unreachable!("must hit"));
         assert!(hit);
         assert_eq!(cache.len(), 1);
         let key2 = SchedKey { kind: CollKind::Bcast, root: 0, shape: ShapeKey::Bytes(32) };
         let (_, hit) = cache.get_or_compile(&key2, || {
-            CollPlan::Bcast(TreePlan { recv_from: None, send_to: vec![] })
+            Arc::new(CollPlan::Bcast(TreePlan { recv_from: None, send_to: vec![] }))
         });
         assert!(!hit);
         assert_eq!(cache.len(), 2);
@@ -1082,9 +1855,174 @@ mod tests {
         let key3 =
             SchedKey { kind: CollKind::AllreduceComm, root: 0, shape: ShapeKey::Bytes(32) };
         let (_, hit) = cache.get_or_compile(&key3, || {
-            CollPlan::Reduce(ReducePlan { children: vec![], parent: None })
+            Arc::new(CollPlan::Reduce(ReducePlan { children: vec![], parent: None }))
         });
         assert!(!hit);
         assert_eq!(cache.len(), 3);
+    }
+
+    /// Every closed form must equal the event-driven replay — the same
+    /// contract the debug asserts enforce, swept explicitly across
+    /// regular and irregular node maps, both protocols (the big bcast
+    /// payload goes rendezvous), and rx ∈ {0, 400}. The irregular map
+    /// exercises the per-edge/per-port DPs off the blocked layout; the
+    /// uniform maps exercise the O(1) formulas.
+    #[test]
+    fn closed_form_matches_replay() {
+        let maps: Vec<Vec<usize>> = vec![
+            blocked(2, 4),
+            blocked(4, 3),
+            blocked(8, 1),
+            blocked(1, 8),
+            vec![0, 0, 0, 1, 1, 2, 2, 2], // irregular: unequal nodes
+        ];
+        for node_of in &maps {
+            let n = node_of.len();
+            for rx in [0u64, 400] {
+                let net = NetworkModel { rx_ns: rx, ..NetworkModel::default() };
+                for mode in [TopologyMode::Flat, TopologyMode::Hierarchical] {
+                    let c = ctx(0, node_of, mode, &net);
+                    for bytes in [8usize, 128 * 1024] {
+                        // Trees: flat and (where defined) hierarchical.
+                        let flat_tree = flat_bcast_parents(n, 1 % n);
+                        assert_eq!(
+                            closed_tree_cost(&flat_tree, bytes, node_of, &net),
+                            c.replay(&tree_wire(&flat_tree, bytes)),
+                        );
+                        // Reduce trees, pinned and re-rooted shapes.
+                        let flat_red = flat_reduce_plans(n, 0);
+                        assert_eq!(
+                            closed_reduce_cost(&flat_red, bytes, node_of, &net),
+                            c.replay(&reduce_wire(&flat_red, bytes)),
+                        );
+                        if let Some((nodes, _)) = c.hierarchy() {
+                            let ht = hier_bcast_parents(n, 0, &nodes, node_of);
+                            assert_eq!(
+                                closed_tree_cost(&ht, bytes, node_of, &net),
+                                c.replay(&tree_wire(&ht, bytes)),
+                            );
+                            let hr = reduce_plans_from_parents(&ht);
+                            assert_eq!(
+                                closed_reduce_cost(&hr, bytes, node_of, &net),
+                                c.replay(&reduce_wire(&hr, bytes)),
+                            );
+                        }
+                        // Gather: flat everywhere, staged under hierarchy.
+                        let (gp, _) = gather_select(&c, 0, bytes);
+                        assert_eq!(
+                            closed_gather_cost(&gp, bytes, node_of, &net),
+                            c.replay(&gather_wire(&gp, bytes)),
+                        );
+                        // Alltoall formulas need the uniform blocked map.
+                        if let Some((l, rpn)) = uniform_blocked(node_of) {
+                            assert_eq!(
+                                closed_alltoall_flat_cost(l, rpn, bytes, &net),
+                                c.replay(&alltoall_flat_wire(n, bytes)),
+                            );
+                        }
+                        if let Some((nodes, rpn)) = c.hierarchy() {
+                            assert_eq!(
+                                closed_alltoall_hier_cost(nodes.len(), rpn, bytes, &net),
+                                c.replay(&alltoall_hier_wire(&nodes, n, bytes)),
+                            );
+                        }
+                    }
+                    // Barrier formula (hierarchy shapes only).
+                    if let Some((nodes, rpn)) = c.hierarchy() {
+                        let hb: Vec<TokenPlan> =
+                            (0..n).map(|r| hier_barrier(r, &nodes, node_of)).collect();
+                        assert_eq!(
+                            closed_hier_barrier_cost(nodes.len(), rpn, &net),
+                            c.replay(&token_wire(&hb)),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The memo returns the exact replay value and stops charging heap
+    /// events for repeated schedules; the stats sink sees both sides.
+    #[test]
+    fn replay_memo_hits_and_counts() {
+        let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
+        let node_of = blocked(2, 4);
+        let memo = ReplayMemo::default();
+        let stats = CompileStats::default();
+        let mut c = ctx(0, &node_of, TopologyMode::Hierarchical, &net);
+        c.memo = Some(&memo);
+        c.stats = Some(&stats);
+        let w = alltoall_flat_wire(8, 64);
+        let cold = c.cost(&w);
+        let events_after_cold = stats.replay_events();
+        assert!(events_after_cold > 0, "cold replay must run the heap");
+        assert_eq!(stats.memo_hits(), 0);
+        assert_eq!(memo.len(), 1);
+        let warm = c.cost(&w);
+        assert_eq!(warm, cold, "memo must return the exact replay value");
+        assert_eq!(stats.memo_hits(), 1);
+        assert_eq!(stats.replay_events(), events_after_cold, "no new heap events on a hit");
+        // A different schedule is a different key.
+        assert_eq!(c.cost(&alltoall_flat_wire(8, 65)), c.replay(&alltoall_flat_wire(8, 65)));
+        assert_eq!(memo.len(), 2);
+    }
+
+    /// The store compiles once per key and coalesces every later
+    /// lookup; per-rank views are role slices of one cluster plan, and
+    /// first_touch fires exactly once per rank.
+    #[test]
+    fn plan_store_compiles_once() {
+        let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
+        let node_of = blocked(2, 4);
+        let store = PlanStore::standalone(&node_of, &net, TopologyMode::Hierarchical);
+        let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(64) };
+        let mut compiles = 0;
+        for rank in 0..node_of.len() {
+            let mut c = ctx(rank, &node_of, TopologyMode::Hierarchical, &net);
+            c.memo = Some(&store.memo);
+            c.stats = Some(&store.stats);
+            let (cluster, hit) = store.get_or_compile(key, || {
+                compiles += 1;
+                compile_cluster_plans(&key, &c)
+            });
+            assert_eq!(hit, rank != 0);
+            assert!(cluster.first_touch(rank), "first touch per rank");
+            assert!(!cluster.first_touch(rank), "second touch is not first");
+            match &*cluster.view(rank) {
+                CollPlan::AlltoallHier(h) => assert_eq!(h.is_leader, rank % 4 == 0),
+                CollPlan::AlltoallvFlat => {}
+                _ => panic!("alltoall plan expected"),
+            }
+        }
+        assert_eq!(compiles, 1, "one compile cluster-wide");
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.miss_count(), 1);
+        assert_eq!(store.hit_count(), node_of.len() as u64 - 1);
+        // A different shape is a different plan.
+        let key2 = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(8) };
+        let c = ctx(0, &node_of, TopologyMode::Hierarchical, &net);
+        store.get_or_compile(key2, || compile_cluster_plans(&key2, &c));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.miss_count(), 2);
+    }
+
+    #[test]
+    fn uniform_blocked_detection() {
+        assert_eq!(uniform_blocked(&blocked(4, 4)), Some((4, 4)));
+        assert_eq!(uniform_blocked(&blocked(1, 8)), Some((1, 8)));
+        assert_eq!(uniform_blocked(&blocked(8, 1)), Some((8, 1)));
+        assert_eq!(uniform_blocked(&[0, 0, 1]), None, "unequal blocks");
+        assert_eq!(uniform_blocked(&[0, 1, 0, 1]), None, "interleaved");
+        assert_eq!(uniform_blocked(&[]), None);
+    }
+
+    #[test]
+    fn shape_and_sched_signatures_discriminate() {
+        assert_ne!(shape_signature(&blocked(2, 4)), shape_signature(&blocked(4, 2)));
+        assert_ne!(shape_signature(&blocked(2, 4)), shape_signature(&blocked(2, 3)));
+        let a = sched_sig(&alltoall_flat_wire(8, 64));
+        assert_eq!(a, sched_sig(&alltoall_flat_wire(8, 64)), "digest is deterministic");
+        assert_ne!(a, sched_sig(&alltoall_flat_wire(8, 65)));
+        assert_ne!(a, sched_sig(&alltoall_flat_wire(9, 64)));
     }
 }

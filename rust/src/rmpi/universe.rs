@@ -14,7 +14,7 @@ use crate::trace::{GraphRecorder, Tracer};
 use super::comm::{Comm, UniState};
 use super::match_engine::ContextQueues;
 use super::net::NetworkModel;
-use super::topology::TopologyMode;
+use super::topology::{PlanStore, TopologyMode};
 
 /// Shape and knobs of the simulated cluster.
 #[derive(Clone)]
@@ -177,6 +177,11 @@ pub struct RunStats {
     /// same-shape collective should show `hits >= calls - 1` per rank
     /// (the MPI persistent-collective win; see `rmpi::topology`).
     pub sched_cache: SchedCacheStats,
+    /// Plan compilation service counters: cluster-plan store traffic
+    /// plus the compile-tier instrumentation (replay heap events, memo
+    /// hits, closed-form hits). `misses` is the number of compiles that
+    /// actually ran — O(1) per `SchedKey` cluster-wide, not O(ranks).
+    pub plan_store: PlanStoreStats,
     /// Clock events fired across all lanes (simulator throughput).
     pub clock_events: u64,
     /// Same-instant clock batches fired across all lanes.
@@ -204,6 +209,25 @@ pub struct SchedCacheStats {
     /// Collective calls that compiled (and, cache permitting, stored)
     /// their plan.
     pub misses: u64,
+}
+
+/// Plan compilation service counters (see `rmpi::topology`'s module
+/// docs, "three tiers"). All host-side diagnostics — never inputs to
+/// virtual time; `hits`/`replay_memo_hits` depend on how concurrent
+/// first calls interleave on the host, while `misses` (one compile per
+/// distinct key, coalesced) is deterministic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStoreStats {
+    /// Store lookups satisfied by an already-compiled cluster plan.
+    pub hits: u64,
+    /// Store lookups that ran the compiler — one per distinct key.
+    pub misses: u64,
+    /// Candidate replays answered by the structural-digest memo.
+    pub replay_memo_hits: u64,
+    /// Event-heap pops spent in exact candidate replays.
+    pub replay_events: u64,
+    /// Candidate costs answered by a closed form instead of a replay.
+    pub closed_form_hits: u64,
 }
 
 /// Why a run did not complete.
@@ -284,6 +308,10 @@ impl Universe {
             // bookkeeping when a sink is attached).
             clock.set_obs(obs.clone());
         }
+        // The plan compilation service registers its instruments
+        // (plan_store_hits / plan_store_misses / plan_compile_ns) in
+        // the run's metrics registry up front.
+        let plan_store = PlanStore::new(&node_of, &cfg.net, cfg.topology, &obs.metrics);
         let uni = Arc::new(UniState {
             clock: clock.clone(),
             net: cfg.net,
@@ -294,6 +322,7 @@ impl Universe {
             sched_cache_on: cfg.sched_cache,
             sched_hits: AtomicU64::new(0),
             sched_misses: AtomicU64::new(0),
+            plan_store,
             contexts: Mutex::new(Vec::new()),
             dup_map: Mutex::new(HashMap::new()),
             progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
@@ -493,6 +522,23 @@ impl Universe {
                     sched_cache: SchedCacheStats {
                         hits: uni.sched_hits.load(Ordering::Relaxed),
                         misses: uni.sched_misses.load(Ordering::Relaxed),
+                    },
+                    plan_store: {
+                        let ps = &uni.plan_store;
+                        let stats = PlanStoreStats {
+                            hits: ps.hit_count(),
+                            misses: ps.miss_count(),
+                            replay_memo_hits: ps.stats.memo_hits(),
+                            replay_events: ps.stats.replay_events(),
+                            closed_form_hits: ps.stats.closed_form_hits(),
+                        };
+                        // Mirror the compile-tier counts into the
+                        // registry before the snapshot below, so the
+                        // metrics view carries the full service story.
+                        obs.metrics.counter("plan_replay_memo_hits").add(stats.replay_memo_hits);
+                        obs.metrics.counter("plan_replay_events").add(stats.replay_events);
+                        obs.metrics.counter("plan_closed_form_hits").add(stats.closed_form_hits);
+                        stats
                     },
                     clock_events: cc.events,
                     clock_batches: cc.batches,

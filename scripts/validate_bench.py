@@ -49,6 +49,18 @@ ROW_SCHEMAS = {
         "comm_frac": NUM,
         "overlap_frac": NUM,
     },
+    21: {
+        "collective": (str,),
+        "nodes": NUM,
+        "rpn": NUM,
+        "ranks": NUM,
+        "strategy": (str,),
+        "compiles": NUM,
+        "replay_events": NUM,
+        "memo_hits": NUM,
+        "closed_form_hits": NUM,
+        "host_us": NUM,
+    },
 }
 
 # fig16's overlap-profiler stamp: {"blocking": f, "nonblocking": f}.
@@ -60,6 +72,8 @@ CACHE_SCHEMA = {
     "vtime_us": NUM,
     "hits": NUM,
     "misses": NUM,
+    "plan_store_hits": NUM,
+    "plan_store_misses": NUM,
 }
 
 
