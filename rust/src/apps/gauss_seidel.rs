@@ -371,7 +371,7 @@ fn pure_mpi(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
         if !model {
             sweep_native(&mut u, band, cols, &top, &bot, &zeros_side, &zeros_side);
         }
-        ctx.clock.work(gs_cost(band * cols, p.cell_ns));
+        ctx.clock.work(gs_cost(band * cols, p.cell_ns) * ctx.comm.compute_mult());
         trace(crate::trace::EventKind::TaskEnd, "sweep");
         if r < n - 1 {
             let last: Vec<f32> = if model {
@@ -491,7 +491,7 @@ fn nbuffer(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
                         .copy_from_slice(&tile[i * b..(i + 1) * b]);
                 }
             }
-            ctx.clock.work(gs_cost(band * b, p.cell_ns));
+            ctx.clock.work(gs_cost(band * b, p.cell_ns) * ctx.comm.compute_mult());
             trace(crate::trace::EventKind::TaskEnd, "block");
             // Exchange this block's boundaries as soon as possible.
             if r < n - 1 {
@@ -644,7 +644,9 @@ fn hybrid(ctx: &RankCtx, p: &GsParams, counters: &Counters) {
         } else {
             None
         },
-        cost: gs_cost(b * b, p.cell_ns),
+        // Straggler injection multiplies modelled compute (the ingress
+        // half is charged by the Ports law, see rmpi::faults).
+        cost: gs_cost(b * b, p.cell_ns) * ctx.comm.compute_mult(),
     });
 
     let obj_blk: Vec<DepObj> = (0..lbr * nbc)

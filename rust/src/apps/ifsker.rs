@@ -170,7 +170,7 @@ impl IfsOutcome {
 }
 
 /// Native physics: logistic reaction (matches the Pallas kernel).
-fn physics_native(u: &mut [f32], dt: f32) {
+pub(crate) fn physics_native(u: &mut [f32], dt: f32) {
     for x in u.iter_mut() {
         *x += dt * *x * (1.0 - *x);
     }
@@ -178,7 +178,7 @@ fn physics_native(u: &mut [f32], dt: f32) {
 
 /// Native "spectral" op on the transposed layout: per 64-wide segment,
 /// damp towards the segment mean (deterministic, order-independent).
-fn spectral_native(u: &mut [f32]) {
+pub(crate) fn spectral_native(u: &mut [f32]) {
     for seg in u.chunks_mut(64) {
         let mean = seg.iter().sum::<f32>() / seg.len() as f32;
         for x in seg.iter_mut() {
@@ -235,7 +235,7 @@ fn record_checksum(ctx: &RankCtx, counters: &Counters, local: f64) {
     }
 }
 
-fn init_value(rank: usize, field: usize, i: usize) -> f32 {
+pub(crate) fn init_value(rank: usize, field: usize, i: usize) -> f32 {
     // Deterministic, version-independent initial condition in (0, 1).
     let x = (rank * 131 + field * 17 + i) as f32;
     0.25 + 0.5 * ((x * 0.01).sin() * 0.5 + 0.5) * 0.9
@@ -269,7 +269,7 @@ fn pure(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
                 physics_native(&mut fields[f], 0.05);
             }
             ctx.clock
-                .work((chunk as f64 * PHYSICS_NS_PER_CELL) as u64);
+                .work((chunk as f64 * PHYSICS_NS_PER_CELL) as u64 * ctx.comm.compute_mult());
             // 2. transposition grid -> spectral: ordered blocking exchange
             let t = tag(step, f, 0, p.fields);
             exchange_pure(ctx, &fields[f], &mut spec, portion, t, model, &dummy);
@@ -278,7 +278,7 @@ fn pure(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
                 spectral_native(&mut spec);
             }
             ctx.clock
-                .work((chunk as f64 * SPECTRAL_NS_PER_CELL) as u64);
+                .work((chunk as f64 * SPECTRAL_NS_PER_CELL) as u64 * ctx.comm.compute_mult());
             // 4. transposition back
             let mut back = std::mem::take(&mut fields[f]);
             exchange_pure(ctx, &spec, &mut back, portion, tag(step, f, 1, p.fields), model, &dummy);
@@ -393,7 +393,7 @@ fn interop(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
             // physics task: inout(field f)
             {
                 let st = st.clone();
-                let cost = (chunk as f64 * PHYSICS_NS_PER_CELL) as u64;
+                let cost = (chunk as f64 * PHYSICS_NS_PER_CELL) as u64 * ctx.comm.compute_mult();
                 rt.task()
                     .label(format!("phys[{step}]f{f}"))
                     .dep(&obj_field[f], Mode::InOut)
@@ -416,7 +416,7 @@ fn interop(ctx: &RankCtx, p: &IfsParams, counters: &Counters) {
             // spectral task: inout(spec f)
             {
                 let st2 = st.clone();
-                let cost = (chunk as f64 * SPECTRAL_NS_PER_CELL) as u64;
+                let cost = (chunk as f64 * SPECTRAL_NS_PER_CELL) as u64 * ctx.comm.compute_mult();
                 rt.task()
                     .label(format!("spec[{step}]f{f}"))
                     .dep(&obj_spec[f], Mode::InOut)

@@ -6,6 +6,8 @@
 //!   `Interop(non-blk)` (Section 7.1).
 //! * [`ifsker`] — the IFS weather-model communication mock-up in
 //!   `Pure MPI`, `Interop(blk)`, `Interop(non-blk)` (Section 7.2).
+//! * [`recovery`] — shrink-and-continue drivers: both apps surviving a
+//!   mid-run rank failure via `comm_shrink()` (see `rmpi::faults`).
 //!
 //! Both apps run on the simulated cluster with a choice of compute
 //! backend: real numerics in native Rust, real numerics through the
@@ -14,6 +16,7 @@
 
 pub mod gauss_seidel;
 pub mod ifsker;
+pub mod recovery;
 pub mod store;
 
 use crate::sim::VNanos;

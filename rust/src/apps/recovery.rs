@@ -1,0 +1,418 @@
+//! Shrink-and-continue recovery drivers for the evaluation apps.
+//!
+//! The fault subsystem ([`crate::rmpi::faults`]) can kill a rank at a
+//! virtual instant; this module is the application-side answer. Each
+//! driver runs its solver in two phases on the same simulated cluster:
+//!
+//! 1. **Tolerant phase** on the world communicator: point-to-point
+//!    boundary/transposition exchanges check
+//!    [`crate::rmpi::Request::result`] and
+//!    absorb `Err(RankFailed)` (a failed halo read keeps the stale
+//!    values; a failed send is dropped). Nothing hangs — failed
+//!    requests still complete (see `rmpi::request`), they just carry
+//!    the error.
+//! 2. **Recovery**: every rank advances past the configured failure
+//!    instant (so the fault oracle's verdict is unanimous — the
+//!    stand-in for a ULFM agreement round, see
+//!    [`crate::rmpi::Comm::confirmed_dead`]), the dead rank drops out,
+//!    and the survivors call [`crate::rmpi::Comm::comm_shrink`] and
+//!    restart the solve from the initial condition on the smaller
+//!    communicator.
+//!
+//! The restarted phase performs exactly the arithmetic of a clean run
+//! on `survivors` ranks, and the final checksum is accumulated in rank
+//! order over point-to-point messages (not an allreduce, whose combine
+//! tree differs between a world and a shrunk communicator), so
+//! recovery runs are **bit-identical** to a fault-free run of the same
+//! driver at the survivor count — the property `tests/faults.rs` and
+//! the fig22 bench assert. Drop and straggler injections change only
+//! timing (retransmits, cost multipliers), never data, so the same
+//! checksums hold under every `--inject` mode.
+
+use crate::rmpi::universe::{Counters, RunError};
+use crate::rmpi::{ClusterConfig, Comm, FaultsConfig, RankCtx, RunStats, Universe};
+use crate::sim::VNanos;
+
+use super::gauss_seidel::sweep_native;
+use super::ifsker::{init_value, physics_native, spectral_native};
+use super::{gs_cost, ifsker};
+
+/// Tag spaces: solver tags stay far below these.
+const SUM_TAG: i32 = 1_000_000;
+
+/// Outcome of one shrink-and-continue run.
+#[derive(Clone, Debug)]
+pub struct ShrinkOutcome {
+    pub vtime_ns: u64,
+    pub stats: RunStats,
+    /// Communicator size the recovered phase ran on.
+    pub survivors: usize,
+    /// Rank-ordered f64 sum of the recovered phase's final state.
+    pub checksum: f64,
+}
+
+/// Parameters shared by the recovery drivers. `pre_iters` is the
+/// tolerant world phase (0 skips it — used for clean reference runs);
+/// `iters` is the recovered solve. With `faults: None` the "recovery"
+/// phase simply runs on the world communicator, which is what makes a
+/// fault-free reference at the survivor count directly comparable.
+#[derive(Clone)]
+pub struct ShrinkParams {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub pre_iters: usize,
+    pub iters: usize,
+    pub net: crate::rmpi::NetworkModel,
+    pub clock_shards: usize,
+    pub delivery_mode: crate::progress::DeliveryMode,
+    pub deadline: Option<VNanos>,
+    pub faults: Option<FaultsConfig>,
+}
+
+impl ShrinkParams {
+    pub fn new(nodes: usize, ranks_per_node: usize, pre_iters: usize, iters: usize) -> Self {
+        ShrinkParams {
+            nodes,
+            ranks_per_node,
+            pre_iters,
+            iters,
+            net: crate::rmpi::NetworkModel::default(),
+            clock_shards: 1,
+            delivery_mode: crate::progress::DeliveryMode::default(),
+            deadline: None,
+            faults: None,
+        }
+    }
+
+    fn ranks(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    fn cluster(&self) -> ClusterConfig {
+        let mut cc = ClusterConfig::new(self.nodes, self.ranks_per_node, 0);
+        cc.net = self.net;
+        cc.clock_shards = self.clock_shards;
+        cc.delivery_mode = self.delivery_mode;
+        cc.deadline = self.deadline;
+        cc.faults = self.faults.clone();
+        cc
+    }
+}
+
+/// Send that absorbs a failed completion when `tolerant`.
+fn xsend(ctx: &RankCtx, comm: &Comm, buf: &[f32], dst: usize, tag: i32, tolerant: bool) {
+    let r = comm.isend(buf, dst, tag);
+    r.wait(&ctx.clock);
+    if !tolerant {
+        r.result().expect("send failed outside the tolerant phase");
+    }
+}
+
+/// Receive that absorbs a failed completion when `tolerant` (the
+/// destination buffer keeps its previous — stale but deterministic —
+/// values). Returns whether fresh data arrived.
+fn xrecv(
+    ctx: &RankCtx,
+    comm: &Comm,
+    buf: &mut [f32],
+    src: usize,
+    tag: i32,
+    tolerant: bool,
+) -> bool {
+    let r = comm.irecv(buf, src as i32, tag);
+    r.wait(&ctx.clock);
+    match r.result() {
+        Ok(_) => true,
+        Err(e) => {
+            if !tolerant {
+                panic!("recv failed outside the tolerant phase: {e:?}");
+            }
+            false
+        }
+    }
+}
+
+/// Advance this rank's virtual clock past the configured failure
+/// instant, then split: the dead rank returns `None` (its main exits),
+/// survivors return the shrunk communicator. With no rank failure
+/// configured, the world communicator is returned unchanged.
+fn recover_comm(ctx: &RankCtx, faults: &Option<FaultsConfig>) -> Option<Comm> {
+    let Some(rf) = faults.as_ref().and_then(|f| f.rank_fail) else {
+        return Some(ctx.comm.clone());
+    };
+    let now = ctx.clock.now();
+    if now <= rf.at_ns {
+        // Unanimity by clock, not by messages: dead_at() is pure in
+        // (rank, t), so once every rank is past at_ns they all read
+        // the same verdict (the un-modelled agreement round).
+        ctx.clock.work(rf.at_ns - now + 1);
+    }
+    if ctx.rank == rf.rank {
+        return None;
+    }
+    Some(ctx.comm.comm_shrink())
+}
+
+/// Rank-order deterministic sum: rank 0 of `comm` accumulates every
+/// rank's value in ascending rank order. Unlike an allreduce, the
+/// addition order is independent of the communicator's plan topology,
+/// so world-comm reference runs and shrunk-comm recovery runs produce
+/// bit-identical totals.
+fn ordered_sum(ctx: &RankCtx, comm: &Comm, local: f64) -> f64 {
+    if comm.rank() == 0 {
+        let mut acc = local;
+        for p in 1..comm.size() {
+            let mut v = [0f64];
+            let r = comm.irecv(&mut v, p as i32, SUM_TAG);
+            r.wait(&ctx.clock);
+            r.result().expect("checksum gather on a healthy communicator");
+            acc += v[0];
+        }
+        acc
+    } else {
+        let v = [local];
+        let r = comm.isend(&v, 0, SUM_TAG);
+        r.wait(&ctx.clock);
+        0.0
+    }
+}
+
+// --------------------------------------------------------------------
+// Gauss-Seidel: banded 1-D decomposition, the pure-MPI exchange shape.
+// --------------------------------------------------------------------
+
+fn gs_tag_down(t: usize) -> i32 {
+    (2 * t) as i32
+}
+fn gs_tag_up(t: usize) -> i32 {
+    (2 * t + 1) as i32
+}
+
+/// Banded Gauss-Seidel solve on `comm` from the zero initial state.
+/// Mirrors `gauss_seidel::pure_mpi`'s exchange order; `tolerant`
+/// enables the failure-absorbing phase-1 behaviour.
+fn gs_solve(
+    ctx: &RankCtx,
+    comm: &Comm,
+    rows: usize,
+    cols: usize,
+    iters: usize,
+    cell_ns: f64,
+    tolerant: bool,
+) -> Vec<f32> {
+    let r = comm.rank();
+    let n = comm.size();
+    let band = rows / n;
+    let mut u = vec![0f32; band * cols];
+    let mut top = vec![if r == 0 { 1.0f32 } else { 0.0 }; cols];
+    let mut bot = vec![0f32; cols];
+    let side = vec![0f32; band];
+    let mult = comm.compute_mult();
+
+    if r > 0 {
+        let first = u[0..cols].to_vec();
+        xsend(ctx, comm, &first, r - 1, gs_tag_up(0), tolerant);
+    }
+    for t in 0..iters {
+        if r > 0 {
+            xrecv(ctx, comm, &mut top, r - 1, gs_tag_down(t), tolerant);
+        }
+        if r < n - 1 {
+            xrecv(ctx, comm, &mut bot, r + 1, gs_tag_up(t), tolerant);
+        }
+        sweep_native(&mut u, band, cols, &top, &bot, &side, &side);
+        ctx.clock.work(gs_cost(band * cols, cell_ns) * mult);
+        if r < n - 1 {
+            let last = u[(band - 1) * cols..].to_vec();
+            xsend(ctx, comm, &last, r + 1, gs_tag_down(t), tolerant);
+        }
+        if r > 0 && t + 1 < iters {
+            let first = u[0..cols].to_vec();
+            xsend(ctx, comm, &first, r - 1, gs_tag_up(t + 1), tolerant);
+        }
+    }
+    u
+}
+
+/// Gauss-Seidel parameters on top of [`ShrinkParams`].
+#[derive(Clone)]
+pub struct GsShrinkParams {
+    pub base: ShrinkParams,
+    pub rows: usize,
+    pub cols: usize,
+    pub cell_ns: f64,
+}
+
+impl GsShrinkParams {
+    pub fn new(base: ShrinkParams, rows: usize, cols: usize) -> Self {
+        GsShrinkParams { base, rows, cols, cell_ns: super::DEFAULT_GS_CELL_NS }
+    }
+
+    fn validate(&self) {
+        let n = self.base.ranks();
+        assert_eq!(self.rows % n, 0, "rows not divisible by ranks");
+        if self.base.faults.as_ref().and_then(|f| f.rank_fail).is_some() {
+            assert!(n > 1, "cannot shrink a single-rank world");
+            assert_eq!(
+                self.rows % (n - 1),
+                0,
+                "rows not divisible by the survivor count"
+            );
+        }
+    }
+}
+
+/// Run the Gauss-Seidel shrink-and-continue experiment.
+pub fn run_gs_shrink(p: &GsShrinkParams) -> Result<ShrinkOutcome, RunError> {
+    p.validate();
+    let p2 = p.clone();
+    let stats = Universe::run_with_counters(p.base.cluster(), move |ctx, counters| {
+        if p2.base.pre_iters > 0 {
+            let _ = gs_solve(ctx, &ctx.comm, p2.rows, p2.cols, p2.base.pre_iters, p2.cell_ns, true);
+        }
+        let Some(comm) = recover_comm(ctx, &p2.base.faults) else {
+            return; // this rank is dead: its main exits here
+        };
+        let u = gs_solve(ctx, &comm, p2.rows, p2.cols, p2.base.iters, p2.cell_ns, false);
+        let local: f64 = u.iter().map(|&x| x as f64).sum();
+        finish(ctx, &comm, counters, local);
+    })?;
+    Ok(outcome(stats))
+}
+
+// --------------------------------------------------------------------
+// IFSKer: the per-field ordered all-to-all transposition cycle.
+// --------------------------------------------------------------------
+
+/// One tolerant ordered all-to-all of `portion`-sized pieces
+/// (the shape of `ifsker::exchange_pure`).
+#[allow(clippy::too_many_arguments)]
+fn ifs_exchange(
+    ctx: &RankCtx,
+    comm: &Comm,
+    src: &[f32],
+    dst: &mut [f32],
+    portion: usize,
+    tag: i32,
+    tolerant: bool,
+) {
+    let r = comm.rank();
+    let n = comm.size();
+    dst[r * portion..(r + 1) * portion].copy_from_slice(&src[r * portion..(r + 1) * portion]);
+    for p in 0..n {
+        if p == r {
+            continue;
+        }
+        let piece = &src[p * portion..(p + 1) * portion];
+        if r < p {
+            xsend(ctx, comm, piece, p, tag, tolerant);
+            xrecv(ctx, comm, &mut dst[p * portion..(p + 1) * portion], p, tag, tolerant);
+        } else {
+            xrecv(ctx, comm, &mut dst[p * portion..(p + 1) * portion], p, tag, tolerant);
+            xsend(ctx, comm, piece, p, tag, tolerant);
+        }
+    }
+}
+
+/// IFS cycle on `comm` from the deterministic initial condition
+/// (physics → transpose → spectral → transpose back, per field).
+fn ifs_solve(
+    ctx: &RankCtx,
+    comm: &Comm,
+    gridpoints: usize,
+    nfields: usize,
+    steps: usize,
+    tolerant: bool,
+) -> Vec<Vec<f32>> {
+    let r = comm.rank();
+    let n = comm.size();
+    let chunk = gridpoints / n;
+    let portion = chunk / n;
+    let mult = comm.compute_mult();
+    let mut fields: Vec<Vec<f32>> = (0..nfields)
+        .map(|f| (0..chunk).map(|i| init_value(r, f, i)).collect())
+        .collect();
+    let mut spec = vec![0f32; chunk];
+
+    for step in 0..steps {
+        for f in 0..nfields {
+            physics_native(&mut fields[f], 0.05);
+            ctx.clock
+                .work((chunk as f64 * ifsker::PHYSICS_NS_PER_CELL) as u64 * mult);
+            let t0 = ((step * nfields + f) * 2) as i32;
+            ifs_exchange(ctx, comm, &fields[f], &mut spec, portion, t0, tolerant);
+            spectral_native(&mut spec);
+            ctx.clock
+                .work((chunk as f64 * ifsker::SPECTRAL_NS_PER_CELL) as u64 * mult);
+            let mut back = std::mem::take(&mut fields[f]);
+            ifs_exchange(ctx, comm, &spec, &mut back, portion, t0 + 1, tolerant);
+            fields[f] = back;
+        }
+    }
+    fields
+}
+
+/// IFSKer parameters on top of [`ShrinkParams`]. `gridpoints` must
+/// satisfy the transposition divisibility for both the world size `n`
+/// and (with a rank failure) the survivor count `n - 1`:
+/// `gridpoints % (k * k) == 0` for each size `k` (e.g. 144 for 4 → 3).
+#[derive(Clone)]
+pub struct IfsShrinkParams {
+    pub base: ShrinkParams,
+    pub gridpoints: usize,
+    pub fields: usize,
+}
+
+impl IfsShrinkParams {
+    pub fn new(base: ShrinkParams, gridpoints: usize, fields: usize) -> Self {
+        IfsShrinkParams { base, gridpoints, fields }
+    }
+
+    fn validate(&self) {
+        let n = self.base.ranks();
+        assert_eq!(self.gridpoints % (n * n), 0, "gridpoints % ranks^2 != 0");
+        if self.base.faults.as_ref().and_then(|f| f.rank_fail).is_some() {
+            assert!(n > 1, "cannot shrink a single-rank world");
+            let s = n - 1;
+            assert_eq!(self.gridpoints % (s * s), 0, "gridpoints % survivors^2 != 0");
+        }
+    }
+}
+
+/// Run the IFSKer shrink-and-continue experiment.
+pub fn run_ifs_shrink(p: &IfsShrinkParams) -> Result<ShrinkOutcome, RunError> {
+    p.validate();
+    let p2 = p.clone();
+    let stats = Universe::run_with_counters(p.base.cluster(), move |ctx, counters| {
+        if p2.base.pre_iters > 0 {
+            let _ = ifs_solve(ctx, &ctx.comm, p2.gridpoints, p2.fields, p2.base.pre_iters, true);
+        }
+        let Some(comm) = recover_comm(ctx, &p2.base.faults) else {
+            return;
+        };
+        let fields = ifs_solve(ctx, &comm, p2.gridpoints, p2.fields, p2.base.iters, false);
+        let local: f64 = fields.iter().flat_map(|v| v.iter()).map(|&x| x as f64).sum();
+        finish(ctx, &comm, counters, local);
+    })?;
+    Ok(outcome(stats))
+}
+
+/// Gather the rank-ordered checksum and record the run's counters
+/// (rank 0 of the recovered communicator only).
+fn finish(ctx: &RankCtx, comm: &Comm, counters: &Counters, local: f64) {
+    let sum = ordered_sum(ctx, comm, local);
+    if comm.rank() == 0 {
+        counters.add("survivor_checksum_bits", sum.to_bits());
+        counters.add("survivors", comm.size() as u64);
+    }
+}
+
+fn outcome(stats: RunStats) -> ShrinkOutcome {
+    let checksum = stats
+        .counters
+        .get("survivor_checksum_bits")
+        .map(|&b| f64::from_bits(b))
+        .unwrap_or(0.0);
+    let survivors = stats.counters.get("survivors").copied().unwrap_or(0) as usize;
+    ShrinkOutcome { vtime_ns: stats.vtime_ns, stats, survivors, checksum }
+}

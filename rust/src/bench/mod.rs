@@ -1555,7 +1555,12 @@ fn plan_compile_probe(nodes: usize, rpn: usize, strategy: &'static str) -> PlanC
     // Congested receiver ports so the flat-vs-hier comparison exercises
     // the full event-driven replay (rx-free replays are near-trivial).
     let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
-    let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(4 * 1024) };
+    let key = SchedKey {
+        kind: CollKind::Alltoall,
+        root: 0,
+        shape: ShapeKey::ChunkBytes(4 * 1024),
+        avoid: 0,
+    };
     let stats = CompileStats::default();
     let memo = ReplayMemo::default();
 
@@ -1708,6 +1713,285 @@ pub fn fig21_json(scale: Scale) -> String {
         .collect();
     let elapsed = wall.elapsed().as_nanos() as u64;
     json_doc(21, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+}
+
+/// One fig 22 scenario row: an injected run against its baseline.
+///
+/// `vtime_us` is the injected (and, for the straggler probe, adaptive)
+/// run; `baseline_us` is the comparison arm — the static-plan run for
+/// the straggler probe, the fault-free reference at the same data size
+/// (and at the survivor count, for rank failure) otherwise.
+pub struct FaultRow {
+    pub scenario: &'static str,
+    pub app: &'static str,
+    pub vtime_us: f64,
+    pub baseline_us: f64,
+    /// Ranks the measured phase ran on (world size, or world - 1 after
+    /// a shrink).
+    pub survivors: u64,
+    /// Checksum bit-identical to the fault-free reference (straggler
+    /// probe: the detector agreed on exactly the injected rank).
+    pub converged: bool,
+    /// Re-running with the same seed reproduced vtime and checksum
+    /// bit-for-bit.
+    pub replay_identical: bool,
+}
+
+/// The straggler arm of fig 22: a hierarchical 2x4 cluster where world
+/// rank 4 — node 1's representative in every static tree — carries a
+/// large ingress penalty. Warmup is a *direct* token from rank 0 to
+/// every rank, so each rank's arrival skew carries only its own ingress
+/// cost (a tree-shaped warmup would smear the straggler's delay over
+/// its downstream neighbours and the detector would blame the whole
+/// node). The adaptive arm then runs [`crate::rmpi::Comm::detect_stragglers`],
+/// which re-roots the node's trees away from rank 4 through the
+/// avoid-mask / `SchedKey` path; the static arm keeps the compiled
+/// plans. Both arms time the same bcast + commutative-allreduce rounds.
+///
+/// Returns `(vtime_ns, agreed_avoid_mask)` (mask is 0 for the static arm).
+fn fig22_straggler_probe(adaptive: bool, rounds: usize) -> (u64, u64) {
+    use crate::rmpi::{commutative, ClusterConfig, FaultsConfig, TopologyMode, Universe};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let mut cfg = ClusterConfig::new(2, 4, 0).with_topology(TopologyMode::Hierarchical);
+    cfg.deadline = Some(ms(60_000));
+    cfg.faults = Some(FaultsConfig::new(7).with_straggler(4, 50_000, 1));
+    let mask_out = Arc::new(AtomicU64::new(0));
+    let mask_c = Arc::clone(&mask_out);
+    let stats = Universe::run(cfg, move |ctx| {
+        // Direct-token warmup: the straggler's entry to the next
+        // collective lags by its rx_extra, everyone else's by wire
+        // latency only.
+        let tok = [0u8; 64];
+        if ctx.rank == 0 {
+            let reqs: Vec<_> = (1..ctx.size).map(|d| ctx.comm.isend(&tok, d, 9)).collect();
+            for r in &reqs {
+                r.wait(&ctx.clock);
+            }
+        } else {
+            let mut rbuf = [0u8; 64];
+            let r = ctx.comm.irecv(&mut rbuf, 0, 9);
+            r.wait(&ctx.clock);
+        }
+        if adaptive {
+            let m = ctx.comm.detect_stragglers(20_000);
+            if ctx.rank == 0 {
+                mask_c.store(m, Ordering::Relaxed);
+            }
+        }
+        let mut buf = vec![0u8; 4 * 1024];
+        let mut acc = [0u64; 1];
+        for _ in 0..rounds {
+            ctx.comm.bcast(&mut buf, 0);
+            acc[0] = ctx.rank as u64;
+            ctx.comm.allreduce_op(
+                &mut acc,
+                commutative(|a: &mut [u64], b: &[u64]| a[0] = a[0].max(b[0])),
+            );
+        }
+    })
+    .expect("straggler probe");
+    (stats.vtime_ns, mask_out.load(Ordering::Relaxed))
+}
+
+/// Fold an injected run, its seed replay, and the fault-free reference
+/// into one row. Convergence is checksum *bit* identity: rank-failure
+/// runs restart from the initial condition on the shrunk communicator
+/// and the checksum is gathered in rank order, so they reproduce a
+/// clean run at the survivor count exactly; drop and straggler
+/// injections perturb timing only (see `apps::recovery`).
+fn fig22_shrink_row(
+    scenario: &'static str,
+    app: &'static str,
+    run: &crate::apps::recovery::ShrinkOutcome,
+    replay: &crate::apps::recovery::ShrinkOutcome,
+    reference: &crate::apps::recovery::ShrinkOutcome,
+) -> FaultRow {
+    FaultRow {
+        scenario,
+        app,
+        vtime_us: run.vtime_ns as f64 / 1_000.0,
+        baseline_us: reference.vtime_ns as f64 / 1_000.0,
+        survivors: run.survivors as u64,
+        converged: run.checksum.is_finite()
+            && run.checksum != 0.0
+            && run.checksum.to_bits() == reference.checksum.to_bits(),
+        replay_identical: run.vtime_ns == replay.vtime_ns
+            && run.checksum.to_bits() == replay.checksum.to_bits(),
+    }
+}
+
+/// Fig 22 (repro extension): fault injection and stall-driven adaptive
+/// recovery. Three scenario families, each asserted in-harness:
+///
+/// * `straggler-reroot` — detector-driven tree re-rooting must strictly
+///   beat the static plans under a persistent straggler, and the
+///   agreement mask must name exactly the injected rank;
+/// * `rank-fail` — both evaluation apps must converge bit-identically
+///   to a fault-free run at the survivor count after a mid-run rank
+///   failure plus `comm_shrink()`;
+/// * `drop` / `straggler` (app rows) — lossy links and compute-cost
+///   multipliers must change timing, never results.
+///
+/// Every scenario is run twice on the same seed; rows record that the
+/// replay was bit-identical.
+pub fn fig22(scale: Scale) -> Vec<FaultRow> {
+    use crate::apps::recovery::{
+        run_gs_shrink, run_ifs_shrink, GsShrinkParams, IfsShrinkParams, ShrinkParams,
+    };
+    use crate::rmpi::FaultsConfig;
+
+    let (rounds, iters) = match scale {
+        Scale::Quick => (10, 8),
+        Scale::Default => (20, 16),
+        Scale::Full => (40, 32),
+    };
+
+    let mut rows = Vec::new();
+
+    // Straggler: static vs detector-re-rooted plans.
+    let (static_ns, _) = fig22_straggler_probe(false, rounds);
+    let (adaptive_ns, mask) = fig22_straggler_probe(true, rounds);
+    let (static2_ns, _) = fig22_straggler_probe(false, rounds);
+    let (adaptive2_ns, mask2) = fig22_straggler_probe(true, rounds);
+    assert_eq!(
+        mask,
+        1 << 4,
+        "detector must agree on exactly the injected straggler (rank 4)"
+    );
+    assert!(
+        adaptive_ns < static_ns,
+        "stall-driven re-rooting must beat the static plans under a \
+         straggler (adaptive {} ns, static {} ns)",
+        adaptive_ns,
+        static_ns
+    );
+    rows.push(FaultRow {
+        scenario: "straggler-reroot",
+        app: "coll",
+        vtime_us: adaptive_ns as f64 / 1_000.0,
+        baseline_us: static_ns as f64 / 1_000.0,
+        survivors: 8,
+        converged: mask == 1 << 4,
+        replay_identical: adaptive_ns == adaptive2_ns && static_ns == static2_ns && mask == mask2,
+    });
+
+    // Shrink-and-continue drivers: 4 single-rank nodes so a failure
+    // costs a node; sizes divide both the world and the survivor count
+    // (rows 24: bands 6 -> 8; gridpoints 144: 144 % 16 = 144 % 9 = 0).
+    let base = |faults: Option<FaultsConfig>, pre: usize, nodes: usize| {
+        let mut b = ShrinkParams::new(nodes, 1, pre, iters);
+        b.deadline = Some(ms(60_000));
+        b.faults = faults;
+        b
+    };
+    let fail = || Some(FaultsConfig::new(42).with_rank_fail(1, 20_000));
+    let drop = || Some(FaultsConfig::new(42).with_drop(200_000));
+    let slow = || Some(FaultsConfig::new(42).with_straggler(1, 5_000, 2));
+
+    let gs = |b: ShrinkParams| run_gs_shrink(&GsShrinkParams::new(b, 24, 64)).expect("gs shrink");
+    let ifs =
+        |b: ShrinkParams| run_ifs_shrink(&IfsShrinkParams::new(b, 144, 2)).expect("ifs shrink");
+
+    // Rank failure: reference is a clean run on the survivor count.
+    let r = gs(base(fail(), 3, 4));
+    let rep = gs(base(fail(), 3, 4));
+    let refr = gs(base(None, 0, 3));
+    rows.push(fig22_shrink_row("rank-fail", "gs", &r, &rep, &refr));
+
+    let r = ifs(base(fail(), 2, 4));
+    let rep = ifs(base(fail(), 2, 4));
+    let refr = ifs(base(None, 0, 3));
+    rows.push(fig22_shrink_row("rank-fail", "ifsker", &r, &rep, &refr));
+
+    // Drop and straggler: reference is the fault-free run at full size.
+    let refr_gs = gs(base(None, 0, 4));
+    let refr_ifs = ifs(base(None, 0, 4));
+
+    let r = gs(base(drop(), 0, 4));
+    let rep = gs(base(drop(), 0, 4));
+    rows.push(fig22_shrink_row("drop", "gs", &r, &rep, &refr_gs));
+
+    let r = ifs(base(drop(), 0, 4));
+    let rep = ifs(base(drop(), 0, 4));
+    rows.push(fig22_shrink_row("drop", "ifsker", &r, &rep, &refr_ifs));
+
+    let r = gs(base(slow(), 0, 4));
+    let rep = gs(base(slow(), 0, 4));
+    let row = fig22_shrink_row("straggler", "gs", &r, &rep, &refr_gs);
+    // A doubled compute cost must show up in virtual time.
+    assert!(
+        row.vtime_us > row.baseline_us,
+        "straggler compute multiplier must slow the run"
+    );
+    rows.push(row);
+
+    for r in &rows {
+        assert!(r.converged, "{}/{} failed to converge", r.scenario, r.app);
+        assert!(
+            r.replay_identical,
+            "{}/{} not bit-identical on seed replay",
+            r.scenario, r.app
+        );
+    }
+    rows
+}
+
+pub fn fig22_report(scale: Scale) -> String {
+    let rows = fig22(scale);
+    let mut out = String::from(
+        "=== Figure 22: fault injection — stall-driven recovery vs static plans ===\n",
+    );
+    out.push_str(&format!(
+        "{:<18} {:<8} {:>12} {:>12} {:>10} {:>10} {:>8}\n",
+        "scenario", "app", "vtime_us", "baseline_us", "survivors", "converged", "replay"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<18} {:<8} {:>12.1} {:>12.1} {:>10} {:>10} {:>8}\n",
+            r.scenario,
+            r.app,
+            r.vtime_us,
+            r.baseline_us,
+            r.survivors,
+            r.converged,
+            r.replay_identical
+        ));
+    }
+    out.push_str(
+        "(straggler-reroot: detector re-roots node trees away from the\n\
+         injected straggler, baseline is the static-plan run; rank-fail:\n\
+         mid-run failure + comm_shrink, baseline is a fault-free run at\n\
+         the survivor count; drop/straggler app rows: injected timing vs\n\
+         the fault-free run — converged means checksum bit-identity,\n\
+         replay means a same-seed rerun was bit-identical)\n",
+    );
+    out
+}
+
+/// Fig 22 as JSON: `rows[] = {{scenario, app, vtime_us, baseline_us,
+/// survivors, converged, replay_identical}}`.
+pub fn fig22_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
+    let rows: Vec<String> = fig22(scale)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"scenario\":\"{}\",\"app\":\"{}\",\"vtime_us\":{},\
+                 \"baseline_us\":{},\"survivors\":{},\"converged\":{},\
+                 \"replay_identical\":{}}}",
+                json_escape(r.scenario),
+                json_escape(r.app),
+                r.vtime_us,
+                r.baseline_us,
+                r.survivors,
+                r.converged,
+                r.replay_identical
+            )
+        })
+        .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(22, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;

@@ -1,10 +1,13 @@
 //! `repro` — CLI launcher for the TAMPI reproduction.
 //!
 //! Subcommands:
-//!   gs        run one Gauss-Seidel experiment (Section 7.1)
-//!   ifsker    run one IFSKer experiment (Section 7.2)
-//!   figures   regenerate paper figures (8-14) + extension figs 15-20
-//!             into bench_out/; with --json <path> figs 15-20 emit
+//!   gs        run one Gauss-Seidel experiment (Section 7.1); with
+//!             --inject rank-fail|drop|straggler it instead runs the
+//!             fault-injection recovery scenario (apps::recovery) and
+//!             asserts seed-replay bit-identity + convergence
+//!   ifsker    run one IFSKer experiment (Section 7.2); --inject as above
+//!   figures   regenerate paper figures (8-14) + extension figs 15-22
+//!             into bench_out/; with --json <path> figs 15-22 emit
 //!             the machine-readable document instead (CI perf artifact)
 //!   stalls    collective stall diagnostic on a deliberately skewed run
 //!             (which rank's rounds_advanced holds a collective back)
@@ -213,7 +216,113 @@ fn residual_nonblocking_of(m: &HashMap<String, String>) -> bool {
     }
 }
 
+/// `repro gs|ifsker --inject rank-fail|drop|straggler`: run the
+/// shrink-and-continue recovery driver (see `apps::recovery`) under the
+/// selected injection, twice with the same seed (replay), plus a
+/// fault-free reference at the size the recovery lands on, and assert:
+///
+/// * **seed-replay bit-identity** — both injected runs agree on virtual
+///   time and checksum exactly (deterministic injection);
+/// * **convergence** — the recovered solve's checksum is bit-identical
+///   to the fault-free reference (rank failure: a clean run on the
+///   survivor count; drop/straggler: a clean run at full size, since
+///   those injections perturb timing, never data).
+///
+/// Non-zero exit on any mismatch — this is the CI faults-matrix entry
+/// point, composable with `--delivery` and `--clock-shards`.
+fn cmd_inject(app: &str, m: &HashMap<String, String>) {
+    use tampi_repro::apps::recovery::{self, GsShrinkParams, IfsShrinkParams, ShrinkParams};
+    use tampi_repro::rmpi::FaultsConfig;
+
+    let kind = m.get("inject").map(String::as_str).unwrap_or_default();
+    let nodes = get(m, "nodes", 4usize);
+    let seed = get(m, "seed", 42u64);
+    let pre = get(m, "pre-iters", 4usize);
+    let iters = get(m, "iters", 12usize);
+    let faults = match kind {
+        "rank-fail" => FaultsConfig::new(seed).with_rank_fail(1, 20_000),
+        // 20% of messages dropped and retransmitted after timeout.
+        "drop" => FaultsConfig::new(seed).with_drop(200_000),
+        // Rank 1: 4x compute, +2us ingress per message.
+        "straggler" => FaultsConfig::new(seed).with_straggler(1, 2_000, 4),
+        other => {
+            eprintln!("unknown --inject {other} (rank-fail|drop|straggler)");
+            std::process::exit(2);
+        }
+    };
+    let mut base = ShrinkParams::new(nodes, 1, pre, iters);
+    base.clock_shards = get(m, "clock-shards", 1usize);
+    base.delivery_mode = delivery_of(m);
+    base.deadline = Some(ms(get(m, "deadline-ms", 600_000u64)));
+    base.faults = Some(faults);
+    let ref_nodes = if kind == "rank-fail" { nodes - 1 } else { nodes };
+    let mut refp = ShrinkParams::new(ref_nodes, 1, 0, iters);
+    refp.clock_shards = base.clock_shards;
+    refp.delivery_mode = base.delivery_mode;
+    refp.deadline = base.deadline;
+
+    let (run, replay, reference) = if app == "gs" {
+        let rows = get(m, "rows", 24usize);
+        let cols = get(m, "cols", 64usize);
+        let p = GsShrinkParams::new(base, rows, cols);
+        let pr = GsShrinkParams::new(refp, rows, cols);
+        (
+            recovery::run_gs_shrink(&p).expect("inject run"),
+            recovery::run_gs_shrink(&p).expect("inject replay"),
+            recovery::run_gs_shrink(&pr).expect("reference run"),
+        )
+    } else {
+        let grid = get(m, "grid", 144usize);
+        let nf = get(m, "fields", 2usize);
+        let p = IfsShrinkParams::new(base, grid, nf);
+        let pr = IfsShrinkParams::new(refp, grid, nf);
+        (
+            recovery::run_ifs_shrink(&p).expect("inject run"),
+            recovery::run_ifs_shrink(&p).expect("inject replay"),
+            recovery::run_ifs_shrink(&pr).expect("reference run"),
+        )
+    };
+    println!(
+        "{app} --inject {kind}: nodes={nodes} survivors={} vtime={:.3} ms checksum={:.6}",
+        run.survivors,
+        run.vtime_ns as f64 / 1e6,
+        run.checksum
+    );
+    if let Some(fs) = &run.stats.faults {
+        println!(
+            "  faults: drops={} retransmits={} failed_reqs={} detections={}",
+            fs.drops, fs.retransmits, fs.failed_reqs, fs.detections
+        );
+    }
+    let identical =
+        run.vtime_ns == replay.vtime_ns && run.checksum.to_bits() == replay.checksum.to_bits();
+    let converged = run.checksum.is_finite()
+        && run.checksum != 0.0
+        && run.checksum.to_bits() == reference.checksum.to_bits();
+    if !identical {
+        eprintln!(
+            "FAILED: seed replay diverged (vtime {} vs {}, checksum {:?} vs {:?})",
+            run.vtime_ns,
+            replay.vtime_ns,
+            run.checksum,
+            replay.checksum
+        );
+        std::process::exit(1);
+    }
+    if !converged {
+        eprintln!(
+            "FAILED: recovered checksum {:?} != fault-free reference {:?}",
+            run.checksum, reference.checksum
+        );
+        std::process::exit(1);
+    }
+    println!("  inject {kind} PASS (replay bit-identical, converged to reference)");
+}
+
 fn cmd_gs(m: HashMap<String, String>) {
+    if m.contains_key("inject") {
+        return cmd_inject("gs", &m);
+    }
     let version = m
         .get("version")
         .and_then(|v| GsVersion::parse(v))
@@ -288,6 +397,9 @@ fn cmd_gs(m: HashMap<String, String>) {
 }
 
 fn cmd_ifsker(m: HashMap<String, String>) {
+    if m.contains_key("inject") {
+        return cmd_inject("ifsker", &m);
+    }
     let version = m
         .get("version")
         .and_then(|v| IfsVersion::parse(v))
@@ -351,8 +463,9 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     dump_trace(&m, fmt, &tracer, &spans);
 }
 
-const KNOWN_FIGS: [&str; 15] =
-    ["8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "all"];
+const KNOWN_FIGS: [&str; 16] = [
+    "8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "22", "all",
+];
 
 fn cmd_figures(m: HashMap<String, String>) {
     let scale = m
@@ -365,7 +478,7 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 21 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 21 22 | all)"
         );
         std::process::exit(2);
     }
@@ -391,9 +504,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "19" => bench::fig19_json(scale),
             "20" => bench::fig20_json(scale),
             "21" => bench::fig21_json(scale),
+            "22" => bench::fig22_json(scale),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20|21), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20|21|22), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -462,6 +576,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 println!("{report}");
                 let p = bench::write_output("fig21_plan_compile.txt", &report);
                 println!("fig21 -> {}", p.display());
+            }
+            "22" => {
+                let report = bench::fig22_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig22_faults.txt", &report);
+                println!("fig22 -> {}", p.display());
             }
             other => {
                 let rows = match other {

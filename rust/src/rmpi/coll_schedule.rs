@@ -346,8 +346,18 @@ impl CollSchedule {
             if !post.retain.is_empty() {
                 self.retain.lock().unwrap().extend(post.retain);
             }
-            let pending: Vec<Request> =
-                post.reqs.into_iter().filter(|r| !r.test()).collect();
+            let mut pending: Vec<Request> = Vec::with_capacity(post.reqs.len());
+            for r in post.reqs {
+                // A constituent that already failed (rank death at post
+                // time) is complete; record its error before filtering
+                // it out.
+                if let Some(e) = r.error() {
+                    self.req.0.poison(e);
+                }
+                if !r.test() {
+                    pending.push(r);
+                }
+            }
             if pending.is_empty() {
                 // Round satisfied at post time: fall through.
                 continue;
@@ -356,7 +366,18 @@ impl CollSchedule {
             for r in &pending {
                 let sched = self.clone();
                 let remaining = remaining.clone();
+                let req = r.clone();
                 r.on_complete(move |_| {
+                    // A failed constituent (RankFailed timeout) poisons
+                    // the outer request: the schedule still runs its
+                    // remaining rounds — their payload is garbage, but
+                    // every peer's schedule keeps advancing, so one
+                    // death never cascades into a cluster-wide hang —
+                    // and `finish` completes the collective with the
+                    // error attached.
+                    if let Some(e) = req.error() {
+                        sched.req.0.poison(e);
+                    }
                     if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                         sched.advance();
                     }
@@ -368,7 +389,9 @@ impl CollSchedule {
 
     /// All rounds done: release pinned buffers and complete the final
     /// request (waking Park waiters and firing TAMPI/event continuations
-    /// through the normal completion pipeline).
+    /// through the normal completion pipeline). If a constituent failed
+    /// along the way, the poison stays attached: waiters wake into
+    /// `Err(RankFailed)` from [`Request::result`] instead of hanging.
     fn finish(&self) {
         self.retain.lock().unwrap().clear();
         self.req.0.complete(&self.comm.uni.clock, None);

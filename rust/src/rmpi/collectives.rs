@@ -137,7 +137,8 @@ impl Comm {
     /// Non-blocking barrier (MPI_Ibarrier): dissemination rounds, flat
     /// or leader-staged per the topology compiler.
     pub fn ibarrier(&self) -> CollRequest {
-        let key = SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None };
+        let key =
+            SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         let CollPlan::Barrier(p) = &*plan else { unreachable!("barrier plan") };
@@ -149,7 +150,7 @@ impl Comm {
     /// completes.
     pub fn ibcast<T: Pod>(&self, buf: &mut [T], root: usize) -> CollRequest {
         let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
-        let key = SchedKey { kind: CollKind::Bcast, root, shape };
+        let key = SchedKey { kind: CollKind::Bcast, root, shape, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         let CollPlan::Bcast(p) = &*plan else { unreachable!("bcast plan") };
@@ -189,9 +190,9 @@ impl Comm {
         // cost-driven, and cost depends on bytes.
         let key = if op.commutative() {
             let shape = ShapeKey::Bytes(std::mem::size_of_val::<[T]>(buf));
-            SchedKey { kind: CollKind::ReduceComm, root, shape }
+            SchedKey { kind: CollKind::ReduceComm, root, shape, avoid: 0 }
         } else {
-            SchedKey { kind: CollKind::Reduce, root, shape: ShapeKey::None }
+            SchedKey { kind: CollKind::Reduce, root, shape: ShapeKey::None, avoid: 0 }
         };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
@@ -226,7 +227,7 @@ impl Comm {
         } else {
             CollKind::Allreduce
         };
-        let key = SchedKey { kind, root: 0, shape };
+        let key = SchedKey { kind, root: 0, shape, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq_reduce = self.next_coll_seq();
         let seq_bcast = self.next_coll_seq();
@@ -250,7 +251,7 @@ impl Comm {
         root: usize,
     ) -> CollRequest {
         let shape = ShapeKey::ChunkBytes(std::mem::size_of_val::<[T]>(send));
-        let key = SchedKey { kind: CollKind::Gather, root, shape };
+        let key = SchedKey { kind: CollKind::Gather, root, shape, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         let CollPlan::Gather(p) = &*plan else { unreachable!("gather plan") };
@@ -271,7 +272,7 @@ impl Comm {
         assert_eq!(recv.len(), send.len());
         let chunk = send.len() / n;
         let shape = ShapeKey::ChunkBytes(chunk * std::mem::size_of::<T>());
-        let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape };
+        let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         let rounds = match &*plan {
@@ -321,7 +322,8 @@ impl Comm {
         rcounts: &[usize],
         rdispls: &[usize],
     ) -> CollRequest {
-        let key = SchedKey { kind: CollKind::Alltoallv, root: 0, shape: ShapeKey::None };
+        let key =
+            SchedKey { kind: CollKind::Alltoallv, root: 0, shape: ShapeKey::None, avoid: 0 };
         let (plan, cached) = self.plan_for(key);
         let seq = self.next_coll_seq();
         debug_assert!(matches!(&*plan, CollPlan::AlltoallvFlat));

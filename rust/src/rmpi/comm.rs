@@ -55,6 +55,13 @@ pub(crate) struct UniState {
     /// for them. Emission sites only read `Clock::now()` — recording
     /// never perturbs virtual time.
     pub obs: Arc<crate::obs::RunObs>,
+    /// Fault-injection state (`None` on fault-free runs: every check
+    /// below is a single `Option` branch on the hot path).
+    pub faults: Option<Arc<super::faults::FaultState>>,
+    /// (parent ctx, survivor-set digest) -> context pair of the shrunk
+    /// communicator — the collective-safe allocation rule of
+    /// [`Comm::comm_shrink`], mirroring `dup_map`.
+    pub shrink_map: Mutex<std::collections::HashMap<(usize, u64), (usize, usize)>>,
 }
 
 impl UniState {
@@ -76,6 +83,21 @@ impl UniState {
         }
         let pair = self.alloc_context_pair(size);
         m.insert((parent, seq), pair);
+        pair
+    }
+
+    /// Context pair for a shrunk communicator: allocated once per
+    /// (parent, survivor set); every survivor resolves to the same
+    /// contexts without the dead rank's participation. Queues are sized
+    /// to the *world* (p2p indexes them by world rank) — the dead
+    /// rank's slots simply stay empty.
+    pub fn shrink_context_pair(&self, parent: usize, digest: u64, world: usize) -> (usize, usize) {
+        let mut m = self.shrink_map.lock().unwrap();
+        if let Some(&pair) = m.get(&(parent, digest)) {
+            return pair;
+        }
+        let pair = self.alloc_context_pair(world);
+        m.insert((parent, digest), pair);
         pair
     }
 
@@ -108,6 +130,19 @@ pub struct Comm {
     /// clones; a `dup` starts fresh, and dropping the communicator
     /// drops its compiled plans — MPI persistent-request lifetime).
     pub(crate) sched_cache: Arc<SchedCache>,
+    /// comm rank -> world rank. `None` for the world communicator and
+    /// its dups (identity mapping, no indirection on the hot path);
+    /// `Some` after [`Comm::comm_shrink`]. Translation to world ranks
+    /// happens exactly once, at the p2p boundary.
+    pub(crate) group: Option<Arc<Vec<usize>>>,
+    /// comm rank -> node id under `group` (what the schedule compiler
+    /// sees for a shrunk communicator). `None` iff `group` is `None`.
+    pub(crate) group_nodes: Option<Arc<Vec<usize>>>,
+    /// Comm-rank bitset of ranks the topology compiler should route
+    /// collective trees away from (stall-driven adaptation). Part of
+    /// every [`SchedKey`], so raising it invalidates cached plans
+    /// through the ordinary PlanStore/SchedCache key path.
+    pub(crate) avoid: Arc<AtomicU64>,
 }
 
 impl Comm {
@@ -125,6 +160,9 @@ impl Comm {
             coll_seq: Arc::new(AtomicU64::new(0)),
             dup_seq: Arc::new(AtomicU64::new(0)),
             sched_cache: Arc::new(SchedCache::default()),
+            group: None,
+            group_nodes: None,
+            avoid: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -138,9 +176,26 @@ impl Comm {
         self.size
     }
 
-    /// Node housing `rank` (the interconnect class boundary).
+    /// World rank of the caller (identical to [`Comm::rank`] on the
+    /// world communicator and its dups).
+    pub(crate) fn world_rank(&self) -> usize {
+        match &self.group {
+            Some(g) => g[self.rank],
+            None => self.rank,
+        }
+    }
+
+    /// World rank of communicator rank `r`.
+    pub(crate) fn world_rank_of(&self, r: usize) -> usize {
+        match &self.group {
+            Some(g) => g[r],
+            None => r,
+        }
+    }
+
+    /// Node housing comm rank `rank` (the interconnect class boundary).
     pub fn node_of(&self, rank: usize) -> usize {
-        self.uni.node_of[rank]
+        self.uni.node_of[self.world_rank_of(rank)]
     }
 
     pub fn clock(&self) -> &Arc<Clock> {
@@ -168,6 +223,12 @@ impl Comm {
             // index misses without recompiling (and without counting
             // compile misses — see `plan_for`).
             sched_cache: Arc::new(SchedCache::default()),
+            group: self.group.clone(),
+            group_nodes: self.group_nodes.clone(),
+            // Cluster health is a property of the machine, not the
+            // communicator: a dup shares its parent's avoid mask so
+            // one straggler detection adapts library traffic too.
+            avoid: self.avoid.clone(),
         }
     }
 
@@ -185,6 +246,40 @@ impl Comm {
     /// With the cache off the store is bypassed entirely (a recompile
     /// per call — the fig17 cold baseline).
     pub(crate) fn plan_for(&self, key: SchedKey) -> (Arc<CollPlan>, bool) {
+        // Stall-driven adaptation: the avoid mask is part of the plan
+        // key, so raising it retires every cached plan — per-comm index
+        // and cluster store alike — through the ordinary key path, with
+        // no explicit flush.
+        let key = SchedKey { avoid: self.avoid_mask(), ..key };
+        if let Some(nodes) = &self.group_nodes {
+            // Shrunk communicator: its shape is not the universe shape,
+            // so the cluster-wide store (keyed by the world shape
+            // signature) must not serve it — and the store's replay
+            // memo holds structural schedule digests with no node map,
+            // which would poison costs across shapes. Compile against
+            // the group view; cache per-comm only.
+            let ctx = TopoCtx::service(
+                self.rank,
+                self.size,
+                nodes,
+                self.uni.topology,
+                &self.uni.net,
+            );
+            let (plan, cached) = if self.uni.sched_cache_on {
+                self.sched_cache
+                    .get_or_compile(&key, || Arc::new(compile_plan(&key, &ctx)))
+            } else {
+                (Arc::new(compile_plan(&key, &ctx)), false)
+            };
+            if cached {
+                self.uni.sched_hits.fetch_add(1, Ordering::Relaxed);
+                Clock::add_debt(self.uni.net.sched_cache_hit_ns);
+            } else {
+                self.uni.sched_misses.fetch_add(1, Ordering::Relaxed);
+                Clock::add_debt(self.uni.net.sched_compile_ns);
+            }
+            return (plan, cached);
+        }
         let store = &self.uni.plan_store;
         let mut ctx = TopoCtx::service(
             self.rank,
@@ -244,20 +339,21 @@ impl Comm {
     /// receive is always delivered on its poster's shard no matter which
     /// thread completes it.
     pub(crate) fn mk_req_state(&self, label: &'static str) -> Arc<ReqState> {
+        let wrank = self.world_rank();
         let s = Arc::new(ReqState::default());
-        s.set_lane(self.uni.lane_of[self.rank]);
-        if let Some(shard) = self.uni.progress.shard_for(self.rank) {
+        s.set_lane(self.uni.lane_of[wrank]);
+        if let Some(shard) = self.uni.progress.shard_for(wrank) {
             s.route_through(shard);
         }
         // Always stamped: the completion-latency histogram is part of
         // every run's metrics; the span itself is dropped by `RunObs`
         // when no sink is attached.
-        s.set_obs(
-            self.uni.obs.clone(),
-            self.rank as u32,
-            self.uni.clock.now(),
-            label,
-        );
+        s.set_obs(self.uni.obs.clone(), wrank as u32, self.uni.clock.now(), label);
+        if let Some(fs) = &self.uni.faults {
+            // Every completion on this rank bumps its progress gauge —
+            // what the live stall detector reads.
+            s.set_fault_gauge(fs.clone(), wrank);
+        }
         s
     }
 
@@ -276,4 +372,139 @@ impl Comm {
     pub fn progress_shard_stats(&self, rank: usize) -> ShardStats {
         self.uni.progress.shard_stats(rank)
     }
+
+    /// Current comm-rank avoid bitset steering the schedule compiler
+    /// (see [`Comm::set_avoid`]).
+    pub fn avoid_mask(&self) -> u64 {
+        self.avoid.load(Ordering::Relaxed)
+    }
+
+    /// Steer the topology compiler away from the comm ranks in `mask`
+    /// (bit `r` = comm rank `r`; ranks ≥ 64 are not representable and
+    /// never avoided). Takes effect on the next collective call: the
+    /// mask is folded into every [`SchedKey`], so plans compiled under
+    /// the old mask stay cached but stop being selected. Local — call
+    /// it with the same mask on every rank ([`Comm::detect_stragglers`]
+    /// does) or subsequent collectives will tear.
+    pub fn set_avoid(&self, mask: u64) {
+        self.avoid.store(mask, Ordering::Relaxed);
+    }
+
+    /// Straggler agreement: a commutative max-allreduce of per-rank
+    /// collective entry times. Every rank contributes `clock.now()` at
+    /// its own entry; a rank whose entry trails the earliest by more
+    /// than `threshold_ns` is voted a straggler. The combine is
+    /// deterministic and the result identical on every rank, so the
+    /// avoid mask this installs (via [`Comm::set_avoid`]) is agreed by
+    /// construction — the control-plane analogue of the live detector's
+    /// per-lane suspicion bits, which stay diagnostic. Collective;
+    /// returns the mask.
+    pub fn detect_stragglers(&self, threshold_ns: u64) -> u64 {
+        let mut entry = vec![0u64; self.size];
+        // `max(1)`: 0 marks "no vote", and virtual time can still be 0
+        // at the first call.
+        entry[self.rank] = self.uni.clock.now().max(1);
+        self.allreduce_op(
+            &mut entry,
+            super::collectives::commutative(|a: &mut [u64], b: &[u64]| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x = (*x).max(*y);
+                }
+            }),
+        );
+        let earliest = entry.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
+        let mut mask = 0u64;
+        for (r, &t) in entry.iter().enumerate() {
+            if r < 64 && t > earliest && t - earliest > threshold_ns {
+                mask |= 1 << r;
+            }
+        }
+        self.set_avoid(mask);
+        if let Some(fs) = &self.uni.faults {
+            fs.note_agreed_mask(mask);
+        }
+        mask
+    }
+
+    /// Compute-cost multiplier for this rank under straggler injection
+    /// (1 with no faults configured). Applications scale their modelled
+    /// per-task `clock.work` costs by this, so a persistent straggler
+    /// slows *compute* as well as ingress (the `rx_extra` half lives in
+    /// the `Ports` law).
+    pub fn compute_mult(&self) -> u64 {
+        match &self.uni.faults {
+            Some(fs) => fs.cfg.compute_mult(self.world_rank()),
+            None => 1,
+        }
+    }
+
+    /// The rank-failure oracle: `Some(comm rank)` once the injected
+    /// failure instant has passed for a member of this communicator.
+    /// Stands in for a ULFM-style agreement protocol
+    /// (`MPIX_Comm_agree`): the fault plan is shared config, so every
+    /// rank reads the same verdict at the same virtual instant without
+    /// extra messages — the agreement round's cost is not modelled.
+    pub fn confirmed_dead(&self) -> Option<usize> {
+        let fs = self.uni.faults.as_ref()?;
+        let f = fs.cfg.rank_fail?;
+        let now = self.uni.clock.now();
+        (0..self.size)
+            .find(|&r| self.world_rank_of(r) == f.rank && fs.cfg.dead_at(f.rank, now))
+    }
+
+    /// Shrink to the surviving ranks (ULFM `MPIX_Comm_shrink`): a new,
+    /// smaller communicator over the members not (yet) dead per the
+    /// fault oracle. Collective among the survivors — the dead rank
+    /// does not call, which is exactly why context allocation goes
+    /// through the survivor-set digest ([`UniState::shrink_context_pair`])
+    /// rather than the dup path. The caller must be a survivor. Fresh
+    /// contexts, collective sequence, plan caches, and avoid mask; the
+    /// schedule compiler sees the surviving group's node map.
+    pub fn comm_shrink(&self) -> Comm {
+        let now = self.uni.clock.now();
+        let group: Vec<usize> = (0..self.size)
+            .map(|r| self.world_rank_of(r))
+            .filter(|&w| {
+                !self
+                    .uni
+                    .faults
+                    .as_ref()
+                    .is_some_and(|fs| fs.cfg.dead_at(w, now))
+            })
+            .collect();
+        let my_world = self.world_rank();
+        let rank = group
+            .iter()
+            .position(|&w| w == my_world)
+            .expect("comm_shrink called by a dead rank");
+        let digest = group_digest(&group);
+        let world = self.uni.node_of.len();
+        let (p, c) = self.uni.shrink_context_pair(self.ctx_p2p_id, digest, world);
+        let group_nodes: Vec<usize> = group.iter().map(|&w| self.uni.node_of[w]).collect();
+        let size = group.len();
+        Comm {
+            uni: self.uni.clone(),
+            rank,
+            size,
+            ctx_p2p_id: p,
+            ctx_p2p: self.uni.context(p),
+            ctx_coll: self.uni.context(c),
+            coll_seq: Arc::new(AtomicU64::new(0)),
+            dup_seq: Arc::new(AtomicU64::new(0)),
+            sched_cache: Arc::new(SchedCache::default()),
+            group: Some(Arc::new(group)),
+            group_nodes: Some(Arc::new(group_nodes)),
+            avoid: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// FNV-1a digest of a survivor set (the shrink-context key).
+fn group_digest(group: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in group {
+        h ^= w as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
 }

@@ -1,0 +1,533 @@
+//! Deterministic fault & straggler injection.
+//!
+//! Three injection families, all seed-replayable — the same
+//! [`FaultsConfig`] on the same workload reproduces the same virtual
+//! timeline bit for bit, on any clock-shard count:
+//!
+//! * **Rank failure** ([`RankFail`]): a rank dies at a configured
+//!   virtual instant. Death is a *pure function* of the config and the
+//!   current virtual time ([`FaultsConfig::dead_at`]), so every rank —
+//!   on any clock lane — agrees on liveness without cross-lane reads.
+//!   A per-lane sweep event fails the victim's outstanding requests at
+//!   the death instant and times out survivors' requests against the
+//!   victim `timeout_ns` later; both paths flow through the normal
+//!   [`ReqState::complete`] machinery with [`ReqError::RankFailed`]
+//!   attached, so `on_complete` continuations fire, TAMPI external
+//!   events decrement, and task dependencies release exactly as for a
+//!   successful completion.
+//! * **Message drop + retransmit** ([`DropSpec`]): a per-message coin
+//!   flip hashed from `(seed, src, dst, tag, seq)` — virtual time never
+//!   enters the hash, so the decision replays even across refactors
+//!   that shift timestamps. A dropped message is modeled as *one*
+//!   retransmission after `retransmit_ns`: the original transmission is
+//!   lost on the wire, the sender's (implicit) timer fires, and the
+//!   retransmitted copy takes the normal [`Ports`] ingress path.
+//!   Exactly-once delivery holds by construction — only the
+//!   retransmitted copy is ever booked.
+//! * **Stragglers** ([`Straggler`]): a persistent slow rank. Its
+//!   ingress port charges `rx_extra_ns` extra per message (threaded
+//!   through the [`Ports`] law, so queueing effects compound exactly as
+//!   for the base `rx_ns`), and apps multiply their compute cost by
+//!   `compute_mult`. The compiler's wire replay deliberately does *not*
+//!   model straggler slowness — the compiler/engine cost-parity
+//!   contract is scoped to fault-free runs — which is precisely why the
+//!   live detector + avoid-mask feedback loop (below) exists.
+//!
+//! # Detection and feedback
+//!
+//! [`FaultState`] also hosts the *live* side of `trace/stalls.rs`: a
+//! per-lane detector tick (scheduled on each clock lane, reading only
+//! progress stamps written by that lane) raises suspicion bits and a
+//! detection log. Control decisions never read another lane's gauges —
+//! adaptation is agreed through a collective
+//! (`Comm::detect_stragglers`), so the resulting avoid mask is
+//! bit-identical on every rank and keys recompiled plans through
+//! `SchedKey::avoid` (the PlanStore/SchedCache invalidation path).
+//!
+//! [`Ports`]: super::net::Ports
+//! [`ReqState::complete`]: super::request::ReqState
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::sim::Clock;
+
+use super::request::{ReqError, ReqState};
+
+/// Default wait after a rank's death instant before survivors' requests
+/// against it complete with [`ReqError::RankFailed`].
+pub const DEFAULT_FAIL_TIMEOUT_NS: u64 = 100_000;
+
+/// Default sender retransmission delay for dropped messages.
+pub const DEFAULT_RETRANSMIT_NS: u64 = 50_000;
+
+/// Default live-detector tick interval.
+pub const DEFAULT_DETECT_INTERVAL_NS: u64 = 50_000;
+
+/// Default no-progress window before the detector suspects a rank.
+pub const DEFAULT_DETECT_THRESHOLD_NS: u64 = 200_000;
+
+/// One rank dying at a virtual instant.
+#[derive(Clone, Copy, Debug)]
+pub struct RankFail {
+    pub rank: usize,
+    /// Virtual instant of death.
+    pub at_ns: u64,
+    /// Survivors' requests against the victim fail at `at_ns +
+    /// timeout_ns` (the victim's own requests fail at `at_ns`).
+    pub timeout_ns: u64,
+}
+
+/// Per-link message drop with retransmit-after-timeout.
+#[derive(Clone, Copy, Debug)]
+pub struct DropSpec {
+    /// Drop probability in parts per million (1_000_000 = drop every
+    /// message once).
+    pub prob_ppm: u32,
+    /// Sender retransmission delay: the surviving copy departs this
+    /// many virtual nanoseconds after the original.
+    pub retransmit_ns: u64,
+}
+
+/// A persistently slow rank.
+#[derive(Clone, Copy, Debug)]
+pub struct Straggler {
+    pub rank: usize,
+    /// Extra ingress-port service time per message delivered *to* this
+    /// rank, on top of the model's `rx_ns`.
+    pub rx_extra_ns: u64,
+    /// Multiplier the apps apply to this rank's compute cost.
+    pub compute_mult: u32,
+}
+
+/// Live-detector knobs (`trace/stalls.rs` grown onto the clock thread).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorConfig {
+    /// Virtual time between detector ticks on each clock lane.
+    pub interval_ns: u64,
+    /// A rank that has started but shown no request completion for this
+    /// long is suspected.
+    pub threshold_ns: u64,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            interval_ns: DEFAULT_DETECT_INTERVAL_NS,
+            threshold_ns: DEFAULT_DETECT_THRESHOLD_NS,
+        }
+    }
+}
+
+/// The full injection plan. Identical on every rank (it rides on
+/// `ClusterConfig`), which is what makes liveness queries and the
+/// shrink agreement deterministic without cross-lane communication.
+#[derive(Clone, Debug, Default)]
+pub struct FaultsConfig {
+    /// Seed for the per-message drop hash.
+    pub seed: u64,
+    pub rank_fail: Option<RankFail>,
+    pub drop: Option<DropSpec>,
+    pub stragglers: Vec<Straggler>,
+    /// `Some`: install the per-lane live detector.
+    pub detector: Option<DetectorConfig>,
+}
+
+impl FaultsConfig {
+    pub fn new(seed: u64) -> FaultsConfig {
+        FaultsConfig { seed, ..FaultsConfig::default() }
+    }
+
+    pub fn with_rank_fail(mut self, rank: usize, at_ns: u64) -> Self {
+        self.rank_fail = Some(RankFail { rank, at_ns, timeout_ns: DEFAULT_FAIL_TIMEOUT_NS });
+        self
+    }
+
+    pub fn with_drop(mut self, prob_ppm: u32) -> Self {
+        self.drop = Some(DropSpec { prob_ppm, retransmit_ns: DEFAULT_RETRANSMIT_NS });
+        self
+    }
+
+    pub fn with_straggler(mut self, rank: usize, rx_extra_ns: u64, compute_mult: u32) -> Self {
+        self.stragglers.push(Straggler { rank, rx_extra_ns, compute_mult });
+        self
+    }
+
+    pub fn with_detector(mut self) -> Self {
+        self.detector = Some(DetectorConfig::default());
+        self
+    }
+
+    /// Any injection active?
+    pub fn enabled(&self) -> bool {
+        self.rank_fail.is_some() || self.drop.is_some() || !self.stragglers.is_empty()
+    }
+
+    /// Is `rank` dead at virtual instant `t`? Pure — every rank and
+    /// every lane computes the same answer from the shared config, so
+    /// no cross-lane flag read (which would race inside the lookahead
+    /// window) is ever needed.
+    pub fn dead_at(&self, rank: usize, t: u64) -> bool {
+        matches!(self.rank_fail, Some(f) if f.rank == rank && t >= f.at_ns)
+    }
+
+    /// Compute-cost multiplier for `rank` (1 = healthy).
+    pub fn compute_mult(&self, rank: usize) -> u64 {
+        self.stragglers
+            .iter()
+            .find(|s| s.rank == rank)
+            .map(|s| s.compute_mult.max(1) as u64)
+            .unwrap_or(1)
+    }
+
+    /// Extra ingress service time for messages delivered to `rank`.
+    pub fn rx_extra(&self, rank: usize) -> u64 {
+        self.stragglers.iter().find(|s| s.rank == rank).map(|s| s.rx_extra_ns).unwrap_or(0)
+    }
+
+    /// Per-rank ingress extras vector for [`Ports`] construction.
+    ///
+    /// [`Ports`]: super::net::Ports
+    pub fn rx_extras(&self, size: usize) -> Vec<u64> {
+        (0..size).map(|r| self.rx_extra(r)).collect()
+    }
+}
+
+/// One live-detector verdict (diagnostics; sorted by `(t_ns, rank)` in
+/// the final log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Detection {
+    pub t_ns: u64,
+    pub rank: usize,
+    pub kind: DetectionKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectionKind {
+    /// No request completion within the detector threshold.
+    Stalled,
+    /// The rank's configured death instant passed (confirmed by the
+    /// sweep event on its own lane).
+    Dead,
+}
+
+impl DetectionKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DetectionKind::Stalled => "stalled",
+            DetectionKind::Dead => "dead",
+        }
+    }
+}
+
+/// Injection counters snapshot for `RunStats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Messages the drop hash selected (each was retransmitted once).
+    pub drops: u64,
+    /// Retransmissions performed (equals `drops` in this model).
+    pub retransmits: u64,
+    /// Requests completed with `RankFailed`.
+    pub failed_reqs: u64,
+    /// Live-detector verdicts recorded.
+    pub detections: u64,
+    /// Suspicion bitmask the detector raised (diagnostics only;
+    /// control decisions use the agreed avoid mask).
+    pub suspect_mask: u64,
+    /// Union of avoid masks installed through the straggler-agreement
+    /// collective (the control-plane decisions actually taken).
+    pub agreed_avoid_mask: u64,
+}
+
+/// A request the death sweep may need to time out: registered at post
+/// time (only when a rank failure is configured), swept on the owning
+/// lane at the death instant.
+struct Tracked {
+    /// Clock lane the request completes on (its owner's lane).
+    lane: usize,
+    /// World rank that owns the request.
+    owner: usize,
+    /// World-rank peer (`None`: no single peer, e.g. a collective's
+    /// outer request).
+    peer: Option<usize>,
+    req: Weak<ReqState>,
+}
+
+/// Runtime injection state, shared by every rank through `UniState`.
+pub(crate) struct FaultState {
+    pub cfg: FaultsConfig,
+    pub drops: AtomicU64,
+    pub retransmits: AtomicU64,
+    pub failed_reqs: AtomicU64,
+    /// Outstanding-request registry (empty unless `rank_fail` is set).
+    tracked: Mutex<Vec<Tracked>>,
+    /// Per-rank last-completion virtual instant, written by the owning
+    /// rank's lane ([`FaultState::note_progress`]), read by that lane's
+    /// detector tick.
+    progress: Vec<AtomicU64>,
+    /// Detector suspicion bits (rank < 64; diagnostics).
+    suspects: AtomicU64,
+    /// Union of agreement-collective avoid masks (control plane).
+    agreed: AtomicU64,
+    detections: Mutex<Vec<Detection>>,
+}
+
+impl FaultState {
+    pub fn new(cfg: FaultsConfig, size: usize) -> FaultState {
+        FaultState {
+            cfg,
+            drops: AtomicU64::new(0),
+            retransmits: AtomicU64::new(0),
+            failed_reqs: AtomicU64::new(0),
+            tracked: Mutex::new(Vec::new()),
+            progress: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            suspects: AtomicU64::new(0),
+            agreed: AtomicU64::new(0),
+            detections: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Deterministic per-message drop decision: FNV-1a over
+    /// `(seed, src, dst, tag, seq)`. Virtual time is deliberately
+    /// excluded so the coin flip survives timing-shifting refactors.
+    pub fn should_drop(&self, src: usize, dst: usize, tag: i32, seq: u64) -> bool {
+        let Some(d) = self.cfg.drop else { return false };
+        if d.prob_ppm == 0 {
+            return false;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for w in [self.cfg.seed, src as u64, dst as u64, tag as u32 as u64, seq] {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        (h % 1_000_000) < d.prob_ppm as u64
+    }
+
+    /// Record a drop + its retransmission; returns the extra departure
+    /// delay the surviving copy pays.
+    pub fn note_drop(&self) -> u64 {
+        self.drops.fetch_add(1, Ordering::Relaxed);
+        self.retransmits.fetch_add(1, Ordering::Relaxed);
+        self.cfg.drop.map(|d| d.retransmit_ns).unwrap_or(0)
+    }
+
+    /// Register an outstanding request for the death sweep. No-op
+    /// unless a rank failure is configured.
+    pub fn track(&self, lane: usize, owner: usize, peer: Option<usize>, req: &Arc<ReqState>) {
+        if self.cfg.rank_fail.is_none() {
+            return;
+        }
+        self.tracked.lock().unwrap().push(Tracked {
+            lane,
+            owner,
+            peer,
+            req: Arc::downgrade(req),
+        });
+    }
+
+    /// Fail `req` at virtual instant `at` on its own lane unless it
+    /// completed first. All of a request's completions run on its lane,
+    /// so the `done` check inside the event is race-free.
+    pub fn fail_at(
+        self: &Arc<Self>,
+        clock: &Arc<Clock>,
+        lane: usize,
+        at: u64,
+        req: Weak<ReqState>,
+        failed_rank: usize,
+    ) {
+        let fs = Arc::clone(self);
+        let ck = Arc::clone(clock);
+        clock.call_at_on(lane, at, move || {
+            let Some(req) = req.upgrade() else { return };
+            if req.is_completed() {
+                return;
+            }
+            fs.failed_reqs.fetch_add(1, Ordering::Relaxed);
+            req.complete_failed(&ck, ReqError::RankFailed { rank: failed_rank });
+        });
+    }
+
+    /// The death sweep for one lane, run at the victim's death instant:
+    /// the victim's own requests on this lane fail now; survivors'
+    /// requests against the victim fail after the configured timeout.
+    /// Requests posted *after* the death instant are handled at post
+    /// time (`dead_at` is already true there), so every request is
+    /// failed exactly once.
+    pub fn sweep_dead(self: &Arc<Self>, clock: &Arc<Clock>, lane: usize) {
+        let Some(f) = self.cfg.rank_fail else { return };
+        let entries: Vec<(usize, Weak<ReqState>, u64)> = {
+            let tracked = self.tracked.lock().unwrap();
+            tracked
+                .iter()
+                .filter(|t| t.lane == lane)
+                .filter_map(|t| {
+                    if t.owner == f.rank {
+                        Some((f.rank, t.req.clone(), f.at_ns))
+                    } else if t.peer == Some(f.rank) {
+                        Some((f.rank, t.req.clone(), f.at_ns + f.timeout_ns))
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        };
+        for (failed_rank, req, at) in entries {
+            self.fail_at(clock, lane, at, req, failed_rank);
+        }
+        if lane == 0 {
+            self.detections.lock().unwrap().push(Detection {
+                t_ns: f.at_ns,
+                rank: f.rank,
+                kind: DetectionKind::Dead,
+            });
+        }
+    }
+
+    /// Stamp a completion for `rank` at virtual instant `t` (the live
+    /// detector's progress gauge). Monotonic; written on the rank's own
+    /// lane by the completion machinery.
+    pub fn note_progress(&self, rank: usize, t: u64) {
+        if rank < self.progress.len() {
+            self.progress[rank].fetch_max(t.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Install the per-lane live detector: a self-rescheduling tick on
+    /// each clock lane that inspects only the progress gauges of ranks
+    /// bound to that lane. Lane-local reads are exactly ordered against
+    /// that lane's completions, so detections replay deterministically;
+    /// collective-finish stamps may land a tick late (they run on
+    /// worker threads), which can shift a *diagnostic* verdict but
+    /// never a control decision — those go through the agreement
+    /// collective.
+    pub fn install_detector(
+        self: &Arc<Self>,
+        clock: &Arc<Clock>,
+        lane_of: &[usize],
+        deadline: u64,
+    ) {
+        let Some(d) = self.cfg.detector else { return };
+        let interval = d.interval_ns.max(1);
+        for lane in 0..clock.num_lanes() {
+            let ranks: Vec<usize> =
+                (0..lane_of.len()).filter(|&r| lane_of[r] == lane).collect();
+            if ranks.is_empty() {
+                continue;
+            }
+            schedule_tick(self, clock, lane, interval, ranks, d.threshold_ns, deadline);
+        }
+    }
+
+    /// Detector suspicion mask (diagnostics).
+    pub fn suspect_mask(&self) -> u64 {
+        self.suspects.load(Ordering::Relaxed)
+    }
+
+    /// Record an avoid mask agreed through `Comm::detect_stragglers`
+    /// (every rank calls with the identical mask; the union is what
+    /// `RunStats` reports).
+    pub fn note_agreed_mask(&self, mask: u64) {
+        self.agreed.fetch_or(mask, Ordering::Relaxed);
+    }
+
+    /// The detection log, sorted by `(t_ns, rank)`.
+    pub fn detections(&self) -> Vec<Detection> {
+        let mut v = self.detections.lock().unwrap().clone();
+        v.sort_by_key(|d| (d.t_ns, d.rank));
+        v
+    }
+
+    /// Counters snapshot for `RunStats`.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            drops: self.drops.load(Ordering::Relaxed),
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            failed_reqs: self.failed_reqs.load(Ordering::Relaxed),
+            detections: self.detections.lock().unwrap().len() as u64,
+            suspect_mask: self.suspect_mask(),
+            agreed_avoid_mask: self.agreed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One detector tick on `lane` at `k * interval`: suspect every
+/// started-but-silent rank, then reschedule until the deadline (ticks
+/// must not outlive the run — an unbounded self-rescheduling event
+/// would defeat virtual-time deadlock detection).
+fn schedule_tick(
+    fs: &Arc<FaultState>,
+    clock: &Arc<Clock>,
+    lane: usize,
+    interval: u64,
+    ranks: Vec<usize>,
+    threshold: u64,
+    deadline: u64,
+) {
+    let fs2 = Arc::clone(fs);
+    let ck = Arc::clone(clock);
+    let at = clock.now().saturating_add(interval);
+    if at >= deadline {
+        return;
+    }
+    clock.call_at_on(lane, at, move || {
+        for &r in &ranks {
+            let last = fs2.progress[r].load(Ordering::Relaxed);
+            if last == 0 || fs2.cfg.dead_at(r, at) {
+                continue;
+            }
+            if at.saturating_sub(last) > threshold {
+                let bit = 1u64 << (r.min(63));
+                if fs2.suspects.fetch_or(bit, Ordering::Relaxed) & bit == 0 {
+                    fs2.detections.lock().unwrap().push(Detection {
+                        t_ns: at,
+                        rank: r,
+                        kind: DetectionKind::Stalled,
+                    });
+                }
+            }
+        }
+        schedule_tick(&fs2, &ck, lane, interval, ranks, threshold, deadline);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_decision_is_deterministic_and_seeded() {
+        let mut cfg = FaultsConfig::new(7).with_drop(500_000);
+        let fs = FaultState::new(cfg.clone(), 4);
+        let a: Vec<bool> = (0..64).map(|s| fs.should_drop(0, 1, 5, s)).collect();
+        let fs2 = FaultState::new(cfg.clone(), 4);
+        let b: Vec<bool> = (0..64).map(|s| fs2.should_drop(0, 1, 5, s)).collect();
+        assert_eq!(a, b, "same seed, same coin flips");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "ppm 500k mixes both");
+        cfg.seed = 8;
+        let fs3 = FaultState::new(cfg, 4);
+        let c: Vec<bool> = (0..64).map(|s| fs3.should_drop(0, 1, 5, s)).collect();
+        assert_ne!(a, c, "different seed, different flips");
+    }
+
+    #[test]
+    fn dead_at_is_a_pure_threshold() {
+        let cfg = FaultsConfig::new(0).with_rank_fail(2, 1000);
+        assert!(!cfg.dead_at(2, 999));
+        assert!(cfg.dead_at(2, 1000));
+        assert!(cfg.dead_at(2, u64::MAX));
+        assert!(!cfg.dead_at(1, u64::MAX));
+    }
+
+    #[test]
+    fn straggler_lookups() {
+        let cfg = FaultsConfig::new(0).with_straggler(3, 2500, 4);
+        assert_eq!(cfg.rx_extra(3), 2500);
+        assert_eq!(cfg.rx_extra(0), 0);
+        assert_eq!(cfg.compute_mult(3), 4);
+        assert_eq!(cfg.compute_mult(1), 1);
+        assert_eq!(cfg.rx_extras(4), vec![0, 0, 0, 2500]);
+    }
+}

@@ -38,6 +38,7 @@
 pub mod coll_schedule;
 pub mod collectives;
 pub mod comm;
+pub mod faults;
 pub mod match_engine;
 pub mod net;
 pub mod p2p;
@@ -48,8 +49,12 @@ pub mod universe;
 pub use coll_schedule::CollRequest;
 pub use collectives::{commutative, Combiner, Commutative};
 pub use comm::Comm;
+pub use faults::{
+    Detection, DetectionKind, DetectorConfig, DropSpec, FaultStats, FaultsConfig, RankFail,
+    Straggler,
+};
 pub use net::NetworkModel;
-pub use request::{Request, Status};
+pub use request::{ReqError, Request, Status};
 pub use topology::{estimate_critical_path, TopologyMode};
 pub use universe::{ClusterConfig, PlanStoreStats, RankCtx, RunStats, SchedCacheStats, Universe};
 

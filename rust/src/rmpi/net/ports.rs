@@ -232,6 +232,11 @@ impl Port {
 /// per-source send sequence counters that finish [`MsgKey`]s.
 pub(crate) struct Ports {
     rx_ns: u64,
+    /// Per-rank *extra* ingress service time (straggler injection; all
+    /// zeros when no fault plan is active). Added to `rx_ns` for every
+    /// message addressed to that rank, so straggler slowness compounds
+    /// through the identical queueing law.
+    rx_extra: Vec<u64>,
     ports: Vec<Arc<Port>>,
     send_seq: Vec<AtomicU64>,
     /// rank -> clock lane (all zeros on a single-lane clock).
@@ -243,20 +248,25 @@ impl Ports {
         size: usize,
         net: &super::NetworkModel,
         lane_of: Vec<usize>,
+        rx_extra: Vec<u64>,
         obs: Arc<crate::obs::RunObs>,
     ) -> Ports {
         // Determinism precondition (see module docs): with rx_ns > 0, a
         // message must arrive strictly after it was booked, so every
         // same-instant booking set is complete when its resolve pass
         // runs. Zero-latency links would void that silently — fail fast
-        // instead.
+        // instead. Straggler rx extras engage the same two-phase resolve
+        // machinery, so they carry the same precondition.
+        let any_rx = net.rx_ns > 0 || rx_extra.iter().any(|&e| e > 0);
         assert!(
-            net.rx_ns == 0 || (net.intra_latency_ns > 0 && net.inter_latency_ns > 0),
-            "rx_ns > 0 requires non-zero link latencies for deterministic port order"
+            !any_rx || (net.intra_latency_ns > 0 && net.inter_latency_ns > 0),
+            "rx service time > 0 requires non-zero link latencies for deterministic port order"
         );
         assert_eq!(lane_of.len(), size, "lane map must cover every rank");
+        assert_eq!(rx_extra.len(), size, "rx extras must cover every rank");
         Ports {
             rx_ns: net.rx_ns,
+            rx_extra,
             ports: (0..size)
                 .map(|r| Arc::new(Port::new(r as u32, obs.clone())))
                 .collect(),
@@ -274,9 +284,13 @@ impl Ports {
     /// must be the current virtual instant and `arrival` the link
     /// model's arrival instant for it.
     pub fn book(&self, dst: usize, clock: &Arc<Clock>, key: MsgKey, arrival: VNanos) -> Booking {
-        self.ports[dst]
-            .clone()
-            .book(clock, self.lane_of[dst], self.rx_ns, key, arrival)
+        self.ports[dst].clone().book(
+            clock,
+            self.lane_of[dst],
+            self.rx_ns + self.rx_extra[dst],
+            key,
+            arrival,
+        )
     }
 }
 

@@ -37,22 +37,70 @@ impl Comm {
     ) -> Request {
         assert!(dst < self.size, "send to rank {dst} of {}", self.size);
         crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
+        // Everything below the comm API boundary — ports, lanes, node
+        // map, match queues, message keys — speaks *world* ranks, so a
+        // shrunk communicator's group translates exactly once, here.
+        let wsrc = self.world_rank();
+        let wdst = self.world_rank_of(dst);
         let bytes = as_bytes(buf);
-        let same_node = self.uni.same_node(self.rank, dst);
+        let same_node = self.uni.same_node(wsrc, wdst);
         let net = &self.uni.net;
         // Book the delivery deadline on the destination rank's ingress
         // port: arrival per the link model, then serialized receiver
         // processing (`NetworkModel::rx_ns`) in deterministic FIFO
         // order — the same path every collective round charges through.
         let sender_vtime = self.uni.clock.now();
-        let arrive_at = sender_vtime + net.transfer_ns(bytes.len(), same_node);
+        if let Some(fs) = &self.uni.faults {
+            // A dead sender reaches no wire: fail the operation so the
+            // victim's thread observes its own death at the next wait
+            // and can unwind. (`dead_at` is a pure function of the
+            // shared config — no cross-lane flag read.)
+            if fs.cfg.dead_at(wsrc, sender_vtime) {
+                let r = Request::new();
+                r.0.complete_failed(
+                    &self.uni.clock,
+                    super::request::ReqError::RankFailed { rank: wsrc },
+                );
+                return r;
+            }
+        }
+        let mut arrive_at = sender_vtime + net.transfer_ns(bytes.len(), same_node);
         let key = super::net::MsgKey {
             sender_vtime,
-            src: self.rank as u32,
+            src: wsrc as u32,
             tag,
-            seq: self.uni.ports.next_seq(self.rank),
+            seq: self.uni.ports.next_seq(wsrc),
         };
-        let booking = self.uni.ports.book(dst, &self.uni.clock, key, arrive_at);
+        if let Some(fs) = &self.uni.faults {
+            if fs.cfg.dead_at(wdst, sender_vtime) {
+                // Destination already dead. Eager sends are
+                // fire-and-forget: locally buffered, then lost — they
+                // complete successfully, as on a real fabric.
+                // Rendezvous sends would wait for a receive that can
+                // never be posted: time them out.
+                if !(sync || !net.is_eager(bytes.len())) {
+                    return Request::done();
+                }
+                let sender_req = self.mk_req_state("send");
+                let timeout = fs.cfg.rank_fail.map(|f| f.timeout_ns).unwrap_or(0);
+                fs.fail_at(
+                    &self.uni.clock,
+                    self.uni.lane_of[wsrc],
+                    sender_vtime + timeout,
+                    Arc::downgrade(&sender_req),
+                    wdst,
+                );
+                return Request(sender_req);
+            }
+            if fs.should_drop(wsrc, wdst, tag, key.seq) {
+                // Dropped on the wire: model the (single) sender
+                // retransmission as a delayed departure — the surviving
+                // copy takes the normal ingress path, so delivery stays
+                // exactly-once by construction.
+                arrive_at += fs.note_drop();
+            }
+        }
+        let booking = self.uni.ports.book(wdst, &self.uni.clock, key, arrive_at);
         // Flow id derived from the message key: the send point carries it
         // as `flow_out`, the matching delivery on the receiver's port
         // closes it as `flow_in` (the send→recv arrow in Perfetto).
@@ -66,7 +114,7 @@ impl Comm {
             let w = if wid == usize::MAX { u32::MAX } else { wid as u32 };
             self.uni.obs.record(
                 crate::obs::Span::point(
-                    crate::obs::Track::Worker { rank: self.rank as u32, worker: w },
+                    crate::obs::Track::Worker { rank: wsrc as u32, worker: w },
                     crate::obs::SpanKind::Send,
                     sender_vtime,
                     "isend",
@@ -86,12 +134,18 @@ impl Comm {
             // still pins our lane's lower bound. Released in
             // `match_engine::complete_at_deadline` once the completion
             // event is in our lane's heap.
-            let send_lane = self.uni.lane_of[self.rank];
-            let recv_lane = self.uni.lane_of[dst];
+            let send_lane = self.uni.lane_of[wsrc];
+            let recv_lane = self.uni.lane_of[wdst];
             if send_lane != recv_lane {
                 self.uni.clock.begin_feedback(recv_lane, send_lane);
             }
-            Some(self.mk_req_state("send"))
+            let s = self.mk_req_state("send");
+            if let Some(fs) = &self.uni.faults {
+                // If the destination dies mid-flight, the death sweep
+                // times this sender out.
+                fs.track(send_lane, wsrc, Some(wdst), &s);
+            }
+            Some(s)
         } else {
             None
         };
@@ -99,15 +153,15 @@ impl Comm {
             Some(s) => Request(s.clone()),
             None => Request::done(),
         };
-        let mut q = self.ctx(ctx).dst[dst].lock().unwrap();
-        if let Some(posted) = q.match_posted(self.rank, tag) {
+        let mut q = self.ctx(ctx).dst[wdst].lock().unwrap();
+        if let Some(posted) = q.match_posted(wsrc, tag) {
             // Fast path: copy straight into the posted receive buffer
             // (no envelope allocation, §Perf opt-3).
             drop(q);
             super::match_engine::deliver_direct(
                 &self.uni.clock,
                 bytes,
-                self.rank,
+                wsrc,
                 tag,
                 booking,
                 sender_req,
@@ -117,7 +171,7 @@ impl Comm {
             return req;
         }
         let env = Envelope {
-            src: self.rank,
+            src: wsrc,
             tag,
             data: bytes.to_vec().into_boxed_slice(),
             booking,
@@ -137,23 +191,59 @@ impl Comm {
         ctx: Ctx,
     ) -> Request {
         crate::sim::Clock::add_debt(self.uni.net.call_cpu_ns);
+        let wrank = self.world_rank();
+        let now = self.uni.clock.now();
+        if let Some(fs) = &self.uni.faults {
+            // A dead rank posts nothing: fail immediately so its thread
+            // can unwind.
+            if fs.cfg.dead_at(wrank, now) {
+                let r = Request::new();
+                r.0.complete_failed(
+                    &self.uni.clock,
+                    super::request::ReqError::RankFailed { rank: wrank },
+                );
+                return r;
+            }
+        }
         // Owned by the posting rank: completions (wherever they are
         // delivered from) route to this rank's shard.
         let req = Request(self.mk_req_state("recv"));
         let bytes = as_bytes_mut(buf);
+        let wsrc = if src == ANY_SOURCE {
+            None
+        } else {
+            assert!((src as usize) < self.size);
+            Some(self.world_rank_of(src as usize))
+        };
+        if let Some(fs) = &self.uni.faults {
+            let lane = self.uni.lane_of[wrank];
+            // Sweep coverage for a source that dies later; wildcard
+            // receives have no single peer and only fail if the owner
+            // itself dies (or the run's deadline catches the hang).
+            fs.track(lane, wrank, wsrc, &req.0);
+            if let (Some(s), Some(f)) = (wsrc, fs.cfg.rank_fail) {
+                if fs.cfg.dead_at(s, now) {
+                    // Posted after the peer's death: still enter the
+                    // match queue (an in-flight pre-death envelope may
+                    // legitimately match), but time out otherwise.
+                    fs.fail_at(
+                        &self.uni.clock,
+                        lane,
+                        now + f.timeout_ns,
+                        Arc::downgrade(&req.0),
+                        s,
+                    );
+                }
+            }
+        }
         let posted = PostedRecv {
-            src: if src == ANY_SOURCE {
-                None
-            } else {
-                assert!((src as usize) < self.size);
-                Some(src as usize)
-            },
+            src: wsrc,
             tag: if tag == ANY_TAG { None } else { Some(tag) },
             buf: RecvBuf { ptr: bytes.as_mut_ptr(), len: bytes.len() },
             req: req.0.clone(),
         };
         let matched = {
-            let mut q = self.ctx(ctx).dst[self.rank].lock().unwrap();
+            let mut q = self.ctx(ctx).dst[wrank].lock().unwrap();
             q.post(posted)
         };
         if let Some((env, posted)) = matched {

@@ -29,6 +29,18 @@ pub struct Status {
     pub bytes: usize,
 }
 
+/// Why a request completed unsuccessfully. Error-carrying completions
+/// flow through the *same* [`ReqState::complete`] path as successes —
+/// waiters wake, continuations fire, TAMPI external events decrement —
+/// so a failure releases task dependencies exactly like a completion;
+/// only [`Request::result`] tells them apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqError {
+    /// The peer (or a collective participant) died before the
+    /// operation could complete; `rank` is the failed world rank.
+    RankFailed { rank: usize },
+}
+
 /// A completion continuation: runs exactly once with the request's final
 /// [`Status`].
 pub(crate) type Continuation = Box<dyn FnOnce(Status) + Send>;
@@ -60,6 +72,14 @@ pub(crate) struct ReqState {
     /// set once at creation by [`crate::rmpi::Comm`] when spans are on.
     /// `complete` turns it into one `MpiReq` lifetime span.
     obs: Mutex<Option<(Arc<crate::obs::RunObs>, u32, u64, &'static str)>>,
+    /// `Some` after an error-carrying completion ([`ReqError`]);
+    /// published before `completed` flips so readers that observe
+    /// completion also observe the error.
+    error: Mutex<Option<ReqError>>,
+    /// Live-detector progress gauge: `(fault state, owning world rank)`,
+    /// stamped at creation when fault injection is active. `complete`
+    /// records the completion instant as the rank's last progress.
+    fault_gauge: Mutex<Option<(Arc<super::faults::FaultState>, usize)>>,
 }
 
 impl Default for ReqState {
@@ -72,6 +92,8 @@ impl Default for ReqState {
             on_complete: Mutex::new(Vec::new()),
             shard: Mutex::new(None),
             obs: Mutex::new(None),
+            error: Mutex::new(None),
+            fault_gauge: Mutex::new(None),
         }
     }
 }
@@ -114,8 +136,18 @@ impl ReqState {
     }
 
     pub(crate) fn complete(&self, clock: &Clock, status: Option<Status>) {
+        // Idempotent: a fault timeout and a late in-flight delivery can
+        // both target the same request. All completions for a request
+        // run on its owning lane (or its owning thread), so this check
+        // is ordered, not racy — the loser simply returns.
+        if self.completed.load(Ordering::Acquire) {
+            return;
+        }
         if let Some(s) = status {
             *self.status.lock().unwrap() = s;
+        }
+        if let Some((fs, rank)) = self.fault_gauge.lock().unwrap().as_ref() {
+            fs.note_progress(*rank, clock.now());
         }
         if let Some((obs, rank, born, label)) = self.obs.lock().unwrap().take() {
             // Unique id: the exporter pairs `b`/`e` async events by id,
@@ -161,6 +193,44 @@ impl ReqState {
         *self.shard.lock().unwrap() = Some(shard);
     }
 
+    /// Stamp the live-detector progress gauge (once, at creation, when
+    /// fault injection is active).
+    pub(crate) fn set_fault_gauge(&self, fs: Arc<super::faults::FaultState>, rank: usize) {
+        *self.fault_gauge.lock().unwrap() = Some((fs, rank));
+    }
+
+    /// Completion check for fault-path events (same semantics as
+    /// [`Request::test`]).
+    pub(crate) fn is_completed(&self) -> bool {
+        self.completed.load(Ordering::Acquire)
+    }
+
+    /// Error-carrying completion: publish `err`, then complete normally
+    /// so every downstream consumer (waiters, continuations, TAMPI
+    /// external-event decrements) runs unchanged.
+    pub(crate) fn complete_failed(&self, clock: &Clock, err: ReqError) {
+        if self.completed.load(Ordering::Acquire) {
+            return;
+        }
+        *self.error.lock().unwrap() = Some(err);
+        self.complete(clock, None);
+    }
+
+    /// The error published by an error-carrying completion, if any.
+    pub(crate) fn error(&self) -> Option<ReqError> {
+        *self.error.lock().unwrap()
+    }
+
+    /// Mark this request as failed with `err` without completing it —
+    /// used by collective schedules to accumulate constituent failures
+    /// until the final round's `finish` completes the outer request.
+    pub(crate) fn poison(&self, err: ReqError) {
+        let mut g = self.error.lock().unwrap();
+        if g.is_none() {
+            *g = Some(err);
+        }
+    }
+
     /// Attach a continuation; runs it inline if the request has already
     /// completed (see the field docs for the race-free protocol).
     pub(crate) fn attach(&self, f: Continuation) {
@@ -202,6 +272,27 @@ impl Request {
     /// Status of a completed receive.
     pub fn status(&self) -> Status {
         *self.0.status.lock().unwrap()
+    }
+
+    /// `true` when the request completed with an error (e.g. a peer
+    /// died — [`ReqError::RankFailed`]).
+    pub fn failed(&self) -> bool {
+        self.0.error().is_some()
+    }
+
+    /// The completion error, if the request failed.
+    pub fn error(&self) -> Option<ReqError> {
+        self.0.error()
+    }
+
+    /// Completed-state outcome: `Ok(status)` for a successful
+    /// completion, `Err` for an error-carrying one. Meaningful once
+    /// [`Request::test`] returns true (or after [`Request::wait`]).
+    pub fn result(&self) -> Result<Status, ReqError> {
+        match self.0.error() {
+            Some(e) => Err(e),
+            None => Ok(self.status()),
+        }
     }
 
     /// Attach a completion continuation: `f` runs exactly once with the
@@ -327,6 +418,26 @@ mod tests {
         let s3 = seen.clone();
         r.on_complete(move |st| s3.lock().unwrap().push(st));
         assert_eq!(seen.lock().unwrap().as_slice(), &[st, st]);
+        clock.stop();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn failed_completion_fires_continuations_and_reports_error() {
+        let (clock, h) = Clock::start();
+        let r = Request::new();
+        let hit = Arc::new(AtomicBool::new(false));
+        let h2 = hit.clone();
+        r.on_complete(move |_| h2.store(true, Ordering::Relaxed));
+        r.0.complete_failed(&clock, ReqError::RankFailed { rank: 3 });
+        assert!(r.test(), "a failed request still completes");
+        assert!(hit.load(Ordering::Relaxed), "continuations fire on failure too");
+        assert!(r.failed());
+        assert_eq!(r.result(), Err(ReqError::RankFailed { rank: 3 }));
+        // Late duplicate completions (e.g. an in-flight delivery racing
+        // a fault timeout) are idempotent no-ops.
+        r.0.complete(&clock, Some(Status { source: 1, tag: 2, bytes: 3 }));
+        assert_eq!(r.result(), Err(ReqError::RankFailed { rank: 3 }));
         clock.stop();
         h.join().unwrap();
     }

@@ -171,13 +171,19 @@ pub(crate) enum ShapeKey {
     ChunkBytes(usize),
 }
 
-/// Cache key of one compiled schedule: `(collective kind, root, shape)`
-/// on one communicator (the cache itself is per-communicator).
+/// Cache key of one compiled schedule: `(collective kind, root, shape,
+/// avoid)` on one communicator (the cache itself is per-communicator).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub(crate) struct SchedKey {
     pub kind: CollKind,
     pub root: usize,
     pub shape: ShapeKey,
+    /// Comm-rank bitset of detected stragglers the compiler must route
+    /// tree interior positions away from (`Comm::set_avoid`). Part of
+    /// the key on purpose: raising the mask retires every previously
+    /// compiled plan through the ordinary cache-miss path — the
+    /// stall-driven invalidation contract.
+    pub avoid: u64,
 }
 
 /// One dissemination/fan round of a token collective (barrier): token
@@ -1012,18 +1018,24 @@ pub(crate) fn compile_cluster_plans(key: &SchedKey, ctx: &TopoCtx) -> Vec<CollPl
             barrier_plans(ctx).into_iter().map(CollPlan::Barrier).collect()
         }
         (CollKind::Bcast, ShapeKey::Bytes(b)) => {
-            let parents = bcast_parents_selected(ctx, key.root, b);
+            let parents = bcast_parents_selected(ctx, key.root, b, key.avoid);
             (0..n).map(|r| CollPlan::Bcast(plan_from_parents(&parents, r))).collect()
         }
+        // Pinned-order reduce ignores the avoid mask: restructuring its
+        // tree would change the floating-point association, which the
+        // unmarked op did not permit. Only [`commutative`]-marked
+        // combines (`ReduceComm`/`AllreduceComm`) re-root.
         (CollKind::Reduce, _) => (0..n)
             .map(|r| CollPlan::Reduce(flat_reduce_plan(r, n, key.root)))
             .collect(),
-        (CollKind::ReduceComm, ShapeKey::Bytes(b)) => reduce_comm_plans(ctx, key.root, b)
-            .into_iter()
-            .map(CollPlan::Reduce)
-            .collect(),
+        (CollKind::ReduceComm, ShapeKey::Bytes(b)) => {
+            reduce_comm_plans(ctx, key.root, b, key.avoid)
+                .into_iter()
+                .map(CollPlan::Reduce)
+                .collect()
+        }
         (CollKind::Allreduce, ShapeKey::Bytes(b)) => {
-            let parents = bcast_parents_selected(ctx, 0, b);
+            let parents = bcast_parents_selected(ctx, 0, b, key.avoid);
             (0..n)
                 .map(|r| CollPlan::Allreduce {
                     reduce: flat_reduce_plan(r, n, 0),
@@ -1032,8 +1044,8 @@ pub(crate) fn compile_cluster_plans(key: &SchedKey, ctx: &TopoCtx) -> Vec<CollPl
                 .collect()
         }
         (CollKind::AllreduceComm, ShapeKey::Bytes(b)) => {
-            let parents = bcast_parents_selected(ctx, 0, b);
-            reduce_comm_plans(ctx, 0, b)
+            let parents = bcast_parents_selected(ctx, 0, b, key.avoid);
+            reduce_comm_plans(ctx, 0, b, key.avoid)
                 .into_iter()
                 .enumerate()
                 .map(|(r, reduce)| CollPlan::Allreduce {
@@ -1109,12 +1121,12 @@ pub fn estimate_critical_path(
             cost.unwrap_or_else(|| ctx.cost_tokens_flat(&plans))
         }
         "bcast" => {
-            let (parents, cost) = bcast_select(&ctx, root, b);
+            let (parents, cost) = bcast_select(&ctx, root, b, 0);
             cost.unwrap_or_else(|| ctx.cost_tree(&parents, b))
         }
         "reduce" => ctx.cost_reduce(&flat_reduce_plans(size, root), b),
         "reduce-comm" => {
-            let (plans, cost) = reduce_comm_select(&ctx, root, b);
+            let (plans, cost) = reduce_comm_select(&ctx, root, b, 0);
             cost.unwrap_or_else(|| ctx.cost_reduce(&plans, b))
         }
         // The two allreduce phases share ports (a rank's bcast receive
@@ -1124,10 +1136,10 @@ pub fn estimate_critical_path(
             let reduce = if collective == "allreduce" {
                 flat_reduce_plans(size, 0)
             } else {
-                reduce_comm_plans(&ctx, 0, b)
+                reduce_comm_plans(&ctx, 0, b, 0)
             };
             let mut w = reduce_wire(&reduce, b);
-            for (r, tree) in tree_wire(&bcast_parents_selected(&ctx, 0, b), b)
+            for (r, tree) in tree_wire(&bcast_parents_selected(&ctx, 0, b, 0), b)
                 .into_iter()
                 .enumerate()
             {
@@ -1452,15 +1464,33 @@ fn flat_bcast_parents(n: usize, root: usize) -> Vec<Option<usize>> {
 /// other nodes are represented by their leader; representatives form a
 /// binomial tree in virtual-node space and each runs a binomial tree
 /// over its node's members.
+/// `avoid` (comm-rank bitset) steers representative election: a node's
+/// representative is its first member *not* in the mask, so a detected
+/// straggler is pushed to a leaf of its node's intra tree and out of
+/// every inter-node hop. The root represents its own node regardless —
+/// the caller chose it as the data source. A node whose members are all
+/// avoided falls back to its first member (someone must relay).
 fn hier_bcast_parents(
     n: usize,
     root: usize,
     nodes: &[Vec<usize>],
     node_of: &[usize],
+    avoid: u64,
 ) -> Vec<Option<usize>> {
     let l = nodes.len();
     let root_node = node_of[root];
-    let rep = |node: usize| if node == root_node { root } else { nodes[node][0] };
+    let avoided = |r: usize| r < 64 && avoid & (1u64 << r) != 0;
+    let rep = |node: usize| {
+        if node == root_node {
+            root
+        } else {
+            nodes[node]
+                .iter()
+                .copied()
+                .find(|&m| !avoided(m))
+                .unwrap_or(nodes[node][0])
+        }
+    };
     (0..n)
         .map(|rank| {
             let my_node = node_of[rank];
@@ -1469,9 +1499,15 @@ fn hier_bcast_parents(
                 return binomial_parent(vnode).map(|pv| rep((pv + root_node) % l));
             }
             // Intra order: representative first, then the remaining
-            // members ascending.
+            // members ascending — with avoided members pushed to the
+            // tail, where the binomial tree keeps them leaf-most (no
+            // healthy rank ever waits behind a straggler's forward).
             let mut intra: Vec<usize> = vec![rep(my_node)];
-            intra.extend(nodes[my_node].iter().copied().filter(|&r| r != rep(my_node)));
+            let rest =
+                nodes[my_node].iter().copied().filter(|&r| r != rep(my_node));
+            let (slow, fast): (Vec<usize>, Vec<usize>) = rest.partition(|&r| avoided(r));
+            intra.extend(fast);
+            intra.extend(slow);
             let pos = intra.iter().position(|&r| r == rank).unwrap();
             Some(intra[binomial_parent(pos).unwrap()])
         })
@@ -1492,7 +1528,19 @@ fn plan_from_parents(parents: &[Option<usize>], rank: usize) -> TreePlan {
 /// tree's exact cost when a comparison priced it): flat unless the
 /// hierarchical tree is strictly cheaper at the exact payload byte
 /// size (the shape key carries bytes, not elements).
-fn bcast_select(ctx: &TopoCtx, root: usize, bytes: usize) -> (Vec<Option<usize>>, Option<u64>) {
+///
+/// A non-zero `avoid` mask overrides the cost race: the wire model
+/// prices every rank identically, so it cannot see the *measured*
+/// slowness the mask encodes — when a hierarchy exists, the re-rooted
+/// hierarchical tree (straggler demoted to a leaf) is taken
+/// unconditionally. Without a hierarchy there is nothing to re-root
+/// and the flat shape stands.
+fn bcast_select(
+    ctx: &TopoCtx,
+    root: usize,
+    bytes: usize,
+    avoid: u64,
+) -> (Vec<Option<usize>>, Option<u64>) {
     let n = ctx.size;
     if n == 1 {
         return (vec![None], Some(0));
@@ -1501,8 +1549,11 @@ fn bcast_select(ctx: &TopoCtx, root: usize, bytes: usize) -> (Vec<Option<usize>>
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
         return (flat, None);
     };
-    let hier = hier_bcast_parents(n, root, &nodes, ctx.node_of);
+    let hier = hier_bcast_parents(n, root, &nodes, ctx.node_of, avoid);
     let ch = ctx.cost_tree(&hier, bytes);
+    if avoid != 0 {
+        return (hier, Some(ch));
+    }
     let cf = ctx.cost_tree(&flat, bytes);
     if ch < cf {
         (hier, Some(ch))
@@ -1511,8 +1562,13 @@ fn bcast_select(ctx: &TopoCtx, root: usize, bytes: usize) -> (Vec<Option<usize>>
     }
 }
 
-fn bcast_parents_selected(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<Option<usize>> {
-    bcast_select(ctx, root, bytes).0
+fn bcast_parents_selected(
+    ctx: &TopoCtx,
+    root: usize,
+    bytes: usize,
+    avoid: u64,
+) -> Vec<Option<usize>> {
+    bcast_select(ctx, root, bytes, avoid).0
 }
 
 // ---------------------------------------------------------------------
@@ -1561,6 +1617,7 @@ fn reduce_comm_select(
     ctx: &TopoCtx,
     root: usize,
     bytes: usize,
+    avoid: u64,
 ) -> (Vec<ReducePlan>, Option<u64>) {
     let n = ctx.size;
     let flat = flat_reduce_plans(n, root);
@@ -1570,8 +1627,15 @@ fn reduce_comm_select(
     let Some((nodes, _rpn)) = ctx.hierarchy() else {
         return (flat, None);
     };
-    let hier = reduce_plans_from_parents(&hier_bcast_parents(n, root, &nodes, ctx.node_of));
+    let hier =
+        reduce_plans_from_parents(&hier_bcast_parents(n, root, &nodes, ctx.node_of, avoid));
     let ch = ctx.cost_reduce(&hier, bytes);
+    // Same override as `bcast_select`: a non-zero avoid mask encodes
+    // measured slowness the wire model cannot price, so the re-rooted
+    // tree wins unconditionally.
+    if avoid != 0 {
+        return (hier, Some(ch));
+    }
     let cf = ctx.cost_reduce(&flat, bytes);
     if ch < cf {
         (hier, Some(ch))
@@ -1580,8 +1644,8 @@ fn reduce_comm_select(
     }
 }
 
-fn reduce_comm_plans(ctx: &TopoCtx, root: usize, bytes: usize) -> Vec<ReducePlan> {
-    reduce_comm_select(ctx, root, bytes).0
+fn reduce_comm_plans(ctx: &TopoCtx, root: usize, bytes: usize, avoid: u64) -> Vec<ReducePlan> {
+    reduce_comm_select(ctx, root, bytes, avoid).0
 }
 
 // ---------------------------------------------------------------------
@@ -1752,7 +1816,8 @@ mod tests {
         let node_of = blocked(2, 4);
         for r in 0..8 {
             let f = flat_reduce_plan(r, node_of.len(), 0);
-            let key = SchedKey { kind: CollKind::Reduce, root: 0, shape: ShapeKey::None };
+            let key =
+                SchedKey { kind: CollKind::Reduce, root: 0, shape: ShapeKey::None, avoid: 0 };
             let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
             let c = ctx(r, &node_of, TopologyMode::Hierarchical, &net);
             let CollPlan::Reduce(h) = compile_plan(&key, &c) else {
@@ -1773,7 +1838,7 @@ mod tests {
         let node_of = blocked(2, 6);
         let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
         let c = ctx(0, &node_of, TopologyMode::Hierarchical, &net);
-        let comm = reduce_comm_plans(&c, 0, 8);
+        let comm = reduce_comm_plans(&c, 0, 8, 0);
         let flat = flat_reduce_plans(node_of.len(), 0);
         let rerooted = (0..node_of.len())
             .any(|r| comm[r].parent != flat[r].parent || comm[r].children != flat[r].children);
@@ -1838,22 +1903,28 @@ mod tests {
     #[test]
     fn sched_cache_hits_and_misses() {
         let cache = SchedCache::default();
-        let key = SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None };
+        let key =
+            SchedKey { kind: CollKind::Barrier, root: 0, shape: ShapeKey::None, avoid: 0 };
         let (_, hit) = cache
             .get_or_compile(&key, || Arc::new(CollPlan::Barrier(TokenPlan { rounds: vec![] })));
         assert!(!hit);
         let (_, hit) = cache.get_or_compile(&key, || unreachable!("must hit"));
         assert!(hit);
         assert_eq!(cache.len(), 1);
-        let key2 = SchedKey { kind: CollKind::Bcast, root: 0, shape: ShapeKey::Bytes(32) };
+        let key2 =
+            SchedKey { kind: CollKind::Bcast, root: 0, shape: ShapeKey::Bytes(32), avoid: 0 };
         let (_, hit) = cache.get_or_compile(&key2, || {
             Arc::new(CollPlan::Bcast(TreePlan { recv_from: None, send_to: vec![] }))
         });
         assert!(!hit);
         assert_eq!(cache.len(), 2);
         // Commutative variants cache under their own kind.
-        let key3 =
-            SchedKey { kind: CollKind::AllreduceComm, root: 0, shape: ShapeKey::Bytes(32) };
+        let key3 = SchedKey {
+            kind: CollKind::AllreduceComm,
+            root: 0,
+            shape: ShapeKey::Bytes(32),
+            avoid: 0,
+        };
         let (_, hit) = cache.get_or_compile(&key3, || {
             Arc::new(CollPlan::Reduce(ReducePlan { children: vec![], parent: None }))
         });
@@ -1896,7 +1967,7 @@ mod tests {
                             c.replay(&reduce_wire(&flat_red, bytes)),
                         );
                         if let Some((nodes, _)) = c.hierarchy() {
-                            let ht = hier_bcast_parents(n, 0, &nodes, node_of);
+                            let ht = hier_bcast_parents(n, 0, &nodes, node_of, 0);
                             assert_eq!(
                                 closed_tree_cost(&ht, bytes, node_of, &net),
                                 c.replay(&tree_wire(&ht, bytes)),
@@ -1975,7 +2046,12 @@ mod tests {
         let net = NetworkModel { rx_ns: 400, ..NetworkModel::default() };
         let node_of = blocked(2, 4);
         let store = PlanStore::standalone(&node_of, &net, TopologyMode::Hierarchical);
-        let key = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(64) };
+        let key = SchedKey {
+            kind: CollKind::Alltoall,
+            root: 0,
+            shape: ShapeKey::ChunkBytes(64),
+            avoid: 0,
+        };
         let mut compiles = 0;
         for rank in 0..node_of.len() {
             let mut c = ctx(rank, &node_of, TopologyMode::Hierarchical, &net);
@@ -1999,7 +2075,12 @@ mod tests {
         assert_eq!(store.miss_count(), 1);
         assert_eq!(store.hit_count(), node_of.len() as u64 - 1);
         // A different shape is a different plan.
-        let key2 = SchedKey { kind: CollKind::Alltoall, root: 0, shape: ShapeKey::ChunkBytes(8) };
+        let key2 = SchedKey {
+            kind: CollKind::Alltoall,
+            root: 0,
+            shape: ShapeKey::ChunkBytes(8),
+            avoid: 0,
+        };
         let c = ctx(0, &node_of, TopologyMode::Hierarchical, &net);
         store.get_or_compile(key2, || compile_cluster_plans(&key2, &c));
         assert_eq!(store.len(), 2);

@@ -65,6 +65,11 @@ pub struct ClusterConfig {
     /// never changes results: emission sites only read virtual time.
     /// See [`crate::obs`].
     pub spans: Option<Arc<crate::obs::SpanSink>>,
+    /// Fault & straggler injection plan (default `None` — fault-free;
+    /// the injection hooks cost one `Option` branch each). The same
+    /// plan on the same workload replays bit-identically. See
+    /// [`crate::rmpi::faults`].
+    pub faults: Option<super::faults::FaultsConfig>,
 }
 
 impl ClusterConfig {
@@ -87,7 +92,14 @@ impl ClusterConfig {
             sched_cache: true,
             clock_shards: 1,
             spans: None,
+            faults: None,
         }
+    }
+
+    /// Builder-style fault-plan attachment (bench/test convenience).
+    pub fn with_faults(mut self, faults: super::faults::FaultsConfig) -> Self {
+        self.faults = Some(faults);
+        self
     }
 
     /// Builder-style span-sink attachment (bench/test convenience).
@@ -192,6 +204,9 @@ pub struct RunStats {
     /// Host wall-clock time of the run in ns (setup through clock
     /// teardown) — the denominator of simulator throughput.
     pub elapsed_host_ns: u64,
+    /// Fault-injection counters (`None` on fault-free runs). See
+    /// [`crate::rmpi::faults::FaultStats`].
+    pub faults: Option<super::faults::FaultStats>,
     /// Per-rank user-defined counters merged by key.
     pub counters: HashMap<String, u64>,
     /// Snapshot of the run's metrics registry: counters, gauges, and
@@ -312,10 +327,27 @@ impl Universe {
         // (plan_store_hits / plan_store_misses / plan_compile_ns) in
         // the run's metrics registry up front.
         let plan_store = PlanStore::new(&node_of, &cfg.net, cfg.topology, &obs.metrics);
+        let faults = cfg
+            .faults
+            .as_ref()
+            .filter(|f| f.enabled() || f.detector.is_some())
+            .map(|f| Arc::new(super::faults::FaultState::new(f.clone(), size)));
+        // Straggler ingress extras ride the same Ports law as the base
+        // rx_ns — all zeros without a fault plan.
+        let rx_extra = faults
+            .as_ref()
+            .map(|fs| fs.cfg.rx_extras(size))
+            .unwrap_or_else(|| vec![0; size]);
         let uni = Arc::new(UniState {
             clock: clock.clone(),
             net: cfg.net,
-            ports: crate::rmpi::net::Ports::new(size, &cfg.net, lane_of.clone(), obs.clone()),
+            ports: crate::rmpi::net::Ports::new(
+                size,
+                &cfg.net,
+                lane_of.clone(),
+                rx_extra,
+                obs.clone(),
+            ),
             node_of,
             lane_of: lane_of.clone(),
             topology: cfg.topology,
@@ -328,6 +360,8 @@ impl Universe {
             progress: ProgressEngine::new(size, cfg.delivery_mode, cfg.tracer.clone()),
             tracer: cfg.tracer.clone(),
             obs: obs.clone(),
+            faults: faults.clone(),
+            shrink_map: Mutex::new(HashMap::new()),
         });
         {
             // World communicator owns contexts 0 (p2p) and 1 (collectives).
@@ -374,6 +408,30 @@ impl Universe {
                 clock.call_at_on(lane, dl, move || {
                     t.store(true, Ordering::Release);
                 });
+            }
+        }
+
+        if let Some(fs) = &faults {
+            if let Some(rf) = fs.cfg.rank_fail {
+                // Death sweep, one event per lane at the death instant
+                // (same per-lane pattern as the deadline flags): each
+                // lane times out its own slice of the tracked-request
+                // registry, so completions stay on their owners' lanes.
+                for lane in 0..clock.num_lanes() {
+                    let fs2 = fs.clone();
+                    let ck = clock.clone();
+                    clock.call_at_on(lane, rf.at_ns, move || {
+                        fs2.sweep_dead(&ck, lane);
+                    });
+                }
+            }
+            if let Some(dl) = cfg.deadline {
+                // The live detector needs the run deadline as its tick
+                // horizon: an unbounded self-rescheduling tick would
+                // keep lanes advancing forever and defeat virtual-time
+                // deadlock detection. Without a deadline it stays off
+                // (the post-run stall report still covers diagnosis).
+                fs.install_detector(&clock, &lane_of, dl);
             }
         }
 
@@ -544,6 +602,7 @@ impl Universe {
                     clock_batches: cc.batches,
                     cross_shard_events: cc.cross_lane,
                     elapsed_host_ns: host_start.elapsed().as_nanos() as u64,
+                    faults: faults.as_ref().map(|fs| fs.stats()),
                     counters,
                     metrics: obs.metrics.snapshot(),
                 })

@@ -61,6 +61,23 @@
 //! [`EventKind::CompletionDelivered`] and counted per pipeline
 //! ([`Tampi::mode_stats`]), so benches and traces can compare the two.
 //!
+//! ## Error-carrying completions
+//!
+//! Under fault injection ([`crate::rmpi::faults`]) a request can finish
+//! in the *failed* state — [`crate::rmpi::ReqError::RankFailed`] when a
+//! peer died before matching. A failed completion is still a
+//! completion: `Request::test()` flips true, `on_complete`
+//! continuations fire, and external-event counters decrement — so both
+//! pipelines above unblock paused tasks and release successor
+//! dependencies identically whether the operation succeeded or its peer
+//! is dead. Nothing hangs; the *error* travels with the request instead
+//! of stalling the schedule. Blocking-mode callers that need the
+//! verdict use [`Tampi::wait_result`] / [`Tampi::waitall_result`];
+//! non-blocking (`iwait`) callers inspect `Request::result()` from a
+//! successor task. This is what lets an application observe
+//! `RankFailed`, call [`crate::rmpi::Comm::comm_shrink`], and continue
+//! on the survivors.
+//!
 //! ## Delivery: direct vs sharded
 //!
 //! Orthogonal to *how completions are discovered* (the pipeline above)
@@ -381,6 +398,29 @@ impl Tampi {
             return Request::wait_all(self.comm.clock(), reqs);
         }
         self.block_on(reqs.to_vec());
+    }
+
+    /// [`Tampi::wait`] that surfaces the completion verdict: `Ok` with
+    /// the status on success, `Err(RankFailed)` when fault injection
+    /// killed the peer. The task unblocks either way (see the module's
+    /// "Error-carrying completions"); this is the accessor that makes
+    /// the error observable without touching raw request internals.
+    pub fn wait_result(&self, req: &Request) -> Result<Status, crate::rmpi::ReqError> {
+        self.wait(req);
+        req.result()
+    }
+
+    /// [`Tampi::waitall`] returning the first failed request's error,
+    /// if any completed with one. All requests are waited on regardless
+    /// — a failure does not abandon its siblings.
+    pub fn waitall_result(&self, reqs: &[Request]) -> Result<(), crate::rmpi::ReqError> {
+        self.waitall(reqs);
+        for r in reqs {
+            if let Some(e) = r.error() {
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 
     /// Task-aware `MPI_Barrier` (collectives are intercepted too,

@@ -17,8 +17,25 @@
 //! a group has not launched the collective at all — it is reported at
 //! round 0, stalled since the group's earliest launch.
 //!
+//! A group in which *every* rank that entered posted all of its rounds
+//! is never reported, even if some expected participant is absent: on
+//! single-round schedules (alltoallv, flat gather) every entered rank
+//! finishes its posts no matter who is missing, so blaming the absent
+//! rank — a dead rank a shrunk communicator excluded, say — would be
+//! noise, not diagnosis. A *genuine* stall always leaves some entered
+//! rank short of its total (it cannot advance past the round gated on
+//! the missing peer), and that rank's group is still reported.
+//!
 //! Exposed on the CLI as `repro stalls` (a deliberately skewed demo
 //! run) and asserted in `tests/coll_topology.rs`.
+//!
+//! This post-run replay has a *live* counterpart since the fault
+//! subsystem landed: [`crate::rmpi::faults`] runs a per-lane detector
+//! tick on the clock thread (progress gauges stamped at request
+//! completion) whose suspicion verdicts feed the stall-driven
+//! re-rooting loop — see that module's "Detection and feedback" docs.
+//! This replay stays the forensic tool; the live detector is the
+//! control loop.
 
 use std::collections::HashMap;
 
@@ -101,6 +118,16 @@ pub fn stall_report(records: &[Record], at: VNanos, participants: usize) -> Vec<
 
     let mut out = Vec::new();
     for ((comm, seq), g) in groups {
+        // Every rank that entered posted all of its rounds: the
+        // collective ran to completion. Blaming a rank that has no
+        // records — common on single-round schedules, where entered
+        // ranks finish their posts regardless of who is absent, and
+        // guaranteed when the collective ran on a shrunk communicator
+        // smaller than `participants` — would be a false positive. A
+        // genuine stall pins some entered rank below its total.
+        if g.ranks.values().all(|p| p.total == Some(p.round)) {
+            continue;
+        }
         // Progress of every expected participant (absent = round 0,
         // stalled since the collective first appeared anywhere).
         let mut laggard: Option<(u32, RankProgress)> = None;
@@ -219,6 +246,45 @@ mod tests {
         assert_eq!(r[0].entered, 2);
         assert_eq!(r[0].stalled_ns, 5_000);
         assert_eq!(r[0].kind, "barrier");
+    }
+
+    #[test]
+    fn all_entered_at_total_suppresses_absent_rank_blame() {
+        // Regression: a 1-round collective where every entered rank
+        // advanced to rounds_total used to blame the absent rank (min
+        // rounds = 0) even though the collective plainly completed —
+        // e.g. a shrunk communicator running 3-wide while the caller
+        // still passes the 4-rank world size.
+        let mut recs = Vec::new();
+        for rank in 0..3 {
+            recs.push(rec(
+                0,
+                rank,
+                EventKind::CollScheduleCompiled { comm: 7, seq: 4, cached: false, rounds: 1 },
+                "alltoallv",
+            ));
+            recs.push(rec(
+                200,
+                rank,
+                EventKind::CollRoundAdvanced { comm: 7, seq: 4, round: 1, total: 1 },
+                "alltoallv",
+            ));
+        }
+        // Rank 3 never enters; with every entered rank at 1/1 the group
+        // is complete, not stalled on rank 3.
+        assert!(stall_report(&recs, 10_000, 4).is_empty());
+
+        // Contrast: same shape but one entered rank short of its total
+        // is a genuine stall and the group is still reported, with
+        // blame on a rank at round 0 exactly as before.
+        let mut hung = recs.clone();
+        hung.retain(|r| {
+            !(r.rank == 2 && matches!(r.kind, EventKind::CollRoundAdvanced { .. }))
+        });
+        let r = stall_report(&hung, 10_000, 4);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].laggard_round, 0);
+        assert!(r[0].laggard == 2 || r[0].laggard == 3);
     }
 
     #[test]

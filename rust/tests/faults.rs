@@ -1,0 +1,286 @@
+//! The fault-injection subsystem end to end: deterministic link drops
+//! with exactly-once retransmission, rank failure completing TAMPI
+//! waits with `Err(RankFailed)` under both delivery modes, straggler
+//! detection re-rooting the hierarchical trees, and shrink-then-continue
+//! staying bit-identical across 1/2/4 clock lanes and converging to a
+//! fault-free reference at the survivor count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tampi_repro::apps::recovery::{
+    run_gs_shrink, run_ifs_shrink, GsShrinkParams, IfsShrinkParams, ShrinkParams,
+};
+use tampi_repro::rmpi::{
+    commutative, ClusterConfig, DeliveryMode, FaultsConfig, ReqError, RunStats, ThreadLevel,
+    TopologyMode, Universe,
+};
+use tampi_repro::sim::ms;
+use tampi_repro::tampi;
+
+// ------------------------------------------------------------------
+// Link drops: retransmit-after-timeout through the Ports law.
+// ------------------------------------------------------------------
+
+const DROP_MSGS: i32 = 48;
+
+fn drop_run(prob_ppm: u32) -> RunStats {
+    let mut cfg = ClusterConfig::new(1, 2, 0);
+    cfg.deadline = Some(ms(60_000));
+    if prob_ppm > 0 {
+        cfg.faults = Some(FaultsConfig::new(11).with_drop(prob_ppm));
+    }
+    Universe::run(cfg, move |ctx| {
+        if ctx.rank == 0 {
+            for i in 0..DROP_MSGS {
+                let r = ctx.comm.isend(&[i], 1, i);
+                r.wait(&ctx.clock);
+                r.result().expect("a dropped message retransmits, it never fails");
+            }
+        } else {
+            for i in 0..DROP_MSGS {
+                let mut b = [-1i32];
+                let r = ctx.comm.irecv(&mut b, 0, i);
+                r.wait(&ctx.clock);
+                r.result().expect("recv");
+                assert_eq!(b[0], i, "payload delivered exactly once, uncorrupted");
+            }
+        }
+    })
+    .expect("drop run")
+}
+
+#[test]
+fn drop_retransmits_exactly_once() {
+    let clean = drop_run(0);
+    assert!(clean.faults.is_none(), "no injection, no fault stats");
+
+    let dropped = drop_run(500_000);
+    let f = dropped.faults.expect("fault stats");
+    assert!(f.drops > 0, "a 50% rate must hit some of {DROP_MSGS} messages");
+    assert!(
+        (f.drops as i64) < DROP_MSGS as i64,
+        "the FNV coin must not drop everything"
+    );
+    // Exactly-once by construction: one delayed re-booking per drop,
+    // and every payload above arrived intact.
+    assert_eq!(f.drops, f.retransmits);
+    assert_eq!(f.failed_reqs, 0, "drops delay, they do not fail requests");
+    assert!(
+        dropped.vtime_ns > clean.vtime_ns,
+        "retransmission latency must be visible in virtual time"
+    );
+
+    // Seed replay: the coin is a pure hash of (seed, src, dst, tag, seq).
+    let replay = drop_run(500_000);
+    assert_eq!(replay.vtime_ns, dropped.vtime_ns);
+    assert_eq!(replay.faults.expect("fault stats").drops, f.drops);
+}
+
+// ------------------------------------------------------------------
+// Rank failure: TAMPI waits unblock with the error, both pipelines.
+// ------------------------------------------------------------------
+
+#[test]
+fn rank_fail_completes_tampi_wait_with_error() {
+    for mode in [DeliveryMode::Direct, DeliveryMode::Sharded] {
+        let mut cfg = ClusterConfig::new(1, 2, 1);
+        cfg.delivery_mode = mode;
+        cfg.deadline = Some(ms(60_000));
+        cfg.faults = Some(FaultsConfig::new(0).with_rank_fail(1, 10_000));
+        let errs = Arc::new(AtomicU64::new(0));
+        let e2 = Arc::clone(&errs);
+        let stats = Universe::run(cfg, move |ctx| {
+            if ctx.rank == 1 {
+                // The victim idles past its death instant and exits.
+                ctx.clock.work(20_000);
+                return;
+            }
+            let rt = ctx.rt.as_ref().unwrap();
+            let t = tampi::init(&ctx.comm, rt, ThreadLevel::TaskMultiple);
+            let t1 = t.clone();
+            let errs = Arc::clone(&e2);
+            rt.task().label("doomed-recv").spawn(move || {
+                let mut b = [0u8; 8];
+                let r = t1.comm().irecv(&mut b, 1, 5);
+                // The task parks on the request; it can only run past
+                // this line if the failed completion fired on_complete.
+                match t1.wait_result(&r) {
+                    Err(ReqError::RankFailed { rank: 1 }) => {
+                        errs.fetch_add(1, Ordering::Relaxed);
+                    }
+                    other => panic!("expected RankFailed {{ rank: 1 }}, got {other:?}"),
+                }
+            });
+        })
+        .expect("rank-fail run");
+        assert_eq!(errs.load(Ordering::Relaxed), 1, "delivery mode {mode:?}");
+        assert!(
+            stats.faults.expect("fault stats").failed_reqs >= 1,
+            "delivery mode {mode:?}"
+        );
+    }
+}
+
+// ------------------------------------------------------------------
+// Straggler: entry-skew agreement re-roots the hierarchical trees.
+// ------------------------------------------------------------------
+
+/// 2 nodes x 4 ranks, world rank 4 (node 1's static representative)
+/// carries a 50 us ingress penalty. Warmup is a direct token from rank
+/// 0 so each rank's skew carries only its own ingress cost; the
+/// adaptive arm then agrees on an avoid mask and re-roots.
+fn straggler_coll_run(adaptive: bool) -> (RunStats, u64) {
+    let mut cfg = ClusterConfig::new(2, 4, 0).with_topology(TopologyMode::Hierarchical);
+    cfg.deadline = Some(ms(60_000));
+    cfg.faults = Some(FaultsConfig::new(7).with_straggler(4, 50_000, 1));
+    let mask_out = Arc::new(AtomicU64::new(0));
+    let mask_c = Arc::clone(&mask_out);
+    let stats = Universe::run(cfg, move |ctx| {
+        let tok = [0u8; 16];
+        if ctx.rank == 0 {
+            let reqs: Vec<_> = (1..ctx.size).map(|d| ctx.comm.isend(&tok, d, 9)).collect();
+            for r in &reqs {
+                r.wait(&ctx.clock);
+            }
+        } else {
+            let mut rbuf = [0u8; 16];
+            let r = ctx.comm.irecv(&mut rbuf, 0, 9);
+            r.wait(&ctx.clock);
+        }
+        if adaptive {
+            let m = ctx.comm.detect_stragglers(20_000);
+            if ctx.rank == 0 {
+                mask_c.store(m, Ordering::Relaxed);
+            }
+        }
+        let mut buf = vec![0u8; 4 * 1024];
+        let mut acc = [0u64; 1];
+        for _ in 0..6 {
+            ctx.comm.bcast(&mut buf, 0);
+            acc[0] = ctx.rank as u64;
+            let max = commutative(|a: &mut [u64], b: &[u64]| a[0] = a[0].max(b[0]));
+            ctx.comm.allreduce_op(&mut acc, max);
+            assert_eq!(acc[0], 7, "allreduce must still see every rank");
+        }
+    })
+    .expect("straggler run");
+    let mask = mask_out.load(Ordering::Relaxed);
+    (stats, mask)
+}
+
+#[test]
+fn straggler_detection_reroots_and_beats_static_plans() {
+    let (static_stats, _) = straggler_coll_run(false);
+    let (adaptive_stats, mask) = straggler_coll_run(true);
+    assert_eq!(
+        mask,
+        1 << 4,
+        "the agreement must name exactly the injected straggler"
+    );
+    assert_eq!(
+        adaptive_stats.faults.expect("fault stats").agreed_avoid_mask,
+        1 << 4,
+        "the agreed mask must be recorded as the control-plane decision"
+    );
+    assert!(
+        adaptive_stats.vtime_ns < static_stats.vtime_ns,
+        "re-rooted trees must not be slower under the straggler \
+         (adaptive {} ns, static {} ns)",
+        adaptive_stats.vtime_ns,
+        static_stats.vtime_ns
+    );
+}
+
+// ------------------------------------------------------------------
+// Shrink and continue: lane-count invariance and convergence.
+// ------------------------------------------------------------------
+
+#[test]
+fn shrink_then_allreduce_bit_identical_across_lanes() {
+    let run = |shards: usize| {
+        let mut cfg = ClusterConfig::new(4, 1, 0);
+        cfg.clock_shards = shards;
+        cfg.deadline = Some(ms(60_000));
+        cfg.faults = Some(FaultsConfig::new(3).with_rank_fail(2, 5_000));
+        let sum = Arc::new(AtomicU64::new(0));
+        let s2 = Arc::clone(&sum);
+        let stats = Universe::run(cfg, move |ctx| {
+            // Everyone past the death instant: the oracle's verdict is
+            // unanimous without any message exchange.
+            ctx.clock.work(6_000);
+            if ctx.rank == 2 {
+                return;
+            }
+            let small = ctx.comm.comm_shrink();
+            assert_eq!(small.size(), 3);
+            let mut v = [(ctx.rank + 1) as u64];
+            small.allreduce_op(&mut v, commutative(|a: &mut [u64], b: &[u64]| a[0] += b[0]));
+            // Survivors are world ranks 0, 1, 3 -> 1 + 2 + 4.
+            assert_eq!(v[0], 7, "allreduce on the shrunk communicator");
+            if small.rank() == 0 {
+                s2.store(v[0], Ordering::Relaxed);
+            }
+        })
+        .expect("shrink allreduce");
+        (stats.vtime_ns, sum.load(Ordering::Relaxed))
+    };
+    let one = run(1);
+    let two = run(2);
+    let four = run(4);
+    assert_eq!(one.1, 7);
+    assert_eq!(one, two, "1 vs 2 clock lanes");
+    assert_eq!(one, four, "1 vs 4 clock lanes");
+}
+
+#[test]
+fn gs_shrink_converges_and_is_lane_invariant() {
+    let outcome = |shards: usize| {
+        let mut b = ShrinkParams::new(4, 1, 2, 6);
+        b.clock_shards = shards;
+        b.deadline = Some(ms(60_000));
+        b.faults = Some(FaultsConfig::new(42).with_rank_fail(1, 20_000));
+        run_gs_shrink(&GsShrinkParams::new(b, 24, 64)).expect("gs shrink")
+    };
+    let one = outcome(1);
+    let two = outcome(2);
+    let four = outcome(4);
+    assert_eq!(one.survivors, 3, "one of four ranks died");
+    for other in [&two, &four] {
+        assert_eq!(one.vtime_ns, other.vtime_ns);
+        assert_eq!(one.checksum.to_bits(), other.checksum.to_bits());
+    }
+
+    // Convergence: the recovered phase restarts from the initial
+    // condition, so it is bit-identical to a clean 3-rank run.
+    let mut rb = ShrinkParams::new(3, 1, 0, 6);
+    rb.deadline = Some(ms(60_000));
+    let reference = run_gs_shrink(&GsShrinkParams::new(rb, 24, 64)).expect("reference");
+    assert!(one.checksum.is_finite() && one.checksum != 0.0);
+    assert_eq!(one.checksum.to_bits(), reference.checksum.to_bits());
+}
+
+#[test]
+fn ifsker_shrink_converges_and_is_lane_invariant() {
+    let outcome = |shards: usize| {
+        let mut b = ShrinkParams::new(4, 1, 1, 3);
+        b.clock_shards = shards;
+        b.deadline = Some(ms(60_000));
+        b.faults = Some(FaultsConfig::new(42).with_rank_fail(1, 20_000));
+        run_ifs_shrink(&IfsShrinkParams::new(b, 144, 2)).expect("ifs shrink")
+    };
+    let one = outcome(1);
+    let two = outcome(2);
+    let four = outcome(4);
+    assert_eq!(one.survivors, 3);
+    for other in [&two, &four] {
+        assert_eq!(one.vtime_ns, other.vtime_ns);
+        assert_eq!(one.checksum.to_bits(), other.checksum.to_bits());
+    }
+
+    let mut rb = ShrinkParams::new(3, 1, 0, 3);
+    rb.deadline = Some(ms(60_000));
+    let reference = run_ifs_shrink(&IfsShrinkParams::new(rb, 144, 2)).expect("reference");
+    assert!(one.checksum.is_finite() && one.checksum != 0.0);
+    assert_eq!(one.checksum.to_bits(), reference.checksum.to_bits());
+}

@@ -1,23 +1,49 @@
 #!/usr/bin/env python3
-"""Warn-only host wall-time delta between two BENCH_fig*.json documents.
+"""Host wall-time delta gate between two BENCH_fig*.json documents.
 
 Usage: bench_delta.py CURRENT.json [BASELINE.json]
 
 Compares the `elapsed_host_ns` of the current emitter run against the
 baseline (typically the artifact committed/downloaded from the previous
-run) and prints a single summary line. Always exits 0: CI runners have
-noisy, heterogeneous hosts, so a wall-time regression is a signal to
-read, never a gate. A missing or unreadable baseline is reported and
-skipped — the first run of a new figure has nothing to compare against.
-Stdlib only.
+run) and prints a single summary line.
+
+Gating: for the perf-trajectory figures (19, 20, 21 — the simulator
+throughput, overlap profiler, and plan-compile benches) a regression
+beyond BENCH_DELTA_MAX_PCT (default 25%) **fails** with exit 1. Other
+figures, and runs with no usable baseline, stay warn-only: the first run
+of a new figure has nothing to compare against, and a missing baseline
+must never block CI.
+
+Overrides: set the BENCH_DELTA_MAX_PCT env var to widen/narrow the gate,
+or set it to 0 (or a negative value) to disable gating entirely — the CI
+workflow exports it from the `bench-delta-override` PR label path, so a
+reviewer who accepts a known slowdown applies that label rather than
+editing the workflow. Stdlib only.
 """
 import json
+import os
 import sys
+
+# Figures whose emitter wall time is a tracked perf trajectory; only
+# these can fail the gate.
+GATED_FIGS = {19, 20, 21}
+DEFAULT_MAX_PCT = 25.0
 
 
 def load(path):
     with open(path, "r", encoding="utf-8") as f:
         return json.load(f)
+
+
+def max_pct():
+    raw = os.environ.get("BENCH_DELTA_MAX_PCT", "")
+    if not raw:
+        return DEFAULT_MAX_PCT
+    try:
+        return float(raw)
+    except ValueError:
+        print(f"bench-delta: ignoring unparsable BENCH_DELTA_MAX_PCT={raw!r}")
+        return DEFAULT_MAX_PCT
 
 
 def main():
@@ -51,9 +77,18 @@ def main():
               f"(baseline has no usable elapsed_host_ns)")
         return
     delta = (cur_ns - base_ns) / base_ns * 100.0
+    limit = max_pct()
+    gated = fig in GATED_FIGS and limit > 0
+    if gated and delta > limit:
+        print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms vs "
+              f"{base_ns / 1e6:.1f} ms baseline ({delta:+.1f}%, "
+              f"FAIL: exceeds +{limit:.0f}% gate — set BENCH_DELTA_MAX_PCT "
+              f"or apply the bench-delta-override label to accept)")
+        sys.exit(1)
     tag = "WARN slower" if delta > 10.0 else ("faster" if delta < -10.0 else "steady")
+    gate = f", gate +{limit:.0f}%" if gated else ""
     print(f"bench-delta: fig {fig}: {cur_ns / 1e6:.1f} ms vs {base_ns / 1e6:.1f} ms "
-          f"baseline ({delta:+.1f}%, {tag})")
+          f"baseline ({delta:+.1f}%, {tag}{gate})")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,15 @@ ROW_SCHEMAS = {
         "closed_form_hits": NUM,
         "host_us": NUM,
     },
+    22: {
+        "scenario": (str,),
+        "app": (str,),
+        "vtime_us": NUM,
+        "baseline_us": NUM,
+        "survivors": NUM,
+        "converged": (bool,),
+        "replay_identical": (bool,),
+    },
 }
 
 # fig16's overlap-profiler stamp: {"blocking": f, "nonblocking": f}.
