@@ -1,0 +1,20 @@
+//! cargo bench target regenerating extension Figure 23: the simulator
+//! throughput overhaul — clock events per host millisecond as the
+//! per-lane event queue (binary heap vs calendar queue) and the lane
+//! count (1/2/4/finer-than-node) are swept over fixed Gauss-Seidel and
+//! IFSKer runs. Every configuration is asserted bit-identical to the
+//! 1-lane binary-heap baseline (checksum, virtual makespan, task and
+//! pause counts, schedule-cache traffic). Scale via
+//! TAMPI_BENCH_SCALE={quick,default,full}; the >=2x speed-up gate is
+//! tunable with TAMPI_FIG23_MIN_SPEEDUP.
+
+use tampi_repro::bench::{self, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let t = std::time::Instant::now();
+    let report = bench::fig23_report(scale);
+    println!("{report}");
+    bench::write_output("fig23_queue_throughput.txt", &report);
+    println!("wall: {:.1}s", t.elapsed().as_secs_f64());
+}

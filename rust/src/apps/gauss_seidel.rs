@@ -126,6 +126,10 @@ pub struct GsParams {
     /// the classic single-heap engine; results are bit-identical across
     /// values). See [`crate::rmpi::ClusterConfig::clock_shards`].
     pub clock_shards: usize,
+    /// Event-queue implementation backing each clock lane (default:
+    /// calendar queue; results are bit-identical across kinds). See
+    /// [`crate::sim::ClockQueueKind`].
+    pub clock_queue: crate::sim::ClockQueueKind,
     pub tracer: Option<Arc<Tracer>>,
     pub graph: Option<Arc<GraphRecorder>>,
     /// Typed span sink (Perfetto export / overlap profiler). Attaching
@@ -162,6 +166,7 @@ impl GsParams {
             residual_every: 0,
             residual_nonblocking: false,
             clock_shards: 1,
+            clock_queue: crate::sim::ClockQueueKind::default(),
             tracer: None,
             graph: None,
             spans: None,
@@ -293,6 +298,7 @@ pub fn run(p: &GsParams) -> Result<GsOutcome, RunError> {
     cc.spans = p.spans.clone();
     cc.deadline = p.deadline;
     cc.clock_shards = p.clock_shards;
+    cc.clock_queue = p.clock_queue;
     let p2 = p.clone();
     let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
         GsVersion::PureMpi => pure_mpi(ctx, &p2, counters),

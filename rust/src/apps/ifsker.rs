@@ -97,6 +97,10 @@ pub struct IfsParams {
     /// the classic single-heap engine; results are bit-identical across
     /// values). See [`crate::rmpi::ClusterConfig::clock_shards`].
     pub clock_shards: usize,
+    /// Event-queue implementation backing each clock lane (default:
+    /// calendar queue; results are bit-identical across kinds). See
+    /// [`crate::sim::ClockQueueKind`].
+    pub clock_queue: crate::sim::ClockQueueKind,
     pub tracer: Option<Arc<Tracer>>,
     /// Typed span sink (Perfetto export / overlap profiler). Attaching
     /// one never changes results — see [`crate::obs`].
@@ -129,6 +133,7 @@ impl IfsParams {
             residual_every: 0,
             residual_nonblocking: false,
             clock_shards: 1,
+            clock_queue: crate::sim::ClockQueueKind::default(),
             tracer: None,
             spans: None,
             deadline: None,
@@ -209,6 +214,7 @@ pub fn run(p: &IfsParams) -> Result<IfsOutcome, RunError> {
     cc.spans = p.spans.clone();
     cc.deadline = p.deadline;
     cc.clock_shards = p.clock_shards;
+    cc.clock_queue = p.clock_queue;
     let p2 = p.clone();
     let stats = Universe::run_with_counters(cc, move |ctx, counters| match p2.version {
         IfsVersion::PureMpi => pure(ctx, &p2, counters),

@@ -64,6 +64,8 @@ pub struct ShrinkParams {
     pub iters: usize,
     pub net: crate::rmpi::NetworkModel,
     pub clock_shards: usize,
+    /// Per-lane event-queue implementation (bit-identical across kinds).
+    pub clock_queue: crate::sim::ClockQueueKind,
     pub delivery_mode: crate::progress::DeliveryMode,
     pub deadline: Option<VNanos>,
     pub faults: Option<FaultsConfig>,
@@ -78,6 +80,7 @@ impl ShrinkParams {
             iters,
             net: crate::rmpi::NetworkModel::default(),
             clock_shards: 1,
+            clock_queue: crate::sim::ClockQueueKind::default(),
             delivery_mode: crate::progress::DeliveryMode::default(),
             deadline: None,
             faults: None,
@@ -92,6 +95,7 @@ impl ShrinkParams {
         let mut cc = ClusterConfig::new(self.nodes, self.ranks_per_node, 0);
         cc.net = self.net;
         cc.clock_shards = self.clock_shards;
+        cc.clock_queue = self.clock_queue;
         cc.delivery_mode = self.delivery_mode;
         cc.deadline = self.deadline;
         cc.faults = self.faults.clone();

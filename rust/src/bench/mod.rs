@@ -1994,6 +1994,218 @@ pub fn fig22_json(scale: Scale) -> String {
     json_doc(22, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
 }
 
+/// One fig23 row: the same deterministic run under one event-queue
+/// implementation and lane count.
+#[derive(Clone, Debug)]
+pub struct QueueRow {
+    /// Application: `gs` or `ifsker`.
+    pub app: String,
+    /// Per-lane event queue: `heap` or `calendar`.
+    pub queue: &'static str,
+    /// Requested clock lanes (the engine may clamp; identity still
+    /// holds, so rows stay comparable).
+    pub shards: usize,
+    /// Virtual makespan — asserted identical across every configuration.
+    pub vtime_ms: f64,
+    pub host_ms: f64,
+    pub clock_events: u64,
+    pub cross_shard_events: u64,
+    /// Batched cross-lane transfers (one lock + one notify each).
+    pub cross_shard_batches: u64,
+    /// The headline: simulator throughput in clock events per host ms.
+    pub events_per_host_ms: f64,
+    /// Throughput speed-up vs the same app's 1-lane binary-heap run
+    /// (the PR-6 engine configuration).
+    pub speedup_vs_baseline: f64,
+}
+
+/// Fig 23 (engine throughput overhaul): events per host millisecond as
+/// the per-lane event queue ({binary heap, calendar queue}) and the
+/// lane count (1 / 2 / 4 / finer-than-node) are swept over fixed
+/// Gauss-Seidel and IFSKer runs. Every configuration is asserted
+/// bit-identical to that app's 1-lane binary-heap baseline — checksum
+/// bits, virtual makespan, task and pause counts, schedule-cache
+/// traffic — so the sweep can only measure host-side speed, never
+/// semantic drift. At `Default`/`Full` scale the best configuration
+/// must clear a minimum throughput speed-up over the baseline (2x by
+/// default; override with `TAMPI_FIG23_MIN_SPEEDUP`, e.g. on noisy
+/// shared runners). `Quick` reports without gating — CI wall-times are
+/// tracked by `scripts/bench_delta.py` instead.
+pub fn fig23(scale: Scale) -> Vec<QueueRow> {
+    use crate::sim::ClockQueueKind;
+
+    let (rows_g, block, iters, grid, fields, steps, nodes, cpn) = match scale {
+        Scale::Quick => (512usize, 128usize, 8usize, 4096usize, 2usize, 4usize, 4usize, 2usize),
+        Scale::Default => (2048, 256, 16, 16384, 4, 8, 8, 4),
+        Scale::Full => (4096, 512, 32, 65536, 8, 16, 16, 8),
+    };
+    // gs (hybrid) runs one rank per node, so its lanes cap at the node
+    // count; ifsker runs cpn ranks per node, so `2*nodes` exercises the
+    // finer-than-node lanes the per-pair lookahead matrix makes legal.
+    let gs_shards: Vec<usize> = {
+        let mut v = vec![1usize, 2, 4, nodes];
+        v.dedup();
+        v.retain(|&s| s <= nodes);
+        v
+    };
+    let ifs_shards: Vec<usize> = vec![1, 2, 4, 2 * nodes];
+
+    let run_gs = |queue: ClockQueueKind, shards: usize| {
+        let mut p = GsParams::new(rows_g, rows_g, block, iters, nodes, cpn, GsVersion::InteropNonBlk);
+        p.compute = Compute::Model;
+        p.clock_shards = shards;
+        p.clock_queue = queue;
+        p.deadline = Some(ms(600_000));
+        let run = gauss_seidel::run(&p).expect("fig23 gs");
+        (run.checksum.to_bits(), run.stats)
+    };
+    let run_ifs = |queue: ClockQueueKind, shards: usize| {
+        let mut p = IfsParams::new(grid, fields, steps, nodes, cpn, IfsVersion::InteropNonBlk);
+        p.compute = Compute::Model;
+        p.clock_shards = shards;
+        p.clock_queue = queue;
+        p.deadline = Some(ms(600_000));
+        let run = ifsker::run(&p).expect("fig23 ifsker");
+        (run.checksum.to_bits(), run.stats)
+    };
+
+    let mut out: Vec<QueueRow> = Vec::new();
+    let apps: [(&str, &dyn Fn(ClockQueueKind, usize) -> (u64, crate::rmpi::RunStats), &[usize]); 2] =
+        [("gs", &run_gs, &gs_shards), ("ifsker", &run_ifs, &ifs_shards)];
+    for (app, run, shards_list) in apps {
+        // (checksum bits, vtime, tasks, pauses, cache, events/host-ms)
+        // of this app's 1-lane binary-heap baseline.
+        let mut base: Option<(u64, u64, u64, u64, crate::rmpi::SchedCacheStats, f64)> = None;
+        for queue in [ClockQueueKind::BinaryHeap, ClockQueueKind::Calendar] {
+            for &shards in shards_list {
+                let (ck, s) = run(queue, shards);
+                let host_ns = s.elapsed_host_ns.max(1);
+                let evts_ms = s.clock_events as f64 / (host_ns as f64 / 1e6);
+                match &base {
+                    None => {
+                        debug_assert!(queue == ClockQueueKind::BinaryHeap && shards == 1);
+                        base = Some((ck, s.vtime_ns, s.tasks, s.pauses, s.sched_cache, evts_ms));
+                    }
+                    Some((bck, vt, tasks, pauses, cache, _)) => {
+                        // The tentpole guarantee: queue impl and lane
+                        // count change host timing only. Any divergence
+                        // is an engine bug, not noise.
+                        let cfg = format!("{app}/{}/{shards}", queue.label());
+                        assert_eq!(ck, *bck, "fig23: checksum diverged at {cfg}");
+                        assert_eq!(s.vtime_ns, *vt, "fig23: vtime diverged at {cfg}");
+                        assert_eq!(s.tasks, *tasks, "fig23: task count diverged at {cfg}");
+                        assert_eq!(s.pauses, *pauses, "fig23: pause count diverged at {cfg}");
+                        assert_eq!(s.sched_cache, *cache, "fig23: cache traffic diverged at {cfg}");
+                    }
+                }
+                let base_evts_ms = base.as_ref().unwrap().5;
+                out.push(QueueRow {
+                    app: app.to_string(),
+                    queue: queue.label(),
+                    shards,
+                    vtime_ms: s.vtime_ns as f64 / 1e6,
+                    host_ms: host_ns as f64 / 1e6,
+                    clock_events: s.clock_events,
+                    cross_shard_events: s.cross_shard_events,
+                    cross_shard_batches: s.cross_shard_batches,
+                    events_per_host_ms: evts_ms,
+                    speedup_vs_baseline: evts_ms / base_evts_ms,
+                });
+            }
+        }
+    }
+
+    // Acceptance gate: the overhauled engine's best configuration must
+    // beat the PR-6 baseline by the required factor. Host wall-times on
+    // `Quick` CI runs are too short to gate on, so the threshold only
+    // applies at `Default`/`Full` (and stays operator-overridable).
+    let min_speedup: f64 = std::env::var("TAMPI_FIG23_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(match scale {
+            Scale::Quick => 0.0,
+            Scale::Default | Scale::Full => 2.0,
+        });
+    if min_speedup > 0.0 {
+        let best = out
+            .iter()
+            .map(|r| r.speedup_vs_baseline)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best >= min_speedup,
+            "fig23: best events/host-ms speedup {best:.2} below the required {min_speedup:.2}x \
+             (set TAMPI_FIG23_MIN_SPEEDUP to adjust)"
+        );
+    }
+    out
+}
+
+/// Render the fig23 report table.
+pub fn fig23_report(scale: Scale) -> String {
+    let rows = fig23(scale);
+    let mut out = String::from(
+        "=== Figure 23: event-queue and lane sweep — simulator throughput ===\n\
+         (fixed gs + ifsker runs; every configuration asserted bit-identical to\n\
+         the 1-lane binary-heap baseline: checksum, vtime, tasks, pauses, cache)\n",
+    );
+    out.push_str(&format!(
+        "{:<8} {:<9} {:>7} {:>10} {:>9} {:>11} {:>11} {:>9} {:>13} {:>8}\n",
+        "app", "queue", "shards", "vtime_ms", "host_ms", "clock_evts", "cross_evts", "batches",
+        "evts/host_ms", "speedup"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<8} {:<9} {:>7} {:>10.2} {:>9.1} {:>11} {:>11} {:>9} {:>13.0} {:>8.2}\n",
+            r.app,
+            r.queue,
+            r.shards,
+            r.vtime_ms,
+            r.host_ms,
+            r.clock_events,
+            r.cross_shard_events,
+            r.cross_shard_batches,
+            r.events_per_host_ms,
+            r.speedup_vs_baseline
+        ));
+    }
+    out.push_str(
+        "(calendar queue: O(1) near-horizon buckets + far heap, popped in the\n\
+         same (at, seq) total order as the binary heap; finer-than-node lanes\n\
+         run under the per-lane-pair lookahead matrix)\n",
+    );
+    out
+}
+
+/// Fig 23 as JSON: `rows[] = {{app, queue, shards, vtime_ms, host_ms,
+/// clock_events, cross_shard_events, cross_shard_batches,
+/// events_per_host_ms, speedup_vs_baseline}}`.
+pub fn fig23_json(scale: Scale) -> String {
+    let wall = std::time::Instant::now();
+    let rows: Vec<String> = fig23(scale)
+        .into_iter()
+        .map(|r| {
+            format!(
+                "{{\"app\":\"{}\",\"queue\":\"{}\",\"shards\":{},\"vtime_ms\":{},\
+                 \"host_ms\":{},\"clock_events\":{},\"cross_shard_events\":{},\
+                 \"cross_shard_batches\":{},\"events_per_host_ms\":{},\
+                 \"speedup_vs_baseline\":{}}}",
+                json_escape(&r.app),
+                r.queue,
+                r.shards,
+                r.vtime_ms,
+                r.host_ms,
+                r.clock_events,
+                r.cross_shard_events,
+                r.cross_shard_batches,
+                r.events_per_host_ms,
+                r.speedup_vs_baseline
+            )
+        })
+        .collect();
+    let elapsed = wall.elapsed().as_nanos() as u64;
+    json_doc(23, scale, elapsed, format!("\"rows\":[{}]", rows.join(",")))
+}
+
 /// Sweep presets. The simulated cluster reproduces the paper's *shape*;
 /// `Full` runs the paper's actual sizes (64Kx64K, 48 cores/node, up to 64
 /// nodes) and takes correspondingly long.

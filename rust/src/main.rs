@@ -24,7 +24,9 @@
 //! congestion knob) + `--eager <bytes>` (rendezvous threshold), so
 //! congestion regimes are reachable without recompiling. Both also take
 //! `--clock-shards N` (parallel simulation lanes; results bit-identical
-//! to 1 — see `crate::sim`) and `--trace <path>` with `--trace-format
+//! to 1 — see `crate::sim`), `--clock-queue heap|calendar` (per-lane
+//! event-queue implementation; also bit-identical — calendar is the
+//! default), and `--trace <path>` with `--trace-format
 //! csv|gantt|perfetto` (`csv` keeps the classic CSV dump + printed
 //! Gantt; `perfetto` records typed spans — see `crate::obs` — and
 //! writes a Chrome/Perfetto `trace_event` JSON). `figures
@@ -111,6 +113,16 @@ fn delivery_of(m: &HashMap<String, String>) -> tampi_repro::progress::DeliveryMo
             eprintln!("unknown --delivery {other} (direct|sharded)");
             std::process::exit(2);
         }
+    }
+}
+
+fn clock_queue_of(m: &HashMap<String, String>) -> tampi_repro::sim::ClockQueueKind {
+    match m.get("clock-queue").map(String::as_str) {
+        None => tampi_repro::sim::ClockQueueKind::default(),
+        Some(v) => tampi_repro::sim::ClockQueueKind::parse(v).unwrap_or_else(|| {
+            eprintln!("unknown --clock-queue {v} (heap|calendar)");
+            std::process::exit(2);
+        }),
     }
 }
 
@@ -252,12 +264,14 @@ fn cmd_inject(app: &str, m: &HashMap<String, String>) {
     };
     let mut base = ShrinkParams::new(nodes, 1, pre, iters);
     base.clock_shards = get(m, "clock-shards", 1usize);
+    base.clock_queue = clock_queue_of(m);
     base.delivery_mode = delivery_of(m);
     base.deadline = Some(ms(get(m, "deadline-ms", 600_000u64)));
     base.faults = Some(faults);
     let ref_nodes = if kind == "rank-fail" { nodes - 1 } else { nodes };
     let mut refp = ShrinkParams::new(ref_nodes, 1, 0, iters);
     refp.clock_shards = base.clock_shards;
+    refp.clock_queue = base.clock_queue;
     refp.delivery_mode = base.delivery_mode;
     refp.deadline = base.deadline;
 
@@ -343,6 +357,7 @@ fn cmd_gs(m: HashMap<String, String>) {
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
     p.clock_shards = get(&m, "clock-shards", 1usize);
+    p.clock_queue = clock_queue_of(&m);
     p.cell_ns = get(&m, "cell-ns", p.cell_ns);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
@@ -419,6 +434,7 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     p.residual_every = get(&m, "residual-every", 0usize);
     p.residual_nonblocking = residual_nonblocking_of(&m);
     p.clock_shards = get(&m, "clock-shards", 1usize);
+    p.clock_queue = clock_queue_of(&m);
     apply_net_overrides(&m, &mut p.net);
     p.deadline = Some(ms(get(&m, "deadline-ms", 600_000u64)));
     let fmt = trace_format_of(&m);
@@ -463,8 +479,9 @@ fn cmd_ifsker(m: HashMap<String, String>) {
     dump_trace(&m, fmt, &tracer, &spans);
 }
 
-const KNOWN_FIGS: [&str; 16] = [
-    "8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "22", "all",
+const KNOWN_FIGS: [&str; 17] = [
+    "8", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "22", "23",
+    "all",
 ];
 
 fn cmd_figures(m: HashMap<String, String>) {
@@ -478,7 +495,7 @@ fn cmd_figures(m: HashMap<String, String>) {
     // nothing — or everything.
     if !KNOWN_FIGS.contains(&which) {
         eprintln!(
-            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 21 22 | all)"
+            "unknown figure {which} (valid: 8 9 10 11 12 13 14 15 16 17 18 19 20 21 22 23 | all)"
         );
         std::process::exit(2);
     }
@@ -505,9 +522,10 @@ fn cmd_figures(m: HashMap<String, String>) {
             "20" => bench::fig20_json(scale),
             "21" => bench::fig21_json(scale),
             "22" => bench::fig22_json(scale),
+            "23" => bench::fig23_json(scale),
             other => {
                 eprintln!(
-                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20|21|22), got {other}"
+                    "--json requires a machine-readable figure (--fig 15|16|17|18|19|20|21|22|23), got {other}"
                 );
                 std::process::exit(2);
             }
@@ -582,6 +600,12 @@ fn cmd_figures(m: HashMap<String, String>) {
                 println!("{report}");
                 let p = bench::write_output("fig22_faults.txt", &report);
                 println!("fig22 -> {}", p.display());
+            }
+            "23" => {
+                let report = bench::fig23_report(scale);
+                println!("{report}");
+                let p = bench::write_output("fig23_queue_throughput.txt", &report);
+                println!("fig23 -> {}", p.display());
             }
             other => {
                 let rows = match other {

@@ -61,6 +61,16 @@ struct Node {
     next: *mut Node,
 }
 
+thread_local! {
+    /// Reusable drain scratch. Drains run on the clock thread and fire
+    /// actions strictly sequentially (no reentrancy: a continuation's
+    /// deposit schedules a *new* event, it never drains inline), so one
+    /// buffer per thread suffices and its capacity is retained across
+    /// batches instead of reallocating per drain.
+    static DRAIN_SCRATCH: std::cell::RefCell<Vec<(Continuation, Status)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// One virtual rank's completion shard.
 pub struct Shard {
     rank: u32,
@@ -140,8 +150,11 @@ impl Shard {
         if head.is_null() {
             return;
         }
-        // Reverse the LIFO chain back into deposit order.
-        let mut batch: Vec<(Continuation, Status)> = Vec::new();
+        // Reverse the LIFO chain back into deposit order, reusing the
+        // thread's scratch buffer (capacity survives across batches).
+        let mut batch: Vec<(Continuation, Status)> =
+            DRAIN_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        debug_assert!(batch.is_empty());
         while !head.is_null() {
             // SAFETY: detached exclusively by the swap above.
             let node = unsafe { Box::from_raw(head) };
@@ -170,9 +183,10 @@ impl Shard {
         }
         let scope = DeferredEnqueue::begin();
         let decs = DeferredEventDecs::begin();
-        for (f, st) in batch {
+        for (f, st) in batch.drain(..) {
             f(st);
         }
+        DRAIN_SCRATCH.with(|s| *s.borrow_mut() = batch);
         // Apply coalesced event decrements first: a released successor's
         // enqueue must join the bulk insert below.
         decs.finish();

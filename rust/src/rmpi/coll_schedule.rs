@@ -199,16 +199,74 @@ impl<T> UserRef<T> {
     }
 }
 
+/// Inline small-vec for round posting. Most collective rounds post at
+/// most four requests (tree fan-in/out edges, a leader's up/down pair),
+/// so the common case allocates nothing on the heap; wide rounds (flat
+/// alltoallv, large leader exchanges) spill into a plain `Vec` and
+/// behave exactly as before. Hand-rolled rather than pulled from a
+/// crate: the repo carries no external small-vec dependency.
+pub(crate) struct ReqVec {
+    inline: [Option<Request>; ReqVec::INLINE],
+    len: usize,
+    spill: Vec<Request>,
+}
+
+impl ReqVec {
+    const INLINE: usize = 4;
+
+    pub(crate) fn new() -> ReqVec {
+        ReqVec { inline: [None, None, None, None], len: 0, spill: Vec::new() }
+    }
+
+    /// A single-request round (the overwhelmingly common leaf case).
+    pub(crate) fn one(r: Request) -> ReqVec {
+        let mut v = ReqVec::new();
+        v.push(r);
+        v
+    }
+
+    pub(crate) fn push(&mut self, r: Request) {
+        if self.len < Self::INLINE {
+            self.inline[self.len] = Some(r);
+        } else {
+            self.spill.push(r);
+        }
+        self.len += 1;
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether this round overflowed the inline slots — the complement
+    /// drives the `rounds_posted_inline` allocation-reuse counter.
+    pub(crate) fn spilled(&self) -> bool {
+        !self.spill.is_empty()
+    }
+}
+
+impl IntoIterator for ReqVec {
+    type Item = Request;
+    type IntoIter = std::iter::Chain<
+        std::iter::Flatten<std::array::IntoIter<Option<Request>, { ReqVec::INLINE }>>,
+        std::vec::IntoIter<Request>,
+    >;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.inline.into_iter().flatten().chain(self.spill)
+    }
+}
+
 /// What one round produced: the requests gating the next round, plus
 /// buffers that must stay alive until this round's requests complete
 /// (kept on the schedule, freed at final completion).
 pub(crate) struct RoundPost {
-    pub reqs: Vec<Request>,
+    pub reqs: ReqVec,
     pub retain: Vec<Box<dyn Any + Send>>,
 }
 
 impl RoundPost {
-    fn bare(reqs: Vec<Request>) -> RoundPost {
+    fn bare(reqs: ReqVec) -> RoundPost {
         RoundPost { reqs, retain: Vec::new() }
     }
 }
@@ -345,6 +403,11 @@ impl CollSchedule {
             }
             if !post.retain.is_empty() {
                 self.retain.lock().unwrap().extend(post.retain);
+            }
+            if !post.reqs.spilled() {
+                // Host-side diagnostic: this round's requests fit the
+                // inline slots, so posting allocated no request vector.
+                self.comm.uni.reuse_rounds_inline.fetch_add(1, Ordering::Relaxed);
             }
             let mut pending: Vec<Request> = Vec::with_capacity(post.reqs.len());
             for r in post.reqs {
@@ -497,7 +560,7 @@ pub(crate) fn instantiate_barrier(comm: &Comm, plan: &TokenPlan, seq: u64) -> Ve
             let recvs: Vec<(usize, i32)> =
                 r.recvs.iter().map(|&(from, ph)| (from, coll_tag(seq, ph))).collect();
             let run: Round = Box::new(move || {
-                let mut reqs = Vec::with_capacity(sends.len() + recvs.len());
+                let mut reqs = ReqVec::new();
                 let mut retain: Vec<Box<dyn Any + Send>> = Vec::new();
                 for &(to, tag) in &sends {
                     reqs.push(comm.isend_ctx(&[1u8], to, tag, false, Ctx::Coll));
@@ -534,14 +597,14 @@ pub(crate) fn instantiate_bcast<T: Pod>(
             // SAFETY: i-collective buffer contract (untouched by the
             // caller until completion); no prior round aliases it.
             let dst = unsafe { buf.slice_mut() };
-            RoundPost::bare(vec![comm.irecv_ctx(dst, parent as i32, tag, Ctx::Coll)])
+            RoundPost::bare(ReqVec::one(comm.irecv_ctx(dst, parent as i32, tag, Ctx::Coll)))
         }));
     }
     {
         let comm = comm.clone();
         let children = plan.send_to.clone();
         rounds.push(Box::new(move || {
-            let mut reqs = Vec::with_capacity(children.len());
+            let mut reqs = ReqVec::new();
             for &dst in &children {
                 // SAFETY: the parent's payload landed in the previous
                 // round (or this is the root's own data).
@@ -586,7 +649,7 @@ pub(crate) fn instantiate_reduce<T: Pod>(
             for _ in &children {
                 g.push(seed.map_or_else(Vec::new, |s| vec![s; len]));
             }
-            let mut reqs = Vec::new();
+            let mut reqs = ReqVec::new();
             for (i, &child) in children.iter().enumerate() {
                 reqs.push(comm.irecv_ctx(&mut g[i][..], child as i32, tag, Ctx::Coll));
             }
@@ -605,7 +668,7 @@ pub(crate) fn instantiate_reduce<T: Pod>(
                 op(&mut *acc, &t[..]); // fixed child order: deterministic rounding
             }
             drop(g);
-            let mut reqs = Vec::new();
+            let mut reqs = ReqVec::new();
             if let Some(parent) = parent {
                 let src = unsafe { buf.slice() };
                 reqs.push(comm.isend_ctx(src, parent, tag, false, Ctx::Coll));
@@ -637,7 +700,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
             let run: Round = Box::new(move || {
                 // SAFETY: read during launch; isend copies eagerly.
                 let src = unsafe { send.slice() };
-                RoundPost::bare(vec![comm.isend_ctx(src, to, tag, false, Ctx::Coll)])
+                RoundPost::bare(ReqVec::one(comm.isend_ctx(src, to, tag, false, Ctx::Coll)))
             });
             vec![run]
         }
@@ -660,7 +723,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
                 for _ in &members {
                     g.push(seed.map_or_else(Vec::new, |s| vec![s; chunk]));
                 }
-                let mut reqs = Vec::new();
+                let mut reqs = ReqVec::new();
                 for (i, &m) in members.iter().enumerate() {
                     reqs.push(c0.irecv_ctx(&mut g[i + 1][..], m as i32, tag, Ctx::Coll));
                 }
@@ -677,7 +740,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
                     block.extend_from_slice(part);
                 }
                 drop(g);
-                RoundPost::bare(vec![c1.isend_ctx(&block, root, tag, false, Ctx::Coll)])
+                RoundPost::bare(ReqVec::one(c1.isend_ctx(&block, root, tag, false, Ctx::Coll)))
             });
             vec![r0, r1]
         }
@@ -690,7 +753,7 @@ pub(crate) fn instantiate_gather<T: Pod>(
             let blocks: Vec<(usize, usize, usize)> =
                 blocks.iter().map(|b| (b.leader, b.first_rank, b.nranks)).collect();
             let run: Round = Box::new(move || {
-                let mut reqs = Vec::new();
+                let mut reqs = ReqVec::new();
                 // SAFETY: per-rank regions are disjoint by construction;
                 // the send view is read during launch only.
                 let own = unsafe { recv.region_mut(root * chunk, chunk) };
@@ -743,7 +806,7 @@ pub(crate) fn instantiate_alltoallv_flat<T: Pod>(
         let rank = comm.rank;
         // SAFETY: read during launch only; isend copies eagerly.
         let send = unsafe { send.slice() };
-        let mut reqs = Vec::with_capacity(2 * n);
+        let mut reqs = ReqVec::new(); // spills past 4: wide pairwise round
         // Receives first (deterministic matching), in displacement order.
         for &r in &order {
             // SAFETY: regions validated disjoint above; caller contract.
@@ -797,10 +860,9 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
             // (i-collective contract).
             let s = unsafe { send.slice() };
             let r = unsafe { recv.slice_mut() };
-            RoundPost::bare(vec![
-                comm.isend_ctx(s, leader, t_up, false, Ctx::Coll),
-                comm.irecv_ctx(r, leader as i32, t_down, Ctx::Coll),
-            ])
+            let mut reqs = ReqVec::one(comm.isend_ctx(s, leader, t_up, false, Ctx::Coll));
+            reqs.push(comm.irecv_ctx(r, leader as i32, t_down, Ctx::Coll));
+            RoundPost::bare(reqs)
         });
         return vec![run];
     }
@@ -826,7 +888,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
         for _ in 1..m0.len() {
             g.push(seed.map_or_else(Vec::new, |s| vec![s; n * chunk]));
         }
-        let mut reqs = Vec::new();
+        let mut reqs = ReqVec::new();
         for (i, &m) in m0.iter().enumerate().skip(1) {
             reqs.push(c0.irecv_ctx(&mut g[i][..], m as i32, t_up, Ctx::Coll));
         }
@@ -839,7 +901,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
     let nl1 = nodes_list.clone();
     let r1: Round = Box::new(move || {
         let g = g1.lock().unwrap();
-        let mut reqs = Vec::new();
+        let mut reqs = ReqVec::new();
         // Post the inbound block receives first (deterministic
         // matching), then ship ours. Peers send from their own round 1,
         // which they reach independently of ours — no circular wait.
@@ -880,7 +942,7 @@ pub(crate) fn instantiate_alltoall_hier<T: Pod>(
         let g = gathered.lock().unwrap();
         let inb = inbound.lock().unwrap();
         let idx_in = |b: usize, r: usize| r - nodes_list[b][0];
-        let mut reqs = Vec::new();
+        let mut reqs = ReqVec::new();
         for (j, &m) in members.iter().enumerate() {
             let mut out: Vec<T> = Vec::with_capacity(n * chunk);
             for s in 0..n {

@@ -24,9 +24,12 @@ pub(crate) struct UniState {
     pub ports: Ports,
     /// rank -> node id.
     pub node_of: Vec<usize>,
-    /// rank -> clock lane (all zeros on a single-lane clock). Nodes are
-    /// partitioned into contiguous lane blocks, so cross-lane traffic
-    /// is always inter-node (the lookahead precondition).
+    /// rank -> clock lane (all zeros on a single-lane clock). Up to the
+    /// node count, nodes are partitioned into contiguous lane blocks;
+    /// beyond it, ranks are split directly (finer-than-node lanes) —
+    /// every lane pair is bounded by its entry in the clock's per-pair
+    /// lookahead matrix (intra-node wire latency for lanes sharing a
+    /// node, inter-node otherwise).
     pub lane_of: Vec<usize>,
     /// How the collective schedule compiler sees the node hierarchy.
     pub topology: TopologyMode,
@@ -62,6 +65,13 @@ pub(crate) struct UniState {
     /// communicator — the collective-safe allocation rule of
     /// [`Comm::comm_shrink`], mirroring `dup_map`.
     pub shrink_map: Mutex<std::collections::HashMap<(usize, u64), (usize, usize)>>,
+    /// `ReqState` allocations served from the thread-local recycle pool
+    /// (surfaced as [`super::RunStats::alloc_reuse`]). Per-universe, not
+    /// global: concurrent test universes must not cross-count.
+    pub reuse_req_states: AtomicU64,
+    /// Collective rounds posted entirely inline (no small-vec spill;
+    /// surfaced as [`super::RunStats::alloc_reuse`]).
+    pub reuse_rounds_inline: AtomicU64,
 }
 
 impl UniState {
@@ -340,7 +350,16 @@ impl Comm {
     /// thread completes it.
     pub(crate) fn mk_req_state(&self, label: &'static str) -> Arc<ReqState> {
         let wrank = self.world_rank();
-        let s = Arc::new(ReqState::default());
+        // Hot path: recycle a completed, unaliased ReqState from the
+        // thread-local pool when one is available (see `rmpi::request`);
+        // fall back to a fresh allocation otherwise.
+        let s = match ReqState::recycled() {
+            Some(s) => {
+                self.uni.reuse_req_states.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => Arc::new(ReqState::default()),
+        };
         s.set_lane(self.uni.lane_of[wrank]);
         if let Some(shard) = self.uni.progress.shard_for(wrank) {
             s.route_through(shard);

@@ -41,6 +41,16 @@ use std::sync::{Arc, Mutex};
 
 use crate::sim::{Clock, VNanos};
 
+thread_local! {
+    /// Reusable resolve-pass buffer (populated per thread that runs
+    /// resolve passes — in practice the clock lane drivers): avoids one
+    /// `Vec` allocation per pass on the hot delivery path. Taken with
+    /// `mem::take` for the duration of a pass and put back afterwards
+    /// with its grown capacity retained.
+    static DUE_SCRATCH: std::cell::RefCell<Vec<(Booking, VNanos)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Deterministic identity of one booked message. Orders same-instant
 /// arrivals: the send instant, then source rank, then tag, then the
 /// source's send sequence number (program order for same-thread sends;
@@ -154,11 +164,14 @@ pub(crate) struct Port {
     /// Observability bundle: `PortBusy` service spans when a sink is
     /// attached, queueing-delay histogram + backlog gauge always.
     obs: Arc<crate::obs::RunObs>,
+    /// Universe-wide scratch-reuse counter (shared with [`Ports`];
+    /// surfaced as `RunStats::alloc_reuse.booking_scratch_reuses`).
+    scratch_reuses: Arc<AtomicU64>,
 }
 
 impl Port {
-    fn new(rank: u32, obs: Arc<crate::obs::RunObs>) -> Port {
-        Port { inner: Mutex::new(PortInner::default()), rank, obs }
+    fn new(rank: u32, obs: Arc<crate::obs::RunObs>, scratch_reuses: Arc<AtomicU64>) -> Port {
+        Port { inner: Mutex::new(PortInner::default()), rank, obs, scratch_reuses }
     }
 
     fn book(
@@ -195,7 +208,12 @@ impl Port {
     /// deadlines are a pure function of virtual history.
     fn resolve_due(&self, clock: &Clock, rx_ns: u64) {
         let now = clock.now();
-        let mut due = Vec::new();
+        // Reuse the thread's scratch buffer instead of allocating per
+        // pass (a warm buffer's capacity survives the round trip).
+        let mut due = DUE_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        if due.capacity() > 0 {
+            self.scratch_reuses.fetch_add(1, Ordering::Relaxed);
+        }
         {
             let mut g = self.inner.lock().unwrap();
             while let Some((&(arrival, _), _)) = g.pending.first_key_value() {
@@ -222,9 +240,10 @@ impl Port {
         }
         // Fire outside the port lock: waiters may complete requests,
         // whose continuations may post new sends (which book ports).
-        for (b, ready) in due {
+        for (b, ready) in due.drain(..) {
             b.resolve(ready);
         }
+        DUE_SCRATCH.with(|s| *s.borrow_mut() = due);
     }
 }
 
@@ -241,6 +260,9 @@ pub(crate) struct Ports {
     send_seq: Vec<AtomicU64>,
     /// rank -> clock lane (all zeros on a single-lane clock).
     lane_of: Vec<usize>,
+    /// Resolve passes that reused a warm scratch buffer (see
+    /// [`Port::resolve_due`]); per-universe, shared by every port.
+    scratch_reuses: Arc<AtomicU64>,
 }
 
 impl Ports {
@@ -264,15 +286,23 @@ impl Ports {
         );
         assert_eq!(lane_of.len(), size, "lane map must cover every rank");
         assert_eq!(rx_extra.len(), size, "rx extras must cover every rank");
+        let scratch_reuses = Arc::new(AtomicU64::new(0));
         Ports {
             rx_ns: net.rx_ns,
             rx_extra,
             ports: (0..size)
-                .map(|r| Arc::new(Port::new(r as u32, obs.clone())))
+                .map(|r| Arc::new(Port::new(r as u32, obs.clone(), scratch_reuses.clone())))
                 .collect(),
             send_seq: (0..size).map(|_| AtomicU64::new(0)).collect(),
             lane_of,
+            scratch_reuses,
         }
+    }
+
+    /// Resolve passes that reused a warm scratch buffer (surfaced as
+    /// `RunStats::alloc_reuse.booking_scratch_reuses`).
+    pub fn scratch_reuses(&self) -> u64 {
+        self.scratch_reuses.load(Ordering::Relaxed)
     }
 
     /// Next send sequence number of `src` (program order per thread).

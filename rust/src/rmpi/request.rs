@@ -21,6 +21,21 @@ use crate::sim::{Clock, WaitQueue};
 /// Sentinel for "no clock lane stamped" (bare requests, unit tests).
 const NO_LANE: usize = usize::MAX;
 
+/// Max recycled `ReqState`s parked per thread (bounds idle memory).
+const REQ_POOL_CAP: usize = 64;
+
+thread_local! {
+    /// Recycle pool for completed, fully-unaliased request states: the
+    /// hot p2p/collective paths allocate one `Arc<ReqState>` per
+    /// operation, and virtually all of them die completed with no
+    /// outstanding clones — `Drop for Request` resets and parks them
+    /// here, `Comm::mk_req_state` reuses them. Thread-local so no lock
+    /// is ever taken; entries are only ever pre-reset and unaliased
+    /// (`Arc::get_mut` proved sole ownership at park time).
+    static REQ_POOL: std::cell::RefCell<Vec<Arc<ReqState>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Completion status of a receive (source/tag/len of the matched message).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Status {
@@ -231,6 +246,35 @@ impl ReqState {
         }
     }
 
+    /// Reset a sole-owned state back to its `Default` shape so it can be
+    /// recycled. Requires `&mut self` (the caller proved sole ownership
+    /// via `Arc::get_mut`): every lock is uncontended by construction.
+    /// Clearing `waiters` is sound because a completed request's
+    /// `notify_all` already woke every queued token; clears retain the
+    /// vector capacities, which is the point of recycling.
+    fn reset(&mut self) {
+        *self.completed.get_mut() = false;
+        self.waiters.clear();
+        *self.status.get_mut().unwrap() = Status::default();
+        *self.lane.get_mut() = NO_LANE;
+        self.on_complete.get_mut().unwrap().clear();
+        *self.shard.get_mut().unwrap() = None;
+        *self.obs.get_mut().unwrap() = None;
+        *self.error.get_mut().unwrap() = None;
+        *self.fault_gauge.get_mut().unwrap() = None;
+    }
+
+    /// Pop a recycled state from the calling thread's pool, if any.
+    /// Entries are already reset; the caller re-stamps lane/shard/obs
+    /// exactly as it would on a fresh allocation.
+    pub(crate) fn recycled() -> Option<Arc<ReqState>> {
+        let s = REQ_POOL.try_with(|p| p.borrow_mut().pop()).ok().flatten();
+        if let Some(s) = &s {
+            debug_assert!(!s.is_completed(), "recycled ReqState not reset");
+        }
+        s
+    }
+
     /// Attach a continuation; runs it inline if the request has already
     /// completed (see the field docs for the race-free protocol).
     pub(crate) fn attach(&self, f: Continuation) {
@@ -371,6 +415,30 @@ impl Request {
             if let Some(i) = early {
                 return i;
             }
+        }
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // Recycle completed, fully-unaliased states: `Arc::get_mut`
+        // succeeding proves this is the last strong ref *and* no weak
+        // ref (e.g. the fault tracker's `Weak<ReqState>`) is
+        // outstanding, so nobody can ever reach the state again —
+        // resetting and re-issuing it is invisible. Aliased or
+        // incomplete states just drop normally. `try_with` guards
+        // against TLS teardown order on exiting threads.
+        if !self.0.is_completed() {
+            return;
+        }
+        if let Some(st) = Arc::get_mut(&mut self.0) {
+            st.reset();
+            let _ = REQ_POOL.try_with(|p| {
+                let mut p = p.borrow_mut();
+                if p.len() < REQ_POOL_CAP {
+                    p.push(self.0.clone());
+                }
+            });
         }
     }
 }

@@ -8,7 +8,7 @@ use std::time::Duration;
 use crate::nanos::runtime::RuntimeCosts;
 use crate::nanos::{CompletionMode, Runtime, RuntimeConfig};
 use crate::progress::{DeliveryMode, ProgressEngine};
-use crate::sim::{Clock, VNanos};
+use crate::sim::{Clock, ClockQueueKind, VNanos};
 use crate::trace::{GraphRecorder, Tracer};
 
 use super::comm::{Comm, UniState};
@@ -53,13 +53,22 @@ pub struct ClusterConfig {
     /// (default `true`; `false` recompiles every call — the cold
     /// baseline of fig17's cache sweep).
     pub sched_cache: bool,
-    /// Clock lanes the simulated nodes are sharded over (default 1 —
-    /// the classic single-heap engine). Nodes are partitioned into
-    /// contiguous blocks, one lane per block, synchronized by
-    /// conservative lookahead (`NetworkModel::inter_latency_ns`);
-    /// results are bit-identical to 1 lane at equal seeds. Clamped to
-    /// the node count. See [`crate::sim`].
+    /// Clock lanes the simulated ranks are sharded over (default 1 —
+    /// the classic single-queue engine). Up to the node count, nodes
+    /// are partitioned into contiguous blocks, one lane per block;
+    /// beyond it, ranks are partitioned directly (finer-than-node
+    /// lanes), which is legal because the conservative lookahead is a
+    /// per-lane-pair matrix derived from the `NetworkModel` (intra-node
+    /// wire latency for lanes sharing a node, inter-node otherwise).
+    /// Results are bit-identical to 1 lane at equal seeds. Clamped to
+    /// the rank count (to the node count when the intra-node latency is
+    /// zero, e.g. [`NetworkModel::ideal`]). See [`crate::sim`].
     pub clock_shards: usize,
+    /// Event-queue implementation of each clock lane (default
+    /// [`ClockQueueKind::Calendar`]; `BinaryHeap` keeps the PR-6 engine
+    /// selectable for A/B benchmarking — fig23 asserts they are
+    /// bit-identical).
+    pub clock_queue: ClockQueueKind,
     /// Span sink for the observability layer (default `None` — no span
     /// recording; the metrics registry runs regardless). Attaching one
     /// never changes results: emission sites only read virtual time.
@@ -91,6 +100,7 @@ impl ClusterConfig {
             topology: TopologyMode::default(),
             sched_cache: true,
             clock_shards: 1,
+            clock_queue: ClockQueueKind::default(),
             spans: None,
             faults: None,
         }
@@ -111,6 +121,12 @@ impl ClusterConfig {
     /// Builder-style clock-shard override (bench/test convenience).
     pub fn with_clock_shards(mut self, shards: usize) -> Self {
         self.clock_shards = shards;
+        self
+    }
+
+    /// Builder-style clock-queue override (bench/test convenience).
+    pub fn with_clock_queue(mut self, queue: ClockQueueKind) -> Self {
+        self.clock_queue = queue;
         self
     }
 
@@ -201,6 +217,14 @@ pub struct RunStats {
     /// Events pushed into a clock lane other than the pusher's own
     /// (0 on a single-lane clock).
     pub cross_shard_events: u64,
+    /// Staged cross-lane flush batches: each covers one lock
+    /// acquisition and one notify for a whole group of same-batch
+    /// events into one destination lane (0 on a single-lane clock).
+    pub cross_shard_batches: u64,
+    /// Allocation-reuse counters from the simulator's hot paths (the
+    /// PR-10 allocation-free-hot-paths work): how often a pooled or
+    /// scratch structure was reused instead of freshly allocated.
+    pub alloc_reuse: AllocReuseStats,
     /// Host wall-clock time of the run in ns (setup through clock
     /// teardown) — the denominator of simulator throughput.
     pub elapsed_host_ns: u64,
@@ -213,6 +237,22 @@ pub struct RunStats {
     /// log2-bucket histograms (completion latency, port queueing delay,
     /// pause duration). Always populated; see [`crate::obs::metrics`].
     pub metrics: crate::obs::metrics::MetricsSnapshot,
+}
+
+/// Hot-path allocation-reuse counters (host-side diagnostics — reuse
+/// never feeds virtual time; bit-identity is guarded by the clock-shard
+/// tests regardless of pool hit rates).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocReuseStats {
+    /// `ReqState` allocations satisfied from the thread-local recycle
+    /// pool instead of a fresh `Arc` (see `rmpi::request`).
+    pub req_states_recycled: u64,
+    /// `Ports::resolve_due` passes that reused the thread-local due
+    /// buffer's retained capacity instead of allocating.
+    pub booking_scratch_reuses: u64,
+    /// Collective rounds whose request set fit the inline small-vec
+    /// (no spill allocation; see `rmpi::coll_schedule`).
+    pub rounds_posted_inline: u64,
 }
 
 /// Cluster-wide schedule-cache counters (see
@@ -304,19 +344,56 @@ impl Universe {
         let size = cfg.size();
         assert!(size > 0, "empty cluster");
         let host_start = std::time::Instant::now();
-        // Shard the clock over contiguous node blocks: cross-lane traffic
-        // is then always inter-node, so the conservative lookahead is the
-        // inter-node wire latency (see `crate::sim` module docs).
-        let shards = cfg.clock_shards.clamp(1, cfg.nodes);
-        let (clock, clock_handles) = Clock::start_sharded(shards, cfg.net.inter_latency_ns);
+        // Shard the clock over contiguous rank blocks. Up to the node
+        // count, lanes align with node blocks (cross-lane traffic is
+        // then always inter-node); beyond it, ranks are split directly
+        // and intra-node lane pairs are bounded by the intra-node wire
+        // via the per-pair lookahead matrix below. A zero intra-node
+        // latency (the ideal network) cannot bound an intra-node pair,
+        // so lanes then clamp to node granularity as before.
+        let max_shards = if cfg.net.intra_latency_ns == 0 { cfg.nodes } else { size };
+        let shards = cfg.clock_shards.clamp(1, max_shards.max(1));
+
+        let node_of: Vec<usize> = (0..size).map(|r| r / cfg.ranks_per_node).collect();
+        let lane_of: Vec<usize> = (0..size)
+            .map(|r| {
+                if shards <= cfg.nodes {
+                    node_of[r] * shards / cfg.nodes
+                } else {
+                    r * shards / size
+                }
+            })
+            .collect();
+        // Per-pair conservative lookahead: any event lane `a` creates in
+        // lane `b` rides a wire — intra-node (when the lanes share a
+        // node) or inter-node — and `transfer_ns` never undercuts the
+        // wire's base latency, so the matrix below is a sound minimum.
+        let lookahead: Vec<VNanos> = {
+            let mut nodes_of_lane: Vec<std::collections::HashSet<usize>> =
+                (0..shards).map(|_| std::collections::HashSet::new()).collect();
+            for r in 0..size {
+                nodes_of_lane[lane_of[r]].insert(node_of[r]);
+            }
+            let intra = cfg.net.intra_latency_ns.min(cfg.net.inter_latency_ns);
+            let mut la = vec![0u64; shards * shards];
+            for a in 0..shards {
+                for b in 0..shards {
+                    if a != b {
+                        la[a * shards + b] = if nodes_of_lane[a].is_disjoint(&nodes_of_lane[b]) {
+                            cfg.net.inter_latency_ns
+                        } else {
+                            intra
+                        };
+                    }
+                }
+            }
+            la
+        };
+        let (clock, clock_handles) = Clock::start_lanes(shards, lookahead, cfg.clock_queue);
         clock.set_panic_on_deadlock(false);
         // Keep the clock pinned during setup: workers park before any rank
         // thread registers, which must not read as quiescence/deadlock.
         let setup_hold = clock.hold();
-
-        let node_of: Vec<usize> = (0..size).map(|r| r / cfg.ranks_per_node).collect();
-        let lane_of: Vec<usize> =
-            (0..size).map(|r| node_of[r] * shards / cfg.nodes).collect();
         let obs = crate::obs::RunObs::new(cfg.spans.clone());
         if obs.enabled() {
             // Clock-lane lookahead-wait spans (only worth the driver-loop
@@ -362,6 +439,8 @@ impl Universe {
             obs: obs.clone(),
             faults: faults.clone(),
             shrink_map: Mutex::new(HashMap::new()),
+            reuse_req_states: AtomicU64::new(0),
+            reuse_rounds_inline: AtomicU64::new(0),
         });
         {
             // World communicator owns contexts 0 (p2p) and 1 (collectives).
@@ -601,6 +680,12 @@ impl Universe {
                     clock_events: cc.events,
                     clock_batches: cc.batches,
                     cross_shard_events: cc.cross_lane,
+                    cross_shard_batches: cc.cross_batches,
+                    alloc_reuse: AllocReuseStats {
+                        req_states_recycled: uni.reuse_req_states.load(Ordering::Relaxed),
+                        booking_scratch_reuses: uni.ports.scratch_reuses(),
+                        rounds_posted_inline: uni.reuse_rounds_inline.load(Ordering::Relaxed),
+                    },
                     elapsed_host_ns: host_start.elapsed().as_nanos() as u64,
                     faults: faults.as_ref().map(|fs| fs.stats()),
                     counters,

@@ -1,41 +1,93 @@
 //! The virtual clock: quiescence-driven discrete-event time, sharded
-//! into per-lane event heaps synchronized by conservative lookahead.
+//! into per-lane event queues synchronized by conservative lookahead.
 //!
 //! ## One lane (the classic engine)
 //!
 //! With a single lane ([`Clock::start`]) this is the original engine:
-//! one event heap, one driver thread, and the quiescence rule — the
+//! one event queue, one driver thread, and the quiescence rule — the
 //! driver fires the earliest pending batch only when every registered
 //! thread is passive (`active == 0`).
 //!
 //! ## Many lanes (conservative PDES)
 //!
-//! [`Clock::start_sharded`] splits the heap into `n` *lanes* (one per
-//! group of simulated nodes), each with its own heap, quiescence
-//! counter, and driver thread. Lanes synchronize with classic
-//! conservative lookahead (Chandy–Misra–Bryant): every lane publishes a
-//! *lower bound* `lb` — a promise that it will never create another
-//! event before `lb` — and a quiescent lane may fire its head batch at
-//! time `t` only when, for every other lane `s`,
+//! [`Clock::start_lanes`] splits the queue into `n` *lanes* (groups of
+//! simulated ranks), each with its own event queue, quiescence counter,
+//! and driver thread. Lanes synchronize with classic conservative
+//! lookahead (Chandy–Misra–Bryant): every lane publishes a *lower
+//! bound* `lb` — a promise that it will never create another event
+//! before `lb` — and a quiescent lane may fire its head batch at time
+//! `t` only when, for every other lane `s`,
 //!
 //! ```text
-//! t < lb[s] + L          (L = lookahead: min cross-lane delivery latency)
+//! t < lb[s] + L[s → me]
 //! ```
+//!
+//! ### The per-pair lookahead matrix
+//!
+//! `L` is a full `n × n` matrix, not a scalar: `L[s → me]` is the
+//! minimum virtual latency of *any* event lane `s` can create in lane
+//! `me`. The Universe derives it from the `NetworkModel` — lane pairs
+//! that share a node get the intra-node wire latency, pairs that never
+//! share a node get the (larger) inter-node latency. This is what makes
+//! *finer-than-node* lanes legal: with the old scalar
+//! (`inter_latency_ns`) two lanes inside one node would have promised
+//! each other more slack than the intra-node wire actually provides.
+//! Every off-diagonal entry must be non-zero — a zero-latency pair
+//! cannot be split conservatively ([`Clock::start_lanes`] asserts it).
 //!
 //! The inequality is strict: an event from `s` may land exactly at
 //! `lb[s] + L`, and same-instant cross-lane arrivals must already be in
-//! the heap (or parked on their port) before the instant fires — that is
-//! what keeps port resolve passes complete and deadline assignment a
+//! the queue (or parked on their port) before the instant fires — that
+//! is what keeps port resolve passes complete and deadline assignment a
 //! pure function of virtual history (see `rmpi::net::ports`).
 //!
 //! `lb` maintenance is the safety core:
 //! * a push into a lane *lowers* its `lb` under the lane lock, so a
 //!   pending early event is never hidden from peers;
 //! * the driver *raises* `lb` only while holding the lock at
-//!   `active == 0` (to the heap head, or `u64::MAX` when empty) — at
+//!   `active == 0` (to the queue head, or `u64::MAX` when empty) — at
 //!   that point no thread of the lane can create earlier work;
 //! * while a batch at `t` fires, `lb` stays at `t` (the firing actions
 //!   may push same-instant follow-ups).
+//!
+//! ### The calendar queue
+//!
+//! Each lane stores its pending events in a calendar queue
+//! ([`ClockQueueKind::Calendar`], the default): a ring of
+//! fixed-width time buckets covering a near window, with a binary-heap
+//! overflow for events beyond it. Pushes into the window are O(1)
+//! bucket appends; pops walk a cursor across the buckets, lazily
+//! sorting only the cursor bucket (descending, so the minimum pops from
+//! the back in O(1)). When the window is exhausted the queue *rebases*
+//! onto the earliest far event and redistributes the far heap's
+//! near-window slice into the buckets. Bucket vectors are reused across
+//! rebases, so steady-state operation allocates nothing.
+//!
+//! **Why bit-identity survives the queue swap:** the queue is only ever
+//! observed through `peek`/`pop`, and both always compare the near
+//! window's minimum against the far heap's minimum and return the
+//! *global* `(at, seq)` minimum — below-window pushes (a lagging
+//! `lane.now` after a rebase) simply live in the far heap and win the
+//! comparison when due. Pop order is therefore the total `(at, seq)`
+//! order regardless of internal bucket layout, which is exactly the
+//! order the binary heap produced ([`ClockQueueKind::BinaryHeap`] is
+//! kept selectable for A/B benchmarking — fig23 asserts the identity).
+//!
+//! ### Batched cross-lane transfer
+//!
+//! A firing batch often creates many events for the *same* destination
+//! lane (a drain delivering k completions). Driver threads therefore
+//! *stage* cross-lane pushes thread-locally and flush them per
+//! destination as one lock acquisition, one `(at, seq)` run, one `lb`
+//! adjustment (the batch minimum), and one condvar notify — instead of
+//! k of each. Staging is safe because the flush happens while the
+//! origin lane is still firing at `t`: its `lb` stays pinned at `t`, so
+//! every destination is bounded by `t + L` (or `t` itself under a
+//! feedback obligation, see below) and cannot overtake any staged event
+//! (all staged times are `≥ t` for feedback, `≥ t + L` otherwise).
+//! [`Clock::end_feedback`] flushes the stage *before* releasing the
+//! obligation, so the zero-latency completion is always in the
+//! destination queue by the time the bound relaxes.
 //!
 //! **Feedback obligations.** One event class is faster than the wire:
 //! a rendezvous *sender* completion is zero-latency feedback from the
@@ -44,7 +96,7 @@
 //! ([`Clock::begin_feedback`]); while `obligations[from → to] > 0`,
 //! lane `to` drops the `+ L` term for lane `from` and bounds itself by
 //! `lb[from]` alone. The obligation is released only after the
-//! completion event is pushed into the sender's heap (where the head
+//! completion event is pushed into the sender's queue (where the head
 //! accounts for it).
 //!
 //! **Invariant: wakes are intra-lane.** [`Clock::wake`] credits the
@@ -53,11 +105,13 @@
 //! of the woken thread. Cross-lane communication goes through events
 //! ([`Clock::call_at_on`]) only.
 //!
-//! Deadlock: a lane that is quiescent with an empty heap verifies the
+//! Deadlock: a lane that is quiescent with an empty queue verifies the
 //! whole cluster by locking every lane in index order — with all locks
-//! held, no push or wake can be in flight, so "all lanes passive, all
-//! heaps empty, none firing, threads registered" is a true global
-//! deadlock (the paper's Section 5 scenario).
+//! held, no push or wake can be in flight (staged cross-lane events
+//! only exist while their origin lane is firing, which the check also
+//! excludes), so "all lanes passive, all queues empty, none firing,
+//! threads registered" is a true global deadlock (the paper's Section 5
+//! scenario).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -75,6 +129,11 @@ thread_local! {
     static LANE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
     /// Reusable one-shot token for `work_exact` (hot-path alloc saver).
     static WORK_TOKEN: std::cell::RefCell<Option<Arc<Token>>> =
+        const { std::cell::RefCell::new(None) };
+    /// Cross-lane staging area, installed only on lane driver threads:
+    /// pushes into other lanes made while firing a batch are parked
+    /// here and flushed as one batch per destination (see module docs).
+    static STAGE: std::cell::RefCell<Option<CrossStage>> =
         const { std::cell::RefCell::new(None) };
 }
 
@@ -153,14 +212,245 @@ impl Ord for EventEntry {
     }
 }
 
+/// Which event-queue implementation each clock lane uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockQueueKind {
+    /// The classic `BinaryHeap<Reverse<EventEntry>>` (PR-6 engine;
+    /// selectable for A/B benchmarking, fig23).
+    BinaryHeap,
+    /// Calendar queue: O(1) amortized push/pop inside the near-horizon
+    /// bucket window, heap fallback for far events (see module docs).
+    #[default]
+    Calendar,
+}
+
+impl ClockQueueKind {
+    /// Parse a CLI spelling (`heap`/`binary-heap` or `calendar`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "heap" | "binary-heap" | "binaryheap" => Some(ClockQueueKind::BinaryHeap),
+            "calendar" | "cal" => Some(ClockQueueKind::Calendar),
+            _ => None,
+        }
+    }
+
+    /// Stable label for reports and JSON rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            ClockQueueKind::BinaryHeap => "heap",
+            ClockQueueKind::Calendar => "calendar",
+        }
+    }
+}
+
+/// Number of near-window buckets per lane.
+const CAL_BUCKETS: usize = 256;
+/// log2 of the bucket width in virtual ns (1024 ns buckets — a few
+/// `call_cpu_ns` quanta; wire latencies span a handful of buckets).
+const CAL_SHIFT: u32 = 10;
+/// Virtual width of the whole near window.
+const CAL_SPAN: u64 = (CAL_BUCKETS as u64) << CAL_SHIFT;
+
+/// Calendar queue: near-window time buckets + far-event heap. Pop order
+/// is the global `(at, seq)` minimum by construction — every peek/pop
+/// compares the cursor bucket's minimum with the far heap's top.
+struct CalendarQueue {
+    /// `buckets[i]` covers virtual `[base + i·W, base + (i+1)·W)`.
+    /// Only the cursor bucket is kept sorted (descending, min at the
+    /// back); the vectors are reused across rebases.
+    buckets: Vec<Vec<EventEntry>>,
+    /// Virtual time of bucket 0's lower edge (bucket-width aligned).
+    base: VNanos,
+    /// Cursor: buckets below it are empty.
+    cur: usize,
+    /// Whether `buckets[cur]` is currently sorted descending.
+    cur_sorted: bool,
+    /// Events outside the near window (including below-base pushes).
+    far: BinaryHeap<Reverse<EventEntry>>,
+    /// Events currently held in buckets.
+    near_len: usize,
+}
+
+impl CalendarQueue {
+    fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: (0..CAL_BUCKETS).map(|_| Vec::new()).collect(),
+            base: 0,
+            cur: 0,
+            cur_sorted: true,
+            far: BinaryHeap::new(),
+            near_len: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.near_len == 0 && self.far.is_empty()
+    }
+
+    fn push(&mut self, e: EventEntry) {
+        if e.at < self.base || e.at >= self.base.saturating_add(CAL_SPAN) {
+            self.far.push(Reverse(e));
+            return;
+        }
+        let idx = ((e.at - self.base) >> CAL_SHIFT) as usize;
+        if idx < self.cur {
+            self.cur = idx;
+            self.cur_sorted = false;
+        }
+        if idx == self.cur && self.cur_sorted {
+            // Keep the cursor bucket sorted (descending by (at, seq)):
+            // O(log) find + shift, but same-bucket inserts behind the
+            // cursor minimum are rare on the hot path.
+            let key = (e.at, e.seq);
+            let pos = self.buckets[idx].partition_point(|x| (x.at, x.seq) > key);
+            self.buckets[idx].insert(pos, e);
+        } else {
+            self.buckets[idx].push(e);
+        }
+        self.near_len += 1;
+    }
+
+    /// Advance the cursor to the first non-empty bucket, rebasing the
+    /// window onto the far heap when the near window is exhausted, and
+    /// lazily sort the cursor bucket.
+    fn settle(&mut self) {
+        loop {
+            while self.cur < CAL_BUCKETS && self.buckets[self.cur].is_empty() {
+                self.cur += 1;
+                self.cur_sorted = false;
+            }
+            if self.cur < CAL_BUCKETS || self.far.is_empty() {
+                break;
+            }
+            // Near window exhausted: rebase onto the earliest far event
+            // and pull the far heap's new near-window slice into the
+            // (empty, capacity-retaining) buckets.
+            let head_at = self.far.peek().expect("non-empty far").0.at;
+            self.base = (head_at >> CAL_SHIFT) << CAL_SHIFT;
+            self.cur = 0;
+            self.cur_sorted = false;
+            let end = self.base.saturating_add(CAL_SPAN);
+            while let Some(Reverse(e)) = self.far.peek() {
+                if e.at >= end {
+                    break;
+                }
+                let Reverse(e) = self.far.pop().expect("peeked");
+                let idx = ((e.at - self.base) >> CAL_SHIFT) as usize;
+                self.buckets[idx].push(e);
+                self.near_len += 1;
+            }
+        }
+        if self.cur < CAL_BUCKETS && !self.cur_sorted {
+            self.buckets[self.cur].sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+            self.cur_sorted = true;
+        }
+    }
+
+    /// Key of the cursor bucket's minimum, if any (call after `settle`).
+    fn near_key(&self) -> Option<(VNanos, u64)> {
+        if self.cur < CAL_BUCKETS {
+            self.buckets[self.cur].last().map(|e| (e.at, e.seq))
+        } else {
+            None
+        }
+    }
+
+    fn peek_key(&mut self) -> Option<(VNanos, u64)> {
+        self.settle();
+        let near = self.near_key();
+        let far = self.far.peek().map(|Reverse(e)| (e.at, e.seq));
+        match (near, far) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn pop(&mut self) -> Option<EventEntry> {
+        self.settle();
+        let near = self.near_key();
+        let far = self.far.peek().map(|Reverse(e)| (e.at, e.seq));
+        let take_near = match (near, far) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(a), Some(b)) => a <= b,
+        };
+        if take_near {
+            self.near_len -= 1;
+            self.buckets[self.cur].pop()
+        } else {
+            self.far.pop().map(|Reverse(e)| e)
+        }
+    }
+}
+
+/// A lane's pending-event store: binary heap or calendar queue, both
+/// popping in strict global `(at, seq)` order.
+enum EventQueue {
+    Heap(BinaryHeap<Reverse<EventEntry>>),
+    Calendar(CalendarQueue),
+}
+
+impl EventQueue {
+    fn new(kind: ClockQueueKind) -> EventQueue {
+        match kind {
+            ClockQueueKind::BinaryHeap => EventQueue::Heap(BinaryHeap::new()),
+            ClockQueueKind::Calendar => EventQueue::Calendar(CalendarQueue::new()),
+        }
+    }
+
+    fn push(&mut self, e: EventEntry) {
+        match self {
+            EventQueue::Heap(h) => h.push(Reverse(e)),
+            EventQueue::Calendar(c) => c.push(e),
+        }
+    }
+
+    /// `(at, seq)` of the globally earliest pending event. `&mut`
+    /// because the calendar queue settles its cursor lazily.
+    fn peek_key(&mut self) -> Option<(VNanos, u64)> {
+        match self {
+            EventQueue::Heap(h) => h.peek().map(|Reverse(e)| (e.at, e.seq)),
+            EventQueue::Calendar(c) => c.peek_key(),
+        }
+    }
+
+    fn pop(&mut self) -> Option<EventEntry> {
+        match self {
+            EventQueue::Heap(h) => h.pop().map(|Reverse(e)| e),
+            EventQueue::Calendar(c) => c.pop(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match self {
+            EventQueue::Heap(h) => h.is_empty(),
+            EventQueue::Calendar(c) => c.is_empty(),
+        }
+    }
+}
+
+/// Per-driver-thread staging area for cross-lane pushes (flushed as one
+/// locked batch per destination lane; see module docs).
+struct CrossStage {
+    per_lane: Vec<Vec<(VNanos, Action)>>,
+    staged: usize,
+}
+
+impl CrossStage {
+    fn new(lanes: usize) -> CrossStage {
+        CrossStage { per_lane: (0..lanes).map(|_| Vec::new()).collect(), staged: 0 }
+    }
+}
+
 struct LaneState {
-    events: BinaryHeap<Reverse<EventEntry>>,
+    events: EventQueue,
     seq: u64,
     stopped: bool,
 }
 
-/// One shard of virtual time: its own heap, quiescence counter, and
-/// published lower bound.
+/// One shard of virtual time: its own event queue, quiescence counter,
+/// and published lower bound.
 struct Lane {
     state: Mutex<LaneState>,
     tick_cv: Condvar,
@@ -176,10 +466,10 @@ struct Lane {
 }
 
 impl Lane {
-    fn new() -> Lane {
+    fn new(queue: ClockQueueKind) -> Lane {
         Lane {
             state: Mutex::new(LaneState {
-                events: BinaryHeap::new(),
+                events: EventQueue::new(queue),
                 seq: 0,
                 stopped: false,
             }),
@@ -201,6 +491,10 @@ pub struct ClockCounters {
     pub batches: u64,
     /// Events pushed into a lane other than the pusher's own.
     pub cross_lane: u64,
+    /// Staged cross-lane flushes: one per (firing batch, destination
+    /// lane) pair — each covers one lock + one notify for the whole
+    /// event group.
+    pub cross_batches: u64,
     /// `work`/`sleep` advances that reused the thread-local token
     /// instead of allocating a fresh one.
     pub work_tokens_reused: u64,
@@ -209,9 +503,11 @@ pub struct ClockCounters {
 /// Virtual clock shared by every thread of a simulated cluster.
 pub struct Clock {
     lanes: Vec<Lane>,
-    /// Conservative lookahead in ns: minimum cross-lane delivery
-    /// latency (0 with a single lane, where it is never consulted).
-    lookahead: VNanos,
+    /// Conservative lookahead matrix, `[from_lane * n + to_lane]` in
+    /// virtual ns: the minimum latency of any event lane `from` can
+    /// create in lane `to`. All off-diagonal entries are non-zero when
+    /// `n > 1` (asserted at construction); never consulted when `n == 1`.
+    lookahead: Vec<VNanos>,
     /// Threads registered with the clock (diagnostics + deadlock gate).
     registered: AtomicUsize,
     /// Set when quiescence is reached with no pending events.
@@ -224,6 +520,7 @@ pub struct Clock {
     n_events: AtomicU64,
     n_batches: AtomicU64,
     n_cross: AtomicU64,
+    n_cross_batches: AtomicU64,
     n_token_reuse: AtomicU64,
     /// Observability hook (set by the Universe when span recording is
     /// on): lane drivers emit a `LaneWait` span for every stretch they
@@ -241,19 +538,42 @@ impl Clock {
         (clock, handles.pop().expect("one driver"))
     }
 
-    /// Create a clock with `lanes` shards of virtual time and start one
-    /// driver thread per lane. `lookahead` is the minimum cross-lane
+    /// Create a clock with `lanes` shards of virtual time using a
+    /// *uniform* lookahead (the scalar façade over
+    /// [`Clock::start_lanes`]). `lookahead` is the minimum cross-lane
     /// delivery latency in virtual ns and must be non-zero when
     /// `lanes > 1` (a zero-latency network cannot be sharded
     /// conservatively).
     pub fn start_sharded(lanes: usize, lookahead: VNanos) -> (Arc<Clock>, Vec<JoinHandle<()>>) {
+        Self::start_lanes(lanes, vec![lookahead; lanes * lanes], ClockQueueKind::default())
+    }
+
+    /// Create a clock with `lanes` shards of virtual time, a full
+    /// per-pair `lookahead` matrix (`[from * lanes + to]`, virtual ns),
+    /// and the given event-queue implementation; start one driver
+    /// thread per lane. Every off-diagonal matrix entry must be
+    /// non-zero when `lanes > 1`.
+    pub fn start_lanes(
+        lanes: usize,
+        lookahead: Vec<VNanos>,
+        queue: ClockQueueKind,
+    ) -> (Arc<Clock>, Vec<JoinHandle<()>>) {
         assert!(lanes >= 1, "need at least one clock lane");
-        assert!(
-            lanes == 1 || lookahead > 0,
-            "clock sharding requires a non-zero lookahead (min cross-lane latency)"
-        );
+        assert_eq!(lookahead.len(), lanes * lanes, "lookahead matrix must be lanes x lanes");
+        if lanes > 1 {
+            for from in 0..lanes {
+                for to in 0..lanes {
+                    assert!(
+                        from == to || lookahead[from * lanes + to] > 0,
+                        "clock sharding requires non-zero lookahead for every lane \
+                         pair (zero {from} -> {to}): a zero-latency pair cannot be \
+                         split conservatively"
+                    );
+                }
+            }
+        }
         let clock = Arc::new(Clock {
-            lanes: (0..lanes).map(|_| Lane::new()).collect(),
+            lanes: (0..lanes).map(|_| Lane::new(queue)).collect(),
             lookahead,
             registered: AtomicUsize::new(0),
             deadlocked: AtomicBool::new(false),
@@ -262,6 +582,7 @@ impl Clock {
             n_events: AtomicU64::new(0),
             n_batches: AtomicU64::new(0),
             n_cross: AtomicU64::new(0),
+            n_cross_batches: AtomicU64::new(0),
             n_token_reuse: AtomicU64::new(0),
             obs: Mutex::new(None),
         });
@@ -341,6 +662,7 @@ impl Clock {
             events: self.n_events.load(Ordering::Relaxed),
             batches: self.n_batches.load(Ordering::Relaxed),
             cross_lane: self.n_cross.load(Ordering::Relaxed),
+            cross_batches: self.n_cross_batches.load(Ordering::Relaxed),
             work_tokens_reused: self.n_token_reuse.load(Ordering::Relaxed),
         }
     }
@@ -483,13 +805,17 @@ impl Clock {
     }
 
     /// Release a feedback obligation. Call only after the completion
-    /// event was pushed into lane `to`'s heap (the head then accounts
+    /// event was pushed into lane `to`'s queue (the head then accounts
     /// for it).
     pub fn end_feedback(&self, from: usize, to: usize) {
         let n = self.lanes.len();
         if n == 1 || from == to {
             return;
         }
+        // The completion event may still be sitting in this driver's
+        // cross-lane stage: it must be in `to`'s queue before the
+        // obligation releases, or `to` could advance past it.
+        self.flush_stage();
         let prev = self.obligations[from * n + to].fetch_sub(1, Ordering::AcqRel);
         debug_assert!(prev > 0, "feedback obligation released without begin");
         // The bound for `to` just rose from lb[from] to lb[from] + L:
@@ -503,14 +829,35 @@ impl Clock {
         let lane_idx = lane_idx.min(self.lanes.len() - 1);
         if lane_idx != Self::current_lane() {
             self.n_cross.fetch_add(1, Ordering::Relaxed);
+            // Driver threads stage cross-lane pushes while firing and
+            // flush them one locked batch per destination lane. Safe
+            // because the origin lane's lb pins every destination below
+            // any staged event time until the flush (module docs).
+            let leftover = STAGE.with(|s| match s.borrow_mut().as_mut() {
+                Some(stage) => {
+                    stage.per_lane[lane_idx].push((at, action));
+                    stage.staged += 1;
+                    None
+                }
+                None => Some(action),
+            });
+            match leftover {
+                Some(action) => self.push_direct(lane_idx, at, action),
+                None => {}
+            }
+            return;
         }
+        self.push_direct(lane_idx, at, action);
+    }
+
+    fn push_direct(&self, lane_idx: usize, at: VNanos, action: Action) {
         let lane = &self.lanes[lane_idx];
         let mut st = lane.state.lock().unwrap();
         let seq = st.seq;
         st.seq += 1;
         let at = at.max(lane.now.load(Ordering::Acquire));
-        let earlier_head = st.events.peek().map_or(true, |Reverse(h)| at < h.at);
-        st.events.push(Reverse(EventEntry { at, seq, action }));
+        let earlier_head = st.events.peek_key().map_or(true, |(h, _)| at < h);
+        st.events.push(EventEntry { at, seq, action });
         // Safety-critical lb maintenance: a pending event must never sit
         // below the lane's published lower bound (peers advance to
         // lb + lookahead). All lb writes happen under the lane lock.
@@ -525,6 +872,43 @@ impl Clock {
         if quiescent || earlier_head {
             lane.tick_cv.notify_all();
         }
+    }
+
+    /// Flush the calling driver thread's cross-lane stage: one lock
+    /// acquisition, one contiguous `(at, seq)` run, one `lb` adjustment
+    /// (the batch minimum), and one notify per destination lane. No-op
+    /// on threads without a stage (non-drivers push directly).
+    fn flush_stage(&self) {
+        STAGE.with(|s| {
+            let mut s = s.borrow_mut();
+            let Some(stage) = s.as_mut() else { return };
+            if stage.staged == 0 {
+                return;
+            }
+            stage.staged = 0;
+            for (dest_idx, pending) in stage.per_lane.iter_mut().enumerate() {
+                if pending.is_empty() {
+                    continue;
+                }
+                let lane = &self.lanes[dest_idx];
+                let mut st = lane.state.lock().unwrap();
+                let now = lane.now.load(Ordering::Acquire);
+                let mut batch_min = u64::MAX;
+                for (at, action) in pending.drain(..) {
+                    let at = at.max(now);
+                    let seq = st.seq;
+                    st.seq += 1;
+                    st.events.push(EventEntry { at, seq, action });
+                    batch_min = batch_min.min(at);
+                }
+                if batch_min < lane.lb.load(Ordering::Acquire) {
+                    lane.lb.store(batch_min, Ordering::Release);
+                }
+                lane.tick_cv.notify_all();
+                drop(st);
+                self.n_cross_batches.fetch_add(1, Ordering::Relaxed);
+            }
+        });
     }
 
     /// May this lane fire its head batch at `t` without risking an
@@ -545,7 +929,7 @@ impl Clock {
                 // with equal heads from deadlocking on each other.
                 lb.saturating_add(1)
             } else {
-                lb.saturating_add(self.lookahead)
+                lb.saturating_add(self.lookahead[s * n + me])
             };
             if t >= bound {
                 return false;
@@ -567,7 +951,8 @@ impl Clock {
 
     /// Global deadlock test: lock every lane in index order (pushes and
     /// wakes are then excluded — every waker is an active thread or a
-    /// firing driver) and verify total quiescence.
+    /// firing driver, and staged cross-lane events only exist while
+    /// their origin lane is firing) and verify total quiescence.
     fn check_global_deadlock(&self) -> bool {
         let guards: Vec<_> = self.lanes.iter().map(|l| l.state.lock().unwrap()).collect();
         for (lane, g) in self.lanes.iter().zip(guards.iter()) {
@@ -664,11 +1049,19 @@ impl Clock {
     fn run(&self, idx: usize) {
         Self::bind_lane(idx);
         let multi = self.lanes.len() > 1;
+        if multi {
+            // Install the cross-lane staging area (driver threads only;
+            // single-lane clocks never push cross-lane).
+            let n = self.lanes.len();
+            STAGE.with(|s| *s.borrow_mut() = Some(CrossStage::new(n)));
+        }
         let lane = &self.lanes[idx];
         // Virtual instant at which this lane first found itself
         // horizon-blocked on a peer's bound (None = not blocked). The
         // matching LaneWait span is emitted when the head finally fires.
         let mut blocked_since: Option<VNanos> = None;
+        // Reusable firing buffers — the hot loop allocates nothing.
+        let mut batch: Vec<EventEntry> = Vec::new();
         let mut st = lane.state.lock().unwrap();
         loop {
             if st.stopped {
@@ -678,33 +1071,34 @@ impl Clock {
                 // pass, and a straggler continuation must not be lost.
                 // Future-time events are still discarded, as before.
                 let now = lane.now.load(Ordering::Acquire);
-                let mut due = Vec::new();
-                while let Some(Reverse(e)) = st.events.peek() {
-                    if e.at > now {
+                while let Some((at, _)) = st.events.peek_key() {
+                    if at > now {
                         break;
                     }
-                    due.push(st.events.pop().unwrap().0);
+                    batch.push(st.events.pop().expect("peeked"));
                 }
-                if due.is_empty() {
+                if batch.is_empty() {
                     return;
                 }
                 drop(st);
-                self.n_events.fetch_add(due.len() as u64, Ordering::Relaxed);
+                self.n_events.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 self.n_batches.fetch_add(1, Ordering::Relaxed);
-                for e in due {
+                lane.firing.store(true, Ordering::Release);
+                for e in batch.drain(..) {
                     match e.action {
                         Action::Wake(tok) => self.wake(&tok),
                         Action::Call(f) => f(),
                     }
                 }
+                self.flush_stage();
+                lane.firing.store(false, Ordering::Release);
                 st = lane.state.lock().unwrap();
                 continue;
             }
             if lane.active.load(Ordering::Acquire) == 0 {
                 // Quiescent: publish the tightest sound bound, then fire
                 // the earliest batch if the cross-lane horizon allows.
-                if let Some(Reverse(head)) = st.events.peek() {
-                    let t = head.at;
+                if let Some((t, _)) = st.events.peek_key() {
                     let prev_lb = lane.lb.load(Ordering::Acquire);
                     if t > prev_lb {
                         // Safe to raise: no thread of this lane can run
@@ -732,22 +1126,25 @@ impl Clock {
                         // lb stays at t while the batch fires: its
                         // actions may push same-instant follow-ups.
                         lane.firing.store(true, Ordering::Release);
-                        let mut batch = Vec::new();
-                        while let Some(Reverse(e)) = st.events.peek() {
-                            if e.at > t {
+                        while let Some((at, _)) = st.events.peek_key() {
+                            if at > t {
                                 break;
                             }
-                            batch.push(st.events.pop().unwrap().0);
+                            batch.push(st.events.pop().expect("peeked"));
                         }
                         drop(st);
                         self.n_events.fetch_add(batch.len() as u64, Ordering::Relaxed);
                         self.n_batches.fetch_add(1, Ordering::Relaxed);
-                        for e in batch {
+                        for e in batch.drain(..) {
                             match e.action {
                                 Action::Wake(tok) => self.wake(&tok),
                                 Action::Call(f) => f(),
                             }
                         }
+                        // Staged cross-lane pushes land now, while lb is
+                        // still pinned at t (destinations cannot have
+                        // overtaken any staged event time).
+                        self.flush_stage();
                         lane.firing.store(false, Ordering::Release);
                         st = lane.state.lock().unwrap();
                         continue;
@@ -804,7 +1201,7 @@ impl Clock {
                                     lane.tick_cv.wait(st).unwrap()
                                 };
                             }
-                            continue; // stop-drain at loop top (heap empty -> return)
+                            continue; // stop-drain at loop top (queue empty -> return)
                         }
                     }
                 }
@@ -820,5 +1217,70 @@ impl Clock {
                 lane.tick_cv.wait(st).unwrap()
             };
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feed both queue kinds an adversarial push sequence (duplicated
+    /// instants, below-window backfill after rebase, far-future spikes)
+    /// and assert identical pop order: the total `(at, seq)` order.
+    #[test]
+    fn queue_kinds_pop_in_identical_total_order() {
+        let pushes: Vec<VNanos> = {
+            // Deterministic pseudo-random times spanning several
+            // rebase windows, with heavy same-instant duplication.
+            let mut x: u64 = 0x9e37_79b9_7f4a_7c15;
+            (0..4096)
+                .map(|i| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    let spread = x % (CAL_SPAN * 3);
+                    if i % 7 == 0 { spread & !1023 } else { spread }
+                })
+                .collect()
+        };
+        let run = |kind: ClockQueueKind| -> Vec<(VNanos, u64)> {
+            let mut q = EventQueue::new(kind);
+            let mut out = Vec::new();
+            let mut seq = 0u64;
+            // Interleave pushes and pops so the calendar queue rebases
+            // mid-stream and receives below-window pushes afterwards.
+            for chunk in pushes.chunks(64) {
+                for &at in chunk {
+                    q.push(EventEntry { at, seq, action: Action::Call(Box::new(|| {})) });
+                    seq += 1;
+                }
+                for _ in 0..32 {
+                    if let Some(e) = q.pop() {
+                        out.push((e.at, e.seq));
+                    }
+                }
+            }
+            while let Some(e) = q.pop() {
+                out.push((e.at, e.seq));
+            }
+            out
+        };
+        let heap = run(ClockQueueKind::BinaryHeap);
+        let cal = run(ClockQueueKind::Calendar);
+        assert_eq!(heap.len(), pushes.len());
+        assert_eq!(heap, cal, "calendar queue must pop in the heap's total order");
+        // And that order is the non-decreasing (at, seq) total order
+        // within each drain segment: verify global sortedness of a
+        // fully-drained queue separately.
+        let mut q = EventQueue::new(ClockQueueKind::Calendar);
+        for (i, &at) in pushes.iter().enumerate() {
+            q.push(EventEntry { at, seq: i as u64, action: Action::Call(Box::new(|| {})) });
+        }
+        let mut prev = (0, 0);
+        let mut n = 0;
+        while let Some(e) = q.pop() {
+            assert!((e.at, e.seq) >= prev, "out of order: {:?} after {:?}", (e.at, e.seq), prev);
+            prev = (e.at, e.seq);
+            n += 1;
+        }
+        assert_eq!(n, pushes.len());
     }
 }

@@ -22,8 +22,10 @@
 //! pessimistically (classic conservative PDES): each lane publishes a
 //! lower bound `lb` on any event it may still create, and a quiescent
 //! lane fires its head batch at `t` only while `t < lb[other] + L` for
-//! every other lane, where the lookahead `L` is the minimum cross-lane
-//! delivery latency of the network model.  Cross-lane events (port
+//! every other lane, where the lookahead `L[other → me]` comes from a
+//! per-lane-pair matrix derived from the network model (intra-node
+//! latency for lanes sharing a node, inter-node otherwise — this is
+//! what makes finer-than-node lanes legal).  Cross-lane events (port
 //! resolutions, completion deliveries) are deposited into the owning
 //! lane's heap with the same `(at, seq)` tie-break used within a lane,
 //! so the merged order is independent of host scheduling and the run is
@@ -52,7 +54,7 @@
 pub mod clock;
 pub mod sync;
 
-pub use clock::{Clock, ClockCounters, Token};
+pub use clock::{Clock, ClockCounters, ClockQueueKind, Token};
 pub use sync::WaitQueue;
 
 /// Nanoseconds of virtual time.

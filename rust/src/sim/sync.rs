@@ -77,6 +77,14 @@ impl WaitQueue {
         g.len() != before
     }
 
+    /// Drop every queued token without waking it. Only sound when all
+    /// queued tokens are already woken (or abandoned): used to reset a
+    /// recycled `ReqState`'s waiter queue, whose tokens were all
+    /// notified at completion time.
+    pub fn clear(&self) {
+        self.q.lock().unwrap().clear();
+    }
+
     /// Number of parked waiters (diagnostics).
     pub fn len(&self) -> usize {
         self.q.lock().unwrap().len()

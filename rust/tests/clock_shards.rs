@@ -1,6 +1,8 @@
 //! Determinism contract of the sharded simulation clock: at equal
 //! seeds/parameters, a run is bit-identical to itself (seed replay) and
-//! to the same run on any lane count (1 vs 2 vs 4). The projection
+//! to the same run on any lane count (1 vs 2 vs 4 vs finer-than-node)
+//! and under either per-lane event-queue implementation (binary heap
+//! vs calendar queue). The projection
 //! compared here is the deterministic slice of [`RunStats`] — virtual
 //! makespan, task/pause counts, schedule-cache traffic, user counters
 //! (checksums/residuals travel as counter bits) — plus, for the trace
@@ -16,7 +18,7 @@ use tampi_repro::apps::gauss_seidel::{self, GsParams, GsVersion};
 use tampi_repro::apps::ifsker::{self, IfsParams, IfsVersion};
 use tampi_repro::apps::Compute;
 use tampi_repro::rmpi::{ClusterConfig, RunStats, SchedCacheStats, Universe};
-use tampi_repro::sim::ms;
+use tampi_repro::sim::{ms, ClockQueueKind};
 use tampi_repro::trace::{EventKind, Tracer};
 
 /// The deterministic projection of one run's statistics.
@@ -173,8 +175,10 @@ fn trace_sequence_identical_across_lane_counts() {
 }
 
 #[test]
-fn shard_count_is_clamped_to_nodes() {
-    // 2 nodes, 8 requested lanes: must clamp, run, and stay identical.
+fn shard_count_is_clamped_to_ranks() {
+    // 2 nodes of one hybrid rank each, 8 requested lanes: the engine
+    // clamps to the rank count (finer-than-rank lanes are meaningless),
+    // runs, and stays identical.
     let mut a = gs_params(1);
     a.nodes = 2;
     let mut b = gs_params(8);
@@ -183,4 +187,148 @@ fn shard_count_is_clamped_to_nodes() {
     let rb = gauss_seidel::run(&b).expect("2-node clamped-lane run");
     assert_eq!(ra.checksum.to_bits(), rb.checksum.to_bits());
     assert_eq!(project(&ra.stats), project(&rb.stats));
+}
+
+// -------------------------------------------------------------------
+// {queue impl} x {lane count} matrices: the calendar queue and the
+// finer-than-node lanes must reproduce the (heap, 1 lane) baseline
+// bit for bit on gs, ifsker, and a faults-injected recovery run.
+// -------------------------------------------------------------------
+
+const QUEUES: [ClockQueueKind; 2] = [ClockQueueKind::BinaryHeap, ClockQueueKind::Calendar];
+
+#[test]
+fn gs_queue_lane_matrix_is_bit_identical() {
+    let mk = |queue: ClockQueueKind, shards: usize| {
+        let mut p = gs_params(shards);
+        p.clock_queue = queue;
+        gauss_seidel::run(&p).unwrap_or_else(|e| {
+            panic!("gs run failed at {}/{shards} lanes: {e}", queue.label())
+        })
+    };
+    let base = mk(ClockQueueKind::BinaryHeap, 1);
+    for queue in QUEUES {
+        // gs is hybrid (one rank per node, 4 nodes): 8 requested lanes
+        // clamp to the rank count and must still be identical.
+        for shards in [1usize, 2, 4, 8] {
+            let run = mk(queue, shards);
+            let cfg = format!("{}/{shards}", queue.label());
+            assert_eq!(run.checksum.to_bits(), base.checksum.to_bits(), "checksum at {cfg}");
+            assert_eq!(run.residual.to_bits(), base.residual.to_bits(), "residual at {cfg}");
+            assert_eq!(project(&run.stats), project(&base.stats), "projection at {cfg}");
+        }
+    }
+}
+
+#[test]
+fn ifsker_queue_lane_matrix_is_bit_identical() {
+    let mk = |queue: ClockQueueKind, shards: usize| {
+        // 4 nodes x 2 ranks/node: 8 lanes run finer than the node
+        // blocks, legal under the per-lane-pair lookahead matrix.
+        let mut p = IfsParams::new(4096, 2, 4, 4, 2, IfsVersion::InteropNonBlk);
+        p.compute = Compute::Model;
+        p.clock_shards = shards;
+        p.clock_queue = queue;
+        p.deadline = Some(ms(600_000));
+        ifsker::run(&p).unwrap_or_else(|e| {
+            panic!("ifsker run failed at {}/{shards} lanes: {e}", queue.label())
+        })
+    };
+    let base = mk(ClockQueueKind::BinaryHeap, 1);
+    for queue in QUEUES {
+        for shards in [1usize, 2, 4, 8] {
+            let run = mk(queue, shards);
+            let cfg = format!("{}/{shards}", queue.label());
+            assert_eq!(run.checksum.to_bits(), base.checksum.to_bits(), "checksum at {cfg}");
+            assert_eq!(project(&run.stats), project(&base.stats), "projection at {cfg}");
+            if shards > 1 {
+                assert!(
+                    run.stats.cross_shard_events > 0,
+                    "transpositions must cross lanes at {cfg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn faults_inject_queue_lane_matrix_is_bit_identical() {
+    use tampi_repro::apps::recovery::{run_gs_shrink, GsShrinkParams, ShrinkParams};
+    use tampi_repro::rmpi::FaultsConfig;
+
+    let outcome = |queue: ClockQueueKind, shards: usize| {
+        let mut b = ShrinkParams::new(4, 1, 2, 6);
+        b.clock_shards = shards;
+        b.clock_queue = queue;
+        b.deadline = Some(ms(60_000));
+        b.faults = Some(FaultsConfig::new(42).with_rank_fail(1, 20_000));
+        run_gs_shrink(&GsShrinkParams::new(b, 24, 64)).unwrap_or_else(|e| {
+            panic!("gs shrink failed at {}/{shards} lanes: {e}", queue.label())
+        })
+    };
+    let base = outcome(ClockQueueKind::BinaryHeap, 1);
+    assert_eq!(base.survivors, 3, "one of four ranks died");
+    for queue in QUEUES {
+        for shards in [1usize, 2, 4, 8] {
+            let run = outcome(queue, shards);
+            let cfg = format!("{}/{shards}", queue.label());
+            assert_eq!(run.survivors, base.survivors, "survivors at {cfg}");
+            assert_eq!(run.vtime_ns, base.vtime_ns, "vtime at {cfg}");
+            assert_eq!(run.checksum.to_bits(), base.checksum.to_bits(), "checksum at {cfg}");
+        }
+    }
+}
+
+/// Same-instant cross-lane storm: every rank fires a message at rank 0
+/// at the *same* virtual instant, every step, with a serializing
+/// ingress port (`rx_ns > 0`) so the `(at, seq)` tie-break order of the
+/// simultaneous cross-lane arrivals is observable in downstream
+/// completion times. The normalized trace and the virtual makespan must
+/// be identical across every {queue impl} x {lane count} configuration
+/// — including lanes finer than the node blocks.
+fn storm_run(
+    shards: usize,
+    queue: ClockQueueKind,
+) -> (Vec<(u64, u32, String, String, u64)>, u64) {
+    let tracer = Arc::new(Tracer::new());
+    let mut cfg = ClusterConfig::new(4, 2, 0)
+        .with_clock_shards(shards)
+        .with_clock_queue(queue);
+    cfg.net.rx_ns = 500;
+    cfg.tracer = Some(tracer.clone());
+    cfg.deadline = Some(ms(600_000));
+    let stats = Universe::run(cfg, move |ctx| {
+        let n = ctx.size;
+        for step in 0..3u64 {
+            let tag = step as i32;
+            if ctx.rank == 0 {
+                for src in 1..n {
+                    let mut inbox = [0u64];
+                    let r = ctx.comm.irecv(&mut inbox, src as i32, tag);
+                    ctx.comm.wait(&r);
+                    assert_eq!(inbox[0], src as u64 + step);
+                }
+            } else {
+                // No skew: all sends of a step leave at one instant.
+                ctx.comm.send(&[ctx.rank as u64 + step], 0, tag);
+            }
+            ctx.comm.barrier();
+        }
+    })
+    .expect("storm scenario");
+    (normalize(&tracer.snapshot()), stats.vtime_ns)
+}
+
+#[test]
+fn same_instant_storm_is_queue_and_lane_invariant() {
+    let (base_trace, base_vtime) = storm_run(1, ClockQueueKind::BinaryHeap);
+    assert!(!base_trace.is_empty(), "storm must produce trace records");
+    for queue in QUEUES {
+        for shards in [1usize, 2, 4, 8] {
+            let (trace, vtime) = storm_run(shards, queue);
+            let cfg = format!("{}/{shards}", queue.label());
+            assert_eq!(vtime, base_vtime, "vtime diverged at {cfg}");
+            assert_eq!(trace, base_trace, "trace diverged at {cfg}");
+        }
+    }
 }

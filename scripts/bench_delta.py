@@ -7,8 +7,9 @@ Compares the `elapsed_host_ns` of the current emitter run against the
 baseline (typically the artifact committed/downloaded from the previous
 run) and prints a single summary line.
 
-Gating: for the perf-trajectory figures (19, 20, 21 — the simulator
-throughput, overlap profiler, and plan-compile benches) a regression
+Gating: for the perf-trajectory figures (19, 20, 21, 22, 23 — the
+simulator throughput, overlap profiler, plan-compile, faults-matrix,
+and event-queue sweep benches) a regression
 beyond BENCH_DELTA_MAX_PCT (default 25%) **fails** with exit 1. Other
 figures, and runs with no usable baseline, stay warn-only: the first run
 of a new figure has nothing to compare against, and a missing baseline
@@ -26,7 +27,7 @@ import sys
 
 # Figures whose emitter wall time is a tracked perf trajectory; only
 # these can fail the gate.
-GATED_FIGS = {19, 20, 21}
+GATED_FIGS = {19, 20, 21, 22, 23}
 DEFAULT_MAX_PCT = 25.0
 
 

@@ -70,6 +70,18 @@ ROW_SCHEMAS = {
         "converged": (bool,),
         "replay_identical": (bool,),
     },
+    23: {
+        "app": (str,),
+        "queue": (str,),
+        "shards": NUM,
+        "vtime_ms": NUM,
+        "host_ms": NUM,
+        "clock_events": NUM,
+        "cross_shard_events": NUM,
+        "cross_shard_batches": NUM,
+        "events_per_host_ms": NUM,
+        "speedup_vs_baseline": NUM,
+    },
 }
 
 # fig16's overlap-profiler stamp: {"blocking": f, "nonblocking": f}.
